@@ -1,0 +1,64 @@
+//! Quickstart: run one BOTS benchmark on the simulated SunFire X4600 under
+//! the paper's DFWSRPT scheduler with NUMA-aware thread allocation, and
+//! compare it against the stock work-first baseline.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This is the five-minute tour of the public API: build a [`Runtime`]
+//! (topology + cost model), instantiate a workload, run it under a
+//! scheduler policy, read the stats.
+
+use numanos::bots;
+use numanos::config::Size;
+use numanos::coordinator::binding::BindPolicy;
+use numanos::coordinator::runtime::Runtime;
+use numanos::coordinator::sched::Policy;
+use numanos::metrics::speedup;
+use numanos::util::fmt_time;
+
+fn main() -> anyhow::Result<()> {
+    // The paper's testbed: 8 dual-core Opteron sockets, twisted-ladder HT.
+    let rt = Runtime::paper_testbed();
+    println!(
+        "machine: {} ({} cores / {} NUMA nodes, max {} hops)\n",
+        rt.topo.name(),
+        rt.topo.num_cores(),
+        rt.topo.num_nodes(),
+        rt.topo.max_hops()
+    );
+
+    let bench = "sort";
+    let seed = 42;
+
+    // Serial baseline (the paper's speedup denominator).
+    let mut serial_w = bots::create(bench, Size::Medium, seed)?;
+    let serial = rt.run_serial(serial_w.as_mut(), seed)?;
+    println!("serial {bench}: {}", fmt_time(serial.makespan));
+
+    // Stock NANOS work-first, unpinned-style linear binding.
+    let mut base_w = bots::create(bench, Size::Medium, seed)?;
+    let base = rt.run(base_w.as_mut(), Policy::WorkFirst, BindPolicy::Linear, 16, seed, None)?;
+
+    // The paper's full stack: priority-based thread allocation (SS IV)
+    // + NUMA-aware randomized work stealing (SS VI.B).
+    let mut numa_w = bots::create(bench, Size::Medium, seed)?;
+    let numa = rt.run(numa_w.as_mut(), Policy::Dfwsrpt, BindPolicy::NumaAware, 16, seed, None)?;
+
+    for s in [&base, &numa] {
+        println!(
+            "{:<26} speedup {:>5.2}x | steals {} @ {:.2} hops | remote {:>4.1}% | lock wait {}",
+            s.label(),
+            speedup(&serial, s),
+            s.steals,
+            s.mean_steal_hops,
+            100.0 * s.mem.remote_ratio(),
+            fmt_time(s.lock_wait_total),
+        );
+    }
+    let gain = (1.0 - base.makespan as f64 / numa.makespan as f64).abs() * 100.0;
+    println!(
+        "\nNUMA-aware stack is {gain:.1}% {} than stock work-first on {bench}.",
+        if numa.makespan < base.makespan { "faster" } else { "slower" }
+    );
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Scheduler duel: all five policies head-to-head on the data-intensive
+//! benchmarks (the paper's §V/§VI storyline in one table).
+//!
+//!     cargo run --release --example scheduler_duel
+
+use numanos::bots;
+use numanos::config::Size;
+use numanos::coordinator::binding::BindPolicy;
+use numanos::coordinator::runtime::Runtime;
+use numanos::coordinator::sched::Policy;
+use numanos::metrics::speedup;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::paper_testbed();
+    let seed = 42;
+    let threads = 16;
+
+    for bench in ["fft", "sort", "strassen"] {
+        let mut serial_w = bots::create(bench, Size::Medium, seed)?;
+        let serial = rt.run_serial(serial_w.as_mut(), seed)?;
+        println!("\n=== {bench} (16 threads, speedup over serial) ===");
+        println!(
+            "{:<10} {:>8} {:>9} {:>12} {:>10} {:>9}",
+            "scheduler", "speedup", "steals", "steal-hops", "remote%", "lockwait"
+        );
+        for &policy in &[
+            Policy::BreadthFirst,
+            Policy::CilkBased,
+            Policy::WorkFirst,
+            Policy::Dfwspt,
+            Policy::Dfwsrpt,
+        ] {
+            // the NUMA-aware schedulers are evaluated the way the paper
+            // does: combined with the SS IV allocation
+            let bind = match policy {
+                Policy::Dfwspt | Policy::Dfwsrpt => BindPolicy::NumaAware,
+                _ => BindPolicy::Linear,
+            };
+            let mut w = bots::create(bench, Size::Medium, seed)?;
+            let s = rt.run(w.as_mut(), policy, bind, threads, seed, None)?;
+            println!(
+                "{:<10} {:>7.2}x {:>9} {:>12.2} {:>9.1}% {:>8}us",
+                policy.name(),
+                speedup(&serial, &s),
+                s.steals,
+                s.mean_steal_hops,
+                100.0 * s.mem.remote_ratio(),
+                s.lock_wait_total / 1_000_000,
+            );
+        }
+    }
+    println!("\nDFWSPT/DFWSRPT steal closer (lower steal-hops) and win on the");
+    println!("memory-heavy benchmarks — the paper's SS VI result.");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas -> HLO text artifacts.
+
+Nothing in this package runs at request time; ``make artifacts`` invokes
+:mod:`compile.aot` once and the Rust coordinator is self-contained after.
+"""

@@ -1,0 +1,121 @@
+"""AOT export: lower every Layer-2 graph to an HLO *text* artifact.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run once via ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Also writes ``manifest.json`` describing each artifact's I/O signature so
+the Rust runtime can validate shapes before feeding literals.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# name -> (fn, [input specs]); every fn returns a tuple (lowered with
+# return_tuple=True, unwrapped with to_tuple on the Rust side).
+EXPORTS = {
+    # Strassen leaves: MXU-tile and double-tile variants
+    "matmul_f32_128": (model.strassen_leaf, [spec((128, 128)), spec((128, 128))]),
+    "matmul_f32_256": (model.strassen_leaf, [spec((256, 256)), spec((256, 256))]),
+    "strassen_combine_f32_128": (
+        model.strassen_combine,
+        [spec((128, 128))] * 7,
+    ),
+    # FFT segment transforms
+    "fft_f32_1024": (model.fft, [spec((1024,)), spec((1024,))]),
+    "fft_f32_4096": (model.fft, [spec((4096,)), spec((4096,))]),
+    # Sort leaf
+    "sort_f32_1024": (model.bitonic_sort, [spec((1024,))]),
+    # SparseLU block steps (BOTS default block 64, plus MXU-sized 128)
+    "lu0_f32_64": (model.sparselu_lu0, [spec((64, 64))]),
+    "fwd_f32_64": (model.sparselu_fwd, [spec((64, 64)), spec((64, 64))]),
+    "bdiv_f32_64": (model.sparselu_bdiv, [spec((64, 64)), spec((64, 64))]),
+    "bmod_f32_64": (
+        model.sparselu_bmod,
+        [spec((64, 64)), spec((64, 64)), spec((64, 64))],
+    ),
+    # Coordinator priority math (Figs 2-4); H padded to 8 hop weights
+    "priority_f32_16": (
+        model.priority_scores,
+        [spec((16, 16), I32), spec((8,)), spec((16,))],
+    ),
+    "priority_f32_64": (
+        model.priority_scores,
+        [spec((64, 64), I32), spec((8,)), spec((64,))],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer
+    # elides arrays > 10 elements as a literal "{...}", which the old
+    # xla_extension 0.5.1 parser on the Rust side silently reads as
+    # zeros (twiddle factors, sort directions, ... all vanish).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_one(name: str, out_dir: str) -> dict:
+    fn, in_specs = EXPORTS[name]
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_specs = jax.eval_shape(fn, *in_specs)
+    return {
+        "name": name,
+        "inputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in in_specs
+        ],
+        "outputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in out_specs
+        ],
+        "hlo_bytes": len(text),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="comma-separated export names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    names = args.only.split(",") if args.only else list(EXPORTS)
+    manifest = []
+    for name in names:
+        entry = export_one(name, args.out)
+        manifest.append(entry)
+        print(f"  exported {name}: {entry['hlo_bytes']} chars")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=2)
+    print(f"wrote {len(manifest)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

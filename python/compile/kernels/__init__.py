@@ -1,0 +1,27 @@
+"""Layer-1 Pallas kernels for the numanos reproduction.
+
+Each kernel is the numeric hot-spot of one BOTS compute leaf (the task
+payloads the paper's schedulers move around), expressed for the TPU MXU/VPU
+and lowered with ``interpret=True`` so the CPU PJRT client can run the
+resulting HLO (real-TPU Mosaic custom-calls are compile-only targets here;
+see DESIGN.md §4).
+
+Correctness oracle for every kernel lives in :mod:`compile.kernels.ref`.
+"""
+
+from compile.kernels.matmul_tile import matmul
+from compile.kernels.fft_stage import butterfly
+from compile.kernels.lu_block import lu0, fwd, bdiv, bmod
+from compile.kernels.sort_merge import compare_exchange
+from compile.kernels.priority import priority_scores
+
+__all__ = [
+    "matmul",
+    "butterfly",
+    "lu0",
+    "fwd",
+    "bdiv",
+    "bmod",
+    "compare_exchange",
+    "priority_scores",
+]

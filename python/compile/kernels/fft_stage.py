@@ -1,0 +1,53 @@
+"""Radix-2 butterfly Pallas kernel — the FFT benchmark payload.
+
+The BOTS FFT is a cache-oblivious Cooley-Tukey; its hot loop is the
+butterfly: ``t = w * b; top = a + t; bot = a - t`` over complex operands.
+
+TPU mapping (DESIGN.md §4): Mosaic has no complex dtype, so complex values
+travel as separate real/imaginary f32 planes (VPU-friendly, stride-1).  The
+inter-stage shuffles (bit-reversal, stride regrouping) are *data movement*
+and stay in the L2 XLA graph where the compiler fuses them; the kernel owns
+the arithmetic hot loop, blocked in VMEM-sized chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _butterfly_kernel(are_ref, aim_ref, bre_ref, bim_ref, wre_ref, wim_ref,
+                      tre_ref, tim_ref, ure_ref, uim_ref):
+    a_re, a_im = are_ref[...], aim_ref[...]
+    b_re, b_im = bre_ref[...], bim_ref[...]
+    w_re, w_im = wre_ref[...], wim_ref[...]
+    # t = w * b   (complex multiply on f32 planes)
+    t_re = w_re * b_re - w_im * b_im
+    t_im = w_re * b_im + w_im * b_re
+    tre_ref[...] = a_re + t_re
+    tim_ref[...] = a_im + t_im
+    ure_ref[...] = a_re - t_re
+    uim_ref[...] = a_im - t_im
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def butterfly(a_re, a_im, b_re, b_im, w_re, w_im, *, block: int = 1024):
+    """Vector butterfly over flat (h,) planes: returns (a+wb, a-wb) planes."""
+    (h,) = a_re.shape
+    blk = min(block, h)
+    if h % blk:
+        raise ValueError(f"butterfly length {h} not a multiple of block {blk}")
+    grid = (h // blk,)
+    spec = pl.BlockSpec((blk,), lambda i: (i,))
+    out = jax.ShapeDtypeStruct((h,), a_re.dtype)
+    return pl.pallas_call(
+        _butterfly_kernel,
+        grid=grid,
+        in_specs=[spec] * 6,
+        out_specs=[spec] * 4,
+        out_shape=[out] * 4,
+        interpret=True,
+    )(a_re, a_im, b_re, b_im, w_re, w_im)

@@ -1,0 +1,108 @@
+"""SparseLU block kernels: ``lu0``, ``fwd``, ``bdiv``, ``bmod``.
+
+These are the four task payloads of the BOTS SparseLU benchmark (blocked,
+pivot-free LU over a sparse block matrix):
+
+* ``lu0``  — in-place Doolittle LU of a diagonal block (unit lower L).
+* ``fwd``  — forward substitution: ``B := L(diag)^-1 @ B``.
+* ``bdiv`` — backward division:   ``B := B @ U(diag)^-1``.
+* ``bmod`` — trailing update:     ``C := C - A @ B``.
+
+TPU mapping: each block fits a single VMEM tile (block size <= 128), so each
+kernel is a one-tile ``pallas_call``; the sequential k-loop of the
+factorizations runs as a ``fori_loop`` over in-register values.  ``bmod`` is
+the MXU matmul plus subtraction fused in one kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _single_tile(kernel, nout, shape, dtype):
+    out = jax.ShapeDtypeStruct(shape, dtype)
+    return pl.pallas_call(
+        kernel,
+        out_shape=[out] * nout if nout > 1 else out,
+        interpret=True,
+    )
+
+
+def _lu0_kernel(a_ref, o_ref):
+    a = a_ref[...]
+    n = a.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+    def body(k, a):
+        pivot = a[k, k]
+        lmask = rows > k
+        umask = rows > k  # column mask over a[k, :]
+        l = jnp.where(lmask, a[:, k] / pivot, 0.0)
+        u = jnp.where(umask, a[k, :], 0.0)
+        a = a - jnp.outer(l, u)
+        # store the multipliers in the strictly-lower part (Doolittle)
+        a = a.at[:, k].set(jnp.where(lmask, l, a[:, k]))
+        return a
+
+    o_ref[...] = jax.lax.fori_loop(0, n, body, a)
+
+
+def lu0(a: jax.Array) -> jax.Array:
+    """LU-factorize a square block in place (no pivoting, unit lower L)."""
+    n = a.shape[0]
+    if a.shape != (n, n):
+        raise ValueError(f"lu0 expects a square block, got {a.shape}")
+    return _single_tile(_lu0_kernel, 1, (n, n), a.dtype)(a)
+
+
+def _fwd_kernel(diag_ref, b_ref, o_ref):
+    lu = diag_ref[...]
+    b = b_ref[...]
+    n = lu.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+    def body(k, b):
+        # rows below k: b[i, :] -= L[i, k] * b[k, :]
+        l = jnp.where(rows > k, lu[:, k], 0.0)
+        return b - jnp.outer(l, b[k, :])
+
+    o_ref[...] = jax.lax.fori_loop(0, n, body, b)
+
+
+def fwd(diag: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve L @ X = B for X, with L the unit-lower factor packed in ``diag``."""
+    return _single_tile(_fwd_kernel, 1, b.shape, b.dtype)(diag, b)
+
+
+def _bdiv_kernel(diag_ref, b_ref, o_ref):
+    lu = diag_ref[...]
+    b = b_ref[...]
+    n = lu.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+    def body(k, b):
+        colk = b[:, k] / lu[k, k]
+        b = b.at[:, k].set(colk)
+        # columns beyond k: b[:, j] -= colk * U[k, j]
+        u = jnp.where(cols > k, lu[k, :], 0.0)
+        return b - jnp.outer(colk, u)
+
+    o_ref[...] = jax.lax.fori_loop(0, n, body, b)
+
+
+def bdiv(diag: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve X @ U = B for X, with U the upper factor packed in ``diag``."""
+    return _single_tile(_bdiv_kernel, 1, b.shape, b.dtype)(diag, b)
+
+
+def _bmod_kernel(a_ref, b_ref, c_ref, o_ref):
+    o_ref[...] = c_ref[...] - jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def bmod(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """Trailing-block update ``C - A @ B`` (fused MXU matmul + subtract)."""
+    return _single_tile(_bmod_kernel, 1, c.shape, c.dtype)(a, b, c)

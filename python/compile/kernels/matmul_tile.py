@@ -1,0 +1,60 @@
+"""Blocked matmul Pallas kernel — the Strassen leaf / SparseLU ``bmod`` payload.
+
+TPU mapping (DESIGN.md §4): the BOTS C code blocks for L1/L2 caches; here the
+``BlockSpec`` grid expresses the same HBM->VMEM schedule with MXU-aligned
+tiles.  The K axis is the innermost grid dimension so the output tile stays
+resident in VMEM across the accumulation (``o_ref`` is revisited, classic
+Pallas accumulation idiom).
+
+VMEM footprint per grid step = bm*bk + bk*bn + bm*bn floats; with the default
+128x128x128 tiles that is 3 * 64 KiB = 192 KiB, far under the ~16 MiB VMEM
+budget, leaving room for double buffering by the Mosaic pipeliner.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] @ y[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(x: jax.Array, y: jax.Array, *, bm: int = 128, bk: int = 128, bn: int = 128):
+    """``x @ y`` via a Pallas grid of MXU tiles.
+
+    Shapes must be multiples of the tile sizes (the L2 model pads when a
+    benchmark leaf is smaller); dtype follows ``x``.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    if m % bm or k % bk or n % bn:
+        raise ValueError(f"shapes {x.shape}x{y.shape} not multiples of tile ({bm},{bk},{bn})")
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)

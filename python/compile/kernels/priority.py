@@ -1,0 +1,42 @@
+"""Priority-score Pallas kernel — the paper's Figs 2-4 allocation math.
+
+The coordinator's ``set_priorities`` (paper §IV) is itself a dense linear
+computation once the hop-count matrix is materialized:
+
+*  ``A[i, j] = alpha[hops(i, j)]`` for ``j != i`` (weight lookup, done in the
+   L2 graph where XLA gathers are cheap), ``A[i, i] = 0``;
+*  first level  (Fig 2): ``P1 = base + A @ 1``          (weighted neighbour count)
+*  second level (Fig 3): ``P  = P1  + A @ P1``          (weighted neighbour priority)
+
+so the whole two-pass algorithm of Fig 4 is one matvec pair — a natural MXU
+payload.  The Rust coordinator ships the same math in pure Rust and, when the
+PJRT engine is enabled, cross-checks it against this artifact (L3<->L1
+integration test of the three-layer stack).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _priority_kernel(a_ref, base_ref, p1_ref, p_ref):
+    a = a_ref[...]
+    base = base_ref[...]
+    p1 = base + jnp.sum(a, axis=1)
+    p1_ref[...] = p1
+    p_ref[...] = p1 + jnp.dot(a, p1[:, None], preferred_element_type=a.dtype)[:, 0]
+
+
+def priority_scores(a: jax.Array, base: jax.Array):
+    """Return ``(P1, P)`` per Figs 2-4 given the weighted hop matrix ``A``."""
+    n = a.shape[0]
+    if a.shape != (n, n) or base.shape != (n,):
+        raise ValueError(f"bad priority shapes: {a.shape}, {base.shape}")
+    out = jax.ShapeDtypeStruct((n,), a.dtype)
+    return pl.pallas_call(
+        _priority_kernel,
+        out_shape=[out, out],
+        interpret=True,
+    )(a, base)

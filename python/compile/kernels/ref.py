@@ -1,0 +1,93 @@
+"""Pure-jnp / numpy oracles for every Layer-1 kernel.
+
+These are the CORE correctness signal: each Pallas kernel must match its
+reference bit-for-fp-tolerance under the pytest sweeps in
+``python/tests/``.  Written in the most obvious possible style — no tiling,
+no cleverness — so a reviewer can audit them against the BOTS C sources.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def matmul(x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    return np.asarray(x) @ np.asarray(y)
+
+
+def butterfly(a_re, a_im, b_re, b_im, w_re, w_im):
+    """t = w*b; return (a+t, a-t) as four planes."""
+    a = np.asarray(a_re) + 1j * np.asarray(a_im)
+    b = np.asarray(b_re) + 1j * np.asarray(b_im)
+    w = np.asarray(w_re) + 1j * np.asarray(w_im)
+    t = w * b
+    top, bot = a + t, a - t
+    return top.real, top.imag, bot.real, bot.imag
+
+
+def lu0(a: np.ndarray) -> np.ndarray:
+    """Doolittle LU without pivoting, packed (unit lower implicit)."""
+    a = np.array(a, dtype=np.float64, copy=True)
+    n = a.shape[0]
+    for k in range(n):
+        a[k + 1 :, k] /= a[k, k]
+        a[k + 1 :, k + 1 :] -= np.outer(a[k + 1 :, k], a[k, k + 1 :])
+    return a
+
+
+def unpack_lu(packed: np.ndarray):
+    """Split a packed LU block into (L, U) with unit diagonal L."""
+    l = np.tril(packed, -1) + np.eye(packed.shape[0])
+    u = np.triu(packed)
+    return l, u
+
+
+def fwd(diag_packed: np.ndarray, b: np.ndarray) -> np.ndarray:
+    l, _ = unpack_lu(np.asarray(diag_packed, dtype=np.float64))
+    return np.linalg.solve(l, np.asarray(b, dtype=np.float64))
+
+
+def bdiv(diag_packed: np.ndarray, b: np.ndarray) -> np.ndarray:
+    _, u = unpack_lu(np.asarray(diag_packed, dtype=np.float64))
+    # solve X @ U = B  =>  X = B @ inv(U)
+    return np.linalg.solve(u.T, np.asarray(b, dtype=np.float64).T).T
+
+
+def bmod(a: np.ndarray, b: np.ndarray, c: np.ndarray) -> np.ndarray:
+    return np.asarray(c) - np.asarray(a) @ np.asarray(b)
+
+
+def compare_exchange(a, b, direction):
+    a, b, d = map(np.asarray, (a, b, direction))
+    lo, hi = np.minimum(a, b), np.maximum(a, b)
+    return np.where(d > 0, lo, hi), np.where(d > 0, hi, lo)
+
+
+def fft(x: np.ndarray) -> np.ndarray:
+    return np.fft.fft(np.asarray(x))
+
+
+def bitonic_sort(x: np.ndarray) -> np.ndarray:
+    return np.sort(np.asarray(x))
+
+
+def priority_scores(a: np.ndarray, base: np.ndarray):
+    """Figs 2-4 as written in the paper's pseudo-code (two sequential passes)."""
+    a = np.asarray(a, dtype=np.float64)
+    base = np.asarray(base, dtype=np.float64)
+    n = a.shape[0]
+    p1 = np.zeros(n)
+    for i in range(n):  # Fig 2: first level, weighted neighbour counts
+        p1[i] = base[i] + sum(a[i, j] for j in range(n))
+    p = np.zeros(n)
+    for i in range(n):  # Fig 3: second level, weighted neighbour priorities
+        p[i] = p1[i] + sum(a[i, j] * p1[j] for j in range(n))
+    return p1, p
+
+
+def weighted_hop_matrix(hops: np.ndarray, alpha: np.ndarray) -> np.ndarray:
+    """A[i,j] = alpha[hops[i,j]] with zeroed diagonal (self excluded)."""
+    hops = np.asarray(hops)
+    a = np.asarray(alpha, dtype=np.float64)[hops]
+    np.fill_diagonal(a, 0.0)
+    return a

@@ -1,0 +1,49 @@
+"""Bitonic compare-exchange Pallas kernel — the Sort benchmark payload.
+
+BOTS Sort is a cache-oblivious mergesort whose leaves fall back to a
+sequential sort.  A data-dependent merge does not map to a systolic array,
+so per DESIGN.md §4 we *rethink* the leaf for the TPU: a bitonic sorting
+network, whose compare-exchange stages are branch-free, stride-regular VPU
+work.  The inter-stage regrouping (static slices) lives in the L2 graph;
+this kernel owns the min/max hot loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cmpx_kernel(a_ref, b_ref, d_ref, lo_ref, hi_ref):
+    a, b = a_ref[...], b_ref[...]
+    direction = d_ref[...]  # +1 ascending pair, -1 descending pair
+    lo = jnp.minimum(a, b)
+    hi = jnp.maximum(a, b)
+    lo_ref[...] = jnp.where(direction > 0, lo, hi)
+    hi_ref[...] = jnp.where(direction > 0, hi, lo)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def compare_exchange(a, b, direction, *, block: int = 2048):
+    """Elementwise compare-exchange of two key planes.
+
+    ``direction`` (+1/-1 per lane) encodes the ascending/descending region of
+    the bitonic network so a whole stage is a single kernel launch.
+    """
+    (h,) = a.shape
+    blk = min(block, h)
+    if h % blk:
+        raise ValueError(f"length {h} not a multiple of block {blk}")
+    spec = pl.BlockSpec((blk,), lambda i: (i,))
+    out = jax.ShapeDtypeStruct((h,), a.dtype)
+    return pl.pallas_call(
+        _cmpx_kernel,
+        grid=(h // blk,),
+        in_specs=[spec] * 3,
+        out_specs=[spec] * 2,
+        out_shape=[out] * 2,
+        interpret=True,
+    )(a, b, direction)

@@ -1,0 +1,192 @@
+"""Layer-2 JAX compute graphs — the BOTS leaf computations, composed from
+Layer-1 Pallas kernels.
+
+Every public function here is AOT-lowered by :mod:`compile.aot` to an HLO
+text artifact that the Rust coordinator loads through PJRT and invokes from
+task bodies (``--compute pjrt``).  Shapes are static per artifact; the
+exported variants are listed in :data:`compile.aot.EXPORTS`.
+
+Data movement (bit-reversal, bitonic regrouping, weight gathers) stays in
+the XLA graph where the compiler fuses it; the arithmetic hot loops are the
+Pallas kernels.  See DESIGN.md §3/§4.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from compile import kernels
+
+
+# ---------------------------------------------------------------------------
+# Strassen leaf
+# ---------------------------------------------------------------------------
+
+def strassen_leaf(x: jax.Array, y: jax.Array) -> tuple[jax.Array]:
+    """Leaf matmul of the Strassen recursion (MXU-tiled Pallas matmul)."""
+    return (kernels.matmul(x, y),)
+
+
+def strassen_combine(m1, m2, m3, m4, m5, m6, m7) -> tuple[jax.Array]:
+    """Winograd/Strassen quadrant recombination (pure adds, L2-only glue).
+
+    C11 = M1 + M4 - M5 + M7        C12 = M3 + M5
+    C21 = M2 + M4                  C22 = M1 - M2 + M3 + M6
+    """
+    c11 = m1 + m4 - m5 + m7
+    c12 = m3 + m5
+    c21 = m2 + m4
+    c22 = m1 - m2 + m3 + m6
+    top = jnp.concatenate([c11, c12], axis=1)
+    bot = jnp.concatenate([c21, c22], axis=1)
+    return (jnp.concatenate([top, bot], axis=0),)
+
+
+# ---------------------------------------------------------------------------
+# FFT (iterative Cooley-Tukey DIT over the Pallas butterfly kernel)
+# ---------------------------------------------------------------------------
+
+def _bit_reverse_perm(n: int) -> np.ndarray:
+    bits = n.bit_length() - 1
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int64)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+def _bit_reverse(x: jax.Array) -> jax.Array:
+    """Bit-reversal permutation as a rank-log2(n) transpose.
+
+    Viewing the vector as a [2]*b tensor and reversing the axis order *is*
+    the bit-reversal permutation — no gather involved.  (The xla_extension
+    0.5.1 runtime the Rust side links against miscompiles gathers fused
+    into downstream reshapes, so the exported graphs avoid gather
+    entirely; see DESIGN.md §7.)
+    """
+    (n,) = x.shape
+    bits = n.bit_length() - 1
+    t = x.reshape((2,) * bits)
+    return t.transpose(tuple(reversed(range(bits)))).reshape(n)
+
+
+def fft(x_re: jax.Array, x_im: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Forward DFT of a power-of-two signal as two f32 planes."""
+    (n,) = x_re.shape
+    if n & (n - 1):
+        raise ValueError(f"fft length must be a power of two, got {n}")
+    re = _bit_reverse(x_re)
+    im = _bit_reverse(x_im)
+    stages = n.bit_length() - 1
+    for s in range(1, stages + 1):
+        m = 1 << s
+        half = m >> 1
+        groups = n // m
+        # group-major layout: a = X[:, :half], b = X[:, half:]
+        re2 = re.reshape(groups, m)
+        im2 = im.reshape(groups, m)
+        a_re = re2[:, :half].reshape(-1)
+        a_im = im2[:, :half].reshape(-1)
+        b_re = re2[:, half:].reshape(-1)
+        b_im = im2[:, half:].reshape(-1)
+        w = np.exp(-2j * np.pi * np.arange(half) / m).astype(np.complex64)
+        w_re = jnp.asarray(np.tile(w.real, groups))
+        w_im = jnp.asarray(np.tile(w.imag, groups))
+        t_re, t_im, u_re, u_im = kernels.butterfly(a_re, a_im, b_re, b_im, w_re, w_im)
+        re = jnp.concatenate(
+            [t_re.reshape(groups, half), u_re.reshape(groups, half)], axis=1
+        ).reshape(n)
+        im = jnp.concatenate(
+            [t_im.reshape(groups, half), u_im.reshape(groups, half)], axis=1
+        ).reshape(n)
+    return re, im
+
+
+# ---------------------------------------------------------------------------
+# Bitonic sort (static network over the compare-exchange kernel)
+# ---------------------------------------------------------------------------
+
+def bitonic_sort(x: jax.Array) -> tuple[jax.Array]:
+    """Ascending sort of a power-of-two key vector via a bitonic network.
+
+    Scatter-free formulation: every stage gathers each lane's partner
+    (``i ^ j``, a static permutation XLA fuses) and keeps either the min or
+    the max depending on the lane's role — lane ``i`` with ``i & j == 0``
+    holds the "low" slot of its pair.  The arithmetic hot loop (min/max
+    select) is the Pallas ``compare_exchange`` kernel; its ``lo`` output is
+    exactly "min if ascending-low slot else max".  (The old xla_extension
+    0.5.1 runtime the Rust side links against mis-executes the scatter this
+    network would otherwise need — see DESIGN.md §7.)
+    """
+    (n,) = x.shape
+    if n & (n - 1):
+        raise ValueError(f"bitonic length must be a power of two, got {n}")
+    idx = np.arange(n)
+    out = jnp.asarray(x)
+    k = 2
+    while k <= n:
+        j = k >> 1
+        while j >= 1:
+            is_low = (idx & j) == 0
+            ascending = (idx & k) == 0
+            # low slot of an ascending pair keeps the min; so does the
+            # high slot of a descending pair.
+            take_min = is_low == ascending
+            direction = np.where(take_min, 1, -1).astype(np.int32)
+            # partner (i ^ j) exchange, gather-free: swap the two j-sized
+            # halves of every 2j block (explicit slice + concat — the old
+            # runtime also miscompiles reverse over degenerate dims)
+            blocks = out.reshape(-1, 2, j)
+            xp = jnp.concatenate(
+                [blocks[:, 1:2, :], blocks[:, 0:1, :]], axis=1
+            ).reshape(n)
+            lo, _hi = kernels.compare_exchange(out, xp, jnp.asarray(direction))
+            out = lo
+            j >>= 1
+        k <<= 1
+    return (out,)
+
+
+# ---------------------------------------------------------------------------
+# SparseLU block steps (direct kernel exports)
+# ---------------------------------------------------------------------------
+
+def sparselu_lu0(a):
+    return (kernels.lu0(a),)
+
+
+def sparselu_fwd(diag, b):
+    return (kernels.fwd(diag, b),)
+
+
+def sparselu_bdiv(diag, b):
+    return (kernels.bdiv(diag, b),)
+
+
+def sparselu_bmod(a, b, c):
+    return (kernels.bmod(a, b, c),)
+
+
+# ---------------------------------------------------------------------------
+# Priority scores (paper Figs 2-4)
+# ---------------------------------------------------------------------------
+
+def priority_scores(hops: jax.Array, alpha: jax.Array, base: jax.Array):
+    """Two-level core priorities from a hop matrix.
+
+    ``hops``  (n, n) int32 — pairwise node hop distances per core.
+    ``alpha`` (H,)   f32   — decreasing weight per hop distance (padded).
+    ``base``  (n,)   f32   — first-level base priority (node-size rank).
+
+    Returns ``(P1, P)``: after the Fig-2 pass and after the Fig-3 pass.
+    """
+    a = jnp.take(alpha, hops)  # A[i,j] = alpha[hops[i,j]]
+    n = hops.shape[0]
+    a = a * (1.0 - jnp.eye(n, dtype=a.dtype))  # self excluded
+    p1, p = kernels.priority_scores(a, base)
+    return p1, p

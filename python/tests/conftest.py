@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Allow `python -m pytest tests/` from the python/ directory and
+# `pytest python/tests/` from the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

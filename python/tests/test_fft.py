@@ -1,0 +1,79 @@
+"""L1 butterfly kernel + L2 FFT graph vs numpy oracles."""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels, model
+from compile.kernels import ref
+
+
+def _planes(n, seed):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.standard_normal(n).astype(np.float32),
+        rng.standard_normal(n).astype(np.float32),
+    )
+
+
+@pytest.mark.parametrize("h", [8, 64, 1024, 4096])
+def test_butterfly_matches_ref(h):
+    a_re, a_im = _planes(h, 1)
+    b_re, b_im = _planes(h, 2)
+    w_re, w_im = _planes(h, 3)
+    got = [np.asarray(p) for p in kernels.butterfly(a_re, a_im, b_re, b_im, w_re, w_im)]
+    want = ref.butterfly(a_re, a_im, b_re, b_im, w_re, w_im)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-5)
+
+
+def test_butterfly_block_invariance():
+    h = 4096
+    args = [*_planes(h, 4), *_planes(h, 5), *_planes(h, 6)]
+    a = [np.asarray(p) for p in kernels.butterfly(*args, block=256)]
+    b = [np.asarray(p) for p in kernels.butterfly(*args, block=4096)]
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x, y)
+
+
+@pytest.mark.parametrize("n", [8, 16, 64, 256, 1024, 4096])
+def test_fft_matches_numpy(n):
+    x_re, x_im = _planes(n, n)
+    got_re, got_im = model.fft(x_re, x_im)
+    want = np.fft.fft(x_re.astype(np.float64) + 1j * x_im.astype(np.float64))
+    scale = max(1.0, np.abs(want).max())
+    np.testing.assert_allclose(np.asarray(got_re) / scale, want.real / scale, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got_im) / scale, want.imag / scale, atol=2e-4)
+
+
+def test_fft_impulse_is_flat():
+    n = 1024
+    x_re = np.zeros(n, np.float32)
+    x_re[0] = 1.0
+    got_re, got_im = model.fft(x_re, np.zeros(n, np.float32))
+    np.testing.assert_allclose(np.asarray(got_re), np.ones(n), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_im), np.zeros(n), atol=1e-5)
+
+
+def test_fft_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        model.fft(np.zeros(12, np.float32), np.zeros(12, np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(logn=st.integers(3, 11), seed=st.integers(0, 2**31 - 1))
+def test_fft_linearity_hypothesis(logn, seed):
+    """FFT(a) + FFT(b) == FFT(a + b) — exercises the whole butterfly cascade."""
+    n = 1 << logn
+    a_re, a_im = _planes(n, seed)
+    b_re, b_im = _planes(n, seed + 1)
+    fa = model.fft(a_re, a_im)
+    fb = model.fft(b_re, b_im)
+    fab = model.fft(a_re + b_re, a_im + b_im)
+    np.testing.assert_allclose(
+        np.asarray(fab[0]), np.asarray(fa[0]) + np.asarray(fb[0]), rtol=1e-3, atol=1e-3
+    )
+    np.testing.assert_allclose(
+        np.asarray(fab[1]), np.asarray(fa[1]) + np.asarray(fb[1]), rtol=1e-3, atol=1e-3
+    )

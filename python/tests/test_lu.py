@@ -1,0 +1,83 @@
+"""SparseLU block kernels vs numpy oracles (lu0 / fwd / bdiv / bmod)."""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+
+def _spd_block(n, seed):
+    """Diagonally-dominant block so pivot-free LU is stable (as in BOTS)."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    return a + n * np.eye(n, dtype=np.float32)
+
+
+@pytest.mark.parametrize("n", [4, 16, 64, 128])
+def test_lu0_matches_ref(n):
+    a = _spd_block(n, n)
+    got = np.asarray(kernels.lu0(a))
+    np.testing.assert_allclose(got, ref.lu0(a), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [4, 16, 64])
+def test_lu0_reconstructs(n):
+    a = _spd_block(n, seed=n + 1)
+    packed = np.asarray(kernels.lu0(a), dtype=np.float64)
+    l, u = ref.unpack_lu(packed)
+    np.testing.assert_allclose(l @ u, a, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [16, 64])
+def test_fwd_matches_ref(n):
+    diag = np.asarray(kernels.lu0(_spd_block(n, 3)))
+    b = np.random.default_rng(4).standard_normal((n, n)).astype(np.float32)
+    got = np.asarray(kernels.fwd(diag, b))
+    np.testing.assert_allclose(got, ref.fwd(diag, b), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [16, 64])
+def test_bdiv_matches_ref(n):
+    diag = np.asarray(kernels.lu0(_spd_block(n, 5)))
+    b = np.random.default_rng(6).standard_normal((n, n)).astype(np.float32)
+    got = np.asarray(kernels.bdiv(diag, b))
+    np.testing.assert_allclose(got, ref.bdiv(diag, b), rtol=1e-3, atol=1e-3)
+
+
+def test_bmod_matches_ref():
+    rng = np.random.default_rng(7)
+    a, b, c = (rng.standard_normal((64, 64)).astype(np.float32) for _ in range(3))
+    got = np.asarray(kernels.bmod(a, b, c))
+    np.testing.assert_allclose(got, ref.bmod(a, b, c), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([8, 16, 32, 64]), seed=st.integers(0, 2**31 - 1))
+def test_blocked_lu_solves_system_hypothesis(n, seed):
+    """Full 2x2-block LU using all four kernels factorizes correctly."""
+    rng = np.random.default_rng(seed)
+    blocks = {}
+    for i in range(2):
+        for j in range(2):
+            blk = rng.standard_normal((n, n)).astype(np.float32)
+            if i == j:
+                blk += 2 * n * np.eye(n, dtype=np.float32)
+            blocks[i, j] = blk
+    a_full = np.block([[blocks[0, 0], blocks[0, 1]], [blocks[1, 0], blocks[1, 1]]])
+
+    d00 = np.asarray(kernels.lu0(blocks[0, 0]))
+    u01 = np.asarray(kernels.fwd(d00, blocks[0, 1]))
+    l10 = np.asarray(kernels.bdiv(d00, blocks[1, 0]))
+    s11 = np.asarray(kernels.bmod(l10, u01, blocks[1, 1]))
+    d11 = np.asarray(kernels.lu0(s11))
+
+    l00, u00 = ref.unpack_lu(np.asarray(d00, dtype=np.float64))
+    l11, u11 = ref.unpack_lu(np.asarray(d11, dtype=np.float64))
+    zero = np.zeros((n, n))
+    l_full = np.block([[l00, zero], [l10.astype(np.float64), l11]])
+    u_full = np.block([[u00, u01.astype(np.float64)], [zero, u11]])
+    rel = np.abs(l_full @ u_full - a_full).max() / np.abs(a_full).max()
+    assert rel < 5e-3, f"blocked LU residual too large: {rel}"

@@ -1,0 +1,86 @@
+"""L1 matmul_tile kernel vs pure-numpy oracle."""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (128, 128, 128),
+        (256, 256, 256),
+        (256, 128, 384),
+        (128, 384, 128),
+        (512, 128, 256),
+    ],
+)
+def test_matmul_matches_ref(m, k, n):
+    x, y = _rand((m, k), m * 3 + k), _rand((k, n), n)
+    got = np.asarray(kernels.matmul(x, y))
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(64, 64, 64), (128, 64, 32), (32, 128, 128)])
+def test_matmul_tile_shape_invariance(bm, bk, bn):
+    """Result must not depend on the VMEM tiling."""
+    x, y = _rand((256, 256), 7), _rand((256, 256), 8)
+    base = np.asarray(kernels.matmul(x, y))
+    # K-tiling changes the accumulation order => fp noise, not error
+    tiled = np.asarray(kernels.matmul(x, y, bm=bm, bk=bk, bn=bn))
+    np.testing.assert_allclose(tiled, base, rtol=2e-3, atol=1e-4)
+
+
+def test_matmul_rejects_mismatch():
+    with pytest.raises(ValueError):
+        kernels.matmul(np.zeros((128, 128), np.float32), np.zeros((256, 128), np.float32))
+
+
+def test_matmul_rejects_non_multiple():
+    with pytest.raises(ValueError):
+        kernels.matmul(np.zeros((100, 128), np.float32), np.zeros((128, 128), np.float32), bm=64)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mi=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    ni=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_shapes(mi, ki, ni, seed):
+    """Hypothesis sweep over tile-multiple shapes."""
+    m, k, n = 64 * mi, 64 * ki, 64 * ni
+    x, y = _rand((m, k), seed), _rand((k, n), seed + 1)
+    got = np.asarray(kernels.matmul(x, y, bm=64, bk=64, bn=64))
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=3e-4, atol=3e-4)
+
+
+def test_strassen_combine_equals_matmul():
+    """One level of Strassen recombination == plain matmul."""
+    from compile import model
+
+    rng = np.random.default_rng(42)
+    n = 128
+    x = rng.standard_normal((2 * n, 2 * n)).astype(np.float32)
+    y = rng.standard_normal((2 * n, 2 * n)).astype(np.float32)
+    a11, a12, a21, a22 = x[:n, :n], x[:n, n:], x[n:, :n], x[n:, n:]
+    b11, b12, b21, b22 = y[:n, :n], y[:n, n:], y[n:, :n], y[n:, n:]
+    mm = lambda a, b: np.asarray(kernels.matmul(a, b))
+    m1 = mm(a11 + a22, b11 + b22)
+    m2 = mm(a21 + a22, b11)
+    m3 = mm(a11, b12 - b22)
+    m4 = mm(a22, b21 - b11)
+    m5 = mm(a11 + a12, b22)
+    m6 = mm(a21 - a11, b11 + b12)
+    m7 = mm(a12 - a22, b21 + b22)
+    (got,) = model.strassen_combine(m1, m2, m3, m4, m5, m6, m7)
+    np.testing.assert_allclose(np.asarray(got), x @ y, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,107 @@
+"""Priority kernel (paper Figs 2-4) vs the straight-line pseudo-code oracle."""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def ladder8_hops():
+    """Twisted-ladder 8-node hop matrix (the X4600 model; see DESIGN.md §2)."""
+    edges = [(0, 1), (6, 7), (0, 2), (2, 4), (4, 6), (1, 3), (3, 5), (5, 7), (2, 5), (3, 4)]
+    n = 8
+    inf = 99
+    d = np.full((n, n), inf)
+    np.fill_diagonal(d, 0)
+    for a, b in edges:
+        d[a, b] = d[b, a] = 1
+    for k in range(n):  # Floyd-Warshall
+        d = np.minimum(d, d[:, k : k + 1] + d[k : k + 1, :])
+    return d.astype(np.int32)
+
+
+def core_hops(node_hops, cores_per_node):
+    """Expand a node hop matrix to per-core (cores on one node: 0 hops)."""
+    n = node_hops.shape[0]
+    reps = np.repeat(np.arange(n), cores_per_node)
+    return node_hops[np.ix_(reps, reps)].astype(np.int32)
+
+
+def alpha_weights(maxh=8, a0=16.0, decay=0.5):
+    return (a0 * decay ** np.arange(maxh)).astype(np.float32)
+
+
+@pytest.mark.parametrize("cores_per_node", [1, 2, 4])
+def test_priority_matches_pseudocode(cores_per_node):
+    hops = core_hops(ladder8_hops(), cores_per_node)
+    n = hops.shape[0]
+    alpha = alpha_weights()
+    base = np.full(n, float(cores_per_node), np.float32)
+    a = ref.weighted_hop_matrix(hops, alpha)
+    want_p1, want_p = ref.priority_scores(a, base)
+    got_p1, got_p = model.priority_scores(hops, alpha, base.astype(np.float32))
+    np.testing.assert_allclose(np.asarray(got_p1), want_p1, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_p), want_p, rtol=2e-4)
+
+
+def test_central_nodes_win_on_ladder():
+    """Paper §IV: on an asymmetric fabric the central nodes must out-rank
+    the corners — that is the whole point of the allocation scheme."""
+    hops = core_hops(ladder8_hops(), 2)
+    alpha = alpha_weights()
+    base = np.full(16, 2.0, np.float32)
+    _, p = model.priority_scores(hops, alpha, base)
+    p = np.asarray(p)
+    corner_cores = [0, 1, 2, 3, 12, 13, 14, 15]  # nodes 0,1,6,7
+    central_cores = [4, 5, 6, 7, 8, 9, 10, 11]  # nodes 2,3,4,5
+    assert p[central_cores].min() > p[corner_cores].max()
+
+
+def test_same_node_cores_equal_priority():
+    hops = core_hops(ladder8_hops(), 2)
+    _, p = model.priority_scores(hops, alpha_weights(), np.full(16, 2.0, np.float32))
+    p = np.asarray(p)
+    for node in range(8):
+        assert p[2 * node] == pytest.approx(p[2 * node + 1], rel=1e-6)
+
+
+def test_uniform_topology_uniform_priority():
+    """Fully-connected (all 1 hop): every core must get the same priority."""
+    n = 8
+    hops = np.ones((n, n), np.int32) - np.eye(n, dtype=np.int32)
+    hops = np.where(np.eye(n, dtype=bool), 0, 1).astype(np.int32)
+    _, p = model.priority_scores(hops, alpha_weights(), np.full(n, 1.0, np.float32))
+    p = np.asarray(p)
+    np.testing.assert_allclose(p, p[0], rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([4, 8, 16]))
+def test_priority_hypothesis_random_topology(seed, n):
+    """Random connected graphs: kernel == pseudo-code oracle."""
+    rng = np.random.default_rng(seed)
+    inf = 99
+    d = np.full((n, n), inf)
+    np.fill_diagonal(d, 0)
+    # random spanning chain + extra edges => connected
+    perm = rng.permutation(n)
+    for i in range(n - 1):
+        a, b = perm[i], perm[i + 1]
+        d[a, b] = d[b, a] = 1
+    for _ in range(n):
+        a, b = rng.integers(0, n, 2)
+        if a != b:
+            d[a, b] = d[b, a] = 1
+    for k in range(n):
+        d = np.minimum(d, d[:, k : k + 1] + d[k : k + 1, :])
+    hops = d.astype(np.int32)
+    alpha = alpha_weights()
+    base = rng.uniform(0, 4, n).astype(np.float32)
+    a = ref.weighted_hop_matrix(hops, alpha)
+    want_p1, want_p = ref.priority_scores(a, base)
+    got_p1, got_p = model.priority_scores(hops, alpha, base)
+    np.testing.assert_allclose(np.asarray(got_p1), want_p1, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_p), want_p, rtol=1e-3, atol=1e-3)

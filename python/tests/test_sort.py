@@ -1,0 +1,63 @@
+"""Compare-exchange kernel + L2 bitonic network vs np.sort."""
+
+import numpy as np
+import pytest
+
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels, model
+from compile.kernels import ref
+
+
+def test_compare_exchange_matches_ref():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal(2048).astype(np.float32)
+    b = rng.standard_normal(2048).astype(np.float32)
+    d = rng.choice(np.array([-1, 1], np.int32), 2048)
+    lo, hi = kernels.compare_exchange(a, b, d)
+    rlo, rhi = ref.compare_exchange(a, b, d)
+    np.testing.assert_array_equal(np.asarray(lo), rlo)
+    np.testing.assert_array_equal(np.asarray(hi), rhi)
+
+
+def test_compare_exchange_direction_semantics():
+    a = np.array([3.0, 3.0], np.float32)
+    b = np.array([1.0, 1.0], np.float32)
+    d = np.array([1, -1], np.int32)
+    lo, hi = kernels.compare_exchange(a, b, d)
+    assert np.asarray(lo).tolist() == [1.0, 3.0]
+    assert np.asarray(hi).tolist() == [3.0, 1.0]
+
+
+@pytest.mark.parametrize("n", [8, 64, 256, 1024])
+def test_bitonic_sorts(n):
+    rng = np.random.default_rng(n)
+    x = rng.standard_normal(n).astype(np.float32)
+    (got,) = model.bitonic_sort(x)
+    np.testing.assert_array_equal(np.asarray(got), np.sort(x))
+
+
+def test_bitonic_sorted_input():
+    x = np.arange(256, dtype=np.float32)
+    (got,) = model.bitonic_sort(x)
+    np.testing.assert_array_equal(np.asarray(got), x)
+
+
+def test_bitonic_reverse_input():
+    x = np.arange(256, dtype=np.float32)[::-1].copy()
+    (got,) = model.bitonic_sort(x)
+    np.testing.assert_array_equal(np.asarray(got), np.sort(x))
+
+
+def test_bitonic_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        model.bitonic_sort(np.zeros(100, np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(logn=st.integers(2, 10), seed=st.integers(0, 2**31 - 1))
+def test_bitonic_hypothesis(logn, seed):
+    n = 1 << logn
+    x = np.random.default_rng(seed).integers(-1000, 1000, n).astype(np.float32)
+    (got,) = model.bitonic_sort(x)
+    np.testing.assert_array_equal(np.asarray(got), np.sort(x))

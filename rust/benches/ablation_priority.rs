@@ -1,0 +1,67 @@
+//! E12 — ablation of the §IV priority formula on the data-heavy FFT.
+//!
+//! Compares four placement score functions fed to the same binding logic:
+//!
+//! * `flat`     — all cores equal (master lands on core 0: the baseline);
+//! * `base`     — node-size term only (first attribution level);
+//! * `v1`       — base + Fig-2 weighted neighbour counts;
+//! * `v1+v2`    — the full Fig-3/Fig-4 two-pass priority (the paper's).
+//!
+//! On the homogeneous X4600 `base` is flat (all nodes have 2 cores), so
+//! the interesting deltas are flat → v1 → v1+v2; the heterogeneous
+//! variant shows where the base term earns its keep.
+
+use numanos::bots;
+use numanos::config::Size;
+use numanos::coordinator::binding::bind_with_scores;
+use numanos::coordinator::priority::{alpha_weights, core_priorities, weighted_hop_matrix};
+use numanos::coordinator::runtime::Runtime;
+use numanos::coordinator::sched::Policy;
+use numanos::metrics::speedup;
+use numanos::topology::Topology;
+use numanos::util::SplitMix64;
+
+fn scores(topo: &Topology, mode: &str) -> Vec<f64> {
+    let n = topo.num_cores();
+    let alpha = alpha_weights(topo.max_hops());
+    let a = weighted_hop_matrix(topo, &alpha);
+    match mode {
+        "flat" => vec![0.0; n],
+        "base" => (0..n).map(|c| topo.cores_per_node(topo.node_of(c)) as f64).collect(),
+        "v1" => (0..n)
+            .map(|c| {
+                topo.cores_per_node(topo.node_of(c)) as f64 + a[c].iter().sum::<f64>()
+            })
+            .collect(),
+        "v1+v2" => core_priorities(topo).scores,
+        _ => unreachable!(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let seed = 42;
+    for topo_name in ["x4600", "x4600_hetero"] {
+        let topo = Topology::by_name(topo_name)?;
+        let rt = Runtime::new(topo.clone(), Default::default());
+        let mut serial_w = bots::create("fft", Size::Medium, seed)?;
+        let serial = rt.run_serial(serial_w.as_mut(), seed)?;
+        println!("\n== {topo_name} (fft medium, wf, 16 threads) ==");
+        for mode in ["flat", "base", "v1", "v1+v2"] {
+            let sc = scores(&topo, mode);
+            let mut rng = SplitMix64::new(seed);
+            let cores = bind_with_scores(&topo, 16, &sc, &mut rng);
+            let mut w = bots::create("fft", Size::Medium, seed)?;
+            let stats =
+                rt.run_bound(w.as_mut(), Policy::WorkFirst, &cores, true, seed, None)?;
+            println!(
+                "  {mode:<6} master core {:>2} (node {}) | speedup {:.2}x | miss hops {:.2}",
+                cores[0],
+                topo.node_of(cores[0]),
+                speedup(&serial, &stats),
+                stats.mem.mean_miss_hops(),
+            );
+        }
+    }
+    println!("\nablation_priority done");
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper FIG8: Strassen speedup on the simulated X4600.
+//!
+//! Sweeps the figure's scheduler configurations over the paper's thread
+//! axis against a fresh serial baseline and prints measured-vs-published
+//! anchors.  `NUMANOS_SIZE=small|medium|large` and `NUMANOS_SEED`
+//! override the defaults; output also lands in `results/fig8.{md,csv}`.
+
+fn main() -> anyhow::Result<()> {
+    numanos::harness::bench_figure_main("fig8")
+}

@@ -1,0 +1,68 @@
+//! E11 — topology & memory-model validation (paper §II / Fig 1).
+//!
+//! Checks the simulated X4600 against the published properties (8 nodes x
+//! 2 cores, hop distances 0-3, corner sockets less central) and measures
+//! the effective NUMA factors the cost model produces: the per-hop access
+//! latency ratios a `numactl`-style microbenchmark would report.
+
+use numanos::simnuma::{CostModel, MemSim, PAGE_BYTES};
+use numanos::topology::Topology;
+use numanos::util::Time;
+
+fn stream_cost(hops_target: u8) -> (Time, u8) {
+    // place data via core 0 (node 0), stream it from a core `hops` away
+    let topo = Topology::x4600();
+    // exclude core 0 itself: it first-touched the data, so its caches are
+    // warm — the microbenchmark wants the cold-DRAM NUMA factor
+    let reader = (1..topo.num_cores())
+        .find(|&c| topo.core_hops(0, c) == hops_target)
+        .expect("no core at that distance");
+    let mut mem = MemSim::new(topo, CostModel::default());
+    let region = mem.alloc(64 * PAGE_BYTES);
+    mem.first_touch(0, region, 0);
+    (mem.access(reader, region, false, 0), hops_target)
+}
+
+fn main() {
+    let topo = Topology::x4600();
+    println!("== X4600 model validation ==");
+    println!(
+        "nodes={} cores={} max_hops={}",
+        topo.num_nodes(),
+        topo.num_cores(),
+        topo.max_hops()
+    );
+    assert_eq!((topo.num_nodes(), topo.num_cores(), topo.max_hops()), (8, 16, 3));
+
+    println!("\nnode centrality (mean hops to all cores):");
+    for node in 0..8 {
+        println!("  node {node}: {:.2}", topo.mean_hops_from(node));
+    }
+    let corner = [0usize, 1, 6, 7];
+    let inner = [2usize, 3, 4, 5];
+    let worst_inner = inner.iter().map(|&n| topo.mean_hops_from(n)).fold(0.0, f64::max);
+    let best_corner =
+        corner.iter().map(|&n| topo.mean_hops_from(n)).fold(f64::INFINITY, f64::min);
+    assert!(worst_inner < best_corner, "corner sockets must be less central");
+
+    println!("\nmeasured streaming NUMA factors (cold 256 KiB read):");
+    let (local, _) = stream_cost(0);
+    for hops in 0..=3u8 {
+        let (cost, _) = stream_cost(hops);
+        println!(
+            "  {hops} hop(s): {:>9} ns  factor {:.2}",
+            cost / 1000,
+            cost as f64 / local as f64
+        );
+        if hops > 0 {
+            assert!(cost > local, "remote must cost more than local");
+        }
+    }
+    let (far, _) = stream_cost(3);
+    let factor = far as f64 / local as f64;
+    assert!(
+        (1.3..4.5).contains(&factor),
+        "3-hop factor {factor:.2} outside the Opteron-plausible band"
+    );
+    println!("\ntopo_validation OK (factors within the X4600-plausible band)");
+}

@@ -1,0 +1,142 @@
+//! `fib` — recursive Fibonacci (BOTS `fib.c`).
+//!
+//! The pure runtime-overhead probe: no data, exponentially many tiny tasks.
+//! Below `cutoff` the recursion is executed serially inside the task (the
+//! BOTS manual-cutoff idiom), costing one compute unit bundle proportional
+//! to the subtree's node count.
+
+use crate::config::Size;
+use crate::coordinator::task::{BodyCtx, TaskDesc, Workload};
+use crate::simnuma::MemSim;
+use crate::util::Time;
+
+/// Compute units charged per visited fib node (call+add).
+const UNITS_PER_NODE: u64 = 4;
+
+pub struct Fib {
+    n: u32,
+    cutoff: u32,
+}
+
+impl Fib {
+    pub fn new(size: Size) -> Self {
+        // cutoffs keep leaf work comfortably above the per-task runtime
+        // overhead (the BOTS manual-cutoff tuning guidance)
+        let (n, cutoff) = match size {
+            Size::Small => (22, 12),
+            Size::Medium => (28, 14),
+            Size::Large => (32, 16),
+        };
+        Self { n, cutoff }
+    }
+
+    pub fn with_params(n: u32, cutoff: u32) -> Self {
+        Self { n, cutoff }
+    }
+}
+
+/// Nodes in the call tree of fib(n): 2*fib(n+1) - 1.
+pub fn call_tree_nodes(n: u32) -> u64 {
+    2 * fib_value(n + 1) - 1
+}
+
+/// fib(0)=0, fib(1)=1.
+pub fn fib_value(n: u32) -> u64 {
+    let (mut a, mut b) = (0u64, 1u64);
+    for _ in 0..n {
+        let c = a + b;
+        a = b;
+        b = c;
+    }
+    a
+}
+
+/// Task count of the truncated tree (tasks spawned above the cutoff).
+pub fn task_count(n: u32, cutoff: u32) -> u64 {
+    if n < cutoff {
+        1
+    } else {
+        1 + task_count(n - 1, cutoff) + task_count(n.saturating_sub(2), cutoff)
+    }
+}
+
+impl Workload for Fib {
+    fn name(&self) -> &'static str {
+        "fib"
+    }
+
+    fn init(&mut self, _mem: &mut MemSim, _master_core: usize) -> Time {
+        0 // no data
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::new(0, [self.n as i64, 0, 0, 0])
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        let n = desc.args[0] as u32;
+        if n < self.cutoff {
+            // serial subtree
+            ctx.compute(call_tree_nodes(n) * UNITS_PER_NODE);
+            return;
+        }
+        ctx.spawn(TaskDesc::new(0, [n as i64 - 1, 0, 0, 0]));
+        ctx.spawn(TaskDesc::new(0, [n as i64 - 2, 0, 0, 0]));
+        ctx.taskwait();
+        ctx.compute(UNITS_PER_NODE); // the add
+    }
+
+    fn task_count_hint(&self) -> Option<u64> {
+        Some(task_count(self.n, self.cutoff))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::binding::BindPolicy;
+    use crate::coordinator::runtime::Runtime;
+    use crate::coordinator::sched::Policy;
+
+    #[test]
+    fn fib_values() {
+        assert_eq!(fib_value(0), 0);
+        assert_eq!(fib_value(10), 55);
+        assert_eq!(call_tree_nodes(2), 3); // fib(2) calls fib(1), fib(0)
+    }
+
+    #[test]
+    fn task_count_matches_run() {
+        let rt = Runtime::paper_testbed();
+        let mut w = Fib::with_params(12, 6);
+        let stats = rt.run(&mut w, Policy::WorkFirst, BindPolicy::Linear, 4, 1, None).unwrap();
+        assert_eq!(stats.tasks, task_count(12, 6));
+    }
+
+    #[test]
+    fn total_work_is_policy_invariant() {
+        // Work conservation: compute charged is identical across policies.
+        let rt = Runtime::paper_testbed();
+        let mut works = Vec::new();
+        for &p in &[Policy::Serial, Policy::BreadthFirst, Policy::WorkFirst, Policy::Dfwsrpt] {
+            let threads = if p == Policy::Serial { 1 } else { 8 };
+            let mut w = Fib::with_params(14, 7);
+            let s = rt.run(&mut w, p, BindPolicy::Linear, threads, 3, None).unwrap();
+            works.push(s.work_time);
+        }
+        for w in &works[1..] {
+            assert_eq!(*w, works[0]);
+        }
+    }
+
+    #[test]
+    fn scales_with_threads() {
+        let rt = Runtime::paper_testbed();
+        let mut w1 = Fib::new(Size::Small);
+        let serial = rt.run_serial(&mut w1, 1).unwrap();
+        let mut w8 = Fib::new(Size::Small);
+        let par = rt.run(&mut w8, Policy::WorkFirst, BindPolicy::Linear, 8, 1, None).unwrap();
+        let sp = serial.makespan as f64 / par.makespan as f64;
+        assert!(sp > 2.0, "fib speedup {sp} too low");
+    }
+}

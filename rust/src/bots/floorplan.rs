@@ -1,0 +1,135 @@
+//! `floorplan` — VLSI cell placement by branch-and-bound (BOTS
+//! `floorplan.c`).
+//!
+//! An irregular, pruned search tree over a small shared board — modest
+//! data, lots of short tasks (paper Fig 5: work-stealing policies win
+//! beyond 6 cores; NUMA allocation adds ~3%).
+//!
+//! The tree shape is deterministic-pseudo-random: each node tries up to
+//! `max_branch` candidate placements; a candidate survives pruning with a
+//! probability that decays with depth (hash-driven), mimicking the bound
+//! tightening as the board fills.
+
+use crate::bots::mix;
+use crate::config::Size;
+use crate::coordinator::task::{BodyCtx, TaskDesc, Workload};
+use crate::simnuma::{MemSim, Region};
+use crate::util::Time;
+
+pub struct Floorplan {
+    depth: u32,
+    max_branch: u32,
+    seed: u64,
+    /// shared board description (cells catalogue) — master-touched
+    board: Region,
+}
+
+impl Floorplan {
+    pub fn new(size: Size, seed: u64) -> Self {
+        let (depth, max_branch) = match size {
+            Size::Small => (6, 5),
+            Size::Medium => (8, 6),
+            Size::Large => (9, 6),
+        };
+        Self { depth, max_branch, seed, board: Region::EMPTY }
+    }
+
+    /// How many candidates survive pruning at (node, depth).
+    fn branches(&self, node: u64, depth: u32) -> u32 {
+        if depth >= self.depth {
+            return 0;
+        }
+        let h = mix(node.wrapping_add(self.seed), depth as u64 + 1);
+        // survival rate decays with depth: ~85% at the root, ~35% deep
+        let keep_pct = 85u64.saturating_sub(6 * depth as u64);
+        let mut count = 0;
+        for c in 0..self.max_branch {
+            if mix(h, c as u64) % 100 < keep_pct {
+                count += 1;
+            }
+        }
+        count
+    }
+}
+
+impl Workload for Floorplan {
+    fn name(&self) -> &'static str {
+        "floorplan"
+    }
+
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        self.board = mem.alloc(8 * 1024); // cells catalogue
+        mem.first_touch(master_core, self.board, 0)
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::new(0, [1, 0, 0, 0]) // node id 1, depth 0
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        let node = desc.args[0] as u64;
+        let depth = desc.args[1] as u32;
+        // evaluate this placement: read the shared catalogue, copy the
+        // board state (small private write), compute the bound
+        ctx.read(self.board);
+        ctx.compute(1_500 + (mix(node, 17) % 1_500));
+        let b = self.branches(node, depth);
+        if b == 0 {
+            return; // pruned / leaf
+        }
+        for c in 0..b {
+            ctx.spawn(TaskDesc::new(
+                0,
+                [(node * self.max_branch as u64 + c as u64 + 1) as i64, depth as i64 + 1, 0, 0],
+            ));
+        }
+        ctx.taskwait();
+        ctx.compute(300); // fold children's best bound
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::binding::BindPolicy;
+    use crate::coordinator::runtime::Runtime;
+    use crate::coordinator::sched::Policy;
+
+    #[test]
+    fn tree_is_irregular_but_deterministic() {
+        let f1 = Floorplan::new(Size::Small, 42);
+        let f2 = Floorplan::new(Size::Small, 42);
+        let f3 = Floorplan::new(Size::Small, 43);
+        let sig = |f: &Floorplan| -> Vec<u32> { (0..50).map(|n| f.branches(n, 2)).collect() };
+        assert_eq!(sig(&f1), sig(&f2));
+        assert_ne!(sig(&f1), sig(&f3));
+        // irregular: not all nodes have the same branching
+        let s = sig(&f1);
+        assert!(s.iter().any(|&b| b != s[0]));
+    }
+
+    #[test]
+    fn task_count_deterministic_across_policies() {
+        let rt = Runtime::paper_testbed();
+        let mut counts = Vec::new();
+        for &p in &[Policy::Serial, Policy::BreadthFirst, Policy::CilkBased, Policy::Dfwsrpt] {
+            let threads = if p == Policy::Serial { 1 } else { 8 };
+            let mut w = Floorplan::new(Size::Small, 7);
+            let s = rt.run(&mut w, p, BindPolicy::Linear, threads, 7, None).unwrap();
+            counts.push(s.tasks);
+        }
+        assert!(counts.windows(2).all(|c| c[0] == c[1]), "{counts:?}");
+        assert!(counts[0] > 100, "tree too small: {}", counts[0]);
+    }
+
+    #[test]
+    fn work_stealing_scales() {
+        let rt = Runtime::paper_testbed();
+        let mut ws = Floorplan::new(Size::Small, 3);
+        let serial = rt.run_serial(&mut ws, 1).unwrap();
+        let mut wp = Floorplan::new(Size::Small, 3);
+        let par = rt.run(&mut wp, Policy::CilkBased, BindPolicy::Linear, 8, 3, None).unwrap();
+        let sp = serial.makespan as f64 / par.makespan as f64;
+        assert!(sp > 3.0, "floorplan speedup {sp}");
+    }
+}

@@ -1,0 +1,175 @@
+//! `health` — Columbian health-care simulation (BOTS `health.c`).
+//!
+//! A fixed multilevel village hierarchy simulated over discrete time
+//! steps; every step walks the tree with one task per village, each
+//! touching that village's patient lists.  Moderate data, repeated
+//! traversal — locality across steps matters (a village processed on the
+//! same core re-hits its caches; after first-touch its pages stay on the
+//! first toucher's node).
+//!
+//! Steps are chained through the post phase: `Step(t)` spawns the village
+//! recursion, waits, then spawns `Step(t+1)`.
+
+use crate::bots::mix;
+use crate::config::Size;
+use crate::coordinator::task::{BodyCtx, TaskDesc, Workload};
+use crate::simnuma::{MemSim, Region};
+use crate::util::Time;
+
+const K_STEP: u16 = 0;
+const K_VILLAGE: u16 = 1;
+
+pub struct Health {
+    branching: u32,
+    depth: u32,
+    steps: u32,
+    villages: Vec<Region>,
+}
+
+impl Health {
+    pub fn new(size: Size) -> Self {
+        let (branching, depth, steps) = match size {
+            Size::Small => (4, 3, 10),
+            Size::Medium => (4, 5, 40),
+            Size::Large => (4, 5, 100),
+        };
+        Self::with_params(branching, depth, steps)
+    }
+
+    pub fn with_params(branching: u32, depth: u32, steps: u32) -> Self {
+        Self { branching, depth, steps, villages: Vec::new() }
+    }
+
+    pub fn village_count(&self) -> usize {
+        // full b-ary tree with `depth` levels
+        let b = self.branching as usize;
+        (0..self.depth).map(|d| b.pow(d)).sum()
+    }
+
+    fn depth_of(&self, v: usize) -> u32 {
+        let b = self.branching as usize;
+        let mut lo = 0;
+        let mut layer = 1;
+        let mut d = 0;
+        loop {
+            if v < lo + layer {
+                return d;
+            }
+            lo += layer;
+            layer *= b;
+            d += 1;
+        }
+    }
+}
+
+impl Workload for Health {
+    fn name(&self) -> &'static str {
+        "health"
+    }
+
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        let count = self.village_count();
+        self.villages = (0..count)
+            .map(|v| {
+                // deeper villages are smaller clinics
+                let bytes = 16 * 1024 >> self.depth_of(v).min(3);
+                mem.alloc(bytes as u64)
+            })
+            .collect();
+        let mut t = 0;
+        for v in 0..count {
+            t += mem.first_touch(master_core, self.villages[v], t);
+        }
+        t
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::new(K_STEP, [0, 0, 0, 0])
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        match desc.kind {
+            K_STEP => {
+                let t = desc.args[0] as u32;
+                ctx.spawn(TaskDesc::new(K_VILLAGE, [0, t as i64, 0, 0]));
+                ctx.taskwait();
+                if t + 1 < self.steps {
+                    ctx.spawn(TaskDesc::new(K_STEP, [(t + 1) as i64, 0, 0, 0]));
+                }
+            }
+            K_VILLAGE => {
+                let v = desc.args[0] as usize;
+                let t = desc.args[1] as u64;
+                let d = self.depth_of(v);
+                // spawn child villages first (depth-first wavefront)
+                if d + 1 < self.depth {
+                    let b = self.branching as usize;
+                    for c in 0..b {
+                        let child = v * b + c + 1;
+                        ctx.spawn(TaskDesc::new(K_VILLAGE, [child as i64, t as i64, 0, 0]));
+                    }
+                }
+                // simulate this village: patients arrive/heal/refer
+                let region = self.villages[v];
+                ctx.read(region);
+                ctx.compute(800 + mix(v as u64, t) % 800);
+                ctx.write(region);
+                if d + 1 < self.depth {
+                    ctx.taskwait();
+                    ctx.compute(200); // merge referrals from children
+                }
+            }
+            other => panic!("health: unknown task kind {other}"),
+        }
+    }
+
+    fn task_count_hint(&self) -> Option<u64> {
+        Some(self.steps as u64 * (self.village_count() as u64 + 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::binding::BindPolicy;
+    use crate::coordinator::runtime::Runtime;
+    use crate::coordinator::sched::Policy;
+
+    #[test]
+    fn village_tree_size() {
+        let h = Health::with_params(4, 3, 1);
+        assert_eq!(h.village_count(), 1 + 4 + 16);
+        assert_eq!(h.depth_of(0), 0);
+        assert_eq!(h.depth_of(1), 1);
+        assert_eq!(h.depth_of(5), 2);
+    }
+
+    #[test]
+    fn task_count_is_steps_times_villages() {
+        let rt = Runtime::paper_testbed();
+        let mut w = Health::with_params(3, 3, 5);
+        let hint = w.task_count_hint().unwrap();
+        let s = rt.run(&mut w, Policy::WorkFirst, BindPolicy::Linear, 4, 1, None).unwrap();
+        assert_eq!(s.tasks, hint);
+    }
+
+    #[test]
+    fn repeated_steps_hit_caches() {
+        let rt = Runtime::paper_testbed();
+        let mut w = Health::with_params(3, 3, 10);
+        let s = rt.run_serial(&mut w, 1).unwrap();
+        // after step 1 the villages are cache-resident for a 1-thread run
+        let hits = s.mem.l1_hit_lines + s.mem.l2_hit_lines;
+        assert!(hits > s.mem.miss_lines(), "locality should dominate");
+    }
+
+    #[test]
+    fn completes_under_every_policy() {
+        let rt = Runtime::paper_testbed();
+        for &p in Policy::all() {
+            let threads = if p == Policy::Serial { 1 } else { 8 };
+            let mut w = Health::with_params(4, 3, 3);
+            rt.run(&mut w, p, BindPolicy::Linear, threads, 2, None).unwrap();
+        }
+    }
+}

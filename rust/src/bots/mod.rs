@@ -1,0 +1,110 @@
+//! The Barcelona OpenMP Tasks Suite (BOTS v1.1.2) — the paper's workload
+//! set, rebuilt as deterministic task-graph generators over the
+//! [`Workload`](crate::coordinator::task::Workload) trait.
+//!
+//! Eleven benchmarks, as in the paper (§V: "the eleven benchmarks" —
+//! SparseLU counts twice via its `single` and `for` task-generation
+//! variants):
+//!
+//! | module | data | tasks | paper figure |
+//! |---|---|---|---|
+//! | [`fib`]        | none   | many tiny    | — (overhead probe) |
+//! | [`floorplan`]  | small  | irregular B&B| Fig 5 |
+//! | [`sparselu`]   | blocks | phased       | Fig 6 (for), §V (single) |
+//! | [`fft`]        | huge   | millions*    | Figs 7, 13 |
+//! | [`strassen`]   | huge   | 7-ary tree   | Figs 8, 15 |
+//! | [`sort`]       | huge   | merge tree   | Figs 9, 14 |
+//! | [`nqueens`]    | none   | search tree  | Fig 10 |
+//! | [`health`]     | medium | stepped tree | §V |
+//! | [`alignment`]  | medium | independent  | §V |
+//! | [`uts`]        | none   | unbalanced   | §V |
+//!
+//! *scaled ~100–1000x down so a figure regenerates in seconds while
+//! preserving the footprint-to-node-capacity and task-granularity ratios
+//! the paper's effects depend on (DESIGN.md §2).
+//!
+//! Each module documents its BOTS original, its task decomposition and the
+//! scaling; compute leaves carry `Action::Kernel` tags so PJRT mode can
+//! run the real Pallas/JAX artifacts (e.g. `matmul_f32_128` for Strassen
+//! leaves).
+
+pub mod alignment;
+pub mod fft;
+pub mod fib;
+pub mod floorplan;
+pub mod health;
+pub mod nqueens;
+pub mod sort;
+pub mod sparselu;
+pub mod strassen;
+pub mod uts;
+
+use anyhow::{bail, Result};
+
+use crate::config::Size;
+use crate::coordinator::task::Workload;
+
+/// The eleven paper benchmarks.
+pub const NAMES: &[&str] = &[
+    "fib",
+    "floorplan",
+    "fft",
+    "sort",
+    "strassen",
+    "sparselu_single",
+    "sparselu_for",
+    "nqueens",
+    "health",
+    "alignment",
+    "uts",
+];
+
+/// Instantiate a benchmark by name.
+pub fn create(name: &str, size: Size, seed: u64) -> Result<Box<dyn Workload>> {
+    Ok(match name {
+        "fib" => Box::new(fib::Fib::new(size)),
+        "floorplan" => Box::new(floorplan::Floorplan::new(size, seed)),
+        "fft" => Box::new(fft::Fft::new(size)),
+        "sort" => Box::new(sort::Sort::new(size)),
+        "strassen" => Box::new(strassen::Strassen::new(size)),
+        "sparselu_single" => Box::new(sparselu::SparseLu::new(size, sparselu::Variant::Single)),
+        "sparselu_for" => Box::new(sparselu::SparseLu::new(size, sparselu::Variant::For)),
+        "nqueens" => Box::new(nqueens::NQueens::new(size)),
+        "health" => Box::new(health::Health::new(size)),
+        "alignment" => Box::new(alignment::Alignment::new(size)),
+        "uts" => Box::new(uts::Uts::new(size, seed)),
+        other => bail!("unknown benchmark '{other}' (see `numanos list`)"),
+    })
+}
+
+/// Stateless mixing hash for deterministic workload shapes (UTS node
+/// branching, floorplan pruning) — SplitMix64 finalizer.
+#[inline]
+pub(crate) fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_eleven() {
+        assert_eq!(NAMES.len(), 11);
+        for name in NAMES {
+            let w = create(name, Size::Small, 1).unwrap();
+            assert!(!w.name().is_empty());
+        }
+        assert!(create("bogus", Size::Small, 1).is_err());
+    }
+
+    #[test]
+    fn mix_is_deterministic_and_spreads() {
+        assert_eq!(mix(1, 2), mix(1, 2));
+        assert_ne!(mix(1, 2), mix(2, 1));
+        assert_ne!(mix(0, 0), mix(0, 1));
+    }
+}

@@ -1,0 +1,179 @@
+//! `nqueens` — N-Queens solution counting (BOTS `nqueens.c`).
+//!
+//! Near-zero data, a clean search tree with uniform node costs — the
+//! benchmark where plain breadth-first wins on load balance (paper Fig 10:
+//! 15.93x at 16 cores, NUMA extensions worth only ~1.35%).
+//!
+//! Tasks spawn per valid queen placement down to `cutoff` rows; below it
+//! the subtree is solved serially inside the task, with the compute charge
+//! equal to the *actual* visited-node count (the module carries a real
+//! bitmask solver — this benchmark genuinely solves N-Queens).
+
+use crate::config::Size;
+use crate::coordinator::task::{BodyCtx, TaskDesc, Workload};
+use crate::simnuma::{MemSim, Region};
+use crate::util::Time;
+
+/// compute units charged per visited search node.
+const UNITS_PER_NODE: u64 = 30;
+
+pub struct NQueens {
+    n: u32,
+    cutoff: u32,
+    board: Region,
+}
+
+impl NQueens {
+    pub fn new(size: Size) -> Self {
+        let (n, cutoff) = match size {
+            Size::Small => (10, 3),
+            Size::Medium => (12, 3),
+            Size::Large => (13, 4),
+        };
+        Self::with_params(n, cutoff)
+    }
+
+    pub fn with_params(n: u32, cutoff: u32) -> Self {
+        assert!(n <= 16 && cutoff < n);
+        Self { n, cutoff, board: Region::EMPTY }
+    }
+}
+
+/// Count solutions and visited nodes below a partial placement.
+/// Bitmask depth-first search (LSB = column 0).
+pub fn solve(n: u32, cols: u32, d1: u32, d2: u32, row: u32) -> (u64, u64) {
+    if row == n {
+        return (1, 1);
+    }
+    let full = (1u32 << n) - 1;
+    let mut free = full & !(cols | d1 | d2);
+    let mut solutions = 0;
+    let mut nodes = 1;
+    while free != 0 {
+        let bit = free & free.wrapping_neg();
+        free ^= bit;
+        let (s, v) = solve(n, cols | bit, (d1 | bit) << 1, (d2 | bit) >> 1, row + 1);
+        solutions += s;
+        nodes += v;
+    }
+    (solutions, nodes)
+}
+
+impl Workload for NQueens {
+    fn name(&self) -> &'static str {
+        "nqueens"
+    }
+
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        // a single shared config page (board size etc.)
+        self.board = mem.alloc(256);
+        mem.first_touch(master_core, self.board, 0)
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::new(0, [0, 0, 0, 0])
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        let cols = desc.args[0] as u32;
+        let d1 = desc.args[1] as u32;
+        let d2 = desc.args[2] as u32;
+        let row = desc.args[3] as u32;
+        ctx.read(self.board);
+        if row == self.cutoff {
+            let (_, nodes) = solve(self.n, cols, d1, d2, row);
+            ctx.compute(nodes * UNITS_PER_NODE);
+            return;
+        }
+        let full = (1u32 << self.n) - 1;
+        let mut free = full & !(cols | d1 | d2);
+        ctx.compute(UNITS_PER_NODE);
+        while free != 0 {
+            let bit = free & free.wrapping_neg();
+            free ^= bit;
+            ctx.spawn(TaskDesc::new(
+                0,
+                [
+                    (cols | bit) as i64,
+                    ((d1 | bit) << 1) as i64,
+                    ((d2 | bit) >> 1) as i64,
+                    (row + 1) as i64,
+                ],
+            ));
+        }
+        ctx.taskwait();
+        ctx.compute(UNITS_PER_NODE); // reduce the counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::binding::BindPolicy;
+    use crate::coordinator::runtime::Runtime;
+    use crate::coordinator::sched::Policy;
+
+    #[test]
+    fn solver_is_correct() {
+        // classic N-Queens solution counts
+        assert_eq!(solve(4, 0, 0, 0, 0).0, 2);
+        assert_eq!(solve(6, 0, 0, 0, 0).0, 4);
+        assert_eq!(solve(8, 0, 0, 0, 0).0, 92);
+        assert_eq!(solve(10, 0, 0, 0, 0).0, 724);
+    }
+
+    #[test]
+    fn work_is_policy_invariant() {
+        let rt = Runtime::paper_testbed();
+        let mut works = Vec::new();
+        for &p in &[Policy::Serial, Policy::BreadthFirst, Policy::Dfwsrpt] {
+            let threads = if p == Policy::Serial { 1 } else { 8 };
+            let mut w = NQueens::with_params(9, 2);
+            let s = rt.run(&mut w, p, BindPolicy::Linear, threads, 1, None).unwrap();
+            works.push(s.work_time);
+        }
+        // memory costs vary with placement; compute dominates here, so
+        // totals should be within a few percent
+        let base = works[0] as f64;
+        for w in &works[1..] {
+            assert!((*w as f64 - base).abs() / base < 0.05);
+        }
+    }
+
+    #[test]
+    fn task_tree_matches_prefix_counts() {
+        // tasks = partial placements up to cutoff depth (+ root)
+        fn prefix_nodes(n: u32, cutoff: u32, cols: u32, d1: u32, d2: u32, row: u32) -> u64 {
+            if row == cutoff {
+                return 1;
+            }
+            let full = (1u32 << n) - 1;
+            let mut free = full & !(cols | d1 | d2);
+            let mut total = 1;
+            while free != 0 {
+                let bit = free & free.wrapping_neg();
+                free ^= bit;
+                total +=
+                    prefix_nodes(n, cutoff, cols | bit, (d1 | bit) << 1, (d2 | bit) >> 1, row + 1);
+            }
+            total
+        }
+        let rt = Runtime::paper_testbed();
+        let mut w = NQueens::with_params(8, 2);
+        let s = rt.run(&mut w, Policy::WorkFirst, BindPolicy::Linear, 4, 1, None).unwrap();
+        assert_eq!(s.tasks, prefix_nodes(8, 2, 0, 0, 0, 0));
+    }
+
+    #[test]
+    fn bf_scales_well_here() {
+        let rt = Runtime::paper_testbed();
+        let mut ws = NQueens::new(Size::Small);
+        let serial = rt.run_serial(&mut ws, 1).unwrap();
+        let mut wb = NQueens::new(Size::Small);
+        let bf = rt.run(&mut wb, Policy::BreadthFirst, BindPolicy::Linear, 16, 1, None).unwrap();
+        let sp = serial.makespan as f64 / bf.makespan as f64;
+        // the Small tree has only ~600 tasks; Fig 10 scaling happens at
+        // Medium (checked by the fig10 bench)
+        assert!(sp > 2.0, "nqueens bf speedup {sp} too low");
+    }
+}

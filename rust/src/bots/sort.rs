@@ -1,0 +1,228 @@
+//! `sort` — cilksort-style parallel mergesort (BOTS `sort.c`).
+//!
+//! High memory utilization (paper: 8.5 GB with the large set) and a deep
+//! merge tree — the second NUMA-sensitive workload (Figs 9, 14).
+//!
+//! Decomposition: `Sort(off, n, depth)` recursively halves down to a
+//! serial leaf sort; after the halves complete, the post phase spawns
+//! `Merge` chunk tasks that read both sorted halves from the source buffer
+//! and write the destination.  Buffers ping-pong by depth parity (X→Y→X…),
+//! which reproduces the BOTS data flow: every level streams the whole
+//! array once.
+//!
+//! Leaf tasks carry `Action::Kernel(SORT_LEAF)`: PJRT mode sorts one real
+//! 1024-key vector through the bitonic-network artifact and verifies it.
+
+use crate::config::Size;
+use crate::coordinator::task::{BodyCtx, TaskDesc, Workload};
+use crate::runtime::{Buf, ExecEngine};
+use crate::simnuma::{MemSim, Region};
+use crate::util::Time;
+
+const K_SORT: u16 = 0;
+const K_MERGE: u16 = 1;
+
+pub const SORT_LEAF_KERNEL: u64 = 2;
+
+/// Bytes per key (i32/f32 keys as in BOTS).
+const ELEM: u64 = 4;
+
+pub struct Sort {
+    n: u64,
+    leaf: u64,
+    chunk: u64,
+    x: Region,
+    y: Region,
+    real_in: Vec<f32>,
+    real_out: Option<Vec<f32>>,
+}
+
+impl Sort {
+    pub fn new(size: Size) -> Self {
+        let (n, leaf, chunk) = match size {
+            Size::Small => (1 << 15, 1 << 10, 1 << 10),
+            Size::Medium => (1 << 21, 1 << 10, 1 << 10),
+            Size::Large => (1 << 23, 1 << 11, 1 << 11),
+        };
+        Self::with_params(n, leaf, chunk)
+    }
+
+    pub fn with_params(n: u64, leaf: u64, chunk: u64) -> Self {
+        assert!(n.is_power_of_two() && leaf.is_power_of_two());
+        Self {
+            n,
+            leaf,
+            chunk,
+            x: Region::EMPTY,
+            y: Region::EMPTY,
+            real_in: Vec::new(),
+            real_out: None,
+        }
+    }
+
+    /// Source/destination buffers for a node at `depth` (ping-pong).
+    fn buffers(&self, depth: u64) -> (Region, Region) {
+        if depth % 2 == 0 {
+            (self.x, self.y)
+        } else {
+            (self.y, self.x)
+        }
+    }
+
+    fn log2(x: u64) -> u64 {
+        63 - x.leading_zeros() as u64
+    }
+}
+
+impl Workload for Sort {
+    fn name(&self) -> &'static str {
+        "sort"
+    }
+
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        self.x = mem.alloc(self.n * ELEM);
+        self.y = mem.alloc(self.n * ELEM);
+        // master fills the input array (first touch); the scratch buffer
+        // is touched lazily by whichever worker merges into it first —
+        // exactly the asymmetry that makes NUMA stealing pay off here.
+        let t = mem.first_touch(master_core, self.x, 0);
+        self.real_in = (0..1024).map(|i| ((i * 193 + 71) % 1009) as f32).collect();
+        t
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::new(K_SORT, [0, self.n as i64, 0, 0])
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        let off = desc.args[0] as u64;
+        let n = desc.args[1] as u64;
+        let depth = desc.args[2] as u64;
+        match desc.kind {
+            K_SORT => {
+                let (src, _dst) = self.buffers(depth);
+                if n <= self.leaf {
+                    let seg = src.slice(off * ELEM, n * ELEM);
+                    ctx.read(seg);
+                    ctx.kernel(SORT_LEAF_KERNEL);
+                    ctx.compute(4 * n * Self::log2(n));
+                    ctx.write(seg);
+                    // leaves at odd depth must land in the buffer their
+                    // parent merges from; model the copy-through
+                    return;
+                }
+                let h = n / 2;
+                // children sort in the *other* buffer pair orientation:
+                // they sort src in place, we merge src -> dst
+                ctx.spawn(TaskDesc::new(K_SORT, [off as i64, h as i64, depth as i64 + 1, 0]));
+                ctx.spawn(TaskDesc::new(
+                    K_SORT,
+                    [(off + h) as i64, h as i64, depth as i64 + 1, 0],
+                ));
+                ctx.taskwait();
+                let chunks = (n / self.chunk).max(1);
+                for i in 0..chunks {
+                    ctx.spawn(TaskDesc::new(
+                        K_MERGE,
+                        [off as i64, n as i64, depth as i64, i as i64],
+                    ));
+                }
+            }
+            K_MERGE => {
+                // children sorted at depth+1, i.e. in buffer(depth+1).0 = our dst?
+                // ping-pong: merge from the children's buffer into ours.
+                let (child_src, _) = self.buffers(depth + 1);
+                let (our_src, _) = self.buffers(depth);
+                let h = n / 2;
+                let chunks = (n / self.chunk).max(1);
+                let c = n / chunks;
+                let i = desc.args[3] as u64;
+                // a binary merge-split chunk reads c/2 from each half (on
+                // average) and writes c contiguous output keys
+                let a = child_src.slice((off + (i * c / 2).min(h - c / 2)) * ELEM, c / 2 * ELEM);
+                let b = child_src
+                    .slice((off + h + (i * c / 2).min(h - c / 2)) * ELEM, c / 2 * ELEM);
+                let out = our_src.slice((off + i * c) * ELEM, c * ELEM);
+                ctx.read(a);
+                ctx.read(b);
+                ctx.compute(3 * c);
+                ctx.write(out);
+            }
+            k => panic!("sort: unknown task kind {k}"),
+        }
+    }
+
+    fn run_kernel(&mut self, tag: u64, exec: &mut ExecEngine) -> anyhow::Result<()> {
+        if tag != SORT_LEAF_KERNEL || self.real_out.is_some() {
+            return Ok(());
+        }
+        let buf = Buf::f32(self.real_in.clone(), &[1024]);
+        self.real_out = Some(exec.call1("sort_f32_1024", &[buf])?);
+        Ok(())
+    }
+
+    fn verify(&self, _exec: &mut ExecEngine) -> anyhow::Result<()> {
+        let Some(got) = &self.real_out else {
+            anyhow::bail!("sort: no kernel output captured");
+        };
+        let mut want = self.real_in.clone();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        anyhow::ensure!(got == &want, "sort kernel output not sorted correctly");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::binding::BindPolicy;
+    use crate::coordinator::runtime::Runtime;
+    use crate::coordinator::sched::Policy;
+
+    #[test]
+    fn completes_under_all_policies() {
+        let rt = Runtime::paper_testbed();
+        let mut count = None;
+        for &p in Policy::all() {
+            let threads = if p == Policy::Serial { 1 } else { 8 };
+            let mut w = Sort::with_params(1 << 13, 1 << 10, 1 << 9);
+            let s = rt.run(&mut w, p, BindPolicy::Linear, threads, 2, None).unwrap();
+            match count {
+                None => count = Some(s.tasks),
+                Some(c) => assert_eq!(s.tasks, c, "{}", p.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn merge_tree_task_count() {
+        fn count(n: u64, leaf: u64, chunk: u64) -> u64 {
+            if n <= leaf {
+                1
+            } else {
+                1 + (n / chunk).max(1) + 2 * count(n / 2, leaf, chunk)
+            }
+        }
+        let rt = Runtime::paper_testbed();
+        let (n, leaf, chunk) = (1 << 13, 1 << 10, 1 << 9);
+        let mut w = Sort::with_params(n, leaf, chunk);
+        let s = rt.run_serial(&mut w, 1).unwrap();
+        assert_eq!(s.tasks, count(n, leaf, chunk));
+    }
+
+    #[test]
+    fn numa_bind_reduces_remote_traffic() {
+        let rt = Runtime::paper_testbed();
+        let mut a = Sort::new(Size::Small);
+        let base = rt.run(&mut a, Policy::WorkFirst, BindPolicy::Linear, 16, 3, None).unwrap();
+        let mut b = Sort::new(Size::Small);
+        let numa = rt.run(&mut b, Policy::WorkFirst, BindPolicy::NumaAware, 16, 3, None).unwrap();
+        // mean hop distance of missed lines must not get worse
+        assert!(
+            numa.mem.mean_miss_hops() <= base.mem.mean_miss_hops() + 0.25,
+            "numa {} vs base {}",
+            numa.mem.mean_miss_hops(),
+            base.mem.mean_miss_hops()
+        );
+    }
+}

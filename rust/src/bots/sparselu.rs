@@ -1,0 +1,506 @@
+//! `sparselu` — blocked LU factorization of a sparse block matrix
+//! (BOTS `sparselu.c`), in both task-generation variants the paper runs:
+//!
+//! * **single** (`sparselu_single`): one generator — the master spawns all
+//!   of a phase's tasks itself (`#pragma omp single` + tasks).  All tasks
+//!   start life in one pool, so everything the other 15 threads run is
+//!   *stolen* — maximal steal traffic.
+//! * **for** (`sparselu_for`, Fig 6): generation is itself parallelized —
+//!   phases fan out through binary `Split` tasks (the `#pragma omp for`
+//!   analogue), so tasks are born distributed.
+//!
+//! Per step `k`: `lu0(k,k)` (inline, as BOTS does) → `fwd(k,j)` / `bdiv(i,k)`
+//! over non-null blocks → taskwait → `bmod(i,j,k)` trailing updates →
+//! next step.  The phase chain is expressed with nested tasks
+//! (`Step(k)` → post spawns `BmodPhase(k)` → post spawns `Step(k+1)`).
+//!
+//! Sparsity: a deterministic ~50%-density pattern with full diagonal;
+//! fill-in is precomputed in `init` by propagating the update closure.
+//! Initial blocks are master-touched (first-touch on the master's node);
+//! **fill-in blocks are first touched by the worker that computes them** —
+//! the same NUMA dynamic as Strassen's temps.
+//!
+//! PJRT mode drives the *real* factorization — every lu0/fwd/bdiv/bmod
+//! task calls its 64x64 Pallas-kernel artifact on live block data, and
+//! `verify()` checks `L @ U ≈ A` afterwards.  The simulated scheduler
+//! orders the real math (small sizes only; see `examples/e2e_compute.rs`).
+
+use std::collections::HashMap;
+
+use crate::config::Size;
+use crate::coordinator::task::{BodyCtx, TaskDesc, Workload};
+use crate::runtime::{Buf, ExecEngine};
+use crate::simnuma::{MemSim, Region};
+use crate::util::Time;
+
+const K_STEP: u16 = 0;
+const K_BMOD_PHASE: u16 = 1;
+const K_FWD: u16 = 2;
+const K_BDIV: u16 = 3;
+const K_BMOD: u16 = 4;
+/// Binary splitter for the `for` variant: args = [kind, k, lo, hi] packed.
+const K_SPLIT_FWD_BDIV: u16 = 5;
+const K_SPLIT_BMOD: u16 = 6;
+
+/// Block edge (BOTS default submatrix size).
+const B: u64 = 64;
+/// f32 block bytes.
+const BLOCK_BYTES: u64 = B * B * 4;
+
+/// compute units (~ns) per block op at ~4 flop/ns
+const LU0_UNITS: u64 = 2 * B * B * B / 3 / 4;
+const TRSM_UNITS: u64 = B * B * B / 4;
+const BMOD_UNITS: u64 = 2 * B * B * B / 4;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Single,
+    For,
+}
+
+pub struct SparseLu {
+    nb: usize,
+    variant: Variant,
+    /// non-null pattern after symbolic fill-in
+    filled: Vec<bool>,
+    /// initially non-null (master-touched at init)
+    initial: Vec<bool>,
+    blocks: Vec<Region>,
+    /// PJRT mode: live block data + original matrix copy
+    real: HashMap<(usize, usize), Vec<f32>>,
+    real_orig: HashMap<(usize, usize), Vec<f32>>,
+    real_enabled: bool,
+}
+
+impl SparseLu {
+    pub fn new(size: Size, variant: Variant) -> Self {
+        let nb = match size {
+            Size::Small => 8,
+            Size::Medium => 24,
+            Size::Large => 32,
+        };
+        Self::with_params(nb, variant)
+    }
+
+    pub fn with_params(nb: usize, variant: Variant) -> Self {
+        let initial = gen_pattern(nb);
+        let filled = symbolic_fill(nb, &initial);
+        Self {
+            nb,
+            variant,
+            filled,
+            initial,
+            blocks: Vec::new(),
+            real: HashMap::new(),
+            real_orig: HashMap::new(),
+            real_enabled: false,
+        }
+    }
+
+    #[inline]
+    fn idx(&self, i: usize, j: usize) -> usize {
+        i * self.nb + j
+    }
+
+    fn nonnull(&self, i: usize, j: usize) -> bool {
+        self.filled[self.idx(i, j)]
+    }
+
+    fn block(&self, i: usize, j: usize) -> Region {
+        self.blocks[self.idx(i, j)]
+    }
+
+    /// Generate the real f32 blocks (PJRT mode), diagonally dominant.
+    /// Only worthwhile at sizes where driving every block op through the
+    /// interpret-mode artifacts stays fast.
+    fn gen_real(&mut self) {
+        if self.nb > 12 {
+            return; // sim-only at benchmark scale
+        }
+        for i in 0..self.nb {
+            for j in 0..self.nb {
+                if !self.initial[self.idx(i, j)] {
+                    continue;
+                }
+                let mut blk: Vec<f32> = (0..B * B)
+                    .map(|e| {
+                        let h = crate::bots::mix(e + 1, (i * self.nb + j) as u64 + 7);
+                        (h % 1000) as f32 / 1000.0 - 0.5
+                    })
+                    .collect();
+                if i == j {
+                    for d in 0..B as usize {
+                        blk[d * B as usize + d] += 2.0 * B as f32;
+                    }
+                }
+                self.real.insert((i, j), blk.clone());
+                self.real_orig.insert((i, j), blk);
+            }
+        }
+        self.real_enabled = true;
+    }
+
+    fn tag(op: u64, i: usize, j: usize, k: usize) -> u64 {
+        op | (i as u64) << 8 | (j as u64) << 24 | (k as u64) << 40
+    }
+}
+
+/// BOTS-like initial sparsity: full diagonal + ~50% off-diagonal density,
+/// deterministic in (i, j).
+fn gen_pattern(nb: usize) -> Vec<bool> {
+    let mut p = vec![false; nb * nb];
+    for i in 0..nb {
+        for j in 0..nb {
+            p[i * nb + j] =
+                i == j || crate::bots::mix(i as u64 + 1, j as u64 + 13) % 100 < 50;
+        }
+    }
+    p
+}
+
+/// Propagate fill-in: (i,j) fills if (i,k) and (k,j) are non-null, k < min(i,j).
+fn symbolic_fill(nb: usize, initial: &[bool]) -> Vec<bool> {
+    let mut f = initial.to_vec();
+    for k in 0..nb {
+        for i in (k + 1)..nb {
+            if !f[i * nb + k] {
+                continue;
+            }
+            for j in (k + 1)..nb {
+                if f[k * nb + j] {
+                    f[i * nb + j] = true;
+                }
+            }
+        }
+    }
+    f
+}
+
+impl Workload for SparseLu {
+    fn name(&self) -> &'static str {
+        match self.variant {
+            Variant::Single => "sparselu_single",
+            Variant::For => "sparselu_for",
+        }
+    }
+
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        self.blocks = (0..self.nb * self.nb)
+            .map(|idx| if self.filled[idx] { mem.alloc(BLOCK_BYTES) } else { Region::EMPTY })
+            .collect();
+        // master generates the initial matrix: first-touch of initial blocks
+        let mut t = 0;
+        for i in 0..self.nb {
+            for j in 0..self.nb {
+                if self.initial[self.idx(i, j)] {
+                    t += mem.first_touch(master_core, self.block(i, j), t);
+                }
+            }
+        }
+        self.gen_real();
+        t
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::new(K_STEP, [0, 0, 0, 0])
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        let nb = self.nb;
+        match desc.kind {
+            K_STEP => {
+                let k = desc.args[0] as usize;
+                // lu0 inline (as the BOTS generator thread does)
+                let diag = self.block(k, k);
+                ctx.read(diag);
+                ctx.kernel(Self::tag(1, k, k, k));
+                ctx.compute(LU0_UNITS);
+                ctx.write(diag);
+                match self.variant {
+                    Variant::Single => {
+                        for j in (k + 1)..nb {
+                            if self.nonnull(k, j) {
+                                ctx.spawn(TaskDesc::new(K_FWD, [k as i64, j as i64, 0, 0]));
+                            }
+                        }
+                        for i in (k + 1)..nb {
+                            if self.nonnull(i, k) {
+                                ctx.spawn(TaskDesc::new(K_BDIV, [i as i64, k as i64, 0, 0]));
+                            }
+                        }
+                    }
+                    Variant::For => {
+                        if k + 1 < nb {
+                            ctx.spawn(TaskDesc::new(
+                                K_SPLIT_FWD_BDIV,
+                                [k as i64, (k + 1) as i64, nb as i64, 0],
+                            ));
+                        }
+                    }
+                }
+                ctx.taskwait();
+                ctx.spawn(TaskDesc::new(K_BMOD_PHASE, [k as i64, 0, 0, 0]));
+            }
+            K_BMOD_PHASE => {
+                let k = desc.args[0] as usize;
+                match self.variant {
+                    Variant::Single => {
+                        for i in (k + 1)..nb {
+                            if !self.nonnull(i, k) {
+                                continue;
+                            }
+                            for j in (k + 1)..nb {
+                                if self.nonnull(k, j) {
+                                    ctx.spawn(TaskDesc::new(
+                                        K_BMOD,
+                                        [i as i64, j as i64, k as i64, 0],
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    Variant::For => {
+                        if k + 1 < nb {
+                            ctx.spawn(TaskDesc::new(
+                                K_SPLIT_BMOD,
+                                [k as i64, (k + 1) as i64, nb as i64, 0],
+                            ));
+                        }
+                    }
+                }
+                ctx.taskwait();
+                if k + 1 < nb {
+                    ctx.spawn(TaskDesc::new(K_STEP, [(k + 1) as i64, 0, 0, 0]));
+                }
+            }
+            K_SPLIT_FWD_BDIV | K_SPLIT_BMOD => {
+                let k = desc.args[0] as usize;
+                let lo = desc.args[1] as usize;
+                let hi = desc.args[2] as usize;
+                ctx.compute(50); // chunking logic
+                if hi - lo > 2 {
+                    let mid = (lo + hi) / 2;
+                    ctx.spawn(TaskDesc::new(desc.kind, [k as i64, lo as i64, mid as i64, 0]));
+                    ctx.spawn(TaskDesc::new(desc.kind, [k as i64, mid as i64, hi as i64, 0]));
+                    return;
+                }
+                for x in lo..hi {
+                    if desc.kind == K_SPLIT_FWD_BDIV {
+                        if self.nonnull(k, x) {
+                            ctx.spawn(TaskDesc::new(K_FWD, [k as i64, x as i64, 0, 0]));
+                        }
+                        if self.nonnull(x, k) {
+                            ctx.spawn(TaskDesc::new(K_BDIV, [x as i64, k as i64, 0, 0]));
+                        }
+                    } else {
+                        // bmod row x
+                        if !self.nonnull(x, k) {
+                            continue;
+                        }
+                        for j in (k + 1)..nb {
+                            if self.nonnull(k, j) {
+                                ctx.spawn(TaskDesc::new(
+                                    K_BMOD,
+                                    [x as i64, j as i64, k as i64, 0],
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            K_FWD => {
+                let k = desc.args[0] as usize;
+                let j = desc.args[1] as usize;
+                ctx.read(self.block(k, k));
+                ctx.read(self.block(k, j));
+                ctx.kernel(Self::tag(2, k, j, k));
+                ctx.compute(TRSM_UNITS);
+                ctx.write(self.block(k, j));
+            }
+            K_BDIV => {
+                let i = desc.args[0] as usize;
+                let k = desc.args[1] as usize;
+                ctx.read(self.block(k, k));
+                ctx.read(self.block(i, k));
+                ctx.kernel(Self::tag(3, i, k, k));
+                ctx.compute(TRSM_UNITS);
+                ctx.write(self.block(i, k));
+            }
+            K_BMOD => {
+                let i = desc.args[0] as usize;
+                let j = desc.args[1] as usize;
+                let k = desc.args[2] as usize;
+                ctx.read(self.block(i, k));
+                ctx.read(self.block(k, j));
+                ctx.read(self.block(i, j));
+                ctx.kernel(Self::tag(4, i, j, k));
+                ctx.compute(BMOD_UNITS);
+                // fill-in blocks get their first touch HERE, by the
+                // executing worker — worker-local placement
+                ctx.write(self.block(i, j));
+            }
+            other => panic!("sparselu: unknown task kind {other}"),
+        }
+    }
+
+    fn run_kernel(&mut self, tag: u64, exec: &mut ExecEngine) -> anyhow::Result<()> {
+        if !self.real_enabled {
+            return Ok(());
+        }
+        let op = tag & 0xff;
+        let i = ((tag >> 8) & 0xffff) as usize;
+        let j = ((tag >> 24) & 0xffff) as usize;
+        let k = ((tag >> 40) & 0xffff) as usize;
+        let shape = [B as i64, B as i64];
+        let get = |m: &HashMap<(usize, usize), Vec<f32>>, key: (usize, usize)| -> Vec<f32> {
+            m.get(&key).cloned().unwrap_or_else(|| vec![0f32; (B * B) as usize])
+        };
+        match op {
+            1 => {
+                let d = get(&self.real, (k, k));
+                let out = exec.call1("lu0_f32_64", &[Buf::f32(d, &shape)])?;
+                self.real.insert((k, k), out);
+            }
+            2 => {
+                let d = get(&self.real, (k, k));
+                let b = get(&self.real, (k, j));
+                let out =
+                    exec.call1("fwd_f32_64", &[Buf::f32(d, &shape), Buf::f32(b, &shape)])?;
+                self.real.insert((k, j), out);
+            }
+            3 => {
+                let d = get(&self.real, (k, k));
+                let b = get(&self.real, (i, k));
+                let out =
+                    exec.call1("bdiv_f32_64", &[Buf::f32(d, &shape), Buf::f32(b, &shape)])?;
+                self.real.insert((i, k), out);
+            }
+            4 => {
+                let a = get(&self.real, (i, k));
+                let b = get(&self.real, (k, j));
+                let c = get(&self.real, (i, j));
+                let out = exec.call1(
+                    "bmod_f32_64",
+                    &[Buf::f32(a, &shape), Buf::f32(b, &shape), Buf::f32(c, &shape)],
+                )?;
+                self.real.insert((i, j), out);
+            }
+            _ => anyhow::bail!("sparselu: bad kernel tag {tag:#x}"),
+        }
+        Ok(())
+    }
+
+    fn verify(&self, _exec: &mut ExecEngine) -> anyhow::Result<()> {
+        // L @ U must reconstruct the original matrix on the filled pattern.
+        anyhow::ensure!(self.real_enabled, "sparselu: real mode not enabled");
+        let nb = self.nb;
+        let n = B as usize;
+        let zero = vec![0f32; n * n];
+        let mut max_rel = 0f64;
+        for bi in 0..nb {
+            for bj in 0..nb {
+                // (L @ U)[bi][bj] = sum_k L[bi][k] @ U[k][bj]
+                let mut acc = vec![0f64; n * n];
+                for bk in 0..=bi.min(bj) {
+                    let lb = self.real.get(&(bi, bk)).unwrap_or(&zero);
+                    let ub = self.real.get(&(bk, bj)).unwrap_or(&zero);
+                    for r in 0..n {
+                        for k in 0..n {
+                            let l = if bi == bk {
+                                // unit-lower packed block
+                                match r.cmp(&k) {
+                                    std::cmp::Ordering::Less => 0.0,
+                                    std::cmp::Ordering::Equal => 1.0,
+                                    std::cmp::Ordering::Greater => lb[r * n + k] as f64,
+                                }
+                            } else {
+                                lb[r * n + k] as f64
+                            };
+                            if l == 0.0 {
+                                continue;
+                            }
+                            for c in 0..n {
+                                let u = if bk == bj {
+                                    if k <= c { ub[k * n + c] as f64 } else { 0.0 }
+                                } else {
+                                    ub[k * n + c] as f64
+                                };
+                                acc[r * n + c] += l * u;
+                            }
+                        }
+                    }
+                }
+                let orig = self.real_orig.get(&(bi, bj)).unwrap_or(&zero);
+                for e in 0..n * n {
+                    let err = (acc[e] - orig[e] as f64).abs();
+                    max_rel = max_rel.max(err / (2.0 * B as f64));
+                }
+            }
+        }
+        anyhow::ensure!(max_rel < 1e-3, "sparselu L@U residual too large: {max_rel}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::binding::BindPolicy;
+    use crate::coordinator::runtime::Runtime;
+    use crate::coordinator::sched::Policy;
+
+    #[test]
+    fn pattern_has_full_diagonal_and_fill_monotone() {
+        let nb = 12;
+        let initial = gen_pattern(nb);
+        let filled = symbolic_fill(nb, &initial);
+        for i in 0..nb {
+            assert!(initial[i * nb + i]);
+        }
+        for (a, b) in initial.iter().zip(&filled) {
+            assert!(!a || *b, "fill-in must be a superset");
+        }
+        assert!(filled.iter().filter(|&&x| x).count() > initial.iter().filter(|&&x| x).count());
+    }
+
+    #[test]
+    fn both_variants_complete_with_same_work() {
+        let rt = Runtime::paper_testbed();
+        let mut single = SparseLu::with_params(8, Variant::Single);
+        let s1 = rt.run(&mut single, Policy::WorkFirst, BindPolicy::Linear, 8, 1, None).unwrap();
+        let mut forv = SparseLu::with_params(8, Variant::For);
+        let s2 = rt.run(&mut forv, Policy::WorkFirst, BindPolicy::Linear, 8, 1, None).unwrap();
+        // identical numeric work (split tasks add only tiny chunking cost)
+        let (w1, w2) = (s1.work_time as f64, s2.work_time as f64);
+        assert!((w1 - w2).abs() / w1 < 0.02, "{w1} vs {w2}");
+        // the for variant spreads generation => at least as many tasks
+        assert!(s2.tasks >= s1.tasks);
+    }
+
+    #[test]
+    fn single_variant_steals_more() {
+        // all single-variant tasks are born in one pool: everyone else steals
+        let rt = Runtime::paper_testbed();
+        let mut single = SparseLu::with_params(10, Variant::Single);
+        let s1 = rt.run(&mut single, Policy::WorkFirst, BindPolicy::Linear, 8, 3, None).unwrap();
+        let mut forv = SparseLu::with_params(10, Variant::For);
+        let s2 = rt.run(&mut forv, Policy::WorkFirst, BindPolicy::Linear, 8, 3, None).unwrap();
+        assert!(
+            s1.steals > s2.steals / 2,
+            "single {} vs for {}",
+            s1.steals,
+            s2.steals
+        );
+    }
+
+    #[test]
+    fn completes_under_every_policy() {
+        let rt = Runtime::paper_testbed();
+        for &p in Policy::all() {
+            let threads = if p == Policy::Serial { 1 } else { 6 };
+            let mut w = SparseLu::with_params(6, Variant::For);
+            let s = rt.run(&mut w, p, BindPolicy::Linear, threads, 5, None).unwrap();
+            assert!(s.tasks > 6, "{}", p.name());
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! `uts` — Unbalanced Tree Search (BOTS `uts.c`, binomial variant).
+//!
+//! The load-balance torture test: a hash-derived tree whose subtree sizes
+//! vary wildly, with essentially no data.  Stock work stealing handles it
+//! well; the paper groups it with the non-data-intensive benchmarks (small
+//! NUMA gains).
+//!
+//! Binomial model: the root has `b0` children; every other node has `m`
+//! children with probability `q` (here qm ≈ 0.99 < 1, so the expected tree
+//! is finite ≈ b0/(1-qm) nodes).  Branching decisions come from a
+//! SplitMix-style hash of (seed, node id) — deterministic, seedable, and
+//! a faithful stand-in for UTS's SHA-1 stream.  A depth cap bounds the
+//! geometric tail (documented deviation; hit with probability < 1e-6).
+
+use crate::bots::mix;
+use crate::config::Size;
+use crate::coordinator::task::{BodyCtx, TaskDesc, Workload};
+use crate::simnuma::MemSim;
+use crate::util::Time;
+
+/// SHA-1-ish per-node compute charge.
+const UNITS_PER_NODE: u64 = 220;
+const DEPTH_CAP: u32 = 64;
+
+pub struct Uts {
+    b0: u32,
+    m: u32,
+    /// q in permille (q = q_pm / 1000)
+    q_pm: u32,
+    seed: u64,
+}
+
+impl Uts {
+    pub fn new(size: Size, seed: u64) -> Self {
+        let b0 = match size {
+            Size::Small => 64,
+            Size::Medium => 500,
+            Size::Large => 2000,
+        };
+        Self { b0, m: 8, q_pm: 124, seed } // qm = 0.992
+    }
+
+    pub fn with_params(b0: u32, m: u32, q_pm: u32, seed: u64) -> Self {
+        assert!(m as u64 * q_pm as u64 <= 1000, "qm must be < 1 for a finite tree");
+        Self { b0, m, q_pm, seed }
+    }
+
+    fn children(&self, node: u64, depth: u32) -> u32 {
+        if depth >= DEPTH_CAP {
+            return 0;
+        }
+        if node == 0 {
+            return self.b0;
+        }
+        if mix(self.seed ^ node, depth as u64) % 1000 < self.q_pm as u64 {
+            self.m
+        } else {
+            0
+        }
+    }
+}
+
+impl Workload for Uts {
+    fn name(&self) -> &'static str {
+        "uts"
+    }
+
+    fn init(&mut self, _mem: &mut MemSim, _master_core: usize) -> Time {
+        0
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::new(0, [0, 0, 0, 0])
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        let node = desc.args[0] as u64;
+        let depth = desc.args[1] as u32;
+        ctx.compute(UNITS_PER_NODE);
+        let kids = self.children(node, depth);
+        for c in 0..kids {
+            // child ids: hash-derived, collision-free enough for shaping
+            let child = mix(node.wrapping_add(1), c as u64 + 1) | 1;
+            ctx.spawn(TaskDesc::new(0, [child as i64, depth as i64 + 1, 0, 0]));
+        }
+        if kids > 0 {
+            ctx.taskwait();
+            ctx.compute(20);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::binding::BindPolicy;
+    use crate::coordinator::runtime::Runtime;
+    use crate::coordinator::sched::Policy;
+
+    #[test]
+    fn tree_is_deterministic_per_seed() {
+        let rt = Runtime::paper_testbed();
+        let mut a = Uts::with_params(32, 8, 110, 5);
+        let sa = rt.run(&mut a, Policy::WorkFirst, BindPolicy::Linear, 8, 1, None).unwrap();
+        let mut b = Uts::with_params(32, 8, 110, 5);
+        let sb = rt.run(&mut b, Policy::WorkFirst, BindPolicy::Linear, 8, 1, None).unwrap();
+        assert_eq!(sa.tasks, sb.tasks);
+        let mut c = Uts::with_params(32, 8, 110, 6);
+        let sc = rt.run(&mut c, Policy::WorkFirst, BindPolicy::Linear, 8, 1, None).unwrap();
+        assert_ne!(sa.tasks, sc.tasks, "different seed, different tree");
+    }
+
+    #[test]
+    fn tree_is_unbalanced() {
+        // distribution across workers should be very uneven without
+        // stealing; with stealing every worker gets work
+        let rt = Runtime::paper_testbed();
+        let mut w = Uts::with_params(64, 8, 120, 3);
+        let s = rt.run(&mut w, Policy::Dfwsrpt, BindPolicy::Linear, 8, 3, None).unwrap();
+        assert!(s.steals > 0);
+        assert!(s.per_worker_tasks.iter().all(|&t| t > 0), "{:?}", s.per_worker_tasks);
+    }
+
+    #[test]
+    fn expected_size_ballpark() {
+        // E[nodes] = 1 + b0/(1-qm); accept a wide band (hash variance)
+        let rt = Runtime::paper_testbed();
+        let mut w = Uts::with_params(128, 8, 110, 11); // qm=0.88
+        let s = rt.run_serial(&mut w, 1).unwrap();
+        let expect = 1.0 + 128.0 / (1.0 - 0.88);
+        assert!(
+            (s.tasks as f64) > expect * 0.2 && (s.tasks as f64) < expect * 5.0,
+            "tasks {} vs E {}",
+            s.tasks,
+            expect
+        );
+    }
+
+    #[test]
+    fn qm_ge_one_rejected() {
+        let r = std::panic::catch_unwind(|| Uts::with_params(10, 8, 130, 1));
+        assert!(r.is_err());
+    }
+}

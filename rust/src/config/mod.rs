@@ -1,0 +1,240 @@
+//! Run configuration: CLI-facing knobs + a tiny `key = value` config-file
+//! format (the vendored dependency set has no serde/toml; see DESIGN.md §7).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::binding::BindPolicy;
+use crate::coordinator::sched::Policy;
+use crate::simnuma::CostModel;
+use crate::util::NS;
+
+/// Benchmark input scale (the paper's Medium/Large; Small for tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Size {
+    Small,
+    Medium,
+    Large,
+}
+
+impl Size {
+    pub fn name(self) -> &'static str {
+        match self {
+            Size::Small => "small",
+            Size::Medium => "medium",
+            Size::Large => "large",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self> {
+        Ok(match s {
+            "small" | "s" => Size::Small,
+            "medium" | "m" => Size::Medium,
+            "large" | "l" => Size::Large,
+            other => bail!("unknown size '{other}' (small|medium|large)"),
+        })
+    }
+}
+
+/// Whether leaf tasks invoke the real AOT kernels through PJRT.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComputeMode {
+    /// Simulated cost only (figures, sweeps).
+    Sim,
+    /// Real numerics through `artifacts/*.hlo.txt` (end-to-end proof).
+    Pjrt,
+}
+
+/// One fully specified run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub bench: String,
+    pub size: Size,
+    pub policy: Policy,
+    pub bind: BindPolicy,
+    pub threads: usize,
+    pub topo: String,
+    pub seed: u64,
+    pub compute: ComputeMode,
+    pub artifact_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            bench: "fft".into(),
+            size: Size::Medium,
+            policy: Policy::WorkFirst,
+            bind: BindPolicy::Linear,
+            threads: 16,
+            topo: "x4600".into(),
+            seed: 42,
+            compute: ComputeMode::Sim,
+            artifact_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply one `key = value` setting.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "bench" => self.bench = value.to_string(),
+            "size" => self.size = Size::from_name(value)?,
+            "sched" | "policy" => self.policy = Policy::from_name(value)?,
+            "bind" => self.bind = BindPolicy::from_name(value)?,
+            "threads" => self.threads = value.parse().context("threads")?,
+            "topo" => self.topo = value.to_string(),
+            "seed" => self.seed = value.parse().context("seed")?,
+            "compute" => {
+                self.compute = match value {
+                    "sim" => ComputeMode::Sim,
+                    "pjrt" => ComputeMode::Pjrt,
+                    other => bail!("unknown compute mode '{other}' (sim|pjrt)"),
+                }
+            }
+            "artifacts" => self.artifact_dir = value.to_string(),
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file: `key = value` lines, `#` comments, blank lines.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let mut cfg = Self::default();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            cfg.set(k.trim(), v.trim())
+                .with_context(|| format!("line {}", lineno + 1))?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "bench={} size={} sched={} bind={} threads={} topo={} seed={} compute={}",
+            self.bench,
+            self.size.name(),
+            self.policy.name(),
+            self.bind.name(),
+            self.threads,
+            self.topo,
+            self.seed,
+            match self.compute {
+                ComputeMode::Sim => "sim",
+                ComputeMode::Pjrt => "pjrt",
+            },
+        )
+    }
+}
+
+/// Cost-model overrides from `key = value` pairs (calibration CLI).
+pub fn apply_cost_override(cost: &mut CostModel, key: &str, value: &str) -> Result<()> {
+    let ns = |v: &str| -> Result<u64> {
+        Ok((v.parse::<f64>().context("number")? * NS as f64) as u64)
+    };
+    match key {
+        "l1_hit_ns" => cost.l1_hit = ns(value)?,
+        "l2_hit_ns" => cost.l2_hit = ns(value)?,
+        "dram_base_ns" => cost.dram_base = ns(value)?,
+        "hop_penalty_ns" => cost.hop_penalty = ns(value)?,
+        "mem_service_ns" => cost.mem_service = ns(value)?,
+        "queue_op_ns" => cost.queue_op = ns(value)?,
+        "shared_queue_op_ns" => cost.shared_queue_op = ns(value)?,
+        "spawn_cost_ns" => cost.spawn_cost = ns(value)?,
+        "steal_base_ns" => cost.steal_base = ns(value)?,
+        "steal_per_hop_ns" => cost.steal_per_hop = ns(value)?,
+        "probe_base_ns" => cost.probe_base = ns(value)?,
+        "probe_per_hop_ns" => cost.probe_per_hop = ns(value)?,
+        "rtdata_per_hop_ns" => cost.rtdata_per_hop = ns(value)?,
+        "remote_bw_pct_per_hop" => cost.remote_bw_pct_per_hop = value.parse()?,
+        "l1_pages" => cost.l1_pages = value.parse()?,
+        "l2_pages" => cost.l2_pages = value.parse()?,
+        other => bail!("unknown cost knob '{other}'"),
+    }
+    Ok(())
+}
+
+/// Parse a repeated `k=v` CLI override list like `dram_base_ns=100,hop_penalty_ns=40`.
+pub fn parse_cost_overrides(cost: &mut CostModel, spec: &str) -> Result<()> {
+    for pair in spec.split(',').filter(|s| !s.trim().is_empty()) {
+        let (k, v) = pair
+            .split_once('=')
+            .with_context(|| format!("bad override '{pair}' (want k=v)"))?;
+        apply_cost_override(cost, k.trim(), v.trim())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.threads, 16);
+        assert_eq!(c.policy, Policy::WorkFirst);
+    }
+
+    #[test]
+    fn set_roundtrip() {
+        let mut c = RunConfig::default();
+        c.set("bench", "sort").unwrap();
+        c.set("sched", "dfwsrpt").unwrap();
+        c.set("bind", "numa").unwrap();
+        c.set("threads", "8").unwrap();
+        c.set("size", "large").unwrap();
+        c.set("compute", "pjrt").unwrap();
+        assert_eq!(c.bench, "sort");
+        assert_eq!(c.policy, Policy::Dfwsrpt);
+        assert_eq!(c.bind, BindPolicy::NumaAware);
+        assert_eq!(c.threads, 8);
+        assert_eq!(c.size, Size::Large);
+        assert_eq!(c.compute, ComputeMode::Pjrt);
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("threads", "abc").is_err());
+    }
+
+    #[test]
+    fn config_file_parses() {
+        let dir = std::env::temp_dir().join(format!("numanos_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.conf");
+        std::fs::write(
+            &path,
+            "# a comment\nbench = strassen\n\nsched = dfwspt # trailing\nthreads = 12\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_file(&path).unwrap();
+        assert_eq!(c.bench, "strassen");
+        assert_eq!(c.policy, Policy::Dfwspt);
+        assert_eq!(c.threads, 12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cost_overrides_apply() {
+        let mut cm = CostModel::default();
+        parse_cost_overrides(&mut cm, "dram_base_ns=100, hop_penalty_ns=50").unwrap();
+        assert_eq!(cm.dram_base, 100 * NS);
+        assert_eq!(cm.hop_penalty, 50 * NS);
+        assert!(parse_cost_overrides(&mut cm, "nope=1").is_err());
+        assert!(parse_cost_overrides(&mut cm, "dram_base_ns").is_err());
+    }
+
+    #[test]
+    fn size_parse() {
+        assert_eq!(Size::from_name("m").unwrap(), Size::Medium);
+        assert!(Size::from_name("huge").is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! Thread→core binding — where the paper's §IV allocation decisions land.
+//!
+//! Two policies:
+//!
+//! * [`BindPolicy::Linear`] — the baseline: threads bound to cores in
+//!   enumeration order (what an unpinned NANOS effectively gets on a quiet
+//!   Linux box: master on core 0 of node 0, workers following).  On the
+//!   X4600 node 0 is a *corner* — exactly the pathology §V.B describes.
+//! * [`BindPolicy::NumaAware`] — the paper's scheme: master binds to the
+//!   highest-priority core (ties broken randomly); each subsequent worker
+//!   goes as close to the master as possible, preferring higher-priority
+//!   cores among equidistant ones, random among full ties.
+
+use crate::coordinator::priority::{core_priorities, PriorityAlloc};
+use crate::topology::Topology;
+use crate::util::SplitMix64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BindPolicy {
+    Linear,
+    NumaAware,
+}
+
+impl BindPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            BindPolicy::Linear => "linear",
+            BindPolicy::NumaAware => "numa",
+        }
+    }
+
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "linear" | "baseline" => BindPolicy::Linear,
+            "numa" | "numa-aware" => BindPolicy::NumaAware,
+            other => anyhow::bail!("unknown bind policy '{other}' (linear|numa)"),
+        })
+    }
+}
+
+/// The outcome: `cores[t]` is the core thread `t` runs on; thread 0 is the
+/// master.
+#[derive(Clone, Debug)]
+pub struct Binding {
+    pub cores: Vec<usize>,
+    pub priorities: Option<PriorityAlloc>,
+}
+
+impl Binding {
+    pub fn master_core(&self) -> usize {
+        self.cores[0]
+    }
+}
+
+/// Bind `threads` threads per `policy`.  Panics if more threads than cores
+/// (the paper never oversubscribes; neither do we).
+pub fn bind_threads(
+    topo: &Topology,
+    threads: usize,
+    policy: BindPolicy,
+    rng: &mut SplitMix64,
+) -> Binding {
+    assert!(threads >= 1 && threads <= topo.num_cores(), "1..=cores threads");
+    match policy {
+        BindPolicy::Linear => Binding {
+            cores: (0..threads).collect(),
+            priorities: None,
+        },
+        BindPolicy::NumaAware => {
+            let pr = core_priorities(topo);
+            let cores = bind_with_scores(topo, threads, &pr.scores, rng);
+            Binding { cores, priorities: Some(pr) }
+        }
+    }
+}
+
+/// The §IV placement given an arbitrary per-core score vector (used by the
+/// NumaAware policy and by the priority-ablation bench with V1-only or
+/// flat scores): master on the best core (random among ties), each worker
+/// as close to the master as possible, higher score among equidistant
+/// cores, random among full ties.
+pub fn bind_with_scores(
+    topo: &Topology,
+    threads: usize,
+    scores: &[f64],
+    rng: &mut SplitMix64,
+) -> Vec<usize> {
+    assert_eq!(scores.len(), topo.num_cores());
+    let mut cores = Vec::with_capacity(threads);
+    let mut taken = vec![false; topo.num_cores()];
+
+    // Master: highest score, random among exact ties.
+    let best_score = scores.iter().cloned().fold(f64::MIN, f64::max);
+    let best: Vec<usize> = (0..topo.num_cores())
+        .filter(|&c| (scores[c] - best_score).abs() < 1e-9)
+        .collect();
+    let master = best[rng.gen_range(best.len() as u64) as usize];
+    cores.push(master);
+    taken[master] = true;
+
+    // Workers: nearest to master, then higher score, then random.
+    for _ in 1..threads {
+        let mut cands: Vec<usize> = (0..topo.num_cores()).filter(|&c| !taken[c]).collect();
+        let key = |c: usize| (topo.core_hops(master, c), -scores[c]);
+        let best_key = cands
+            .iter()
+            .map(|&c| key(c))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .unwrap();
+        cands.retain(|&c| {
+            let k = key(c);
+            k.0 == best_key.0 && (k.1 - best_key.1).abs() < 1e-9
+        });
+        let pick = cands[rng.gen_range(cands.len() as u64) as usize];
+        cores.push(pick);
+        taken[pick] = true;
+    }
+    cores
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_is_identity() {
+        let topo = Topology::x4600();
+        let mut rng = SplitMix64::new(1);
+        let b = bind_threads(&topo, 6, BindPolicy::Linear, &mut rng);
+        assert_eq!(b.cores, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(b.master_core(), 0);
+    }
+
+    #[test]
+    fn numa_master_is_central_on_x4600() {
+        let topo = Topology::x4600();
+        for seed in 0..10 {
+            let mut rng = SplitMix64::new(seed);
+            let b = bind_threads(&topo, 16, BindPolicy::NumaAware, &mut rng);
+            let node = topo.node_of(b.master_core());
+            assert!((2..=5).contains(&node), "master node {node} not central");
+        }
+    }
+
+    #[test]
+    fn numa_binding_is_compact() {
+        // mean pairwise distance of the chosen 8 cores must beat linear's
+        let topo = Topology::x4600();
+        let mut rng = SplitMix64::new(3);
+        let numa = bind_threads(&topo, 8, BindPolicy::NumaAware, &mut rng);
+        let linear = bind_threads(&topo, 8, BindPolicy::Linear, &mut rng);
+        let mean = |cores: &[usize]| {
+            let mut s = 0.0;
+            for &a in cores {
+                for &b in cores {
+                    s += topo.core_hops(a, b) as f64;
+                }
+            }
+            s / (cores.len() * cores.len()) as f64
+        };
+        assert!(
+            mean(&numa.cores) <= mean(&linear.cores),
+            "numa {:?} vs linear {:?}",
+            numa.cores,
+            linear.cores
+        );
+    }
+
+    #[test]
+    fn no_duplicate_cores() {
+        let topo = Topology::altix16();
+        let mut rng = SplitMix64::new(5);
+        let b = bind_threads(&topo, 20, BindPolicy::NumaAware, &mut rng);
+        let mut sorted = b.cores.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+    }
+
+    #[test]
+    fn workers_fill_masters_node_first() {
+        let topo = Topology::x4600();
+        let mut rng = SplitMix64::new(7);
+        let b = bind_threads(&topo, 2, BindPolicy::NumaAware, &mut rng);
+        assert_eq!(
+            topo.node_of(b.cores[0]),
+            topo.node_of(b.cores[1]),
+            "second thread shares the master's node"
+        );
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let topo = Topology::x4600();
+        let a = bind_threads(&topo, 12, BindPolicy::NumaAware, &mut SplitMix64::new(9));
+        let b = bind_threads(&topo, 12, BindPolicy::NumaAware, &mut SplitMix64::new(9));
+        assert_eq!(a.cores, b.cores);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversubscription_rejected() {
+        let topo = Topology::dual(2);
+        bind_threads(&topo, 5, BindPolicy::Linear, &mut SplitMix64::new(0));
+    }
+}

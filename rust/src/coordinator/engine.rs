@@ -1,0 +1,560 @@
+//! Discrete-event execution engine.
+//!
+//! Simulates a team of worker threads (one per bound core) executing an
+//! OpenMP-style task graph under a [`Policy`], charging simulated time for
+//! every compute unit, memory touch ([`MemSim`]), queue operation, spawn,
+//! probe and steal.  Events are processed in global virtual-time order
+//! (ties FIFO), all randomness is seeded — a run is a pure function of
+//! `(workload, topology, cost model, policy, binding, seed)`.
+//!
+//! ## Semantics (mirroring NANOS)
+//!
+//! * **Tied tasks**: a task suspended at its `taskwait` resumes on the
+//!   worker that started it (the continuation is pushed to that worker's
+//!   pool when the last child completes).
+//! * **Depth-first policies** (`serial/cilk/wf/dfwspt/dfwsrpt`): `Spawn`
+//!   suspends the parent (pushed to the worker's own pool front) and the
+//!   worker continues with the child immediately.
+//! * **Breadth-first**: `Spawn` appends the child to the shared FIFO and
+//!   the parent keeps running.
+//! * **Idle protocol**: pop own pool (or shared FIFO) → sweep victims in
+//!   the policy's order → sleep; a push signals one sleeper (staggered,
+//!   futex-style — see [`Engine::wake_sleepers`]).
+//!
+//! ## Fidelity note
+//!
+//! A worker executes one scheduling quantum (acquire, or run-to-boundary)
+//! per event; its clock may advance past other workers' pending events
+//! within the quantum, so shared-resource state (pool locks, memory
+//! controllers) is causal at quantum granularity, not per-access.  Quanta
+//! are bounded by task boundaries (spawn/wait/completion), i.e. a few µs —
+//! far below the effects being measured (DESIGN.md §2).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::Result;
+
+use crate::coordinator::pool::Pool;
+use crate::coordinator::sched::{victim_sequence, Policy, StealEnd, VictimList};
+use crate::coordinator::task::{
+    Action, BodyCtx, TaskArena, TaskId, TaskState, Workload,
+};
+use crate::metrics::RunStats;
+use crate::runtime::ExecEngine;
+use crate::simnuma::MemSim;
+use crate::topology::Topology;
+use crate::util::{SplitMix64, Time};
+
+/// Engine knobs (assembled by [`crate::coordinator::runtime::Runtime`]).
+pub struct EngineConfig {
+    pub policy: Policy,
+    /// Per-thread bound core ids (index = thread id, 0 = master).
+    pub cores: Vec<usize>,
+    /// Extra per-queue-op penalty per thread when its runtime data is
+    /// remote (paper §IV: runtime structures on the thread's own node).
+    pub rt_penalty: Vec<Time>,
+    pub seed: u64,
+}
+
+struct Worker {
+    core: usize,
+    clock: Time,
+    current: Option<TaskId>,
+    victims: VictimList,
+    rng: SplitMix64,
+    rt_penalty: Time,
+    sleeping: bool,
+    // stats
+    work_time: Time,
+    overhead_time: Time,
+    tasks_run: u64,
+    steals: u64,
+    steal_attempts: u64,
+    steal_hops: u64,
+}
+
+/// The engine; one instance per run.
+pub struct Engine<'a> {
+    policy: Policy,
+    topo: Topology,
+    workload: &'a mut dyn Workload,
+    exec: Option<&'a mut ExecEngine>,
+    mem: MemSim,
+    arena: TaskArena,
+    workers: Vec<Worker>,
+    pools: Vec<Pool>,
+    shared: Pool,
+    /// thread-to-thread hop distances (precomputed from the binding).
+    thops: Vec<Vec<u8>>,
+    events: BinaryHeap<Reverse<(Time, u64, usize)>>,
+    seq: u64,
+    live: u64,
+    makespan: Time,
+    kernel_calls: u64,
+    sim_events: u64,
+    victim_buf: Vec<usize>,
+    wake_rr: usize,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        cfg: EngineConfig,
+        mem: MemSim,
+        victims: Vec<VictimList>,
+        workload: &'a mut dyn Workload,
+        exec: Option<&'a mut ExecEngine>,
+    ) -> Self {
+        let topo = mem.topo().clone();
+        let mut root_rng = SplitMix64::new(cfg.seed);
+        let workers: Vec<Worker> = cfg
+            .cores
+            .iter()
+            .zip(victims)
+            .enumerate()
+            .map(|(i, (&core, victims))| Worker {
+                core,
+                clock: 0,
+                current: None,
+                victims,
+                rng: root_rng.fork(i as u64),
+                rt_penalty: cfg.rt_penalty.get(i).copied().unwrap_or(0),
+                sleeping: false,
+                work_time: 0,
+                overhead_time: 0,
+                tasks_run: 0,
+                steals: 0,
+                steal_attempts: 0,
+                steal_hops: 0,
+            })
+            .collect();
+        let n = workers.len();
+        let thops = (0..n)
+            .map(|a| (0..n).map(|b| topo.core_hops(workers[a].core, workers[b].core)).collect())
+            .collect();
+        let pools = (0..n).map(|_| Pool::new()).collect();
+        Self {
+            policy: cfg.policy,
+            topo,
+            workload,
+            exec,
+            mem,
+            arena: TaskArena::new(),
+            workers,
+            pools,
+            shared: Pool::new(),
+            thops,
+            events: BinaryHeap::new(),
+            seq: 0,
+            live: 0,
+            makespan: 0,
+            kernel_calls: 0,
+            sim_events: 0,
+            victim_buf: Vec::new(),
+            wake_rr: 0,
+        }
+    }
+
+    #[inline]
+    fn schedule(&mut self, w: usize, t: Time) {
+        self.seq += 1;
+        self.events.push(Reverse((t, self.seq, w)));
+    }
+
+    /// Wake up to `budget` sleeping workers (condvar `signal`, not
+    /// `broadcast`: one unit of new work wakes one waiter — waking the
+    /// whole team for a single task is the thundering herd that would
+    /// serialize everyone on the pool lock).  Wake-ups are staggered as a
+    /// real futex wake chain is; a rotating start index keeps it fair.
+    fn wake_sleepers(&mut self, now: Time, mut budget: usize) {
+        let n = self.workers.len();
+        let mut delay: Time = 0;
+        for k in 0..n {
+            if budget == 0 {
+                break;
+            }
+            let i = (self.wake_rr + k) % n;
+            if self.workers[i].sleeping {
+                self.workers[i].sleeping = false;
+                budget -= 1;
+                delay += 120; // 0.12 us per woken thread
+                let t = (now + delay).max(self.workers[i].clock);
+                self.workers[i].clock = t;
+                self.schedule(i, t);
+            }
+        }
+        self.wake_rr = (self.wake_rr + 1) % n;
+    }
+
+    /// Start or resume `tid` on worker `w`.  A pool can hold three flavours:
+    /// fresh tasks (body not yet materialized), suspended parents (state
+    /// `Pre`, mid-phase — what depth-first thieves steal), and released
+    /// continuations (state `Post`).  Whoever runs the task now owns it
+    /// (the tied-task resume target follows the thief, as in Cilk-style
+    /// continuation stealing).
+    fn start_task(&mut self, tid: TaskId, w: usize) {
+        let inst = self.arena.get_mut(tid);
+        inst.owner = w as u16;
+        match inst.state {
+            TaskState::Fresh => {
+                inst.state = TaskState::Pre;
+                inst.cursor = 0;
+                let desc = inst.desc;
+                // recycle the slot's previous action vectors (§Perf)
+                let body = std::mem::take(&mut inst.body);
+                let mut ctx = BodyCtx::with_body(body);
+                self.workload.body(desc, &mut ctx);
+                self.arena.get_mut(tid).body = ctx.finish();
+            }
+            // suspended parent resuming, or an unblocked continuation:
+            // cursor already points at the right action
+            TaskState::Pre | TaskState::Post => {}
+            s => panic!("starting task in state {s:?}"),
+        }
+        self.workers[w].current = Some(tid);
+    }
+
+    /// Run the engine to completion; returns statistics.
+    pub fn run(mut self, root: crate::coordinator::task::TaskDesc) -> Result<RunStats> {
+        let root_id = self.arena.create(root, None, 0);
+        self.live = 1;
+        self.start_task(root_id, 0);
+        self.schedule(0, self.workers[0].clock);
+        // everyone else parks until work appears
+        for w in self.workers.iter_mut().skip(1) {
+            w.sleeping = true;
+        }
+
+        while let Some(Reverse((t, _, w))) = self.events.pop() {
+            self.sim_events += 1;
+            if self.workers[w].clock < t {
+                self.workers[w].clock = t;
+            }
+            if self.workers[w].current.is_some() {
+                self.run_quantum(w)?;
+            } else {
+                self.acquire(w);
+            }
+            if self.live == 0 {
+                break;
+            }
+        }
+        if self.live != 0 {
+            anyhow::bail!(
+                "engine deadlock: {} tasks live with no runnable worker (policy {})",
+                self.live,
+                self.policy.name()
+            );
+        }
+        if let Some(exec) = self.exec.as_deref_mut() {
+            self.workload.verify(exec)?;
+        }
+        Ok(self.into_stats())
+    }
+
+    /// Idle worker tries to find work: own pool / shared FIFO, then steal,
+    /// else sleep.
+    fn acquire(&mut self, w: usize) {
+        let free = self.policy.overhead_free();
+        if self.policy.shared_queue() {
+            let op = if free { 0 } else { self.mem.cost_model().shared_queue_op };
+            let now = self.workers[w].clock;
+            let cost = self.shared.lock(now, op);
+            self.workers[w].clock += cost;
+            self.workers[w].overhead_time += cost;
+            if let Some(tid) = self.shared.pop_front() {
+                self.start_task(tid, w);
+                let t = self.workers[w].clock;
+                self.schedule(w, t);
+            } else {
+                self.workers[w].sleeping = true;
+            }
+            return;
+        }
+
+        // own pool first (LIFO)
+        let op = if free {
+            0
+        } else {
+            self.mem.cost_model().queue_op + self.workers[w].rt_penalty
+        };
+        let now = self.workers[w].clock;
+        let cost = self.pools[w].lock(now, op);
+        self.workers[w].clock += cost;
+        self.workers[w].overhead_time += cost;
+        if let Some(tid) = self.pools[w].pop_front() {
+            self.start_task(tid, w);
+            let t = self.workers[w].clock;
+            self.schedule(w, t);
+            return;
+        }
+
+        // steal sweep
+        let cm = self.mem.cost_model().clone();
+        let mut buf = std::mem::take(&mut self.victim_buf);
+        {
+            let wk = &mut self.workers[w];
+            let mut rng = wk.rng.clone();
+            victim_sequence(self.policy, &wk.victims, &mut rng, &mut buf);
+            wk.rng = rng;
+        }
+        let mut got: Option<TaskId> = None;
+        for &v in &buf {
+            let hops = self.thops[w][v] as Time;
+            self.workers[w].steal_attempts += 1;
+            let probe = cm.probe_base + hops * cm.probe_per_hop;
+            self.workers[w].clock += probe;
+            self.workers[w].overhead_time += probe;
+            if self.pools[v].is_empty() {
+                continue;
+            }
+            let now = self.workers[w].clock;
+            let cost = self.pools[v].lock(now, cm.steal_base + hops * cm.steal_per_hop);
+            self.workers[w].clock += cost;
+            self.workers[w].overhead_time += cost;
+            let taken = match self.policy.steal_end() {
+                StealEnd::Front => self.pools[v].pop_front(),
+                StealEnd::Back => self.pools[v].pop_back(),
+            };
+            if let Some(tid) = taken {
+                self.workers[w].steals += 1;
+                self.workers[w].steal_hops += hops;
+                got = Some(tid);
+                break;
+            }
+        }
+        self.victim_buf = buf;
+        match got {
+            Some(tid) => {
+                self.start_task(tid, w);
+                let t = self.workers[w].clock;
+                self.schedule(w, t);
+            }
+            None => {
+                self.workers[w].sleeping = true;
+            }
+        }
+    }
+
+    /// Execute the current task until a boundary: spawn-switch (depth-
+    /// first), wait-suspension, or completion.
+    fn run_quantum(&mut self, w: usize) -> Result<()> {
+        let free = self.policy.overhead_free();
+        let tid = self.workers[w].current.expect("run_quantum without task");
+        loop {
+            // single arena access per step: copy the 16-B action out so the
+            // arena can be mutated freely below (hot path — see
+            // EXPERIMENTS.md §Perf)
+            let (state, action) = {
+                let inst = self.arena.get(tid);
+                let list = match inst.state {
+                    TaskState::Pre => &inst.body.pre,
+                    TaskState::Post => &inst.body.post,
+                    s => panic!("running task in state {s:?}"),
+                };
+                (inst.state, list.get(inst.cursor).copied())
+            };
+            match action {
+                Some(Action::Compute(units)) => {
+                    let dt = units * self.mem.cost_model().compute_per_unit;
+                    self.workers[w].clock += dt;
+                    self.workers[w].work_time += dt;
+                    self.arena.get_mut(tid).cursor += 1;
+                }
+                Some(Action::Touch { region, write }) => {
+                    let core = self.workers[w].core;
+                    let now = self.workers[w].clock;
+                    let dt = self.mem.access(core, region, write, now);
+                    self.workers[w].clock += dt;
+                    self.workers[w].work_time += dt;
+                    self.arena.get_mut(tid).cursor += 1;
+                }
+                Some(Action::Kernel(tag)) => {
+                    self.kernel_calls += 1;
+                    if let Some(exec) = self.exec.as_deref_mut() {
+                        self.workload.run_kernel(tag, exec)?;
+                    }
+                    self.arena.get_mut(tid).cursor += 1;
+                }
+                Some(Action::Spawn(desc)) => {
+                    self.arena.get_mut(tid).cursor += 1;
+                    let cm = self.mem.cost_model();
+                    let spawn_cost = if free { 0 } else { cm.spawn_cost };
+                    self.workers[w].clock += spawn_cost;
+                    self.workers[w].overhead_time += spawn_cost;
+                    let depth = self.arena.get(tid).depth + 1;
+                    let child = self.arena.create(desc, Some(tid), depth);
+                    self.live += 1;
+                    self.arena.get_mut(tid).pending_children += 1;
+
+                    if self.policy.shared_queue() {
+                        let op = self.mem.cost_model().shared_queue_op;
+                        let now = self.workers[w].clock;
+                        let cost = self.shared.lock(now, op);
+                        self.workers[w].clock += cost;
+                        self.workers[w].overhead_time += cost;
+                        self.shared.push_back(child);
+                        let now = self.workers[w].clock;
+                        self.wake_sleepers(now, 1);
+                        // parent keeps running: loop continues
+                    } else {
+                        // depth-first: suspend parent, run child now
+                        if !free {
+                            let op = self.mem.cost_model().queue_op
+                                + self.workers[w].rt_penalty;
+                            let now = self.workers[w].clock;
+                            let cost = self.pools[w].lock(now, op);
+                            self.workers[w].clock += cost;
+                            self.workers[w].overhead_time += cost;
+                        }
+                        self.pools[w].push_front(tid);
+                        let now = self.workers[w].clock;
+                        if !free {
+                            self.wake_sleepers(now, 1);
+                        }
+                        self.start_task(child, w);
+                        let t = self.workers[w].clock;
+                        self.schedule(w, t);
+                        return Ok(());
+                    }
+                }
+                None => {
+                    // phase boundary
+                    match state {
+                        TaskState::Pre => {
+                            let inst = self.arena.get_mut(tid);
+                            if inst.pending_children > 0 {
+                                inst.state = TaskState::Waiting;
+                                self.workers[w].current = None;
+                                let t = self.workers[w].clock;
+                                self.schedule(w, t);
+                                return Ok(());
+                            }
+                            inst.state = TaskState::Post;
+                            inst.cursor = 0;
+                            // fall through: loop runs the post phase
+                        }
+                        TaskState::Post => {
+                            // A combine phase may itself have spawned
+                            // children; the task completes with them.
+                            if self.arena.get(tid).pending_children > 0 {
+                                self.arena.get_mut(tid).state = TaskState::WaitingFinal;
+                            } else {
+                                self.complete(tid, w);
+                            }
+                            self.workers[w].current = None;
+                            if self.live > 0 {
+                                let t = self.workers[w].clock;
+                                self.schedule(w, t);
+                            }
+                            return Ok(());
+                        }
+                        s => panic!("phase end in state {s:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Finish `tid`: notify the parent, release its continuation when the
+    /// implicit taskwait clears, and cascade completion through parents
+    /// whose post phase already finished (`WaitingFinal`).
+    fn complete(&mut self, tid: TaskId, w: usize) {
+        let free = self.policy.overhead_free();
+        let mut finished = tid;
+        loop {
+            {
+                let inst = self.arena.get_mut(finished);
+                debug_assert_eq!(inst.pending_children, 0);
+                inst.state = TaskState::Done;
+            }
+            self.live -= 1;
+            self.workers[w].tasks_run += 1;
+            self.makespan = self.makespan.max(self.workers[w].clock);
+
+            let parent = self.arena.get(finished).parent;
+            self.arena.release(finished);
+            let Some(p) = parent else { return };
+            let (pending, pstate) = {
+                let pi = self.arena.get_mut(p);
+                pi.pending_children -= 1;
+                (pi.pending_children, pi.state)
+            };
+            if pending > 0 {
+                return;
+            }
+            match pstate {
+                TaskState::Waiting => {
+                    // release the continuation to the owner's pool (tied)
+                    let owner = {
+                        let pi = self.arena.get_mut(p);
+                        pi.state = TaskState::Post;
+                        pi.cursor = 0;
+                        pi.owner as usize
+                    };
+                    if self.policy.shared_queue() {
+                        let op = self.mem.cost_model().shared_queue_op;
+                        let now = self.workers[w].clock;
+                        let cost = self.shared.lock(now, op);
+                        self.workers[w].clock += cost;
+                        self.workers[w].overhead_time += cost;
+                        self.shared.push_back(p);
+                    } else {
+                        if !free {
+                            let op =
+                                self.mem.cost_model().queue_op + self.workers[w].rt_penalty;
+                            let now = self.workers[w].clock;
+                            let cost = self.pools[owner].lock(now, op);
+                            self.workers[w].clock += cost;
+                            self.workers[w].overhead_time += cost;
+                        }
+                        self.pools[owner].push_front(p);
+                    }
+                    let now = self.workers[w].clock;
+                    self.wake_sleepers(now, 1);
+                    return;
+                }
+                TaskState::WaitingFinal => {
+                    // parent had nothing left to run: cascade its completion
+                    finished = p;
+                }
+                // parent still executing its pre/post phase: the taskwait
+                // (if any) will observe pending_children == 0.
+                _ => return,
+            }
+        }
+    }
+
+    fn into_stats(self) -> RunStats {
+        let lock_wait_total: Time =
+            self.pools.iter().map(|p| p.lock_wait).sum::<Time>() + self.shared.lock_wait;
+        let steals: u64 = self.workers.iter().map(|w| w.steals).sum();
+        let steal_attempts: u64 = self.workers.iter().map(|w| w.steal_attempts).sum();
+        let steal_hops: u64 = self.workers.iter().map(|w| w.steal_hops).sum();
+        RunStats {
+            bench: String::new(),
+            policy: self.policy,
+            bind: None,
+            threads: self.workers.len(),
+            topo: self.topo.name().to_string(),
+            seed: 0,
+            makespan: self.makespan,
+            init_time: 0,
+            tasks: self.arena.total_created(),
+            peak_live: self.arena.peak_live(),
+            steals,
+            steal_attempts,
+            mean_steal_hops: if steals == 0 { 0.0 } else { steal_hops as f64 / steals as f64 },
+            lock_wait_total,
+            shared_lock_wait: self.shared.lock_wait,
+            shared_ops: self.shared.ops,
+            work_time: self.workers.iter().map(|w| w.work_time).sum(),
+            overhead_time: self.workers.iter().map(|w| w.overhead_time).sum(),
+            per_worker_tasks: self.workers.iter().map(|w| w.tasks_run).collect(),
+            mem: self.mem.stats().clone(),
+            kernel_calls: self.kernel_calls,
+            sim_events: self.sim_events,
+            wall_ms: 0.0,
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The coordinator — the paper's system contribution as a library.
+//!
+//! * [`task`]     — task model: descriptors, bodies, the [`task::Workload`] trait;
+//! * [`pool`]     — lockable task pools (contention via busy horizons);
+//! * [`priority`] — §IV core-priority allocation (Figs 2–4);
+//! * [`binding`]  — thread→core binding policies (baseline vs NUMA-aware);
+//! * [`sched`]    — the five schedulers (bf/cilk/wf + DFWSPT/DFWSRPT);
+//! * [`engine`]   — deterministic discrete-event execution engine;
+//! * [`runtime`]  — the assembled [`runtime::Runtime`] façade.
+
+pub mod binding;
+pub mod engine;
+pub mod pool;
+pub mod priority;
+pub mod runtime;
+pub mod sched;
+pub mod task;
+
+pub use binding::{bind_threads, BindPolicy, Binding};
+pub use priority::{alpha_weights, core_priorities, PriorityAlloc};
+pub use runtime::Runtime;
+pub use sched::Policy;
+pub use task::{Action, Body, BodyCtx, TaskDesc, Workload};

@@ -1,0 +1,166 @@
+//! Task pools: per-worker deques and the breadth-first shared queue.
+//!
+//! Pools carry a simulated-time *contention model*.  The engine executes
+//! one scheduling quantum per event, so workers' clocks skew by up to a
+//! task length; a strict lock busy-horizon would charge phantom waits to
+//! ops arriving "from the virtual past".  Instead each pool tracks the
+//! lock demand landing in the current epoch and prices an op by M/M/1
+//! queueing on that utilization, with the critical section itself
+//! inflating under sustained contention (lock cache-line ping-pong).
+//!
+//! This is how the paper's contention effects emerge without real
+//! threads: the breadth-first shared queue *collapses* once op demand
+//! saturates it (Fig 7/9: speedup declines beyond ~6 threads), and steal
+//! convoys pile onto the lowest-id closest victim under DFWSPT — exactly
+//! the contention DFWSRPT randomizes away (§VI.B).
+
+use std::collections::VecDeque;
+
+use crate::coordinator::task::TaskId;
+use crate::util::{Time, US};
+
+/// Utilization-averaging window.
+const EPOCH: Time = 20 * US;
+/// Critical-section inflation per estimated queued contender.
+const CONVOY_FACTOR: f64 = 0.35;
+/// Estimator cap (≈ team size).
+const MAX_CONTENDERS: f64 = 16.0;
+/// Utilization cap (keeps the M/M/1 term finite).
+const MAX_RHO: f64 = 0.95;
+
+/// A lockable task container (deque or FIFO discipline chosen by caller).
+#[derive(Debug, Default)]
+pub struct Pool {
+    items: VecDeque<TaskId>,
+    /// Lock demand (inflated op durations) within the current epoch.
+    epoch: u64,
+    used: Time,
+    /// Total simulated queueing delay charged on this pool's lock.
+    pub lock_wait: Time,
+    pub ops: u64,
+}
+
+impl Pool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Acquire the pool lock at `now` for a base op of `duration`.
+    /// Returns the op's total cost (queueing + inflated holding).
+    #[inline]
+    pub fn lock(&mut self, now: Time, duration: Time) -> Time {
+        if duration == 0 {
+            self.ops += 1;
+            return 0; // overhead-free serial baseline
+        }
+        let epoch = now / EPOCH;
+        if epoch != self.epoch {
+            self.epoch = epoch;
+            self.used = 0;
+        }
+        let rho = (self.used as f64 / EPOCH as f64).min(MAX_RHO);
+        // expected queue length ahead of us (M/M/1), also the convoy size
+        let contenders = (rho / (1.0 - rho)).min(MAX_CONTENDERS);
+        let eff = duration + (duration as f64 * CONVOY_FACTOR * contenders) as Time;
+        let wait = (eff as f64 * contenders) as Time;
+        self.used += eff;
+        self.lock_wait += wait;
+        self.ops += 1;
+        wait + eff
+    }
+
+    #[inline]
+    pub fn push_front(&mut self, t: TaskId) {
+        self.items.push_front(t);
+    }
+
+    #[inline]
+    pub fn push_back(&mut self, t: TaskId) {
+        self.items.push_back(t);
+    }
+
+    #[inline]
+    pub fn pop_front(&mut self) -> Option<TaskId> {
+        self.items.pop_front()
+    }
+
+    #[inline]
+    pub fn pop_back(&mut self) -> Option<TaskId> {
+        self.items.pop_back()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deque_discipline() {
+        let mut p = Pool::new();
+        p.push_front(1);
+        p.push_front(2);
+        p.push_back(3);
+        // order: [2, 1, 3]
+        assert_eq!(p.pop_front(), Some(2));
+        assert_eq!(p.pop_back(), Some(3));
+        assert_eq!(p.pop_front(), Some(1));
+        assert_eq!(p.pop_front(), None);
+    }
+
+    #[test]
+    fn light_load_is_cheap() {
+        let mut p = Pool::new();
+        // a handful of ops spread over epochs: near-base cost
+        for i in 0..10 {
+            let cost = p.lock(i * US, 100 * crate::util::NS);
+            assert!(cost < 120 * crate::util::NS, "uncontended op cost {cost}");
+        }
+        assert_eq!(p.ops, 10);
+    }
+
+    #[test]
+    fn saturation_collapses_throughput() {
+        // hammer one epoch far past its capacity: per-op cost must blow up
+        let mut p = Pool::new();
+        let ns = crate::util::NS;
+        let first = p.lock(0, 100 * ns);
+        let mut last = 0;
+        for _ in 0..300 {
+            last = p.lock(0, 100 * ns);
+        }
+        assert!(last > 10 * first, "no collapse: first {first} last {last}");
+        assert!(p.lock_wait > 0);
+        // a later epoch starts fresh
+        let fresh = p.lock(100 * EPOCH, 100 * ns);
+        assert!(fresh < 120 * ns, "estimate must decay: {fresh}");
+    }
+
+    #[test]
+    fn cost_grows_with_utilization() {
+        let mut p = Pool::new();
+        let mut prev = 0;
+        for k in 0..20 {
+            // all within one epoch, increasing cumulative demand
+            let cost = p.lock(k, 500 * crate::util::NS);
+            assert!(cost >= prev, "cost must be monotone in utilization");
+            prev = cost;
+        }
+    }
+
+    #[test]
+    fn zero_duration_free() {
+        let mut p = Pool::new();
+        assert_eq!(p.lock(0, 0), 0);
+        assert_eq!(p.lock_wait, 0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Core-priority allocation — the paper's §IV algorithm (Figs 2–4).
+//!
+//! Priorities are computed at runtime start-up from the explored hardware
+//! (here: the [`Topology`] — the simulated `libnuma`/`sched.h` surface):
+//!
+//! 1. **base**: cores on bigger NUMA nodes rank higher (first attribution
+//!    level — "largest number of cores attached to the same node");
+//! 2. **V1** (Fig 2): `Σ_i α_i · N_i` — weighted count of cores at each hop
+//!    distance, weights strictly decreasing with distance;
+//! 3. **V2** (Fig 3): `Σ_i Σ_j α_i · P1_j` — same weights applied to the
+//!    *previously computed* priorities of those cores (second pass of
+//!    Fig 4, lines 14–31).
+//!
+//! Final priority `P = P1 + V2` with `P1 = base + V1`.
+//!
+//! The identical math ships as the Layer-1 Pallas kernel
+//! `priority_f32_{16,64}` (`python/compile/kernels/priority.py`); in PJRT
+//! mode the runtime cross-checks this pure-Rust implementation against the
+//! AOT artifact (see `rust/tests/pjrt_roundtrip.rs`).
+
+use crate::topology::Topology;
+
+/// Result of the §IV allocation pass.
+#[derive(Clone, Debug)]
+pub struct PriorityAlloc {
+    /// First-level priorities (base + V1), per core.
+    pub p1: Vec<f64>,
+    /// Final priorities (P1 + V2), per core.
+    pub scores: Vec<f64>,
+    /// The hop-distance weights used.
+    pub alpha: Vec<f64>,
+}
+
+/// Decreasing hop weights `α_0 > α_1 > … > α_max`, `α_{max+1} = 0`
+/// (paper Fig 2).  Geometric decay keeps near cores dominant while still
+/// discriminating far topologies; `ALPHA0`/`DECAY` are fixed constants so
+/// priorities are comparable across runs.
+pub fn alpha_weights(max_hops: u8) -> Vec<f64> {
+    const ALPHA0: f64 = 16.0;
+    const DECAY: f64 = 0.5;
+    (0..=max_hops as usize).map(|i| ALPHA0 * DECAY.powi(i as i32)).collect()
+}
+
+/// Weighted hop matrix `A[i][j] = α[hops(i,j)]`, diagonal zeroed.
+pub fn weighted_hop_matrix(topo: &Topology, alpha: &[f64]) -> Vec<Vec<f64>> {
+    let n = topo.num_cores();
+    (0..n)
+        .map(|i| {
+            (0..n)
+                .map(|j| if i == j { 0.0 } else { alpha[topo.core_hops(i, j) as usize] })
+                .collect()
+        })
+        .collect()
+}
+
+/// Run the full Fig-4 algorithm for `topo`.
+pub fn core_priorities(topo: &Topology) -> PriorityAlloc {
+    let n = topo.num_cores();
+    let alpha = alpha_weights(topo.max_hops());
+    let a = weighted_hop_matrix(topo, &alpha);
+
+    // First attribution level: node size, then V1 (Fig 2).
+    let mut p1 = vec![0.0; n];
+    for (i, p) in p1.iter_mut().enumerate() {
+        let base = topo.cores_per_node(topo.node_of(i)) as f64;
+        let v1: f64 = a[i].iter().sum();
+        *p = base + v1;
+    }
+
+    // Second pass (Fig 3): V2 folds neighbours' first-level priorities.
+    let mut scores = vec![0.0; n];
+    for i in 0..n {
+        let v2: f64 = a[i].iter().zip(&p1).map(|(w, p)| w * p).sum();
+        scores[i] = p1[i] + v2;
+    }
+
+    PriorityAlloc { p1, scores, alpha }
+}
+
+impl PriorityAlloc {
+    /// Cores ordered best-first (ties by lower id — determinism; the
+    /// paper breaks ties randomly, which [`super::binding`] layers on top).
+    pub fn ranked_cores(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.scores.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.scores[b].partial_cmp(&self.scores[a]).unwrap().then(a.cmp(&b))
+        });
+        order
+    }
+
+    /// All cores whose score ties the maximum (random pick candidates).
+    pub fn best_cores(&self) -> Vec<usize> {
+        let best = self.scores.iter().cloned().fold(f64::MIN, f64::max);
+        self.scores
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| (s - best).abs() < 1e-9)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_strictly_decreasing() {
+        let a = alpha_weights(5);
+        assert_eq!(a.len(), 6);
+        for w in a.windows(2) {
+            assert!(w[0] > w[1] && w[1] > 0.0);
+        }
+    }
+
+    #[test]
+    fn x4600_central_cores_rank_first() {
+        let topo = Topology::x4600();
+        let pr = core_priorities(&topo);
+        // central sockets 2..=5 hold cores 4..=11
+        let best = pr.ranked_cores()[0];
+        assert!((4..=11).contains(&best), "best core {best} should be central");
+        // and every central core outranks every corner core
+        let worst_central =
+            (4..=11).map(|c| pr.scores[c]).fold(f64::INFINITY, f64::min);
+        let best_corner = (0..4)
+            .chain(12..16)
+            .map(|c| pr.scores[c])
+            .fold(f64::MIN, f64::max);
+        assert!(worst_central > best_corner);
+    }
+
+    #[test]
+    fn uma_all_equal() {
+        let pr = core_priorities(&Topology::uma(8));
+        for &s in &pr.scores[1..] {
+            assert!((s - pr.scores[0]).abs() < 1e-9);
+        }
+        assert_eq!(pr.best_cores().len(), 8);
+    }
+
+    #[test]
+    fn same_node_cores_tie() {
+        let pr = core_priorities(&Topology::x4600());
+        for node in 0..8 {
+            let (a, b) = (2 * node, 2 * node + 1);
+            assert!((pr.scores[a] - pr.scores[b]).abs() < 1e-9, "node {node}");
+        }
+    }
+
+    #[test]
+    fn hetero_big_nodes_win() {
+        // x4600_hetero gives inner sockets 4 cores: both the base term and
+        // the centrality term favour them.
+        let topo = Topology::x4600_hetero();
+        let pr = core_priorities(&topo);
+        let best = pr.ranked_cores()[0];
+        assert_eq!(topo.cores_per_node(topo.node_of(best)), 4);
+    }
+
+    #[test]
+    fn matches_kernel_reference_values() {
+        // Mirror of python/tests/test_priority.py::test_priority_matches_pseudocode
+        // on the 8-node ladder with 1 core/node: cross-language pin.
+        let topo = Topology::from_edges(
+            "ladder1",
+            vec![1; 8],
+            &[(0, 1), (6, 7), (0, 2), (2, 4), (4, 6), (1, 3), (3, 5), (5, 7), (2, 5), (3, 4)],
+            16,
+        )
+        .unwrap();
+        let pr = core_priorities(&topo);
+        // independent straight-line recomputation
+        let alpha = alpha_weights(topo.max_hops());
+        for i in 0..8 {
+            let mut v1 = 0.0;
+            for j in 0..8 {
+                if i != j {
+                    v1 += alpha[topo.core_hops(i, j) as usize];
+                }
+            }
+            let p1 = 1.0 + v1;
+            assert!((pr.p1[i] - p1).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ranked_cores_is_permutation() {
+        let pr = core_priorities(&Topology::altix16());
+        let mut r = pr.ranked_cores();
+        r.sort_unstable();
+        assert_eq!(r, (0..32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,224 @@
+//! The [`Runtime`] façade: topology + cost model + binding + engine.
+//!
+//! Mirrors the NANOS start-up sequence the paper modifies:
+//!
+//! 1. explore the hardware (here: the [`Topology`]);
+//! 2. compute core priorities and bind the master (Figs 2–4) — or bind
+//!    linearly for the baseline;
+//! 3. allocate per-thread runtime data (locally per node when NUMA-aware,
+//!    all on the master's node otherwise — paper §IV last paragraph);
+//! 4. run the workload's master-side init (first-touch placement!);
+//! 5. execute the task graph under the chosen scheduler.
+
+use anyhow::Result;
+
+use crate::coordinator::binding::{bind_threads, BindPolicy};
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::sched::{build_victim_lists, Policy};
+use crate::coordinator::task::Workload;
+use crate::metrics::RunStats;
+use crate::runtime::ExecEngine;
+use crate::simnuma::{CostModel, MemSim, PAGE_BYTES};
+use crate::topology::Topology;
+use crate::util::{SplitMix64, Time};
+
+/// A configured machine, ready to run workloads.
+#[derive(Clone)]
+pub struct Runtime {
+    pub topo: Topology,
+    pub cost: CostModel,
+}
+
+impl Runtime {
+    pub fn new(topo: Topology, cost: CostModel) -> Self {
+        Self { topo, cost }
+    }
+
+    /// X4600 with default calibration — the paper's testbed.
+    pub fn paper_testbed() -> Self {
+        Self::new(Topology::x4600(), CostModel::default())
+    }
+
+    /// Execute `workload` under `policy`/`bind` with `threads` threads.
+    ///
+    /// `exec` enables real PJRT compute for `Action::Kernel` steps.
+    pub fn run(
+        &self,
+        workload: &mut dyn Workload,
+        policy: Policy,
+        bind: BindPolicy,
+        threads: usize,
+        seed: u64,
+        exec: Option<&mut ExecEngine>,
+    ) -> Result<RunStats> {
+        let mut rng = SplitMix64::new(seed);
+        let binding = bind_threads(&self.topo, threads, bind, &mut rng);
+        let numa_rtdata = bind == BindPolicy::NumaAware;
+        let mut stats = self.run_bound(workload, policy, &binding.cores, numa_rtdata, seed, exec)?;
+        stats.bind = Some(bind);
+        Ok(stats)
+    }
+
+    /// Like [`Runtime::run`] but with an explicit thread→core binding
+    /// (thread 0 = master).  `numa_rtdata` controls whether per-thread
+    /// runtime pages are touched locally (§IV) or all by the master.
+    /// This is the ablation surface: any placement heuristic can be fed in.
+    pub fn run_bound(
+        &self,
+        workload: &mut dyn Workload,
+        policy: Policy,
+        cores: &[usize],
+        numa_rtdata: bool,
+        seed: u64,
+        exec: Option<&mut ExecEngine>,
+    ) -> Result<RunStats> {
+        let wall_start = std::time::Instant::now();
+        let threads = cores.len();
+        let binding = crate::coordinator::binding::Binding {
+            cores: cores.to_vec(),
+            priorities: None,
+        };
+        let mut mem = MemSim::new(self.topo.clone(), self.cost.clone());
+
+        // Per-thread runtime data (pools, descriptors): one page each.
+        // Baseline: the master first-touches everything (all pages land on
+        // its node). NUMA-aware: each thread touches its own page from its
+        // own core at start-up.
+        let mut rt_penalty: Vec<Time> = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let region = mem.alloc(PAGE_BYTES);
+            let toucher = if numa_rtdata { binding.cores[t] } else { binding.master_core() };
+            mem.first_touch(toucher, region, 0);
+            let data_node = mem.node_of_addr(region.addr).expect("rt page resident");
+            let worker_node = self.topo.node_of(binding.cores[t]);
+            let hops = self.topo.node_hops(worker_node, data_node) as Time;
+            rt_penalty.push(hops * self.cost.rtdata_per_hop);
+        }
+
+        // Master-side workload init: allocations + first touches.
+        let init_time = workload.init(&mut mem, binding.master_core());
+
+        let victims = build_victim_lists(&self.topo, &binding.cores);
+        let root = workload.root();
+        let engine = Engine::new(
+            EngineConfig { policy, cores: binding.cores.clone(), rt_penalty, seed },
+            mem,
+            victims,
+            workload,
+            exec,
+        );
+        let mut stats = engine.run(root)?;
+        stats.bench = workload.name().to_string();
+        stats.seed = seed;
+        stats.init_time = init_time;
+        stats.wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
+        Ok(stats)
+    }
+
+    /// The paper's speedup denominator: 1 thread, overhead-free depth-first
+    /// execution, baseline binding.
+    pub fn run_serial(&self, workload: &mut dyn Workload, seed: u64) -> Result<RunStats> {
+        self.run(workload, Policy::Serial, BindPolicy::Linear, 1, seed, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{BodyCtx, TaskDesc};
+    use crate::simnuma::Region;
+
+    /// Tiny deterministic workload: a two-level tree touching one array.
+    struct Tree {
+        data: Region,
+        fanout: i64,
+    }
+
+    impl Workload for Tree {
+        fn name(&self) -> &'static str {
+            "tree"
+        }
+
+        fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+            self.data = mem.alloc(64 * 1024);
+            mem.first_touch(master_core, self.data, 0)
+        }
+
+        fn root(&self) -> TaskDesc {
+            TaskDesc::new(0, [self.fanout, 0, 0, 0])
+        }
+
+        fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+            match desc.kind {
+                0 => {
+                    for i in 0..desc.args[0] {
+                        ctx.spawn(TaskDesc::new(1, [i, 0, 0, 0]));
+                    }
+                    ctx.taskwait();
+                    ctx.compute(100);
+                }
+                _ => {
+                    let chunk = self.data.bytes / self.fanout as u64;
+                    ctx.read(self.data.slice(desc.args[0] as u64 * chunk, chunk));
+                    ctx.compute(2_000);
+                }
+            }
+        }
+    }
+
+    fn run_one(policy: Policy, bind: BindPolicy, threads: usize) -> RunStats {
+        let rt = Runtime::paper_testbed();
+        let mut w = Tree { data: Region::EMPTY, fanout: 64 };
+        rt.run(&mut w, policy, bind, threads, 42, None).unwrap()
+    }
+
+    #[test]
+    fn all_tasks_complete_under_every_policy() {
+        for &p in Policy::all() {
+            let threads = if p == Policy::Serial { 1 } else { 8 };
+            let s = run_one(p, BindPolicy::Linear, threads);
+            assert_eq!(s.tasks, 65, "{}", p.name());
+            assert!(s.makespan > 0);
+        }
+    }
+
+    #[test]
+    fn parallel_beats_serial() {
+        let serial = run_one(Policy::Serial, BindPolicy::Linear, 1);
+        let par = run_one(Policy::WorkFirst, BindPolicy::Linear, 8);
+        assert!(
+            par.makespan < serial.makespan,
+            "8 threads {} vs serial {}",
+            par.makespan,
+            serial.makespan
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run_one(Policy::Dfwsrpt, BindPolicy::NumaAware, 8);
+        let b = run_one(Policy::Dfwsrpt, BindPolicy::NumaAware, 8);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.steals, b.steals);
+    }
+
+    #[test]
+    fn work_stealing_actually_steals() {
+        let s = run_one(Policy::WorkFirst, BindPolicy::Linear, 8);
+        assert!(s.steals > 0, "fanout tree must trigger steals");
+    }
+
+    #[test]
+    fn bf_uses_shared_queue_only() {
+        let s = run_one(Policy::BreadthFirst, BindPolicy::Linear, 8);
+        assert_eq!(s.steals, 0);
+        assert!(s.shared_ops > 0);
+    }
+
+    #[test]
+    fn numa_bind_records_policy() {
+        let s = run_one(Policy::Dfwspt, BindPolicy::NumaAware, 4);
+        assert_eq!(s.bind, Some(BindPolicy::NumaAware));
+        assert_eq!(s.label(), "dfwspt-Scheduler-NUMA");
+    }
+}

@@ -1,0 +1,36 @@
+//! Breadth-first scheduler (stock NANOS `bf`).
+//!
+//! One **shared FIFO** for the whole team: spawns append to the tail,
+//! idle workers pop from the head.  Load balance is ideal — any worker can
+//! take any ready task — which is why NQueens (cheap, uniform tasks, tiny
+//! data) loves it (paper Fig 10).
+//!
+//! Its two failure modes, both reproduced by the simulator, are exactly the
+//! paper's §V.A FFT analysis:
+//!
+//! 1. **Queue contention** — every spawn *and* every dispatch serializes on
+//!    the shared queue's lock ([`Pool::lock`](crate::coordinator::pool::Pool::lock)).
+//!    With millions of microsecond-scale tasks the lock saturates around
+//!    6–8 workers and speedup *decreases* beyond (Fig 7: 4.43x @ 6 cores
+//!    falling to 2.39x @ 16).
+//! 2. **No locality** — a popped task rarely lands on the core whose caches
+//!    (or NUMA node) hold its data, so the cache model charges misses and
+//!    remote-hop latencies that depth-first policies avoid.
+//!
+//! There is no work stealing: the shared queue *is* the only pool.
+
+pub use super::Policy;
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+
+    #[test]
+    fn bf_descriptor() {
+        let p = Policy::BreadthFirst;
+        assert!(p.shared_queue());
+        assert!(!p.depth_first());
+        assert_eq!(p.victim_kind(), VictimKind::None);
+        assert!(!p.overhead_free());
+    }
+}

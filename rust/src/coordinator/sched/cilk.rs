@@ -1,0 +1,32 @@
+//! Cilk-based scheduler (stock NANOS `cilk`).
+//!
+//! Depth-first: a spawned child runs **immediately** on the spawning
+//! worker; the suspended parent is pushed on the worker's own deque.  This
+//! keeps the child's working set — typically just written by the parent —
+//! hot in the core's private caches (paper §V.A: "a copy of this shared
+//! data may still be hot in the core's two level caches").
+//!
+//! Stealing is Cilk-THE-flavoured: a thief picks a victim **uniformly at
+//! random** and takes from the **front** of the victim's deque — the most
+//! recently suspended parent, i.e. the continuation of the task the victim
+//! is currently working under.  (Work-first, by contrast, steals the
+//! *oldest* entry; see [`super::wf`].)  Both inherit breadth-ish stolen
+//! work, but the front-steal grabs deeper, smaller continuations, which
+//! costs slightly more steals on deep trees — one of the small cilk/wf
+//! gaps visible across the paper's figures.
+
+pub use super::Policy;
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+
+    #[test]
+    fn cilk_descriptor() {
+        let p = Policy::CilkBased;
+        assert!(p.depth_first());
+        assert!(!p.shared_queue());
+        assert_eq!(p.steal_end(), StealEnd::Front);
+        assert_eq!(p.victim_kind(), VictimKind::Random);
+    }
+}

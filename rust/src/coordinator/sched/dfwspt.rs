@@ -1,0 +1,64 @@
+//! DFWSPT — Depth-First Work-Stealing **Priority Threads** (paper §VI.A).
+//!
+//! Queue discipline is exactly work-first ([`super::wf`]); the contribution
+//! is the victim order.  At start-up every thread receives a *priority
+//! list* of the other team threads ranked by the hop distance between
+//! their bound cores (closest first).  **Threads at equal distance are
+//! ordered by ascending thread id** — the paper: "If several cores turned
+//! out to be at equal distance from target core, threads are placed
+//! according to their identification number.  Threads with smaller id are
+//! placed first."
+//!
+//! An idle thread sweeps this list in order, probing each victim's pool
+//! until it finds a task (stolen from the back).  Close steals win twice:
+//! the steal transaction itself crosses fewer hops, and the stolen task's
+//! data — first-touched by the nearby victim — lives on a nearby node.
+//!
+//! The deterministic id-tiebreak is also the strategy's weakness: every
+//! idle thread in a neighbourhood converges on the *same* lowest-id
+//! victim and convoys on its pool lock.  That is precisely what
+//! [`super::dfwsrpt`] randomizes away (and why Strassen, with its high
+//! steal rate, favours DFWSRPT in Fig 15).
+
+use super::VictimList;
+
+/// Emit the §VI.A visiting order: distance groups ascending, ids ascending
+/// within a group.  (The [`VictimList`] is already built sorted this way;
+/// this function is the policy's explicit, tested statement of that order.)
+pub fn order(vl: &VictimList, out: &mut Vec<usize>) {
+    for (_, group) in &vl.groups {
+        out.extend(group.iter().copied());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+
+    #[test]
+    fn order_is_distance_then_id() {
+        let vl = VictimList {
+            groups: vec![(0, vec![2]), (1, vec![1, 5]), (3, vec![0, 4])],
+        };
+        let mut out = Vec::new();
+        super::order(&vl, &mut out);
+        assert_eq!(out, vec![2, 1, 5, 0, 4]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let vl = VictimList { groups: vec![(1, vec![3, 4, 7])] };
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        super::order(&vl, &mut a);
+        super::order(&vl, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dfwspt_descriptor() {
+        let p = Policy::Dfwspt;
+        assert!(p.depth_first());
+        assert_eq!(p.steal_end(), StealEnd::Back);
+        assert_eq!(p.victim_kind(), VictimKind::PriorityList);
+    }
+}

@@ -1,0 +1,71 @@
+//! DFWSRPT — Depth-First Work-Stealing **Random Priority Threads**
+//! (paper §VI.B).
+//!
+//! Identical to [`super::dfwspt`] except inside a distance group: "when
+//! several threads are at equal distance from the idle thread … it will
+//! randomly choose its victim thread.  Randomizing thread's selection
+//! mechanism may allow applications to avoid contentions that happen when
+//! several threads try to steal tasks from the closest thread holding the
+//! lowest thread id."
+//!
+//! Each steal sweep reshuffles every group independently, so repeated
+//! sweeps from the same thread (and concurrent sweeps from different
+//! threads) spread across equidistant victims instead of convoying — the
+//! effect that buys Strassen its extra ~17% over work-first in Fig 15.
+
+use crate::util::SplitMix64;
+
+use super::VictimList;
+
+/// Emit the §VI.B visiting order: distance groups ascending, fresh random
+/// permutation within each group.
+pub fn order(vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {
+    for (_, group) in &vl.groups {
+        let start = out.len();
+        out.extend(group.iter().copied());
+        rng.shuffle(&mut out[start..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+
+    fn vl() -> VictimList {
+        VictimList {
+            groups: vec![(0, vec![2]), (1, vec![1, 5, 6, 8]), (2, vec![0, 4])],
+        }
+    }
+
+    #[test]
+    fn groups_stay_in_distance_order() {
+        let mut rng = SplitMix64::new(11);
+        let mut out = Vec::new();
+        super::order(&vl(), &mut rng, &mut out);
+        assert_eq!(out[0], 2, "closest group first");
+        let mid: std::collections::BTreeSet<_> = out[1..5].iter().copied().collect();
+        assert_eq!(mid, [1, 5, 6, 8].into_iter().collect());
+        let far: std::collections::BTreeSet<_> = out[5..].iter().copied().collect();
+        assert_eq!(far, [0, 4].into_iter().collect());
+    }
+
+    #[test]
+    fn shuffles_within_group_across_sweeps() {
+        let mut rng = SplitMix64::new(13);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..32 {
+            let mut out = Vec::new();
+            super::order(&vl(), &mut rng, &mut out);
+            seen.insert(out[1..5].to_vec());
+        }
+        assert!(seen.len() > 1, "group order must vary across sweeps");
+    }
+
+    #[test]
+    fn dfwsrpt_descriptor() {
+        let p = Policy::Dfwsrpt;
+        assert!(p.depth_first());
+        assert_eq!(p.steal_end(), StealEnd::Back);
+        assert_eq!(p.victim_kind(), VictimKind::RandomPriorityList);
+    }
+}

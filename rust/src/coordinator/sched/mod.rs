@@ -1,0 +1,259 @@
+//! Task scheduling policies — three stock NANOS schedulers plus the
+//! paper's two NUMA-aware contributions.
+//!
+//! | policy | queueing | steal end | victim selection |
+//! |---|---|---|---|
+//! | [`bf`]      breadth-first | one shared FIFO | —     | — (no stealing) |
+//! | [`cilk`]    Cilk-based    | per-worker deque, child-first | front | uniform random |
+//! | [`wf`]      work-first    | per-worker deque, child-first | back  | uniform random |
+//! | [`dfwspt`]  §VI.A         | per-worker deque, child-first | back  | hop-ordered priority list, id-ties first |
+//! | [`dfwsrpt`] §VI.B         | per-worker deque, child-first | back  | hop-ordered priority list, random within a distance group |
+//!
+//! `Serial` is the measurement baseline: depth-first execution with every
+//! runtime overhead constant zeroed (the paper's "serial execution time"
+//! denominator).
+//!
+//! The policies are *declarative* here (an enum plus descriptors); the
+//! event engine interprets them.  Victim *order* generation is delegated to
+//! the per-policy modules so each strategy's logic sits next to its
+//! documentation and tests.
+
+pub mod bf;
+pub mod cilk;
+pub mod dfwsrpt;
+pub mod dfwspt;
+pub mod wf;
+
+use crate::topology::Topology;
+use crate::util::SplitMix64;
+
+/// Which end of a victim's deque a thief takes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StealEnd {
+    /// Most recently suspended parent (Cilk THE-style).
+    Front,
+    /// Oldest / shallowest task (work-first style).
+    Back,
+}
+
+/// How an idle worker picks victims.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VictimKind {
+    /// No stealing (breadth-first / serial).
+    None,
+    /// Uniform random sweep over all other workers.
+    Random,
+    /// Paper §VI.A: hop-distance groups, ascending; lower thread id first
+    /// within a group.
+    PriorityList,
+    /// Paper §VI.B: hop-distance groups, ascending; random order within a
+    /// group (de-convoys the lowest-id victim).
+    RandomPriorityList,
+}
+
+/// Scheduling policy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Policy {
+    /// Overhead-free depth-first baseline (speedup denominator).
+    Serial,
+    BreadthFirst,
+    CilkBased,
+    WorkFirst,
+    Dfwspt,
+    Dfwsrpt,
+}
+
+impl Policy {
+    pub fn all() -> &'static [Policy] {
+        &[
+            Policy::Serial,
+            Policy::BreadthFirst,
+            Policy::CilkBased,
+            Policy::WorkFirst,
+            Policy::Dfwspt,
+            Policy::Dfwsrpt,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Serial => "serial",
+            Policy::BreadthFirst => "bf",
+            Policy::CilkBased => "cilk",
+            Policy::WorkFirst => "wf",
+            Policy::Dfwspt => "dfwspt",
+            Policy::Dfwsrpt => "dfwsrpt",
+        }
+    }
+
+    pub fn from_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "serial" => Policy::Serial,
+            "bf" | "breadth-first" => Policy::BreadthFirst,
+            "cilk" | "cilk-based" => Policy::CilkBased,
+            "wf" | "work-first" => Policy::WorkFirst,
+            "dfwspt" => Policy::Dfwspt,
+            "dfwsrpt" => Policy::Dfwsrpt,
+            other => anyhow::bail!(
+                "unknown scheduler '{other}' (serial|bf|cilk|wf|dfwspt|dfwsrpt)"
+            ),
+        })
+    }
+
+    /// Child-first (depth-first) execution on spawn?
+    pub fn depth_first(self) -> bool {
+        !matches!(self, Policy::BreadthFirst)
+    }
+
+    /// Single shared FIFO instead of per-worker deques?
+    pub fn shared_queue(self) -> bool {
+        matches!(self, Policy::BreadthFirst)
+    }
+
+    pub fn steal_end(self) -> StealEnd {
+        match self {
+            Policy::CilkBased => StealEnd::Front,
+            _ => StealEnd::Back,
+        }
+    }
+
+    pub fn victim_kind(self) -> VictimKind {
+        match self {
+            Policy::Serial | Policy::BreadthFirst => VictimKind::None,
+            Policy::CilkBased | Policy::WorkFirst => VictimKind::Random,
+            Policy::Dfwspt => VictimKind::PriorityList,
+            Policy::Dfwsrpt => VictimKind::RandomPriorityList,
+        }
+    }
+
+    /// Serial baseline charges no runtime overheads.
+    pub fn overhead_free(self) -> bool {
+        matches!(self, Policy::Serial)
+    }
+}
+
+/// Per-worker victim structure: other workers grouped by hop distance from
+/// this worker's core, groups ascending by distance, members ascending by
+/// thread id (the paper's "priority list").
+#[derive(Clone, Debug)]
+pub struct VictimList {
+    /// (hops, thread ids at that distance)
+    pub groups: Vec<(u8, Vec<usize>)>,
+}
+
+impl VictimList {
+    pub fn total(&self) -> usize {
+        self.groups.iter().map(|(_, g)| g.len()).sum()
+    }
+}
+
+/// Build every worker's victim list from the thread→core binding.
+pub fn build_victim_lists(topo: &Topology, cores: &[usize]) -> Vec<VictimList> {
+    (0..cores.len())
+        .map(|me| {
+            let mut by_hops: Vec<(u8, usize)> = (0..cores.len())
+                .filter(|&t| t != me)
+                .map(|t| (topo.core_hops(cores[me], cores[t]), t))
+                .collect();
+            by_hops.sort_unstable();
+            let mut groups: Vec<(u8, Vec<usize>)> = Vec::new();
+            for (h, t) in by_hops {
+                match groups.last_mut() {
+                    Some((gh, g)) if *gh == h => g.push(t),
+                    _ => groups.push((h, vec![t])),
+                }
+            }
+            VictimList { groups }
+        })
+        .collect()
+}
+
+/// Produce this policy's victim visiting order into `out`.
+pub fn victim_sequence(
+    policy: Policy,
+    vl: &VictimList,
+    rng: &mut SplitMix64,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    match policy.victim_kind() {
+        VictimKind::None => {}
+        VictimKind::Random => {
+            out.extend(vl.groups.iter().flat_map(|(_, g)| g.iter().copied()));
+            rng.shuffle(out);
+        }
+        VictimKind::PriorityList => dfwspt::order(vl, out),
+        VictimKind::RandomPriorityList => dfwsrpt::order(vl, rng, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::binding::{bind_threads, BindPolicy};
+
+    fn lists(threads: usize) -> (Topology, Vec<VictimList>) {
+        let topo = Topology::x4600();
+        let mut rng = SplitMix64::new(1);
+        let b = bind_threads(&topo, threads, BindPolicy::Linear, &mut rng);
+        let vls = build_victim_lists(&topo, &b.cores);
+        (topo, vls)
+    }
+
+    #[test]
+    fn policy_roundtrip_names() {
+        for &p in Policy::all() {
+            assert_eq!(Policy::from_name(p.name()).unwrap(), p);
+        }
+        assert!(Policy::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn victim_groups_ascending_distance() {
+        let (_, vls) = lists(16);
+        for vl in &vls {
+            for w in vl.groups.windows(2) {
+                assert!(w[0].0 < w[1].0);
+            }
+            assert_eq!(vl.total(), 15);
+        }
+    }
+
+    #[test]
+    fn same_node_sibling_is_first_group() {
+        let (_, vls) = lists(16);
+        // thread 0 on core 0; thread 1 on core 1 shares node 0
+        assert_eq!(vls[0].groups[0], (0, vec![1]));
+    }
+
+    #[test]
+    fn random_sequence_is_permutation() {
+        let (_, vls) = lists(8);
+        let mut rng = SplitMix64::new(2);
+        let mut out = Vec::new();
+        victim_sequence(Policy::WorkFirst, &vls[3], &mut rng, &mut out);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn bf_has_no_victims() {
+        let (_, vls) = lists(8);
+        let mut rng = SplitMix64::new(2);
+        let mut out = vec![99];
+        victim_sequence(Policy::BreadthFirst, &vls[0], &mut rng, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn descriptor_table_matches_paper() {
+        assert!(!Policy::BreadthFirst.depth_first());
+        assert!(Policy::BreadthFirst.shared_queue());
+        assert_eq!(Policy::CilkBased.steal_end(), StealEnd::Front);
+        assert_eq!(Policy::WorkFirst.steal_end(), StealEnd::Back);
+        assert_eq!(Policy::Dfwspt.victim_kind(), VictimKind::PriorityList);
+        assert_eq!(Policy::Dfwsrpt.victim_kind(), VictimKind::RandomPriorityList);
+        assert!(Policy::Serial.overhead_free());
+    }
+}

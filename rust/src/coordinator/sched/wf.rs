@@ -1,0 +1,37 @@
+//! Work-first scheduler (stock NANOS `wf`).
+//!
+//! Depth-first like [`super::cilk`]: the child executes immediately, the
+//! suspended parent goes to the **front** of the spawning worker's deque
+//! (LIFO for the owner — resume order matches the serial execution).
+//!
+//! Thieves pick a victim **uniformly at random** and steal from the
+//! **back**: the *oldest* suspended parent, i.e. the shallowest ancestor,
+//! which hands the thief the largest available subtree and minimizes steal
+//! frequency (the classic work-first principle).
+//!
+//! This is the strongest stock baseline in the paper's data-intensive
+//! figures (FFT 9.3x, Strassen 9.15x @ 16 cores) and the scheduler the
+//! paper's DFWSPT/DFWSRPT extend: they keep exactly this queue discipline
+//! and only replace the *victim selection* with the NUMA-aware priority
+//! list (see [`super::dfwspt`], [`super::dfwsrpt`]).
+
+pub use super::Policy;
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+
+    #[test]
+    fn wf_descriptor() {
+        let p = Policy::WorkFirst;
+        assert!(p.depth_first());
+        assert_eq!(p.steal_end(), StealEnd::Back);
+        assert_eq!(p.victim_kind(), VictimKind::Random);
+    }
+
+    #[test]
+    fn dfwspt_extends_wf_queue_discipline() {
+        assert_eq!(Policy::Dfwspt.steal_end(), Policy::WorkFirst.steal_end());
+        assert_eq!(Policy::Dfwspt.depth_first(), Policy::WorkFirst.depth_first());
+    }
+}

@@ -1,0 +1,345 @@
+//! Task representation: descriptors, bodies, the workload trait and the
+//! task-instance arena.
+//!
+//! A benchmark (see [`crate::bots`]) is a [`Workload`]: a deterministic
+//! generator of OpenMP-style tied tasks.  Task *descriptors* are plain-old
+//! data (16 B of args) so spawning is allocation-free; a task's *body* (its
+//! action list) is materialized once, when the task first runs, by calling
+//! [`Workload::body`].
+//!
+//! Bodies follow the BOTS idiom: a **pre** phase (compute / touch / spawn
+//! actions), an implicit `taskwait`, and a **post** phase (the continuation
+//! after all children completed).  Tasks are *tied* as in NANOS: a
+//! suspended task resumes on the worker that started it.
+
+use crate::simnuma::{MemSim, Region};
+use crate::util::Time;
+
+/// Index into the [`TaskArena`].
+pub type TaskId = u32;
+
+/// Plain-old-data task descriptor; `kind`/`args` are interpreted by the
+/// owning [`Workload`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TaskDesc {
+    pub kind: u16,
+    pub args: [i64; 4],
+}
+
+impl TaskDesc {
+    pub fn new(kind: u16, args: [i64; 4]) -> Self {
+        Self { kind, args }
+    }
+
+    pub fn leaf(kind: u16) -> Self {
+        Self { kind, args: [0; 4] }
+    }
+}
+
+/// One step of a task body.  `Copy`: the engine's inner loop copies one
+/// action out of the body per step (16 B, no heap) instead of borrowing
+/// across the arena mutations the action triggers.
+#[derive(Clone, Copy, Debug)]
+pub enum Action {
+    /// Pure ALU work in compute units (1 unit ≈ 1 ns, see `CostModel`).
+    Compute(u64),
+    /// Memory traffic over a simulated region.
+    Touch { region: Region, write: bool },
+    /// Create a child task (placement decided by the scheduler policy).
+    Spawn(TaskDesc),
+    /// Invoke a real AOT kernel (PJRT mode only; tag is workload-defined).
+    /// Simulated cost must be modeled by an accompanying `Compute`/`Touch`.
+    Kernel(u64),
+}
+
+/// Materialized body: pre-phase actions, then (after children) post-phase.
+#[derive(Clone, Debug, Default)]
+pub struct Body {
+    pub pre: Vec<Action>,
+    pub post: Vec<Action>,
+}
+
+/// Builder handed to [`Workload::body`].
+#[derive(Debug, Default)]
+pub struct BodyCtx {
+    body: Body,
+    waited: bool,
+}
+
+impl BodyCtx {
+    /// Rebuild into an existing (cleared) body — lets the engine recycle
+    /// the action vectors' capacity across task-slot reuse (hot path).
+    pub fn with_body(mut body: Body) -> Self {
+        body.pre.clear();
+        body.post.clear();
+        Self { body, waited: false }
+    }
+
+    fn actions(&mut self) -> &mut Vec<Action> {
+        if self.waited {
+            &mut self.body.post
+        } else {
+            &mut self.body.pre
+        }
+    }
+
+    /// ALU work in compute units.
+    pub fn compute(&mut self, units: u64) {
+        if units > 0 {
+            self.actions().push(Action::Compute(units));
+        }
+    }
+
+    /// Read traffic over `region`.
+    pub fn read(&mut self, region: Region) {
+        if region.bytes > 0 {
+            self.actions().push(Action::Touch { region, write: false });
+        }
+    }
+
+    /// Write traffic over `region` (bumps page versions -> invalidations).
+    pub fn write(&mut self, region: Region) {
+        if region.bytes > 0 {
+            self.actions().push(Action::Touch { region, write: true });
+        }
+    }
+
+    /// Spawn a child task.
+    pub fn spawn(&mut self, desc: TaskDesc) {
+        self.actions().push(Action::Spawn(desc));
+    }
+
+    /// `#pragma omp taskwait`: subsequent actions form the continuation.
+    /// At most one per body (the BOTS benchmarks need no more).
+    pub fn taskwait(&mut self) {
+        assert!(!self.waited, "only one taskwait per task body is modeled");
+        self.waited = true;
+    }
+
+    /// Invoke real kernel `tag` at this point (PJRT compute mode).
+    pub fn kernel(&mut self, tag: u64) {
+        self.actions().push(Action::Kernel(tag));
+    }
+
+    pub fn finish(self) -> Body {
+        self.body
+    }
+}
+
+/// A benchmark: deterministic task-graph generator + optional real compute.
+pub trait Workload {
+    fn name(&self) -> &'static str;
+
+    /// Allocate the workload's data in `mem` and perform the master's
+    /// initialization touches (first-touch placement!).  Returns the
+    /// simulated cost of the init phase (excluded from the timed region,
+    /// like the BOTS timers, but its placement persists).
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time;
+
+    /// Descriptor of the root task.
+    fn root(&self) -> TaskDesc;
+
+    /// Emit the body of `desc` into `ctx`.
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx);
+
+    /// Run real kernel `tag` through the PJRT engine (compute mode).
+    /// Default: no real compute.
+    fn run_kernel(
+        &mut self,
+        _tag: u64,
+        _exec: &mut crate::runtime::ExecEngine,
+    ) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Verify real-compute results after the run (compute mode).
+    fn verify(&self, _exec: &mut crate::runtime::ExecEngine) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Rough task-count hint (progress display / arena pre-sizing).
+    fn task_count_hint(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// Lifecycle of a task instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    /// Created, queued, body not yet materialized.
+    Fresh,
+    /// Executing / suspended-by-child inside the pre phase.
+    Pre,
+    /// Pre phase done, children outstanding (implicit taskwait).
+    Waiting,
+    /// Children done; continuation queued or running.
+    Post,
+    /// Post phase done but it spawned children of its own (BOTS combine
+    /// phases); completes when they do.
+    WaitingFinal,
+    Done,
+}
+
+/// A live task.
+#[derive(Debug)]
+pub struct TaskInst {
+    pub desc: TaskDesc,
+    pub parent: Option<TaskId>,
+    /// Worker that first ran the task (tied-task resume target).
+    pub owner: u16,
+    pub state: TaskState,
+    pub pending_children: u32,
+    pub body: Body,
+    /// Next action index within the current phase.
+    pub cursor: usize,
+    pub depth: u16,
+    /// Generation counter for id reuse safety.
+    pub gen: u32,
+}
+
+/// Slab arena of task instances with freelist reuse (millions of tasks
+/// per run; peak-live is what bounds memory, not total).
+pub struct TaskArena {
+    slots: Vec<TaskInst>,
+    free: Vec<TaskId>,
+    live: usize,
+    total_created: u64,
+    peak_live: usize,
+}
+
+impl TaskArena {
+    pub fn new() -> Self {
+        Self { slots: Vec::new(), free: Vec::new(), live: 0, total_created: 0, peak_live: 0 }
+    }
+
+    pub fn create(&mut self, desc: TaskDesc, parent: Option<TaskId>, depth: u16) -> TaskId {
+        self.total_created += 1;
+        self.live += 1;
+        self.peak_live = self.peak_live.max(self.live);
+        if let Some(id) = self.free.pop() {
+            let slot = &mut self.slots[id as usize];
+            let gen = slot.gen + 1;
+            let body = std::mem::take(&mut slot.body); // recycle capacity
+            *slot = TaskInst {
+                desc,
+                parent,
+                owner: u16::MAX,
+                state: TaskState::Fresh,
+                pending_children: 0,
+                body,
+                cursor: 0,
+                depth,
+                gen,
+            };
+            id
+        } else {
+            self.slots.push(TaskInst {
+                desc,
+                parent,
+                owner: u16::MAX,
+                state: TaskState::Fresh,
+                pending_children: 0,
+                body: Body::default(),
+                cursor: 0,
+                depth,
+                gen: 0,
+            });
+            (self.slots.len() - 1) as TaskId
+        }
+    }
+
+    pub fn release(&mut self, id: TaskId) {
+        debug_assert_eq!(self.slots[id as usize].state, TaskState::Done);
+        self.live -= 1;
+        // body storage stays in the slot: its capacity is recycled by the
+        // next task materialized there (see Engine::start_task)
+        self.free.push(id);
+    }
+
+    #[inline]
+    pub fn get(&self, id: TaskId) -> &TaskInst {
+        &self.slots[id as usize]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, id: TaskId) -> &mut TaskInst {
+        &mut self.slots[id as usize]
+    }
+
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    pub fn total_created(&self) -> u64 {
+        self.total_created
+    }
+
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+}
+
+impl Default for TaskArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn body_ctx_splits_phases() {
+        let mut ctx = BodyCtx::default();
+        ctx.compute(5);
+        ctx.spawn(TaskDesc::leaf(1));
+        ctx.taskwait();
+        ctx.compute(7);
+        let body = ctx.finish();
+        assert_eq!(body.pre.len(), 2);
+        assert_eq!(body.post.len(), 1);
+        assert!(matches!(body.post[0], Action::Compute(7)));
+    }
+
+    #[test]
+    fn zero_cost_actions_elided() {
+        let mut ctx = BodyCtx::default();
+        ctx.compute(0);
+        ctx.read(Region::EMPTY);
+        assert!(ctx.finish().pre.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "one taskwait")]
+    fn double_taskwait_panics() {
+        let mut ctx = BodyCtx::default();
+        ctx.taskwait();
+        ctx.taskwait();
+    }
+
+    #[test]
+    fn arena_reuses_slots() {
+        let mut a = TaskArena::new();
+        let t0 = a.create(TaskDesc::leaf(0), None, 0);
+        a.get_mut(t0).state = TaskState::Done;
+        a.release(t0);
+        let t1 = a.create(TaskDesc::leaf(1), None, 0);
+        assert_eq!(t0, t1, "slot reused");
+        assert_eq!(a.get(t1).gen, 1, "generation bumped");
+        assert_eq!(a.total_created(), 2);
+        assert_eq!(a.live(), 1);
+    }
+
+    #[test]
+    fn arena_tracks_peak() {
+        let mut a = TaskArena::new();
+        let ids: Vec<_> = (0..10).map(|i| a.create(TaskDesc::leaf(i), None, 0)).collect();
+        for id in &ids {
+            a.get_mut(*id).state = TaskState::Done;
+            a.release(*id);
+        }
+        assert_eq!(a.peak_live(), 10);
+        assert_eq!(a.live(), 0);
+    }
+}

@@ -1,0 +1,257 @@
+//! Figure regeneration harness — one entry per paper table/figure
+//! (DESIGN.md §5 experiment index).
+//!
+//! A [`FigureSpec`] names a benchmark, a set of scheduler configurations
+//! and a thread sweep; [`run_figure`] executes the sweep against a fresh
+//! serial baseline and returns a [`SpeedupTable`] shaped exactly like the
+//! paper's figure.  [`report`] renders the table with the paper's anchor
+//! values beside the measured ones.
+
+use anyhow::Result;
+
+use crate::bots;
+use crate::config::Size;
+use crate::coordinator::binding::BindPolicy;
+use crate::coordinator::runtime::Runtime;
+use crate::coordinator::sched::Policy;
+use crate::metrics::paper;
+use crate::metrics::speedup;
+use crate::metrics::table::SpeedupTable;
+
+/// Thread counts on the paper's x-axis (16-core X4600).
+pub const PAPER_THREADS: &[usize] = &[2, 4, 6, 8, 12, 16];
+
+/// One reproducible figure.
+#[derive(Clone, Debug)]
+pub struct FigureSpec {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub bench: &'static str,
+    pub size: Size,
+    pub configs: Vec<(Policy, BindPolicy)>,
+    pub threads: Vec<usize>,
+}
+
+/// The six stock-vs-NUMA configurations of Figs 5–10.
+pub fn stock_configs() -> Vec<(Policy, BindPolicy)> {
+    vec![
+        (Policy::BreadthFirst, BindPolicy::Linear),
+        (Policy::CilkBased, BindPolicy::Linear),
+        (Policy::WorkFirst, BindPolicy::Linear),
+        (Policy::BreadthFirst, BindPolicy::NumaAware),
+        (Policy::CilkBased, BindPolicy::NumaAware),
+        (Policy::WorkFirst, BindPolicy::NumaAware),
+    ]
+}
+
+/// The three NUMA-scheduler configurations of Figs 13–15.
+pub fn numa_sched_configs() -> Vec<(Policy, BindPolicy)> {
+    vec![
+        (Policy::WorkFirst, BindPolicy::NumaAware),
+        (Policy::Dfwspt, BindPolicy::NumaAware),
+        (Policy::Dfwsrpt, BindPolicy::NumaAware),
+    ]
+}
+
+/// Every figure in the paper's evaluation (E1–E9 of DESIGN.md §5).
+pub fn figures() -> Vec<FigureSpec> {
+    let t = PAPER_THREADS.to_vec();
+    vec![
+        FigureSpec { id: "fig5", title: "Fig 5 — Floorplan speedup", bench: "floorplan", size: Size::Medium, configs: stock_configs(), threads: t.clone() },
+        FigureSpec { id: "fig6", title: "Fig 6 — SparseLU (for) speedup", bench: "sparselu_for", size: Size::Medium, configs: stock_configs(), threads: t.clone() },
+        FigureSpec { id: "fig7", title: "Fig 7 — FFT speedup", bench: "fft", size: Size::Medium, configs: stock_configs(), threads: t.clone() },
+        FigureSpec { id: "fig8", title: "Fig 8 — Strassen speedup", bench: "strassen", size: Size::Medium, configs: stock_configs(), threads: t.clone() },
+        FigureSpec { id: "fig9", title: "Fig 9 — Sort speedup", bench: "sort", size: Size::Medium, configs: stock_configs(), threads: t.clone() },
+        FigureSpec { id: "fig10", title: "Fig 10 — NQueens speedup", bench: "nqueens", size: Size::Medium, configs: stock_configs(), threads: t.clone() },
+        FigureSpec { id: "fig13", title: "Fig 13 — FFT, NUMA-aware task schedulers", bench: "fft", size: Size::Medium, configs: numa_sched_configs(), threads: t.clone() },
+        FigureSpec { id: "fig14", title: "Fig 14 — Sort, NUMA-aware task schedulers", bench: "sort", size: Size::Medium, configs: numa_sched_configs(), threads: t.clone() },
+        FigureSpec { id: "fig15", title: "Fig 15 — Strassen, NUMA-aware task schedulers", bench: "strassen", size: Size::Medium, configs: numa_sched_configs(), threads: t },
+    ]
+}
+
+pub fn figure_by_id(id: &str) -> Option<FigureSpec> {
+    figures().into_iter().find(|f| f.id == id)
+}
+
+/// Label used in tables for a (policy, bind) pair — paper legend style.
+pub fn config_label(policy: Policy, bind: BindPolicy) -> String {
+    match bind {
+        BindPolicy::NumaAware => format!("{}-Scheduler-NUMA", policy.name()),
+        BindPolicy::Linear => format!("{}-Scheduler", policy.name()),
+    }
+}
+
+/// Run one figure sweep.  `seed` shapes workload + randomized decisions;
+/// the paper takes best-of-50 wall-clock runs, we take the deterministic
+/// simulated makespan of one seed.
+pub fn run_figure(rt: &Runtime, spec: &FigureSpec, seed: u64) -> Result<SpeedupTable> {
+    let mut serial_w = bots::create(spec.bench, spec.size, seed)?;
+    let serial = rt.run_serial(serial_w.as_mut(), seed)?;
+
+    let mut table = SpeedupTable::new(spec.title, spec.threads.clone());
+    for &(policy, bind) in &spec.configs {
+        let mut row = Vec::with_capacity(spec.threads.len());
+        for &threads in &spec.threads {
+            let mut w = bots::create(spec.bench, spec.size, seed)?;
+            let stats = rt.run(w.as_mut(), policy, bind, threads, seed, None)?;
+            row.push(speedup(&serial, &stats));
+        }
+        table.push_row(config_label(policy, bind), row);
+    }
+    Ok(table)
+}
+
+/// Render a figure's table plus paper-anchor comparison lines.
+pub fn report(spec: &FigureSpec, table: &SpeedupTable) -> String {
+    let mut out = table.to_markdown();
+    out.push('\n');
+    let anchors = paper::anchors_for(spec.id);
+    if !anchors.is_empty() {
+        out.push_str("paper anchors (measured vs published):\n\n");
+        out.push_str("| config | threads | measured | paper |\n|---|---|---|---|\n");
+        for a in anchors {
+            let got = table
+                .get(a.config, a.threads)
+                .map(|v| format!("{v:.2}"))
+                .unwrap_or_else(|| "—".into());
+            out.push_str(&format!(
+                "| {} | {} | {} | {:.2} |\n",
+                a.config, a.threads, got, a.speedup
+            ));
+        }
+        out.push('\n');
+    }
+    let gains = paper::gains_for(spec.id);
+    if !gains.is_empty() {
+        out.push_str("paper gain claims (measured vs published, % faster):\n\n");
+        out.push_str("| better | worse | threads | measured % | paper % |\n|---|---|---|---|---|\n");
+        for g in gains {
+            let got = table
+                .gain_pct(g.better, g.worse, g.threads)
+                .map(|v| format!("{v:.2}"))
+                .unwrap_or_else(|| "—".into());
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {:.2} |\n",
+                g.better, g.worse, g.threads, got, g.pct
+            ));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// E10: the §V.A headline-gain summary across data-intensive benchmarks.
+pub fn gains_summary(rt: &Runtime, size: Size, seed: u64) -> Result<SpeedupTable> {
+    let mut table = SpeedupTable::new(
+        "NUMA-aware allocation gain at 16 threads (% faster execution)",
+        vec![16],
+    );
+    for bench in ["fft", "sort", "strassen", "sparselu_for", "nqueens", "floorplan"] {
+        let mut serial_w = bots::create(bench, size, seed)?;
+        let serial = rt.run_serial(serial_w.as_mut(), seed)?;
+        for policy in [Policy::CilkBased, Policy::WorkFirst] {
+            let mut base_w = bots::create(bench, size, seed)?;
+            let base = rt.run(base_w.as_mut(), policy, BindPolicy::Linear, 16, seed, None)?;
+            let mut numa_w = bots::create(bench, size, seed)?;
+            let numa = rt.run(numa_w.as_mut(), policy, BindPolicy::NumaAware, 16, seed, None)?;
+            let gain = (1.0 - speedup(&serial, &base) / speedup(&serial, &numa)) * 100.0;
+            table.push_row(format!("{bench}/{}", policy.name()), vec![gain]);
+        }
+    }
+    Ok(table)
+}
+
+/// Shared entry point for the `rust/benches/figNN_*.rs` bench binaries:
+/// regenerate one paper figure at Medium scale, print the table, the
+/// paper-anchor comparison and wall-clock, and write CSV/markdown into
+/// `results/` (created if needed).
+pub fn bench_figure_main(id: &str) -> Result<()> {
+    let seed: u64 = std::env::var("NUMANOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(42);
+    let size = match std::env::var("NUMANOS_SIZE").as_deref() {
+        Ok("small") => Size::Small,
+        Ok("large") => Size::Large,
+        _ => Size::Medium,
+    };
+    let rt = Runtime::paper_testbed();
+    let mut spec = figure_by_id(id)
+        .ok_or_else(|| anyhow::anyhow!("unknown figure '{id}'"))?;
+    spec.size = size;
+    let t0 = std::time::Instant::now();
+    let table = run_figure(&rt, &spec, seed)?;
+    println!("{}", report(&spec, &table));
+    println!("{}", table.to_ascii());
+    println!("[{} regenerated in {:.2}s]", spec.id, t0.elapsed().as_secs_f64());
+    std::fs::create_dir_all("results").ok();
+    std::fs::write(format!("results/{}.md", spec.id), report(&spec, &table))?;
+    std::fs::write(format!("results/{}.csv", spec.id), table.to_csv())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nine_figures_defined() {
+        let figs = figures();
+        assert_eq!(figs.len(), 9);
+        for f in &figs {
+            assert!(!f.configs.is_empty());
+            assert_eq!(f.threads, PAPER_THREADS);
+            assert!(bots::NAMES.contains(&f.bench), "{}", f.bench);
+        }
+    }
+
+    #[test]
+    fn figure_lookup() {
+        assert!(figure_by_id("fig7").is_some());
+        assert!(figure_by_id("fig99").is_none());
+    }
+
+    #[test]
+    fn labels_match_paper() {
+        assert_eq!(
+            config_label(Policy::CilkBased, BindPolicy::NumaAware),
+            "cilk-Scheduler-NUMA"
+        );
+    }
+
+    #[test]
+    fn tiny_figure_runs_end_to_end() {
+        // a small custom spec exercising the full path quickly
+        let rt = Runtime::paper_testbed();
+        let spec = FigureSpec {
+            id: "test",
+            title: "test",
+            bench: "fib",
+            size: Size::Small,
+            configs: vec![
+                (Policy::WorkFirst, BindPolicy::Linear),
+                (Policy::Dfwsrpt, BindPolicy::NumaAware),
+            ],
+            threads: vec![2, 8],
+        };
+        let table = run_figure(&rt, &spec, 1).unwrap();
+        assert_eq!(table.rows.len(), 2);
+        for (_, row) in &table.rows {
+            for v in row {
+                assert!(*v > 0.5, "speedup {v} nonsensical");
+            }
+        }
+        // more threads should not be slower for fib
+        let r = &table.rows[0].1;
+        assert!(r[1] > r[0]);
+    }
+
+    #[test]
+    fn report_contains_anchor_section() {
+        let spec = figure_by_id("fig7").unwrap();
+        let mut table = SpeedupTable::new(&spec.title, PAPER_THREADS.to_vec());
+        for (p, b) in &spec.configs {
+            table.push_row(config_label(*p, *b), vec![1.0; PAPER_THREADS.len()]);
+        }
+        let rep = report(&spec, &table);
+        assert!(rep.contains("paper anchors"));
+        assert!(rep.contains("bf-Scheduler"));
+    }
+}

@@ -1,0 +1,49 @@
+//! # numanos — NUMA-aware OpenMP-style task runtime
+//!
+//! A full reproduction of *"Towards Efficient OpenMP Strategies for
+//! Non-Uniform Architectures"* (O. Tahan, 2014) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: a
+//!   task-centric OpenMP-style runtime (a NANOS analogue) with the paper's
+//!   NUMA-aware thread→core priority allocation (§IV, Figs 2–4) and the
+//!   DFWSPT / DFWSRPT NUMA-aware work-stealing schedulers (§VI), executed
+//!   over a deterministic discrete-event NUMA machine simulator.
+//! * **Layer 2 (`python/compile/model.py`)** — the BOTS compute leaves as
+//!   JAX graphs, AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for the
+//!   numeric hot-spots (MXU-tiled matmul, FFT butterfly, LU blocks,
+//!   bitonic compare-exchange, the Fig 2–4 priority math).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! compute graphs once; [`runtime`] loads them through PJRT (`xla` crate)
+//! and [`coordinator`] invokes them from task bodies when real compute is
+//! requested (`--compute pjrt`).
+//!
+//! Module map (see `DESIGN.md` for the full inventory):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`topology`] | NUMA fabric models (X4600 twisted ladder & friends) |
+//! | [`simnuma`]  | memory-system simulator: first-touch pages, caches, NUMA latencies, contention |
+//! | [`coordinator`] | the runtime: tasks, pools, binding, priorities, 5 schedulers, event engine |
+//! | [`bots`]     | the 11 BOTS benchmark task-graph generators |
+//! | [`runtime`]  | PJRT artifact loading + execution (the AOT bridge) |
+//! | [`metrics`]  | run statistics, speedup tables, paper reference data |
+//! | [`harness`]  | figure regeneration: sweeps, calibration, reporting |
+//! | [`config`]   | run configuration + tiny key=value config file parser |
+//! | [`util`]     | deterministic PRNG and misc helpers |
+
+pub mod bots;
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod metrics;
+pub mod runtime;
+pub mod simnuma;
+pub mod topology;
+pub mod util;
+
+pub use config::RunConfig;
+pub use coordinator::runtime::Runtime;
+pub use topology::Topology;

@@ -1,0 +1,246 @@
+//! `numanos` — CLI launcher for the NUMA-aware task-runtime reproduction.
+//!
+//! ```text
+//! numanos list                         # benchmarks / schedulers / topologies
+//! numanos topo   --name x4600          # fabric + §IV priorities
+//! numanos run    --bench fft --sched dfwspt --bind numa --threads 16
+//! numanos figure --id fig7             # regenerate one paper figure
+//! numanos figure --all --out results/  # regenerate all nine figures
+//! numanos gains                        # §V.A NUMA-allocation gain summary
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use numanos::bots;
+use numanos::config::{parse_cost_overrides, ComputeMode, RunConfig, Size};
+use numanos::coordinator::priority::core_priorities;
+use numanos::coordinator::runtime::Runtime;
+use numanos::coordinator::sched::Policy;
+use numanos::harness;
+use numanos::metrics::speedup;
+use numanos::runtime::ExecEngine;
+use numanos::simnuma::CostModel;
+use numanos::topology::Topology;
+use numanos::util::fmt_time;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--k v` flags into a map; returns (subcommand, flags).
+fn parse_args() -> Result<(String, HashMap<String, String>)> {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".into());
+    let mut flags = HashMap::new();
+    let mut key: Option<String> = None;
+    for a in args {
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some(k) = key.take() {
+                flags.insert(k, "true".into()); // boolean flag
+            }
+            key = Some(stripped.to_string());
+        } else if let Some(k) = key.take() {
+            flags.insert(k, a);
+        } else {
+            bail!("unexpected positional argument '{a}'");
+        }
+    }
+    if let Some(k) = key.take() {
+        flags.insert(k, "true".into());
+    }
+    Ok((cmd, flags))
+}
+
+fn run() -> Result<()> {
+    let (cmd, flags) = parse_args()?;
+    match cmd.as_str() {
+        "list" => cmd_list(),
+        "topo" => cmd_topo(&flags),
+        "run" => cmd_run(&flags),
+        "figure" => cmd_figure(&flags),
+        "gains" => cmd_gains(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `numanos help`)"),
+    }
+}
+
+const HELP: &str = "\
+numanos — NUMA-aware OpenMP task runtime (Tahan 2014 reproduction)
+
+commands:
+  list                      benchmarks, schedulers, topologies
+  topo   --name <topo>      fabric, hop matrix, and SS IV core priorities
+  run    --bench <b> [--size s|m|l] [--sched P] [--bind linear|numa]
+         [--threads N] [--topo T] [--seed S] [--compute sim|pjrt]
+         [--cost k=v,...]   single run, prints the stats summary
+  figure --id figN | --all  regenerate paper figures (speedup tables)
+         [--out dir] [--size s|m|l] [--seed S] [--cost k=v,...]
+  gains  [--size s|m|l]     SS V.A NUMA-allocation gain summary
+";
+
+fn cmd_list() -> Result<()> {
+    println!("benchmarks : {}", bots::NAMES.join(" "));
+    println!(
+        "schedulers : {}",
+        Policy::all().iter().map(|p| p.name()).collect::<Vec<_>>().join(" ")
+    );
+    println!("bindings   : linear numa");
+    println!("topologies : {}", Topology::preset_names().join(" "));
+    println!("figures    : {}", harness::figures().iter().map(|f| f.id).collect::<Vec<_>>().join(" "));
+    Ok(())
+}
+
+fn cmd_topo(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags.get("name").map(String::as_str).unwrap_or("x4600");
+    let topo = Topology::by_name(name)?;
+    println!(
+        "{}: {} nodes, {} cores, max {} hops, {} pages/node",
+        topo.name(),
+        topo.num_nodes(),
+        topo.num_cores(),
+        topo.max_hops(),
+        topo.node_capacity_pages()
+    );
+    println!("\nnode hop matrix:");
+    for a in 0..topo.num_nodes() {
+        let row: Vec<String> =
+            (0..topo.num_nodes()).map(|b| topo.node_hops(a, b).to_string()).collect();
+        println!("  node {a:>2}: {}  (mean hops to cores: {:.2})", row.join(" "), topo.mean_hops_from(a));
+    }
+    let pr = core_priorities(&topo);
+    println!("\nSS IV core priorities (alpha = {:?}):", pr.alpha);
+    let ranked = pr.ranked_cores();
+    for &c in &ranked {
+        println!(
+            "  core {c:>2} (node {}): P1 = {:8.2}  P = {:10.2}{}",
+            topo.node_of(c),
+            pr.p1[c],
+            pr.scores[c],
+            if c == ranked[0] { "   <- master binds here" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+fn build_runtime(flags: &HashMap<String, String>, topo_name: &str) -> Result<Runtime> {
+    let topo = Topology::by_name(topo_name)?;
+    let mut cost = CostModel::default();
+    if let Some(spec) = flags.get("cost") {
+        parse_cost_overrides(&mut cost, spec)?;
+    }
+    Ok(Runtime::new(topo, cost))
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    for key in ["bench", "size", "sched", "bind", "threads", "topo", "seed", "compute", "artifacts"]
+    {
+        if let Some(v) = flags.get(key) {
+            cfg.set(key, v)?;
+        }
+    }
+    let rt = build_runtime(flags, &cfg.topo)?;
+    println!("# {}", cfg.describe());
+    let mut workload = bots::create(&cfg.bench, cfg.size, cfg.seed)?;
+
+    let mut exec = match cfg.compute {
+        ComputeMode::Pjrt => {
+            let e = ExecEngine::cpu(&cfg.artifact_dir)?;
+            println!("# pjrt platform: {} ({} artifacts)", e.platform(), e.manifest_len());
+            Some(e)
+        }
+        ComputeMode::Sim => None,
+    };
+
+    // serial baseline for the speedup line
+    let mut serial_w = bots::create(&cfg.bench, cfg.size, cfg.seed)?;
+    let serial = rt.run_serial(serial_w.as_mut(), cfg.seed)?;
+
+    let stats = rt.run(
+        workload.as_mut(),
+        cfg.policy,
+        cfg.bind,
+        cfg.threads,
+        cfg.seed,
+        exec.as_mut(),
+    )?;
+    println!("{}", stats.summary());
+    println!(
+        "mem: l1={} l2={} miss={} (hops {:.2}) stall={} work={} overhead={}",
+        stats.mem.l1_hit_lines,
+        stats.mem.l2_hit_lines,
+        stats.mem.miss_lines(),
+        stats.mem.mean_miss_hops(),
+        fmt_time(stats.mem.contention_stall),
+        fmt_time(stats.work_time),
+        fmt_time(stats.overhead_time),
+    );
+    println!(
+        "serial {} -> speedup {:.2}x | efficiency {:.1}% | events {} | host {:.1} ms",
+        fmt_time(serial.makespan),
+        speedup(&serial, &stats),
+        100.0 * stats.efficiency(),
+        stats.sim_events,
+        stats.wall_ms,
+    );
+    if let Some(e) = &exec {
+        println!("pjrt kernel calls: {} (verified)", e.calls);
+    }
+    Ok(())
+}
+
+fn cmd_figure(flags: &HashMap<String, String>) -> Result<()> {
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let size = flags
+        .get("size")
+        .map(|s| Size::from_name(s))
+        .transpose()?
+        .unwrap_or(Size::Medium);
+    let rt = build_runtime(flags, flags.get("topo").map(String::as_str).unwrap_or("x4600"))?;
+    let specs: Vec<harness::FigureSpec> = if flags.contains_key("all") {
+        harness::figures()
+    } else if let Some(id) = flags.get("id") {
+        vec![harness::figure_by_id(id).with_context(|| format!("unknown figure '{id}'"))?]
+    } else {
+        bail!("figure: need --id <figN> or --all");
+    };
+    let out_dir = flags.get("out").cloned();
+    if let Some(d) = &out_dir {
+        std::fs::create_dir_all(d)?;
+    }
+    for mut spec in specs {
+        spec.size = size;
+        let t0 = std::time::Instant::now();
+        let table = harness::run_figure(&rt, &spec, seed)?;
+        let rep = harness::report(&spec, &table);
+        println!("{rep}");
+        println!("{}", table.to_ascii());
+        eprintln!("[{} took {:.1}s]", spec.id, t0.elapsed().as_secs_f64());
+        if let Some(d) = &out_dir {
+            std::fs::write(format!("{d}/{}.md", spec.id), &rep)?;
+            std::fs::write(format!("{d}/{}.csv", spec.id), table.to_csv())?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gains(flags: &HashMap<String, String>) -> Result<()> {
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let size = flags
+        .get("size")
+        .map(|s| Size::from_name(s))
+        .transpose()?
+        .unwrap_or(Size::Medium);
+    let rt = build_runtime(flags, "x4600")?;
+    let table = harness::gains_summary(&rt, size, seed)?;
+    println!("{}", table.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! Run statistics, speedup tables and the paper's reference numbers.
+
+pub mod paper;
+pub mod table;
+
+use crate::coordinator::binding::BindPolicy;
+use crate::coordinator::sched::Policy;
+use crate::simnuma::MemStats;
+use crate::util::{fmt_time, Time};
+
+/// Everything measured in one simulated run.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    pub bench: String,
+    pub policy: Policy,
+    pub bind: Option<BindPolicy>,
+    pub threads: usize,
+    pub topo: String,
+    pub seed: u64,
+    /// Simulated completion time of the last task (the paper's metric).
+    pub makespan: Time,
+    /// Simulated cost of the untimed init phase (first-touch placement).
+    pub init_time: Time,
+    pub tasks: u64,
+    pub peak_live: usize,
+    pub steals: u64,
+    pub steal_attempts: u64,
+    pub mean_steal_hops: f64,
+    /// Total simulated time spent waiting on pool locks (contention).
+    pub lock_wait_total: Time,
+    pub shared_lock_wait: Time,
+    pub shared_ops: u64,
+    /// Aggregate worker time in compute+memory vs runtime overhead.
+    pub work_time: Time,
+    pub overhead_time: Time,
+    pub per_worker_tasks: Vec<u64>,
+    pub mem: MemStats,
+    pub kernel_calls: u64,
+    pub sim_events: u64,
+    /// Host wall-clock of the simulation itself (engine perf tracking).
+    pub wall_ms: f64,
+}
+
+impl RunStats {
+    /// Config label like `wf-Scheduler-NUMA` (paper figure legend style).
+    pub fn label(&self) -> String {
+        let sched = match self.policy {
+            Policy::Serial => "serial".into(),
+            p => format!("{}-Scheduler", p.name()),
+        };
+        match self.bind {
+            Some(BindPolicy::NumaAware) => format!("{sched}-NUMA"),
+            _ => sched,
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<22} t={:<2} makespan={:<12} tasks={} steals={} (hops {:.2}) lockwait={} remote={:.1}%",
+            self.label(),
+            self.threads,
+            fmt_time(self.makespan),
+            self.tasks,
+            self.steals,
+            self.mean_steal_hops,
+            fmt_time(self.lock_wait_total),
+            100.0 * self.mem.remote_ratio(),
+        )
+    }
+
+    /// Parallel efficiency diagnostic: work / (threads * makespan).
+    pub fn efficiency(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.work_time as f64 / (self.threads as f64 * self.makespan as f64)
+    }
+}
+
+/// speedup = serial makespan / this makespan.
+pub fn speedup(serial: &RunStats, run: &RunStats) -> f64 {
+    serial.makespan as f64 / run.makespan as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(policy: Policy, bind: Option<BindPolicy>, makespan: Time) -> RunStats {
+        RunStats {
+            bench: "x".into(),
+            policy,
+            bind,
+            threads: 4,
+            topo: "x4600".into(),
+            seed: 0,
+            makespan,
+            init_time: 0,
+            tasks: 10,
+            peak_live: 2,
+            steals: 3,
+            steal_attempts: 5,
+            mean_steal_hops: 1.0,
+            lock_wait_total: 0,
+            shared_lock_wait: 0,
+            shared_ops: 0,
+            work_time: makespan * 3,
+            overhead_time: 0,
+            per_worker_tasks: vec![3, 3, 2, 2],
+            mem: MemStats::default(),
+            kernel_calls: 0,
+            sim_events: 0,
+            wall_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn labels_match_paper_legends() {
+        assert_eq!(
+            stats(Policy::WorkFirst, Some(BindPolicy::NumaAware), 1).label(),
+            "wf-Scheduler-NUMA"
+        );
+        assert_eq!(
+            stats(Policy::BreadthFirst, Some(BindPolicy::Linear), 1).label(),
+            "bf-Scheduler"
+        );
+        assert_eq!(stats(Policy::Dfwsrpt, None, 1).label(), "dfwsrpt-Scheduler");
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let serial = stats(Policy::Serial, None, 1000);
+        let par = stats(Policy::WorkFirst, None, 250);
+        assert!((speedup(&serial, &par) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_bounded() {
+        let s = stats(Policy::WorkFirst, None, 100);
+        assert!(s.efficiency() > 0.0 && s.efficiency() <= 1.0);
+    }
+}

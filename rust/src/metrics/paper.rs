@@ -1,0 +1,112 @@
+//! The paper's published numbers, transcribed for side-by-side reporting.
+//!
+//! Every figure's text gives a handful of anchor values (max speedups at
+//! 16 cores, relative gains).  `harness` prints measured-vs-paper for each
+//! anchor; EXPERIMENTS.md records the deltas.  We target *shape*: ordering
+//! of schedulers, collapse/crossover locations, gain signs and rough
+//! magnitude — not absolute values (our substrate is a calibrated
+//! simulator, not the authors' X4600; DESIGN.md §2).
+
+/// An anchor value quoted in the paper.
+#[derive(Clone, Copy, Debug)]
+pub struct Anchor {
+    /// figure id, e.g. "fig7"
+    pub figure: &'static str,
+    /// configuration label in paper legend style, e.g. "wf-Scheduler-NUMA"
+    pub config: &'static str,
+    pub threads: usize,
+    /// speedup over serial quoted by the paper
+    pub speedup: f64,
+}
+
+/// A relative-gain claim ("X runs N% faster than Y at 16 cores").
+#[derive(Clone, Copy, Debug)]
+pub struct GainClaim {
+    pub figure: &'static str,
+    pub bench: &'static str,
+    pub better: &'static str,
+    pub worse: &'static str,
+    pub threads: usize,
+    /// percent faster execution time
+    pub pct: f64,
+}
+
+/// Speedup anchors quoted in §V / §VI prose.
+pub const ANCHORS: &[Anchor] = &[
+    // Fig 6 — SparseLU_for
+    Anchor { figure: "fig6", config: "wf-Scheduler", threads: 16, speedup: 13.97 },
+    // Fig 7 — FFT
+    Anchor { figure: "fig7", config: "bf-Scheduler", threads: 6, speedup: 4.43 },
+    Anchor { figure: "fig7", config: "bf-Scheduler", threads: 16, speedup: 2.39 },
+    Anchor { figure: "fig7", config: "cilk-Scheduler", threads: 16, speedup: 8.61 },
+    Anchor { figure: "fig7", config: "wf-Scheduler", threads: 16, speedup: 9.3 },
+    Anchor { figure: "fig7", config: "cilk-Scheduler-NUMA", threads: 16, speedup: 9.92 },
+    Anchor { figure: "fig7", config: "wf-Scheduler-NUMA", threads: 16, speedup: 11.09 },
+    // Fig 8 — Strassen
+    Anchor { figure: "fig8", config: "wf-Scheduler", threads: 16, speedup: 9.15 },
+    Anchor { figure: "fig8", config: "cilk-Scheduler-NUMA", threads: 16, speedup: 8.13 },
+    Anchor { figure: "fig8", config: "wf-Scheduler-NUMA", threads: 16, speedup: 10.27 },
+    // Fig 9 — Sort
+    Anchor { figure: "fig9", config: "wf-Scheduler", threads: 2, speedup: 1.86 },
+    Anchor { figure: "fig9", config: "cilk-Scheduler", threads: 16, speedup: 5.49 },
+    Anchor { figure: "fig9", config: "wf-Scheduler", threads: 16, speedup: 5.41 },
+    // Fig 10 — NQueens
+    Anchor { figure: "fig10", config: "bf-Scheduler", threads: 16, speedup: 15.93 },
+    // Fig 13 — FFT with NUMA-aware schedulers
+    Anchor { figure: "fig13", config: "dfwspt-Scheduler-NUMA", threads: 16, speedup: 11.78 },
+    // Fig 14 — Sort
+    Anchor { figure: "fig14", config: "dfwspt-Scheduler-NUMA", threads: 16, speedup: 6.32 },
+    // Fig 15 — Strassen
+    Anchor { figure: "fig15", config: "dfwsrpt-Scheduler-NUMA", threads: 16, speedup: 12.38 },
+];
+
+/// Relative-gain claims from the prose.
+pub const GAINS: &[GainClaim] = &[
+    GainClaim { figure: "fig5", bench: "floorplan", better: "cilk-Scheduler-NUMA", worse: "cilk-Scheduler", threads: 16, pct: 3.18 },
+    GainClaim { figure: "fig5", bench: "floorplan", better: "wf-Scheduler-NUMA", worse: "wf-Scheduler", threads: 16, pct: 3.14 },
+    GainClaim { figure: "fig6", bench: "sparselu_for", better: "wf-Scheduler-NUMA", worse: "wf-Scheduler", threads: 16, pct: 5.24 },
+    GainClaim { figure: "fig6", bench: "sparselu_for", better: "cilk-Scheduler-NUMA", worse: "cilk-Scheduler", threads: 16, pct: 7.01 },
+    GainClaim { figure: "fig9", bench: "sort", better: "cilk-Scheduler-NUMA", worse: "cilk-Scheduler", threads: 16, pct: 9.17 },
+    GainClaim { figure: "fig9", bench: "sort", better: "wf-Scheduler-NUMA", worse: "wf-Scheduler", threads: 16, pct: 10.06 },
+    GainClaim { figure: "fig10", bench: "nqueens", better: "bf-Scheduler-NUMA", worse: "bf-Scheduler", threads: 16, pct: 1.35 },
+    GainClaim { figure: "fig13", bench: "fft", better: "dfwspt-Scheduler-NUMA", worse: "wf-Scheduler-NUMA", threads: 16, pct: 5.85 },
+    GainClaim { figure: "fig14", bench: "sort", better: "dfwspt-Scheduler-NUMA", worse: "wf-Scheduler-NUMA", threads: 16, pct: 4.76 },
+    GainClaim { figure: "fig15", bench: "strassen", better: "dfwsrpt-Scheduler-NUMA", worse: "wf-Scheduler-NUMA", threads: 16, pct: 17.03 },
+];
+
+/// Anchors for one figure.
+pub fn anchors_for(figure: &str) -> Vec<Anchor> {
+    ANCHORS.iter().copied().filter(|a| a.figure == figure).collect()
+}
+
+/// Gain claims for one figure.
+pub fn gains_for(figure: &str) -> Vec<GainClaim> {
+    GAINS.iter().copied().filter(|g| g.figure == figure).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_have_positive_speedups() {
+        for a in ANCHORS {
+            assert!(a.speedup > 0.0 && a.threads >= 2, "{a:?}");
+        }
+    }
+
+    #[test]
+    fn fig7_collapse_encoded() {
+        let f = anchors_for("fig7");
+        let bf6 = f.iter().find(|a| a.config == "bf-Scheduler" && a.threads == 6).unwrap();
+        let bf16 = f.iter().find(|a| a.config == "bf-Scheduler" && a.threads == 16).unwrap();
+        assert!(bf6.speedup > bf16.speedup, "the paper's bf collapse");
+    }
+
+    #[test]
+    fn gains_positive() {
+        for g in GAINS {
+            assert!(g.pct > 0.0);
+        }
+    }
+}

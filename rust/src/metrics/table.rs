@@ -1,0 +1,144 @@
+//! Speedup tables: assembly, markdown/CSV rendering, ASCII curves.
+//!
+//! A [`SpeedupTable`] is one paper figure: rows = scheduler configs,
+//! columns = thread counts, cells = speedup over the serial baseline.
+
+use std::fmt::Write as _;
+
+/// One figure's worth of speedup data.
+#[derive(Clone, Debug)]
+pub struct SpeedupTable {
+    pub title: String,
+    pub threads: Vec<usize>,
+    /// (config label, speedups per thread count)
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl SpeedupTable {
+    pub fn new(title: &str, threads: Vec<usize>) -> Self {
+        Self { title: title.to_string(), threads, rows: Vec::new() }
+    }
+
+    pub fn push_row(&mut self, label: String, speedups: Vec<f64>) {
+        assert_eq!(speedups.len(), self.threads.len(), "row width mismatch");
+        self.rows.push((label, speedups));
+    }
+
+    pub fn get(&self, label: &str, threads: usize) -> Option<f64> {
+        let col = self.threads.iter().position(|&t| t == threads)?;
+        let row = self.rows.iter().find(|(l, _)| l == label)?;
+        Some(row.1[col])
+    }
+
+    /// Percent faster execution time of `better` vs `worse` at `threads`
+    /// (the paper's gain metric: time ratio, not speedup ratio — they
+    /// coincide for a common serial baseline).
+    pub fn gain_pct(&self, better: &str, worse: &str, threads: usize) -> Option<f64> {
+        let b = self.get(better, threads)?;
+        let w = self.get(worse, threads)?;
+        Some((1.0 - w / b) * 100.0)
+    }
+
+    /// GitHub-flavoured markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n| config |", self.title);
+        for t in &self.threads {
+            let _ = write!(s, " {t} |");
+        }
+        s.push_str("\n|---|");
+        for _ in &self.threads {
+            s.push_str("---|");
+        }
+        s.push('\n');
+        for (label, vals) in &self.rows {
+            let _ = write!(s, "| {label} |");
+            for v in vals {
+                let _ = write!(s, " {v:.2} |");
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// CSV (config,threads,speedup long form — plot-friendly).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("config,threads,speedup\n");
+        for (label, vals) in &self.rows {
+            for (t, v) in self.threads.iter().zip(vals) {
+                let _ = writeln!(s, "{label},{t},{v:.4}");
+            }
+        }
+        s
+    }
+
+    /// Terminal ASCII chart (one line per config, bars at the last column).
+    pub fn to_ascii(&self) -> String {
+        let max = self
+            .rows
+            .iter()
+            .flat_map(|(_, v)| v.iter().copied())
+            .fold(1.0_f64, f64::max);
+        let mut s = format!("{}\n", self.title);
+        for (label, vals) in &self.rows {
+            let last = *vals.last().unwrap_or(&0.0);
+            let bar_len = ((last / max) * 40.0).round() as usize;
+            let _ = writeln!(
+                s,
+                "{:<26} {:>6.2}x |{}",
+                label,
+                last,
+                "#".repeat(bar_len)
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SpeedupTable {
+        let mut t = SpeedupTable::new("demo", vec![2, 4, 8]);
+        t.push_row("wf-Scheduler".into(), vec![1.8, 3.5, 6.0]);
+        t.push_row("wf-Scheduler-NUMA".into(), vec![1.9, 3.7, 6.6]);
+        t
+    }
+
+    #[test]
+    fn lookup_works() {
+        let t = table();
+        assert_eq!(t.get("wf-Scheduler", 4), Some(3.5));
+        assert_eq!(t.get("wf-Scheduler", 3), None);
+        assert_eq!(t.get("nope", 4), None);
+    }
+
+    #[test]
+    fn gain_pct_matches_paper_semantics() {
+        let t = table();
+        // 6.6 vs 6.0 speedup => execution time ratio 6.0/6.6 => 9.09% faster
+        let g = t.gain_pct("wf-Scheduler-NUMA", "wf-Scheduler", 8).unwrap();
+        assert!((g - 9.0909).abs() < 0.01, "{g}");
+    }
+
+    #[test]
+    fn markdown_has_all_cells() {
+        let md = table().to_markdown();
+        assert!(md.contains("| wf-Scheduler | 1.80 | 3.50 | 6.00 |"));
+        assert!(md.contains("| 2 | 4 | 8 |"));
+    }
+
+    #[test]
+    fn csv_long_form() {
+        let csv = table().to_csv();
+        assert!(csv.lines().count() == 1 + 6);
+        assert!(csv.contains("wf-Scheduler-NUMA,8,6.6000"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut t = SpeedupTable::new("x", vec![2, 4]);
+        t.push_row("r".into(), vec![1.0]);
+    }
+}

@@ -1,0 +1,156 @@
+//! PJRT execution engine — the AOT bridge (Layer-3 ↔ Layer-2/1).
+//!
+//! Loads the HLO **text** artifacts produced by `python/compile/aot.py`
+//! (`make artifacts`), compiles them once on the PJRT CPU client, and
+//! executes them with `f32`/`i32` literals from task bodies.
+//!
+//! Interchange is HLO text, never a serialized `HloModuleProto`: jax ≥ 0.5
+//! emits 64-bit instruction ids which xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md and
+//! DESIGN.md §3).  Python is *never* on this path — the binary is
+//! self-contained once `artifacts/` exists.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{ArtifactSig, Manifest};
+
+/// A loaded-and-compiled artifact cache over one PJRT client.
+pub struct ExecEngine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: Option<Manifest>,
+    /// Executions performed (telemetry for EXPERIMENTS.md).
+    pub calls: u64,
+}
+
+/// A typed input buffer for [`ExecEngine::call`].
+#[derive(Clone, Debug)]
+pub enum Buf {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl Buf {
+    pub fn f32(data: Vec<f32>, shape: &[i64]) -> Self {
+        Buf::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[i64]) -> Self {
+        Buf::I32(data, shape.to_vec())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Buf::F32(data, shape) => {
+                let n: i64 = shape.iter().product();
+                ensure_len(data.len(), n)?;
+                xla::Literal::vec1(data).reshape(shape)?
+            }
+            Buf::I32(data, shape) => {
+                let n: i64 = shape.iter().product();
+                ensure_len(data.len(), n)?;
+                xla::Literal::vec1(data).reshape(shape)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+fn ensure_len(len: usize, want: i64) -> Result<()> {
+    if len as i64 != want {
+        bail!("buffer has {len} elements, shape wants {want}");
+    }
+    Ok(())
+}
+
+impl ExecEngine {
+    /// Create a CPU PJRT engine over `artifact_dir` (usually `artifacts/`).
+    pub fn cpu<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(&dir.join("manifest.json")).ok();
+        Ok(Self { client, dir, exes: HashMap::new(), manifest, calls: 0 })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact signature from the manifest, if present.
+    pub fn signature(&self, name: &str) -> Option<&ArtifactSig> {
+        self.manifest.as_ref().and_then(|m| m.get(name))
+    }
+
+    /// Number of artifacts listed in the manifest.
+    pub fn manifest_len(&self) -> usize {
+        self.manifest.as_ref().map_or(0, |m| m.len())
+    }
+
+    /// Load + compile `name` (idempotent).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with `inputs`; returns every tuple element
+    /// as a flat `f32` vector (all exported graphs return f32 planes).
+    pub fn call(&mut self, name: &str, inputs: &[Buf]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        if let Some(sig) = self.signature(name) {
+            sig.check_inputs(inputs)
+                .with_context(|| format!("artifact '{name}' input mismatch"))?;
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(Buf::to_literal).collect::<Result<_>>()?;
+        let exe = self.exes.get(name).ok_or_else(|| anyhow!("artifact vanished"))?;
+        self.calls += 1;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap all elements.
+        let elems = result.to_tuple()?;
+        elems
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    /// Convenience: single-output artifact over f32 buffers.
+    pub fn call1(&mut self, name: &str, inputs: &[Buf]) -> Result<Vec<f32>> {
+        let mut out = self.call(name, inputs)?;
+        if out.len() != 1 {
+            bail!("artifact '{name}' returned {} outputs, expected 1", out.len());
+        }
+        Ok(out.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buf_shape_validation() {
+        assert!(Buf::f32(vec![1.0; 4], &[2, 2]).to_literal().is_ok());
+        assert!(Buf::f32(vec![1.0; 3], &[2, 2]).to_literal().is_err());
+        assert!(Buf::i32(vec![1; 6], &[2, 3]).to_literal().is_ok());
+    }
+
+    // Full round-trip tests (artifact load + execute + numeric check) live
+    // in rust/tests/pjrt_roundtrip.rs since they need `make artifacts`.
+}

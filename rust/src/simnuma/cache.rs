@@ -1,0 +1,129 @@
+//! Per-core cache model.
+//!
+//! Two levels (the X4600's Opteron 8xxx has private 64 KiB L1D + 1 MiB L2,
+//! no shared L3), tracked at *page* granularity with direct-mapped tag
+//! arrays — O(1) per access, deterministic, and coherent via page versions:
+//! a cached `(page, version)` older than the page table's current version
+//! is stale, which models write-invalidate without a directory.
+//!
+//! Page-granular tags overestimate spatial locality slightly; the cost
+//! model compensates by charging per *line* for hits and misses alike
+//! (DESIGN.md §2 — shape fidelity, not cycle accuracy).
+
+/// One direct-mapped tag array.
+#[derive(Clone, Debug)]
+struct Level {
+    tags: Vec<(u64, u32)>, // (page, version); u64::MAX = empty
+}
+
+impl Level {
+    fn new(slots: usize) -> Self {
+        Self { tags: vec![(u64::MAX, 0); slots.max(1)] }
+    }
+
+    #[inline]
+    fn slot(&self, page: u64) -> usize {
+        (page % self.tags.len() as u64) as usize
+    }
+
+    #[inline]
+    fn hit(&self, page: u64, version: u32) -> bool {
+        self.tags[self.slot(page)] == (page, version)
+    }
+
+    #[inline]
+    fn fill(&mut self, page: u64, version: u32) {
+        let s = self.slot(page);
+        self.tags[s] = (page, version);
+    }
+}
+
+/// Which level served an access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheHit {
+    L1,
+    L2,
+    Miss,
+}
+
+/// A core's private cache hierarchy.
+#[derive(Clone, Debug)]
+pub struct CoreCache {
+    l1: Level,
+    l2: Level,
+}
+
+impl CoreCache {
+    /// `l1_pages` / `l2_pages`: capacity in 4 KiB pages (16 / 256 for the
+    /// X4600's 64 KiB / 1 MiB).
+    pub fn new(l1_pages: usize, l2_pages: usize) -> Self {
+        Self { l1: Level::new(l1_pages), l2: Level::new(l2_pages) }
+    }
+
+    /// Probe for `(page, version)`; fills on miss/promote (inclusive).
+    pub fn access(&mut self, page: u64, version: u32) -> CacheHit {
+        if self.l1.hit(page, version) {
+            return CacheHit::L1;
+        }
+        if self.l2.hit(page, version) {
+            self.l1.fill(page, version); // promote
+            return CacheHit::L2;
+        }
+        self.l2.fill(page, version);
+        self.l1.fill(page, version);
+        CacheHit::Miss
+    }
+
+    /// After this core writes the page, it holds the fresh version.
+    pub fn note_write(&mut self, page: u64, new_version: u32) {
+        self.l1.fill(page, new_version);
+        self.l2.fill(page, new_version);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit() {
+        let mut c = CoreCache::new(16, 256);
+        assert_eq!(c.access(5, 0), CacheHit::Miss);
+        assert_eq!(c.access(5, 0), CacheHit::L1);
+    }
+
+    #[test]
+    fn stale_version_misses() {
+        let mut c = CoreCache::new(16, 256);
+        c.access(5, 0);
+        assert_eq!(c.access(5, 1), CacheHit::Miss, "old version is stale");
+        assert_eq!(c.access(5, 1), CacheHit::L1);
+    }
+
+    #[test]
+    fn l2_promotion() {
+        let mut c = CoreCache::new(2, 256);
+        c.access(0, 0);
+        // pages 2 and 0 collide in a 2-slot L1 (0 % 2 == 2 % 2)
+        c.access(2, 0);
+        // 0 evicted from L1 but still in the 256-slot L2
+        assert_eq!(c.access(0, 0), CacheHit::L2);
+        assert_eq!(c.access(0, 0), CacheHit::L1, "promoted back");
+    }
+
+    #[test]
+    fn conflict_eviction() {
+        let mut c = CoreCache::new(1, 1);
+        c.access(0, 0);
+        c.access(1, 0); // evicts 0 everywhere (1-slot levels)
+        assert_eq!(c.access(0, 0), CacheHit::Miss);
+    }
+
+    #[test]
+    fn write_installs_fresh_version() {
+        let mut c = CoreCache::new(16, 256);
+        c.access(7, 0);
+        c.note_write(7, 3);
+        assert_eq!(c.access(7, 3), CacheHit::L1);
+    }
+}

@@ -1,0 +1,26 @@
+//! Memory-system simulator — the paper's §II NUMA behaviour as a
+//! deterministic cost model.
+//!
+//! The paper's effects are *latency-accounting* effects: remote accesses
+//! cost more the farther the owning node is, first-touch decides ownership,
+//! caches absorb repeated touches, and memory controllers / queues serialize
+//! concurrent traffic.  This module charges simulated time ([`util::Time`],
+//! picoseconds) for every task memory access so the coordinator's
+//! discrete-event engine can reproduce the paper's speedup curves.
+//!
+//! Submodules:
+//! * [`page`]   — page table with **first-touch** placement and nearest-node
+//!   spill (the Linux policy the paper's §V.B analysis leans on);
+//! * [`cache`]  — per-core two-level cache model (page-granular tags with
+//!   version-based coherence);
+//! * [`latency`]— the [`CostModel`]: NUMA factors, bandwidth, contention;
+//! * [`memory`] — the [`MemSim`] façade the engine calls.
+
+pub mod cache;
+pub mod latency;
+pub mod memory;
+pub mod page;
+
+pub use latency::CostModel;
+pub use memory::{MemSim, MemStats, Region};
+pub use page::{PageTable, PAGE_BYTES};

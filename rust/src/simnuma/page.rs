@@ -1,0 +1,178 @@
+//! Page table with first-touch NUMA placement.
+//!
+//! Models the policy the paper describes in §V.B: physical allocation is
+//! deferred until the first read/write; the page then lands on the local
+//! node of the touching CPU, falling back to the *closest* node with free
+//! capacity when the local node is full (`set_mempolicy(2)` default
+//! behaviour).  This is exactly why the paper's master-thread placement
+//! matters — the master first-touches the program's data during
+//! initialization, so its node choice decides everyone's access distances.
+
+use crate::topology::Topology;
+
+/// Page size in bytes (x86-64 default).
+pub const PAGE_BYTES: u64 = 4096;
+
+/// Placement + coherence info for one resident page.
+#[derive(Clone, Copy, Debug)]
+pub struct PageInfo {
+    /// Owning NUMA node (fixed at first touch).
+    pub node: u32,
+    /// Bumped on every write; caches holding an older version are stale.
+    pub version: u32,
+}
+
+/// First-touch page table over the simulated physical memory.
+///
+/// Page ids come from [`super::MemSim`]'s bump allocator, so they are
+/// dense — a flat `Vec` beats a hash map on the access hot path
+/// (EXPERIMENTS.md §Perf it3).
+#[derive(Debug)]
+pub struct PageTable {
+    map: Vec<Option<PageInfo>>,
+    resident: usize,
+    node_used: Vec<u64>,
+    capacity_per_node: u64,
+}
+
+impl PageTable {
+    pub fn new(nodes: usize, capacity_per_node: u64) -> Self {
+        Self {
+            map: Vec::new(),
+            resident: 0,
+            node_used: vec![0; nodes],
+            capacity_per_node,
+        }
+    }
+
+    #[inline]
+    fn slot(&mut self, page: u64) -> &mut Option<PageInfo> {
+        let idx = page as usize;
+        if idx >= self.map.len() {
+            self.map.resize(idx + 1, None);
+        }
+        &mut self.map[idx]
+    }
+
+    /// Resolve `page` for an access by a core on `local_node`.
+    ///
+    /// Returns `(info, first_touch)`.  On first touch the page is placed on
+    /// `local_node` if it has room, otherwise on the nearest node (by hop
+    /// distance, ties to lower id — deterministic) with free capacity; if
+    /// everything is full, placement falls back to `local_node` regardless
+    /// (real kernels would swap; the simulator just over-commits).
+    pub fn resolve(
+        &mut self,
+        page: u64,
+        local_node: usize,
+        topo: &Topology,
+    ) -> (PageInfo, bool) {
+        if let Some(info) = *self.slot(page) {
+            return (info, false);
+        }
+        let node = self.place(local_node, topo);
+        let info = PageInfo { node: node as u32, version: 0 };
+        *self.slot(page) = Some(info);
+        self.resident += 1;
+        self.node_used[node] += 1;
+        (info, true)
+    }
+
+    fn place(&self, local_node: usize, topo: &Topology) -> usize {
+        if self.node_used[local_node] < self.capacity_per_node {
+            return local_node;
+        }
+        for node in topo.nodes_by_distance(local_node) {
+            if self.node_used[node] < self.capacity_per_node {
+                return node;
+            }
+        }
+        local_node // over-commit
+    }
+
+    /// Record a write: bump the page version (invalidates remote copies).
+    /// Page must be resident.
+    pub fn bump_version(&mut self, page: u64) -> u32 {
+        let info = self.slot(page).as_mut().expect("write to unmapped page");
+        info.version += 1;
+        info.version
+    }
+
+    pub fn lookup(&self, page: u64) -> Option<PageInfo> {
+        self.map.get(page as usize).copied().flatten()
+    }
+
+    /// Pages resident per node (placement audits / EXPERIMENTS tables).
+    pub fn node_used(&self) -> &[u64] {
+        &self.node_used
+    }
+
+    pub fn resident_pages(&self) -> usize {
+        self.resident
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::x4600()
+    }
+
+    #[test]
+    fn first_touch_lands_local() {
+        let t = topo();
+        let mut pt = PageTable::new(8, 100);
+        let (info, fresh) = pt.resolve(42, 3, &t);
+        assert!(fresh);
+        assert_eq!(info.node, 3);
+        let (again, fresh2) = pt.resolve(42, 5, &t);
+        assert!(!fresh2, "second touch must not re-place");
+        assert_eq!(again.node, 3, "placement is sticky");
+    }
+
+    #[test]
+    fn spill_goes_to_nearest_node() {
+        let t = topo();
+        let mut pt = PageTable::new(8, 2);
+        pt.resolve(1, 0, &t);
+        pt.resolve(2, 0, &t);
+        // node 0 now full; next first-touch from node 0 must go to a
+        // neighbour at 1 hop (node 1 or 2), deterministically the lower id.
+        let (info, _) = pt.resolve(3, 0, &t);
+        assert_eq!(t.node_hops(0, info.node as usize), 1);
+        assert_eq!(info.node, 1);
+    }
+
+    #[test]
+    fn overcommit_when_all_full() {
+        let t = Topology::dual(2);
+        let mut pt = PageTable::new(2, 1);
+        pt.resolve(1, 0, &t);
+        pt.resolve(2, 1, &t);
+        let (info, _) = pt.resolve(3, 0, &t);
+        assert_eq!(info.node, 0, "over-commit falls back to local");
+    }
+
+    #[test]
+    fn version_bumps_on_write() {
+        let t = topo();
+        let mut pt = PageTable::new(8, 10);
+        pt.resolve(9, 0, &t);
+        assert_eq!(pt.bump_version(9), 1);
+        assert_eq!(pt.bump_version(9), 2);
+        assert_eq!(pt.lookup(9).unwrap().version, 2);
+    }
+
+    #[test]
+    fn node_usage_tracked() {
+        let t = topo();
+        let mut pt = PageTable::new(8, 10);
+        for p in 0..5 {
+            pt.resolve(p, 2, &t);
+        }
+        assert_eq!(pt.node_used()[2], 5);
+        assert_eq!(pt.resident_pages(), 5);
+    }
+}

@@ -1,0 +1,403 @@
+//! NUMA fabric models — the paper's §II hardware substrate.
+//!
+//! A [`Topology`] is a set of NUMA nodes (each with some cores and a local
+//! memory), connected by an interconnect graph.  Hop distances between
+//! nodes are derived from the edge list by BFS, exactly as `hwloc` /
+//! `libnuma` would report them via the ACPI SLIT on a real machine (the
+//! paper reads them with `numa.h` + `sched.h`; our coordinator reads them
+//! from here — same information, simulated source).
+//!
+//! The flagship preset is [`Topology::x4600`]: the SunFire X4600 used in
+//! the paper's evaluation — 8 dual-core Opteron sockets on an *enhanced
+//! twisted ladder* HyperTransport fabric.  Corner sockets (0, 1, 6, 7)
+//! spend one HT link on I/O and are less central than the inner sockets
+//! (2, 3, 4, 5); maximum distance is 3 hops.  This centrality asymmetry is
+//! what makes the paper's priority allocation matter: Linux first-touch on
+//! node 0 (a corner) is measurably worse than on a central node.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+/// A NUMA machine model: nodes, cores and the hop-distance matrix.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    name: String,
+    /// cores_per_node[n] = number of cores directly attached to node n.
+    cores_per_node: Vec<usize>,
+    /// node_hops[a][b] = interconnect hops between nodes a and b (0 on-node).
+    node_hops: Vec<Vec<u8>>,
+    /// core -> owning node (derived).
+    core_node: Vec<usize>,
+    /// Pages of local memory per node (capacity for first-touch placement).
+    node_capacity_pages: u64,
+}
+
+impl Topology {
+    /// Build a topology from an interconnect edge list.
+    ///
+    /// `edges` connect node indices; hop distances are all-pairs BFS over
+    /// the (unweighted) graph.  Fails if the graph is disconnected.
+    pub fn from_edges(
+        name: &str,
+        cores_per_node: Vec<usize>,
+        edges: &[(usize, usize)],
+        node_capacity_pages: u64,
+    ) -> Result<Self> {
+        let n = cores_per_node.len();
+        if n == 0 {
+            bail!("topology needs at least one node");
+        }
+        let mut adj = vec![Vec::new(); n];
+        for &(a, b) in edges {
+            if a >= n || b >= n || a == b {
+                bail!("bad edge ({a},{b}) for {n} nodes");
+            }
+            adj[a].push(b);
+            adj[b].push(a);
+        }
+        let mut node_hops = vec![vec![u8::MAX; n]; n];
+        for (start, hops) in node_hops.iter_mut().enumerate() {
+            // BFS from `start`
+            hops[start] = 0;
+            let mut q = VecDeque::from([start]);
+            while let Some(u) = q.pop_front() {
+                for &v in &adj[u] {
+                    if hops[v] == u8::MAX {
+                        hops[v] = hops[u] + 1;
+                        q.push_back(v);
+                    }
+                }
+            }
+            if hops.iter().any(|&h| h == u8::MAX) {
+                bail!("topology '{name}' is disconnected from node {start}");
+            }
+        }
+        let mut core_node = Vec::new();
+        for (node, &c) in cores_per_node.iter().enumerate() {
+            core_node.extend(std::iter::repeat(node).take(c));
+        }
+        if core_node.is_empty() {
+            bail!("topology '{name}' has no cores");
+        }
+        Ok(Self {
+            name: name.to_string(),
+            cores_per_node,
+            node_hops,
+            core_node,
+            node_capacity_pages,
+        })
+    }
+
+    // ---- presets --------------------------------------------------------
+
+    /// Single-node UMA box (the degenerate control case).
+    pub fn uma(cores: usize) -> Self {
+        Self::from_edges("uma", vec![cores], &[], 1 << 16).unwrap()
+    }
+
+    /// Two sockets, one hop apart (entry-level Opteron/Nehalem 2P).
+    pub fn dual(cores_per_socket: usize) -> Self {
+        Self::from_edges("dual", vec![cores_per_socket; 2], &[(0, 1)], 1 << 15).unwrap()
+    }
+
+    /// Four sockets in a square (Opteron 4P): hops 1 (edge) and 2 (diagonal).
+    pub fn quad(cores_per_socket: usize) -> Self {
+        Self::from_edges(
+            "quad",
+            vec![cores_per_socket; 4],
+            &[(0, 1), (1, 3), (3, 2), (2, 0)],
+            1 << 15,
+        )
+        .unwrap()
+    }
+
+    /// The paper's machine: SunFire X4600, 8 dual-core Opteron sockets on an
+    /// enhanced-twisted-ladder HT fabric (diameter 3, asymmetric centrality;
+    /// corner sockets 0/1/6/7 keep one HT link for I/O).  Node capacity is
+    /// scaled 1:256 from the real 4 GiB/node so that the paper's
+    /// footprint-to-capacity ratios are preserved at simulator scale
+    /// (see DESIGN.md §2): 4 GiB / 256 = 16 MiB = 4096 pages.
+    pub fn x4600() -> Self {
+        let edges = [
+            (0, 1), (6, 7),                 // end rungs
+            (0, 2), (2, 4), (4, 6),         // left rail
+            (1, 3), (3, 5), (5, 7),         // right rail
+            (2, 5), (3, 4),                 // the "twist" cross links
+        ];
+        Self::from_edges("x4600", vec![2; 8], &edges, 4096).unwrap()
+    }
+
+    /// SGI-Altix-like deeper fabric: 16 dual-core nodes, two X4600-style
+    /// ladders bridged by a single router link => up to 5 hops (used for the
+    /// related-work comparison where MTS degrades, §III.B).
+    pub fn altix16() -> Self {
+        let mut edges = vec![
+            (0, 1), (6, 7), (0, 2), (2, 4), (4, 6), (1, 3), (3, 5), (5, 7), (2, 5), (3, 4),
+        ];
+        // second ladder shifted by 8
+        let second: Vec<(usize, usize)> = edges.iter().map(|&(a, b)| (a + 8, b + 8)).collect();
+        edges.extend(second);
+        edges.push((4, 10)); // single bridge
+        Self::from_edges("altix16", vec![2; 16], &edges, 4096).unwrap()
+    }
+
+    /// Tile-style mesh (TilePro64-like, used by LOCAWR §III.B): `side`²
+    /// single-core tiles, 2-D mesh, hops up to 2·(side-1).
+    pub fn tile_mesh(side: usize) -> Self {
+        let mut edges = Vec::new();
+        let id = |r: usize, c: usize| r * side + c;
+        for r in 0..side {
+            for c in 0..side {
+                if c + 1 < side {
+                    edges.push((id(r, c), id(r, c + 1)));
+                }
+                if r + 1 < side {
+                    edges.push((id(r, c), id(r + 1, c)));
+                }
+            }
+        }
+        Self::from_edges("tile_mesh", vec![1; side * side], &edges, 512).unwrap()
+    }
+
+    /// Heterogeneous variant of the X4600 (paper §IV: "future heterogeneous
+    /// architectures where number of cores per node may vary"): inner
+    /// sockets carry 4 cores, corners 2.
+    pub fn x4600_hetero() -> Self {
+        let edges = [
+            (0, 1), (6, 7), (0, 2), (2, 4), (4, 6), (1, 3), (3, 5), (5, 7), (2, 5), (3, 4),
+        ];
+        let cores = vec![2, 2, 4, 4, 4, 4, 2, 2];
+        Self::from_edges("x4600_hetero", cores, &edges, 4096).unwrap()
+    }
+
+    /// Look up a preset by name (CLI surface).
+    pub fn by_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "uma" => Self::uma(16),
+            "dual" => Self::dual(8),
+            "quad" => Self::quad(4),
+            "x4600" => Self::x4600(),
+            "x4600_hetero" => Self::x4600_hetero(),
+            "altix16" => Self::altix16(),
+            "tile64" => Self::tile_mesh(8),
+            "tile16" => Self::tile_mesh(4),
+            other => bail!(
+                "unknown topology '{other}' (try: uma dual quad x4600 x4600_hetero altix16 tile16 tile64)"
+            ),
+        })
+    }
+
+    pub fn preset_names() -> &'static [&'static str] {
+        &["uma", "dual", "quad", "x4600", "x4600_hetero", "altix16", "tile16", "tile64"]
+    }
+
+    // ---- queries --------------------------------------------------------
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.cores_per_node.len()
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.core_node.len()
+    }
+
+    pub fn cores_on_node(&self, node: usize) -> impl Iterator<Item = usize> + '_ {
+        self.core_node
+            .iter()
+            .enumerate()
+            .filter(move |&(_, &n)| n == node)
+            .map(|(c, _)| c)
+    }
+
+    pub fn cores_per_node(&self, node: usize) -> usize {
+        self.cores_per_node[node]
+    }
+
+    pub fn node_of(&self, core: usize) -> usize {
+        self.core_node[core]
+    }
+
+    /// Interconnect hops between two nodes (0 for the same node).
+    pub fn node_hops(&self, a: usize, b: usize) -> u8 {
+        self.node_hops[a][b]
+    }
+
+    /// Hops between the nodes of two cores (0 if they share a node).
+    pub fn core_hops(&self, a: usize, b: usize) -> u8 {
+        self.node_hops[self.core_node[a]][self.core_node[b]]
+    }
+
+    /// Largest hop distance in the fabric (the paper's `max-numa-distance`).
+    pub fn max_hops(&self) -> u8 {
+        self.node_hops
+            .iter()
+            .flat_map(|row| row.iter().copied())
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn node_capacity_pages(&self) -> u64 {
+        self.node_capacity_pages
+    }
+
+    /// Override the per-node memory capacity (workload scaling studies).
+    pub fn with_capacity_pages(mut self, pages: u64) -> Self {
+        self.node_capacity_pages = pages;
+        self
+    }
+
+    /// Mean hop distance from `node` to every core in the machine —
+    /// the centrality measure behind the paper's allocation argument.
+    pub fn mean_hops_from(&self, node: usize) -> f64 {
+        let total: u64 = self
+            .core_node
+            .iter()
+            .map(|&cn| self.node_hops[node][cn] as u64)
+            .sum();
+        total as f64 / self.core_node.len() as f64
+    }
+
+    /// Per-core hop matrix (what the priority kernels consume).
+    pub fn core_hop_matrix(&self) -> Vec<Vec<u8>> {
+        let nc = self.num_cores();
+        (0..nc)
+            .map(|a| (0..nc).map(|b| self.core_hops(a, b)).collect())
+            .collect()
+    }
+
+    /// Nodes sorted by distance from `from`, nearest first (steal sweeps).
+    pub fn nodes_by_distance(&self, from: usize) -> Vec<usize> {
+        let mut nodes: Vec<usize> = (0..self.num_nodes()).collect();
+        nodes.sort_by_key(|&n| (self.node_hops[from][n], n));
+        nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x4600_shape() {
+        let t = Topology::x4600();
+        assert_eq!(t.num_nodes(), 8);
+        assert_eq!(t.num_cores(), 16);
+        assert_eq!(t.max_hops(), 3);
+    }
+
+    #[test]
+    fn x4600_symmetry_and_diagonal() {
+        let t = Topology::x4600();
+        for a in 0..8 {
+            assert_eq!(t.node_hops(a, a), 0);
+            for b in 0..8 {
+                assert_eq!(t.node_hops(a, b), t.node_hops(b, a));
+            }
+        }
+    }
+
+    #[test]
+    fn x4600_triangle_inequality() {
+        let t = Topology::x4600();
+        for a in 0..8 {
+            for b in 0..8 {
+                for c in 0..8 {
+                    assert!(t.node_hops(a, c) <= t.node_hops(a, b) + t.node_hops(b, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn x4600_corners_are_less_central() {
+        // the property the whole paper §IV leans on
+        let t = Topology::x4600();
+        let corner = [0usize, 1, 6, 7];
+        let inner = [2usize, 3, 4, 5];
+        let worst_inner = inner.iter().map(|&n| t.mean_hops_from(n)).fold(0.0, f64::max);
+        let best_corner = corner
+            .iter()
+            .map(|&n| t.mean_hops_from(n))
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            worst_inner < best_corner,
+            "inner {worst_inner} vs corner {best_corner}"
+        );
+    }
+
+    #[test]
+    fn same_node_cores_zero_hops() {
+        let t = Topology::x4600();
+        assert_eq!(t.core_hops(0, 1), 0);
+        assert_eq!(t.node_of(0), t.node_of(1));
+        assert!(t.core_hops(0, 2) >= 1);
+    }
+
+    #[test]
+    fn disconnected_graph_rejected() {
+        assert!(Topology::from_edges("bad", vec![1; 3], &[(0, 1)], 16).is_err());
+    }
+
+    #[test]
+    fn bad_edge_rejected() {
+        assert!(Topology::from_edges("bad", vec![1; 2], &[(0, 5)], 16).is_err());
+        assert!(Topology::from_edges("bad", vec![1; 2], &[(0, 0)], 16).is_err());
+    }
+
+    #[test]
+    fn tile_mesh_distances() {
+        let t = Topology::tile_mesh(4);
+        assert_eq!(t.num_nodes(), 16);
+        // manhattan distance corner-to-corner
+        assert_eq!(t.node_hops(0, 15), 6);
+        assert_eq!(t.max_hops(), 6);
+    }
+
+    #[test]
+    fn quad_diagonal_is_two() {
+        let t = Topology::quad(4);
+        assert_eq!(t.node_hops(0, 3), 2);
+        assert_eq!(t.node_hops(0, 1), 1);
+    }
+
+    #[test]
+    fn altix_deeper_than_x4600() {
+        let t = Topology::altix16();
+        assert_eq!(t.num_cores(), 32);
+        assert!(t.max_hops() > Topology::x4600().max_hops());
+    }
+
+    #[test]
+    fn presets_all_resolve() {
+        for name in Topology::preset_names() {
+            let t = Topology::by_name(name).unwrap();
+            assert!(t.num_cores() > 0, "{name}");
+        }
+        assert!(Topology::by_name("nope").is_err());
+    }
+
+    #[test]
+    fn nodes_by_distance_sorted() {
+        let t = Topology::x4600();
+        for from in 0..8 {
+            let order = t.nodes_by_distance(from);
+            assert_eq!(order[0], from);
+            for w in order.windows(2) {
+                assert!(t.node_hops(from, w[0]) <= t.node_hops(from, w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_core_counts() {
+        let t = Topology::x4600_hetero();
+        assert_eq!(t.num_cores(), 24);
+        assert_eq!(t.cores_per_node(0), 2);
+        assert_eq!(t.cores_per_node(2), 4);
+    }
+}

@@ -1,0 +1,127 @@
+//! Deterministic PRNG + small helpers shared across the crate.
+//!
+//! The simulator must be bit-reproducible under a fixed seed (the paper
+//! takes best-of-50 *wall-clock* runs; we instead expose seeds so every
+//! figure regenerates identically), so all randomness flows through
+//! [`SplitMix64`] — no global RNG, no OS entropy on the request path.
+
+/// SplitMix64 PRNG (Steele et al.) — tiny, fast, good enough for victim
+/// selection and workload shape generation; NOT cryptographic.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`; `n` must be non-zero.
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // multiply-shift; bias negligible for simulator purposes
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fisher-Yates shuffle of a slice.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent stream (for per-worker RNGs).
+    pub fn fork(&mut self, tag: u64) -> SplitMix64 {
+        SplitMix64::new(self.next_u64() ^ tag.wrapping_mul(0xA24B_AED4_963E_E407))
+    }
+}
+
+/// Simulated time in picoseconds (integer for exact determinism).
+pub type Time = u64;
+
+/// One nanosecond in [`Time`] units.
+pub const NS: Time = 1_000;
+/// One microsecond.
+pub const US: Time = 1_000_000;
+/// One millisecond.
+pub const MS: Time = 1_000_000_000;
+
+/// Pretty-print a simulated duration.
+pub fn fmt_time(t: Time) -> String {
+    if t >= MS {
+        format!("{:.3} ms", t as f64 / MS as f64)
+    } else if t >= US {
+        format!("{:.3} us", t as f64 / US as f64)
+    } else {
+        format!("{:.1} ns", t as f64 / NS as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_range_in_bounds() {
+        let mut r = SplitMix64::new(7);
+        for n in [1u64, 2, 3, 10, 1000] {
+            for _ in 0..200 {
+                assert!(r.gen_range(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(9);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let mut root = SplitMix64::new(1);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let va: Vec<u64> = (0..10).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..10).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(500).contains("ns"));
+        assert!(fmt_time(5 * US).contains("us"));
+        assert!(fmt_time(5 * MS).contains("ms"));
+    }
+}

@@ -1,0 +1,116 @@
+//! Integration: every benchmark × every scheduler completes, task counts
+//! are policy-invariant, runs are deterministic, speedup is sane.
+
+use numanos::bots;
+use numanos::config::Size;
+use numanos::coordinator::binding::BindPolicy;
+use numanos::coordinator::runtime::Runtime;
+use numanos::coordinator::sched::Policy;
+
+#[test]
+fn every_benchmark_completes_under_every_policy() {
+    let rt = Runtime::paper_testbed();
+    for &bench in bots::NAMES {
+        let mut counts = Vec::new();
+        for &policy in Policy::all() {
+            let threads = if policy == Policy::Serial { 1 } else { 8 };
+            let mut w = bots::create(bench, Size::Small, 11).unwrap();
+            let stats = rt
+                .run(w.as_mut(), policy, BindPolicy::Linear, threads, 11, None)
+                .unwrap_or_else(|e| panic!("{bench}/{}: {e}", policy.name()));
+            assert!(stats.tasks > 0, "{bench}/{}", policy.name());
+            assert!(stats.makespan > 0, "{bench}/{}", policy.name());
+            counts.push(stats.tasks);
+        }
+        // the task graph is a property of the workload, not the scheduler
+        assert!(
+            counts.windows(2).all(|w| w[0] == w[1]),
+            "{bench}: task counts vary across policies: {counts:?}"
+        );
+    }
+}
+
+#[test]
+fn parallel_never_slower_than_half_ideal_serial() {
+    // loose sanity: 8 threads must be at least 1.2x serial on every bench
+    let rt = Runtime::paper_testbed();
+    for &bench in bots::NAMES {
+        let mut ws = bots::create(bench, Size::Small, 3).unwrap();
+        let serial = rt.run_serial(ws.as_mut(), 3).unwrap();
+        let mut wp = bots::create(bench, Size::Small, 3).unwrap();
+        let par = rt
+            .run(wp.as_mut(), Policy::WorkFirst, BindPolicy::NumaAware, 8, 3, None)
+            .unwrap();
+        let sp = serial.makespan as f64 / par.makespan as f64;
+        assert!(sp > 1.2, "{bench}: speedup {sp:.2} at 8 threads");
+    }
+}
+
+#[test]
+fn runs_are_bit_deterministic() {
+    let rt = Runtime::paper_testbed();
+    for &bench in &["fft", "uts", "sparselu_single", "floorplan"] {
+        for &policy in &[Policy::BreadthFirst, Policy::Dfwsrpt] {
+            let run = |seed| {
+                let mut w = bots::create(bench, Size::Small, seed).unwrap();
+                rt.run(w.as_mut(), policy, BindPolicy::NumaAware, 8, seed, None).unwrap()
+            };
+            let (a, b) = (run(5), run(5));
+            assert_eq!(a.makespan, b.makespan, "{bench}/{}", policy.name());
+            assert_eq!(a.steals, b.steals);
+            assert_eq!(a.mem.miss_lines(), b.mem.miss_lines());
+            // a different seed must change victim randomization outcomes
+            let c = run(6);
+            assert!(
+                c.makespan != a.makespan || c.steals != a.steals || bench == "fft",
+                "{bench}: seed had no effect at all"
+            );
+        }
+    }
+}
+
+#[test]
+fn thread_sweep_is_monotonic_enough() {
+    // speedup should not crater when adding threads for the scalable
+    // work-stealing policies
+    let rt = Runtime::paper_testbed();
+    for &bench in &["fib", "nqueens", "alignment"] {
+        let mut ws = bots::create(bench, Size::Small, 7).unwrap();
+        let serial = rt.run_serial(ws.as_mut(), 7).unwrap();
+        let mut prev = 0.0;
+        for threads in [2usize, 4, 8, 16] {
+            let mut w = bots::create(bench, Size::Small, 7).unwrap();
+            let s = rt.run(w.as_mut(), Policy::WorkFirst, BindPolicy::NumaAware, threads, 7, None).unwrap();
+            let sp = serial.makespan as f64 / s.makespan as f64;
+            assert!(
+                sp > prev * 0.85,
+                "{bench}: speedup dropped hard: {prev:.2} -> {sp:.2} at {threads}"
+            );
+            prev = sp;
+        }
+    }
+}
+
+#[test]
+fn work_stealing_balances_uts() {
+    let rt = Runtime::paper_testbed();
+    let mut w = bots::create("uts", Size::Small, 13).unwrap();
+    let s = rt.run(w.as_mut(), Policy::Dfwsrpt, BindPolicy::NumaAware, 16, 13, None).unwrap();
+    let max = *s.per_worker_tasks.iter().max().unwrap() as f64;
+    let min = *s.per_worker_tasks.iter().min().unwrap() as f64;
+    assert!(min > 0.0, "some worker starved: {:?}", s.per_worker_tasks);
+    assert!(max / min < 50.0, "gross imbalance: {:?}", s.per_worker_tasks);
+}
+
+#[test]
+fn topologies_other_than_x4600_work() {
+    use numanos::simnuma::CostModel;
+    use numanos::topology::Topology;
+    for topo in ["dual", "quad", "altix16", "tile16", "x4600_hetero", "uma"] {
+        let rt = Runtime::new(Topology::by_name(topo).unwrap(), CostModel::default());
+        let threads = rt.topo.num_cores().min(8);
+        let mut w = bots::create("sort", Size::Small, 2).unwrap();
+        let s = rt.run(w.as_mut(), Policy::Dfwspt, BindPolicy::NumaAware, threads, 2, None).unwrap();
+        assert!(s.tasks > 0, "{topo}");
+    }
+}

@@ -1,0 +1,98 @@
+//! CLI surface tests: the `numanos` binary as users drive it.
+
+use std::process::Command;
+
+fn numanos(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_numanos"))
+        .args(args)
+        .output()
+        .expect("spawn numanos");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn list_shows_inventory() {
+    let (ok, text) = numanos(&["list"]);
+    assert!(ok, "{text}");
+    for needle in ["fft", "sparselu_for", "dfwsrpt", "x4600", "fig13"] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+}
+
+#[test]
+fn topo_prints_priorities() {
+    let (ok, text) = numanos(&["topo", "--name", "x4600"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("master binds here"));
+    assert!(text.contains("hop matrix"));
+}
+
+#[test]
+fn run_prints_speedup_line() {
+    let (ok, text) = numanos(&[
+        "run", "--bench", "fib", "--size", "small", "--sched", "dfwspt",
+        "--bind", "numa", "--threads", "8", "--seed", "7",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("speedup"), "{text}");
+    assert!(text.contains("dfwspt-Scheduler-NUMA"), "{text}");
+}
+
+#[test]
+fn run_accepts_cost_overrides() {
+    let (ok, text) = numanos(&[
+        "run", "--bench", "fib", "--size", "small", "--threads", "4",
+        "--cost", "dram_base_ns=150,hop_penalty_ns=99",
+    ]);
+    assert!(ok, "{text}");
+}
+
+#[test]
+fn figure_small_runs_and_reports_anchors() {
+    let (ok, text) = numanos(&["figure", "--id", "fig10", "--size", "small", "--seed", "3"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("bf-Scheduler"), "{text}");
+    assert!(text.contains("paper anchors"), "{text}");
+}
+
+#[test]
+fn errors_are_actionable() {
+    let (ok, text) = numanos(&["run", "--bench", "nope"]);
+    assert!(!ok);
+    assert!(text.contains("unknown benchmark"), "{text}");
+
+    let (ok, text) = numanos(&["figure", "--id", "fig99"]);
+    assert!(!ok);
+    assert!(text.contains("unknown figure"), "{text}");
+
+    let (ok, text) = numanos(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"), "{text}");
+
+    let (ok, text) = numanos(&["run", "--sched", "bogus"]);
+    assert!(!ok);
+    assert!(text.contains("unknown scheduler"), "{text}");
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, text) = numanos(&["help"]);
+    assert!(ok);
+    for cmd in ["run", "figure", "gains", "topo", "list"] {
+        assert!(text.contains(cmd), "missing {cmd}");
+    }
+}
+
+#[test]
+fn gains_summary_has_all_benchmarks() {
+    let (ok, text) = numanos(&["gains", "--size", "small"]);
+    assert!(ok, "{text}");
+    for bench in ["fft", "sort", "strassen", "nqueens"] {
+        assert!(text.contains(bench), "{text}");
+    }
+}

@@ -1,0 +1,56 @@
+//! End-to-end: real numerics scheduled by the simulated coordinator.
+//!
+//! The same path as `examples/e2e_compute.rs`, as a test: leaf tasks call
+//! the AOT kernels through PJRT while the discrete-event engine decides
+//! ordering and placement; `Workload::verify` checks the math afterwards.
+
+use numanos::bots::{fft::Fft, sort::Sort, sparselu, strassen::Strassen};
+use numanos::coordinator::binding::BindPolicy;
+use numanos::coordinator::runtime::Runtime;
+use numanos::coordinator::sched::Policy;
+use numanos::runtime::ExecEngine;
+
+fn engine() -> ExecEngine {
+    let dir = std::env::var("NUMANOS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    assert!(
+        std::path::Path::new(&dir).join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    ExecEngine::cpu(dir).expect("PJRT CPU client")
+}
+
+#[test]
+fn sparselu_real_factorization_through_scheduler() {
+    let mut exec = engine();
+    let rt = Runtime::paper_testbed();
+    // run under two different schedulers: the *numeric* result must be
+    // valid under both orderings (dependency correctness of the runtime)
+    for policy in [Policy::WorkFirst, Policy::Dfwsrpt] {
+        let mut lu = sparselu::SparseLu::with_params(4, sparselu::Variant::Single);
+        let stats = rt
+            .run(&mut lu, policy, BindPolicy::NumaAware, 8, 7, Some(&mut exec))
+            .unwrap_or_else(|e| panic!("{}: {e}", policy.name()));
+        assert!(stats.kernel_calls > 5, "{}", policy.name());
+    }
+}
+
+#[test]
+fn strassen_real_product_through_scheduler() {
+    let mut exec = engine();
+    let rt = Runtime::paper_testbed();
+    let mut st = Strassen::with_params(512, 128);
+    let stats = rt
+        .run(&mut st, Policy::Dfwspt, BindPolicy::NumaAware, 8, 3, Some(&mut exec))
+        .unwrap();
+    assert!(stats.kernel_calls >= 49, "every leaf carries a kernel tag");
+}
+
+#[test]
+fn sort_and_fft_leaves_verify() {
+    let mut exec = engine();
+    let rt = Runtime::paper_testbed();
+    let mut so = Sort::with_params(1 << 14, 1 << 10, 1 << 10);
+    rt.run(&mut so, Policy::CilkBased, BindPolicy::Linear, 4, 5, Some(&mut exec)).unwrap();
+    let mut ff = Fft::with_params(1 << 13, 1 << 12, 1 << 10);
+    rt.run(&mut ff, Policy::BreadthFirst, BindPolicy::Linear, 4, 5, Some(&mut exec)).unwrap();
+}

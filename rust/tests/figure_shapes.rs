@@ -1,0 +1,95 @@
+//! Shape assertions for the paper's headline results (the reproduction
+//! contract of DESIGN.md §2): who wins, where, by roughly what factor.
+//! Absolute values live in EXPERIMENTS.md; these tests pin the *ordering*
+//! so a regression in the model or schedulers trips CI.
+
+use numanos::bots;
+use numanos::config::Size;
+use numanos::coordinator::binding::BindPolicy;
+use numanos::coordinator::runtime::Runtime;
+use numanos::coordinator::sched::Policy;
+use numanos::metrics::speedup;
+
+// Medium scale: the paper's effects are scale-dependent (queue pressure,
+// footprint > node capacity); Small inputs do not exhibit them.
+fn sp(rt: &Runtime, bench: &str, policy: Policy, bind: BindPolicy, threads: usize) -> f64 {
+    let seed = 42;
+    let mut ws = bots::create(bench, Size::Medium, seed).unwrap();
+    let serial = rt.run_serial(ws.as_mut(), seed).unwrap();
+    let mut w = bots::create(bench, Size::Medium, seed).unwrap();
+    let s = rt.run(w.as_mut(), policy, bind, threads, seed, None).unwrap();
+    speedup(&serial, &s)
+}
+
+#[test]
+fn fig7_work_stealing_beats_bf_on_fft_at_scale() {
+    let rt = Runtime::paper_testbed();
+    let bf = sp(&rt, "fft", Policy::BreadthFirst, BindPolicy::Linear, 16);
+    let wf = sp(&rt, "fft", Policy::WorkFirst, BindPolicy::Linear, 16);
+    let cilk = sp(&rt, "fft", Policy::CilkBased, BindPolicy::Linear, 16);
+    assert!(wf > bf, "wf {wf:.2} must beat bf {bf:.2} (paper 9.3 vs 2.39)");
+    assert!(cilk > bf, "cilk {cilk:.2} must beat bf {bf:.2} (paper 8.61 vs 2.39)");
+}
+
+#[test]
+fn fig10_bf_is_competitive_on_nqueens() {
+    // nqueens is bf's benchmark (paper: 15.93x, the best config)
+    let rt = Runtime::paper_testbed();
+    let bf = sp(&rt, "nqueens", Policy::BreadthFirst, BindPolicy::Linear, 16);
+    let wf = sp(&rt, "nqueens", Policy::WorkFirst, BindPolicy::Linear, 16);
+    assert!(
+        bf > 0.75 * wf,
+        "bf {bf:.2} must stay competitive with wf {wf:.2} on nqueens"
+    );
+}
+
+#[test]
+fn numa_allocation_helps_fft() {
+    // §V.A: the allocation gain is largest for the data-intensive FFT
+    let rt = Runtime::paper_testbed();
+    let base = sp(&rt, "fft", Policy::WorkFirst, BindPolicy::Linear, 16);
+    let numa = sp(&rt, "fft", Policy::WorkFirst, BindPolicy::NumaAware, 16);
+    assert!(
+        numa > base * 0.98,
+        "numa binding {numa:.2} must not lose to linear {base:.2}"
+    );
+}
+
+#[test]
+fn fig13_numa_schedulers_do_not_lose_to_wf_on_fft() {
+    let rt = Runtime::paper_testbed();
+    let wf = sp(&rt, "fft", Policy::WorkFirst, BindPolicy::NumaAware, 16);
+    let pt = sp(&rt, "fft", Policy::Dfwspt, BindPolicy::NumaAware, 16);
+    let rpt = sp(&rt, "fft", Policy::Dfwsrpt, BindPolicy::NumaAware, 16);
+    assert!(pt > wf * 0.97, "dfwspt {pt:.2} vs wf {wf:.2} (paper: +5.85%)");
+    assert!(rpt > wf * 0.97, "dfwsrpt {rpt:.2} vs wf {wf:.2}");
+}
+
+#[test]
+fn numa_schedulers_steal_closer() {
+    // the §VI mechanism itself: priority-list stealing shortens paths
+    let rt = Runtime::paper_testbed();
+    let seed = 9;
+    let hops = |policy| {
+        let mut w = bots::create("sort", Size::Medium, seed).unwrap();
+        let s = rt.run(w.as_mut(), policy, BindPolicy::NumaAware, 16, seed, None).unwrap();
+        assert!(s.steals > 10, "need steals to compare");
+        s.mean_steal_hops
+    };
+    let wf = hops(Policy::WorkFirst);
+    let pt = hops(Policy::Dfwspt);
+    assert!(pt < wf, "dfwspt steal hops {pt:.2} must be below wf {wf:.2}");
+}
+
+#[test]
+fn serial_baseline_is_the_fastest_single_thread() {
+    // overhead-free serial must beat any 1-thread scheduled run
+    let rt = Runtime::paper_testbed();
+    for bench in ["fft", "sort"] {
+        let mut ws = bots::create(bench, Size::Medium, 1).unwrap();
+        let serial = rt.run_serial(ws.as_mut(), 1).unwrap();
+        let mut w = bots::create(bench, Size::Medium, 1).unwrap();
+        let one = rt.run(w.as_mut(), Policy::WorkFirst, BindPolicy::Linear, 1, 1, None).unwrap();
+        assert!(serial.makespan <= one.makespan, "{bench}: serial slower than wf@1");
+    }
+}

@@ -1,0 +1,185 @@
+//! PJRT round-trip: every AOT artifact (jax/Pallas → HLO text → xla crate)
+//! executes on the CPU client and matches an independent Rust reference.
+//!
+//! Requires `make artifacts`; the suite fails loudly if they are missing
+//! (they are a build product, not an optional extra).
+
+use numanos::coordinator::priority::{alpha_weights, core_priorities};
+use numanos::runtime::{Buf, ExecEngine};
+use numanos::topology::Topology;
+
+fn engine() -> ExecEngine {
+    let dir = std::env::var("NUMANOS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    assert!(
+        std::path::Path::new(&dir).join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    ExecEngine::cpu(dir).expect("PJRT CPU client")
+}
+
+fn det(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|i| (((i as u64 * 2654435761 + seed) % 1000) as f32 / 1000.0 - 0.5) * scale).collect()
+}
+
+#[test]
+fn manifest_lists_all_artifacts() {
+    let e = engine();
+    assert!(e.manifest_len() >= 12, "expected ≥12 artifacts, got {}", e.manifest_len());
+}
+
+#[test]
+fn matmul_matches_naive() {
+    let mut e = engine();
+    let n = 128usize;
+    let a = det(1, n * n, 2.0);
+    let b = det(2, n * n, 2.0);
+    let got = e
+        .call1("matmul_f32_128", &[Buf::f32(a.clone(), &[128, 128]), Buf::f32(b.clone(), &[128, 128])])
+        .unwrap();
+    for &(r, c) in &[(0usize, 0usize), (5, 77), (127, 127), (64, 1)] {
+        let mut want = 0f64;
+        for k in 0..n {
+            want += a[r * n + k] as f64 * b[k * n + c] as f64;
+        }
+        let g = got[r * n + c] as f64;
+        assert!((g - want).abs() < 1e-3, "({r},{c}): {g} vs {want}");
+    }
+}
+
+#[test]
+fn input_shape_validation_rejects_garbage() {
+    let mut e = engine();
+    let bad = e.call1("matmul_f32_128", &[Buf::f32(vec![0.0; 4], &[2, 2])]);
+    assert!(bad.is_err(), "wrong arity/shape must be rejected");
+}
+
+#[test]
+fn priority_artifact_matches_rust_coordinator() {
+    // The Fig 2-4 math: Layer-1 Pallas kernel vs the pure-Rust
+    // implementation the coordinator actually uses.
+    let mut e = engine();
+    let topo = Topology::x4600();
+    let n = topo.num_cores();
+    let alpha = alpha_weights(topo.max_hops());
+    let mut alpha8 = [0f32; 8];
+    for (i, a) in alpha.iter().enumerate() {
+        alpha8[i] = *a as f32;
+    }
+    let hops: Vec<i32> = (0..n)
+        .flat_map(|a| (0..n).map(move |b| (a, b)))
+        .map(|(a, b)| topo.core_hops(a, b) as i32)
+        .collect();
+    let base: Vec<f32> = (0..n)
+        .map(|c| topo.cores_per_node(topo.node_of(c)) as f32)
+        .collect();
+    let out = e
+        .call(
+            "priority_f32_16",
+            &[
+                Buf::i32(hops, &[16, 16]),
+                Buf::f32(alpha8.to_vec(), &[8]),
+                Buf::f32(base, &[16]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 2, "priority returns (P1, P)");
+    let rust = core_priorities(&topo);
+    for c in 0..n {
+        assert!(
+            (out[0][c] as f64 - rust.p1[c]).abs() < 1e-2,
+            "P1[{c}]: kernel {} vs rust {}",
+            out[0][c],
+            rust.p1[c]
+        );
+        assert!(
+            (out[1][c] as f64 - rust.scores[c]).abs() / rust.scores[c] < 1e-4,
+            "P[{c}]: kernel {} vs rust {}",
+            out[1][c],
+            rust.scores[c]
+        );
+    }
+}
+
+#[test]
+fn fft_artifact_matches_dft() {
+    let mut e = engine();
+    let n = 1024usize;
+    let re = det(3, n, 1.0);
+    let im = det(4, n, 1.0);
+    let out = e
+        .call("fft_f32_1024", &[Buf::f32(re.clone(), &[1024]), Buf::f32(im.clone(), &[1024])])
+        .unwrap();
+    // spot-check a few bins against the O(n^2) DFT
+    for &k in &[0usize, 1, 17, 511, 1023] {
+        let (mut sr, mut si) = (0f64, 0f64);
+        for j in 0..n {
+            let ang = -2.0 * std::f64::consts::PI * (k as f64) * (j as f64) / n as f64;
+            sr += re[j] as f64 * ang.cos() - im[j] as f64 * ang.sin();
+            si += re[j] as f64 * ang.sin() + im[j] as f64 * ang.cos();
+        }
+        assert!((out[0][k] as f64 - sr).abs() < 2e-3, "re[{k}]: {} vs {sr}", out[0][k]);
+        assert!((out[1][k] as f64 - si).abs() < 2e-3, "im[{k}]: {} vs {si}", out[1][k]);
+    }
+}
+
+#[test]
+fn sort_artifact_sorts() {
+    let mut e = engine();
+    let xs = det(5, 1024, 1000.0);
+    let out = e.call1("sort_f32_1024", &[Buf::f32(xs.clone(), &[1024])]).unwrap();
+    let mut want = xs;
+    want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(out, want, "bitonic network must sort exactly");
+}
+
+#[test]
+fn lu_artifacts_factorize() {
+    let mut e = engine();
+    let n = 64usize;
+    // diagonally dominant block
+    let mut a = det(6, n * n, 1.0);
+    for d in 0..n {
+        a[d * n + d] += 2.0 * n as f32;
+    }
+    let packed = e.call1("lu0_f32_64", &[Buf::f32(a.clone(), &[64, 64])]).unwrap();
+    // L @ U must reconstruct A
+    let mut max_err = 0f64;
+    for r in 0..n {
+        for c in 0..n {
+            let mut acc = 0f64;
+            for k in 0..=r.min(c) {
+                let l = if k == r { 1.0 } else { packed[r * n + k] as f64 };
+                let u = packed[k * n + c] as f64;
+                acc += l * u;
+            }
+            max_err = max_err.max((acc - a[r * n + c] as f64).abs());
+        }
+    }
+    assert!(max_err < 2e-2, "LU reconstruction error {max_err}");
+}
+
+#[test]
+fn bmod_artifact_is_fused_multiply_subtract() {
+    let mut e = engine();
+    let n = 64usize;
+    let a = det(7, n * n, 1.0);
+    let b = det(8, n * n, 1.0);
+    let c = det(9, n * n, 1.0);
+    let got = e
+        .call1(
+            "bmod_f32_64",
+            &[
+                Buf::f32(a.clone(), &[64, 64]),
+                Buf::f32(b.clone(), &[64, 64]),
+                Buf::f32(c.clone(), &[64, 64]),
+            ],
+        )
+        .unwrap();
+    for &(r, col) in &[(0usize, 0usize), (13, 59), (63, 63)] {
+        let mut acc = c[r * n + col] as f64;
+        for k in 0..n {
+            acc -= a[r * n + k] as f64 * b[k * n + col] as f64;
+        }
+        assert!((got[r * n + col] as f64 - acc).abs() < 1e-3);
+    }
+}

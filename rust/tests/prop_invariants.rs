@@ -1,0 +1,230 @@
+//! Property tests over randomized workloads and topologies (hand-rolled
+//! generator harness — the vendored crate set has no proptest; DESIGN.md §7).
+//!
+//! Invariants checked for every (random tree, random topology, policy):
+//! * no task lost, none duplicated (exact task accounting);
+//! * work conservation: pure-compute totals identical across schedulers;
+//! * tied-task / phase discipline never deadlocks;
+//! * dfwspt steal distances never exceed random-victim distances *on
+//!   average* (the §VI design goal);
+//! * same seed ⇒ same simulation, different seed ⇒ same task graph.
+
+use numanos::bots::uts::Uts;
+use numanos::config::Size;
+use numanos::coordinator::binding::BindPolicy;
+use numanos::coordinator::runtime::Runtime;
+use numanos::coordinator::sched::Policy;
+use numanos::coordinator::task::{BodyCtx, TaskDesc, Workload};
+use numanos::simnuma::{CostModel, MemSim, Region};
+use numanos::topology::Topology;
+use numanos::util::{SplitMix64, Time};
+
+/// Random spawn-tree workload: hash-driven shape, touches random slices
+/// of a shared arena — a fuzzer for the engine's phase machinery.
+struct RandTree {
+    seed: u64,
+    max_depth: u32,
+    max_kids: u64,
+    arena: Region,
+    post_spawns: bool,
+}
+
+impl RandTree {
+    fn new(seed: u64, post_spawns: bool) -> Self {
+        Self { seed, max_depth: 7, max_kids: 4, arena: Region::EMPTY, post_spawns }
+    }
+
+    fn h(&self, a: u64, b: u64) -> u64 {
+        let mut r = SplitMix64::new(self.seed ^ a.wrapping_mul(0x9E37).wrapping_add(b));
+        r.next_u64()
+    }
+}
+
+impl Workload for RandTree {
+    fn name(&self) -> &'static str {
+        "randtree"
+    }
+
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        self.arena = mem.alloc(256 * 1024);
+        mem.first_touch(master_core, self.arena, 0)
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::new(0, [1, 0, 0, 0])
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        let node = desc.args[0] as u64;
+        let depth = desc.args[1] as u32;
+        let off = (self.h(node, 1) % 63) * 4096;
+        ctx.read(self.arena.slice(off, 4096));
+        ctx.compute(500 + self.h(node, 2) % 3000);
+        if depth >= self.max_depth {
+            return;
+        }
+        let kids = self.h(node, 3) % (self.max_kids + 1);
+        for k in 0..kids {
+            ctx.spawn(TaskDesc::new(0, [(node * 5 + k + 1) as i64, depth as i64 + 1, 0, 0]));
+        }
+        if kids > 0 {
+            ctx.taskwait();
+            ctx.write(self.arena.slice(off, 1024));
+            if self.post_spawns && depth + 2 < self.max_depth && self.h(node, 4) % 3 == 0 {
+                // post-phase spawning (the WaitingFinal engine path)
+                ctx.spawn(TaskDesc::new(0, [(node * 5 + 4) as i64, self.max_depth as i64, 0, 0]));
+            }
+        }
+    }
+}
+
+fn random_topology(rng: &mut SplitMix64) -> Topology {
+    let nodes = 2 + (rng.next_u64() % 7) as usize; // 2..=8
+    let cores = 1 + (rng.next_u64() % 3) as usize; // 1..=3 per node
+    // random connected graph: chain + extra edges
+    let mut edges = Vec::new();
+    let mut order: Vec<usize> = (0..nodes).collect();
+    rng.shuffle(&mut order);
+    for w in order.windows(2) {
+        edges.push((w[0], w[1]));
+    }
+    for _ in 0..nodes {
+        let a = (rng.next_u64() % nodes as u64) as usize;
+        let b = (rng.next_u64() % nodes as u64) as usize;
+        if a != b {
+            edges.push((a, b));
+        }
+    }
+    Topology::from_edges("random", vec![cores; nodes], &edges, 2048).unwrap()
+}
+
+#[test]
+fn random_trees_complete_everywhere_with_exact_accounting() {
+    for case in 0..24u64 {
+        let mut rng = SplitMix64::new(1000 + case);
+        let topo = random_topology(&mut rng);
+        let rt = Runtime::new(topo, CostModel::default());
+        let cores = rt.topo.num_cores();
+        let threads = if cores <= 2 { cores } else { 2 + (rng.next_u64() % (cores as u64 - 1)) as usize };
+        let threads = threads.min(cores);
+        let mut baseline: Option<u64> = None;
+        for &policy in Policy::all() {
+            let t = if policy == Policy::Serial { 1 } else { threads };
+            let mut w = RandTree::new(case, case % 2 == 0);
+            let stats = rt
+                .run(&mut w, policy, BindPolicy::NumaAware, t, case, None)
+                .unwrap_or_else(|e| panic!("case {case} {}: {e}", policy.name()));
+            match baseline {
+                None => baseline = Some(stats.tasks),
+                Some(b) => assert_eq!(
+                    stats.tasks,
+                    b,
+                    "case {case} {}: task count mismatch",
+                    policy.name()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn compute_work_is_conserved_across_schedulers() {
+    // a pure-compute workload (no memory): work_time must be identical
+    struct PureTree;
+    impl Workload for PureTree {
+        fn name(&self) -> &'static str {
+            "pure"
+        }
+        fn init(&mut self, _m: &mut MemSim, _c: usize) -> Time {
+            0
+        }
+        fn root(&self) -> TaskDesc {
+            TaskDesc::new(0, [3, 0, 0, 0])
+        }
+        fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+            let d = desc.args[0];
+            ctx.compute(1000 + d as u64 * 77);
+            if d > 0 {
+                for _ in 0..3 {
+                    ctx.spawn(TaskDesc::new(0, [d - 1, 0, 0, 0]));
+                }
+                ctx.taskwait();
+                ctx.compute(123);
+            }
+        }
+    }
+    let rt = Runtime::paper_testbed();
+    let mut works = Vec::new();
+    for &policy in Policy::all() {
+        let t = if policy == Policy::Serial { 1 } else { 16 };
+        let mut w = PureTree;
+        let s = rt.run(&mut w, policy, BindPolicy::Linear, t, 9, None).unwrap();
+        works.push((policy.name(), s.work_time));
+    }
+    for (name, w) in &works[1..] {
+        assert_eq!(*w, works[0].1, "{name} changed total compute work");
+    }
+}
+
+#[test]
+fn numa_steal_order_is_no_farther_than_random() {
+    // over several seeds, dfwspt's mean steal distance must not exceed
+    // wf's (it probes closest-first by construction)
+    let rt = Runtime::paper_testbed();
+    let mut wf_total = 0.0;
+    let mut pt_total = 0.0;
+    let mut samples = 0;
+    for seed in 0..6u64 {
+        let mut a = Uts::with_params(64, 8, 120, seed);
+        let wf = rt.run(&mut a, Policy::WorkFirst, BindPolicy::NumaAware, 16, seed, None).unwrap();
+        let mut b = Uts::with_params(64, 8, 120, seed);
+        let pt = rt.run(&mut b, Policy::Dfwspt, BindPolicy::NumaAware, 16, seed, None).unwrap();
+        if wf.steals > 20 && pt.steals > 20 {
+            wf_total += wf.mean_steal_hops;
+            pt_total += pt.mean_steal_hops;
+            samples += 1;
+        }
+    }
+    assert!(samples >= 3, "not enough steal-heavy samples");
+    assert!(
+        pt_total <= wf_total,
+        "dfwspt mean steal hops {pt_total} exceed wf {wf_total} over {samples} runs"
+    );
+}
+
+#[test]
+fn seeds_change_randomized_schedules_only() {
+    let rt = Runtime::paper_testbed();
+    let run = |seed: u64| {
+        let mut w = RandTree::new(7, true); // workload shape fixed
+        rt.run(&mut w, Policy::Dfwsrpt, BindPolicy::NumaAware, 12, seed, None).unwrap()
+    };
+    let a = run(1);
+    let b = run(2);
+    assert_eq!(a.tasks, b.tasks, "workload shape must not depend on run seed");
+    assert_eq!(a.work_time, b.work_time, "pure work must not depend on run seed");
+}
+
+#[test]
+fn oversized_team_rejected_gracefully() {
+    let rt = Runtime::paper_testbed();
+    let mut w = RandTree::new(1, false);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        rt.run(&mut w, Policy::WorkFirst, BindPolicy::Linear, 17, 1, None)
+    }));
+    assert!(r.is_err(), "17 threads on 16 cores must be rejected");
+}
+
+#[test]
+fn size_presets_are_ordered() {
+    // larger presets must mean more simulated work for every benchmark
+    let rt = Runtime::paper_testbed();
+    for &bench in numanos::bots::NAMES {
+        let time = |size| {
+            let mut w = numanos::bots::create(bench, size, 5).unwrap();
+            rt.run_serial(w.as_mut(), 5).unwrap().makespan
+        };
+        let (s, m) = (time(Size::Small), time(Size::Medium));
+        assert!(m > s, "{bench}: medium ({m}) not larger than small ({s})");
+    }
+}
