@@ -1,0 +1,55 @@
+//! Experiment manifests: author a sweep grid as data, run it, read it.
+//!
+//!     cargo run --release --example experiment_manifest
+//!
+//! Loads `examples/experiment_manifest.json` — a custom two-sweep grid
+//! (scheduler scaling plus a slow-DRAM cost ablation) — and executes it
+//! on one [`Session`]: baselines are shared, cells run in parallel across
+//! OS threads, and the output is deterministic (a `--seq` run of
+//! `numanos sweep` produces byte-identical CSV).  The same file drives
+//! the CLI directly:
+//!
+//!     numanos sweep --manifest examples/experiment_manifest.json --json
+
+use std::path::Path;
+
+use numanos::coordinator::binding::BindPolicy;
+use numanos::{ExperimentManifest, Policy, Session, Sweep};
+
+fn main() -> anyhow::Result<()> {
+    // The manifest is plain data on disk (JSON here; TOML works too)…
+    let path = Path::new("examples/experiment_manifest.json");
+    let manifest = if path.exists() {
+        ExperimentManifest::load(path)?
+    } else {
+        // …and exactly equivalent to building the sweeps in code.
+        ExperimentManifest {
+            title: "custom grid: NUMA schedulers under slower DRAM".into(),
+            sweeps: vec![Sweep::new("numa-scaling", "DFWSPT vs DFWSRPT scaling")
+                .with_benches(["fft", "sort"])
+                .with_configs(vec![
+                    (Policy::WorkFirst, BindPolicy::NumaAware),
+                    (Policy::Dfwspt, BindPolicy::NumaAware),
+                    (Policy::Dfwsrpt, BindPolicy::NumaAware),
+                ])
+                .with_threads(vec![2, 4, 8, 16])
+                .with_seed(7)
+                .with_size(numanos::config::Size::Small)],
+        }
+    };
+
+    println!("# {}\n", manifest.title);
+    let session = Session::new();
+    for sweep in &manifest.sweeps {
+        let t0 = std::time::Instant::now();
+        let result = session.run_sweep(sweep)?;
+        println!("{}", result.table().to_markdown());
+        println!(
+            "[{} cells in {:.1}s — first CSV line: {}]\n",
+            result.records.len(),
+            t0.elapsed().as_secs_f64(),
+            result.to_csv().lines().nth(1).unwrap_or("-"),
+        );
+    }
+    Ok(())
+}

@@ -6,17 +6,14 @@
 //! 2. runs the Fig 2–4 priority algorithm and shows the ranked cores;
 //! 3. binds teams of 2/4/8/16 threads both ways and shows which cores
 //!    (and which NUMA nodes) each policy picks;
-//! 4. runs an FFT under both bindings and audits where the pages landed
-//!    and how far the misses travelled.
+//! 4. runs an FFT under both bindings (two one-line `RunSpec`s on a
+//!    shared `Session`) and audits where the pages landed and how far
+//!    the misses travelled.
 
-use numanos::bots;
-use numanos::config::Size;
 use numanos::coordinator::binding::{bind_threads, BindPolicy};
 use numanos::coordinator::priority::core_priorities;
-use numanos::coordinator::runtime::Runtime;
-use numanos::coordinator::sched::Policy;
-use numanos::topology::Topology;
 use numanos::util::SplitMix64;
+use numanos::{Policy, RunSpec, Session, Topology};
 
 fn main() -> anyhow::Result<()> {
     let topo = Topology::x4600();
@@ -57,16 +54,16 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("\n== 4. first-touch placement audit (FFT medium, 16 threads) ==");
-    let rt = Runtime::paper_testbed();
+    let session = Session::new();
     for bind in [BindPolicy::Linear, BindPolicy::NumaAware] {
-        let mut w = bots::create("fft", Size::Medium, 42)?;
-        let s = rt.run(w.as_mut(), Policy::WorkFirst, bind, 16, 42, None)?;
+        let spec = RunSpec::builder().bench("fft").policy(Policy::WorkFirst).bind(bind).build()?;
+        let rec = session.run(&spec)?;
         println!(
             "  {:<8} makespan {:>9} us | remote misses {:>4.1}% | mean miss distance {:.2} hops",
-            bind.name(),
-            s.makespan / 1_000_000,
-            100.0 * s.mem.remote_ratio(),
-            s.mem.mean_miss_hops(),
+            spec.bind.name(),
+            rec.stats.makespan / 1_000_000,
+            100.0 * rec.stats.mem.remote_ratio(),
+            rec.stats.mem.mean_miss_hops(),
         );
     }
     println!("\nCentral-node first touch shortens the average miss path — the");

@@ -4,61 +4,50 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! This is the five-minute tour of the public API: build a [`Runtime`]
-//! (topology + cost model), instantiate a workload, run it under a
-//! scheduler policy, read the stats.
+//! This is the five-minute tour of the experiment API: describe a run as
+//! a [`RunSpec`], hand it to a [`Session`] (which computes and memoizes
+//! the serial baseline for you), read the [`RunRecord`].
 
-use numanos::bots;
-use numanos::config::Size;
-use numanos::coordinator::binding::BindPolicy;
-use numanos::coordinator::runtime::Runtime;
-use numanos::coordinator::sched::Policy;
-use numanos::metrics::speedup;
 use numanos::util::fmt_time;
+use numanos::{Policy, RunSpec, Session};
 
 fn main() -> anyhow::Result<()> {
-    // The paper's testbed: 8 dual-core Opteron sockets, twisted-ladder HT.
-    let rt = Runtime::paper_testbed();
-    println!(
-        "machine: {} ({} cores / {} NUMA nodes, max {} hops)\n",
-        rt.topo.name(),
-        rt.topo.num_cores(),
-        rt.topo.num_nodes(),
-        rt.topo.max_hops()
-    );
-
-    let bench = "sort";
-    let seed = 42;
-
-    // Serial baseline (the paper's speedup denominator).
-    let mut serial_w = bots::create(bench, Size::Medium, seed)?;
-    let serial = rt.run_serial(serial_w.as_mut(), seed)?;
-    println!("serial {bench}: {}", fmt_time(serial.makespan));
+    let session = Session::new();
 
     // Stock NANOS work-first, unpinned-style linear binding.
-    let mut base_w = bots::create(bench, Size::Medium, seed)?;
-    let base = rt.run(base_w.as_mut(), Policy::WorkFirst, BindPolicy::Linear, 16, seed, None)?;
+    let base_spec = RunSpec::builder().bench("sort").policy(Policy::WorkFirst).linear().build()?;
 
     // The paper's full stack: priority-based thread allocation (SS IV)
-    // + NUMA-aware randomized work stealing (SS VI.B).
-    let mut numa_w = bots::create(bench, Size::Medium, seed)?;
-    let numa = rt.run(numa_w.as_mut(), Policy::Dfwsrpt, BindPolicy::NumaAware, 16, seed, None)?;
+    // + NUMA-aware randomized work stealing (SS VI.B).  Builders are
+    // cheap value edits away from each other — that is the point.
+    let numa_spec = RunSpec::builder().bench("sort").policy(Policy::Dfwsrpt).numa().build()?;
 
-    for s in [&base, &numa] {
+    let base = session.run(&base_spec)?;
+    let numa = session.run(&numa_spec)?;
+
+    // Both records share one memoized serial baseline (same bench, size,
+    // seed, topology) — the paper's speedup denominator.
+    println!(
+        "machine: x4600 | serial sort baseline: {}\n",
+        fmt_time(base.serial_makespan)
+    );
+    for rec in [&base, &numa] {
+        let s = &rec.stats;
         println!(
             "{:<26} speedup {:>5.2}x | steals {} @ {:.2} hops | remote {:>4.1}% | lock wait {}",
-            s.label(),
-            speedup(&serial, s),
+            rec.label(),
+            rec.speedup,
             s.steals,
             s.mean_steal_hops,
             100.0 * s.mem.remote_ratio(),
             fmt_time(s.lock_wait_total),
         );
     }
-    let gain = (1.0 - base.makespan as f64 / numa.makespan as f64).abs() * 100.0;
+    let gain = (1.0 - base.stats.makespan as f64 / numa.stats.makespan as f64).abs() * 100.0;
     println!(
-        "\nNUMA-aware stack is {gain:.1}% {} than stock work-first on {bench}.",
-        if numa.makespan < base.makespan { "faster" } else { "slower" }
+        "\nNUMA-aware stack is {gain:.1}% {} than stock work-first on sort.",
+        if numa.stats.makespan < base.stats.makespan { "faster" } else { "slower" }
     );
+    println!("(specs serialize too: numanos run --json, or RunSpec::to_json_string)");
     Ok(())
 }

@@ -1,47 +1,43 @@
 //! Scheduler duel: all five policies head-to-head on the data-intensive
-//! benchmarks (the paper's §V/§VI storyline in one table).
+//! benchmarks (the paper's §V/§VI storyline in one table) — expressed as
+//! one [`Sweep`] instead of nested launch loops.
 //!
 //!     cargo run --release --example scheduler_duel
 
-use numanos::bots;
-use numanos::config::Size;
 use numanos::coordinator::binding::BindPolicy;
-use numanos::coordinator::runtime::Runtime;
-use numanos::coordinator::sched::Policy;
-use numanos::metrics::speedup;
+use numanos::{Policy, Session, Sweep};
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::paper_testbed();
-    let seed = 42;
-    let threads = 16;
+    // The paper evaluates the NUMA-aware schedulers combined with the
+    // SS IV allocation, the stock ones with linear binding.
+    let configs = vec![
+        (Policy::BreadthFirst, BindPolicy::Linear),
+        (Policy::CilkBased, BindPolicy::Linear),
+        (Policy::WorkFirst, BindPolicy::Linear),
+        (Policy::Dfwspt, BindPolicy::NumaAware),
+        (Policy::Dfwsrpt, BindPolicy::NumaAware),
+    ];
+    let sweep = Sweep::new("duel", "scheduler duel (16 threads, speedup over serial)")
+        .with_benches(["fft", "sort", "strassen"])
+        .with_configs(configs)
+        .with_threads(vec![16]);
 
-    for bench in ["fft", "sort", "strassen"] {
-        let mut serial_w = bots::create(bench, Size::Medium, seed)?;
-        let serial = rt.run_serial(serial_w.as_mut(), seed)?;
-        println!("\n=== {bench} (16 threads, speedup over serial) ===");
+    // Cells run in parallel across OS threads; output is deterministic.
+    let session = Session::new();
+    let result = session.run_sweep(&sweep)?;
+
+    for chunk in result.records.chunks(result.sweep.configs.len()) {
+        println!("\n=== {} (16 threads, speedup over serial) ===", chunk[0].spec.bench);
         println!(
             "{:<10} {:>8} {:>9} {:>12} {:>10} {:>9}",
             "scheduler", "speedup", "steals", "steal-hops", "remote%", "lockwait"
         );
-        for &policy in &[
-            Policy::BreadthFirst,
-            Policy::CilkBased,
-            Policy::WorkFirst,
-            Policy::Dfwspt,
-            Policy::Dfwsrpt,
-        ] {
-            // the NUMA-aware schedulers are evaluated the way the paper
-            // does: combined with the SS IV allocation
-            let bind = match policy {
-                Policy::Dfwspt | Policy::Dfwsrpt => BindPolicy::NumaAware,
-                _ => BindPolicy::Linear,
-            };
-            let mut w = bots::create(bench, Size::Medium, seed)?;
-            let s = rt.run(w.as_mut(), policy, bind, threads, seed, None)?;
+        for rec in chunk {
+            let s = &rec.stats;
             println!(
                 "{:<10} {:>7.2}x {:>9} {:>12.2} {:>9.1}% {:>8}us",
-                policy.name(),
-                speedup(&serial, &s),
+                rec.spec.policy.name(),
+                rec.speedup,
                 s.steals,
                 s.mean_steal_hops,
                 100.0 * s.mem.remote_ratio(),

@@ -1,5 +1,8 @@
-//! Run configuration: CLI-facing knobs + a tiny `key = value` config-file
-//! format (the vendored dependency set has no serde/toml; see DESIGN.md §7).
+//! Legacy run configuration: flat knobs + a tiny `key = value` config-file
+//! format.  New code should use the validated, serializable
+//! [`RunSpec`](crate::spec::RunSpec) (see [`RunConfig::to_spec`]); this
+//! type remains for config files and the shared [`Size`]/[`ComputeMode`]
+//! enums and cost-override parsing.
 
 use std::path::Path;
 
@@ -119,6 +122,22 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// Lower onto the spec layer — [`RunSpec`](crate::spec::RunSpec) is
+    /// the validated form every execution path consumes.
+    pub fn to_spec(&self) -> Result<crate::spec::RunSpec> {
+        crate::spec::RunSpec::builder()
+            .bench(&self.bench)
+            .size(self.size)
+            .policy(self.policy)
+            .bind(self.bind)
+            .threads(self.threads)
+            .topo(&self.topo)
+            .seed(self.seed)
+            .compute(self.compute)
+            .artifact_dir(&self.artifact_dir)
+            .build()
+    }
+
     pub fn describe(&self) -> String {
         format!(
             "bench={} size={} sched={} bind={} threads={} topo={} seed={} compute={}",
@@ -236,5 +255,19 @@ mod tests {
     fn size_parse() {
         assert_eq!(Size::from_name("m").unwrap(), Size::Medium);
         assert!(Size::from_name("huge").is_err());
+    }
+
+    #[test]
+    fn lowers_onto_run_spec() {
+        let mut c = RunConfig::default();
+        c.set("bench", "sort").unwrap();
+        c.set("sched", "dfwspt").unwrap();
+        c.set("bind", "numa").unwrap();
+        let spec = c.to_spec().unwrap();
+        assert_eq!(spec.bench, "sort");
+        assert_eq!(spec.policy, Policy::Dfwspt);
+        assert_eq!(spec.label(), "dfwspt-Scheduler-NUMA");
+        c.threads = 99; // invalid configs are caught at lowering time
+        assert!(c.to_spec().is_err());
     }
 }

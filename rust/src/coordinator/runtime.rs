@@ -1,26 +1,27 @@
-//! The [`Runtime`] façade: topology + cost model + binding + engine.
+//! The [`Runtime`] façade: a configured machine (topology + cost model).
 //!
-//! Mirrors the NANOS start-up sequence the paper modifies:
-//!
-//! 1. explore the hardware (here: the [`Topology`]);
-//! 2. compute core priorities and bind the master (Figs 2–4) — or bind
-//!    linearly for the baseline;
-//! 3. allocate per-thread runtime data (locally per node when NUMA-aware,
-//!    all on the master's node otherwise — paper §IV last paragraph);
-//! 4. run the workload's master-side init (first-touch placement!);
-//! 5. execute the task graph under the chosen scheduler.
+//! The NANOS start-up sequence the paper modifies (explore hardware →
+//! compute priorities and bind → allocate per-thread runtime data →
+//! first-touch init → execute under a scheduler) lives in
+//! [`Session::execute`](crate::spec::Session::execute) /
+//! [`Session::execute_bound`](crate::spec::Session::execute_bound); the
+//! methods here are thin compatibility shims over that canonical path,
+//! kept because "run this workload on that machine" is still the natural
+//! verb for tests, benches and one-off programs.  Anything experiment-
+//! shaped (baselines, sweeps, manifests) should go through
+//! [`Session`](crate::spec::Session) / [`RunSpec`](crate::spec::RunSpec)
+//! instead.
 
 use anyhow::Result;
 
-use crate::coordinator::binding::{bind_threads, BindPolicy};
-use crate::coordinator::engine::{Engine, EngineConfig};
-use crate::coordinator::sched::{build_victim_lists, Policy};
+use crate::coordinator::binding::BindPolicy;
+use crate::coordinator::sched::Policy;
 use crate::coordinator::task::Workload;
 use crate::metrics::RunStats;
 use crate::runtime::ExecEngine;
-use crate::simnuma::{CostModel, MemSim, PAGE_BYTES};
+use crate::simnuma::CostModel;
+use crate::spec::Session;
 use crate::topology::Topology;
-use crate::util::{SplitMix64, Time};
 
 /// A configured machine, ready to run workloads.
 #[derive(Clone)]
@@ -42,6 +43,7 @@ impl Runtime {
     /// Execute `workload` under `policy`/`bind` with `threads` threads.
     ///
     /// `exec` enables real PJRT compute for `Action::Kernel` steps.
+    /// Shim over [`Session::execute`].
     pub fn run(
         &self,
         workload: &mut dyn Workload,
@@ -51,18 +53,13 @@ impl Runtime {
         seed: u64,
         exec: Option<&mut ExecEngine>,
     ) -> Result<RunStats> {
-        let mut rng = SplitMix64::new(seed);
-        let binding = bind_threads(&self.topo, threads, bind, &mut rng);
-        let numa_rtdata = bind == BindPolicy::NumaAware;
-        let mut stats = self.run_bound(workload, policy, &binding.cores, numa_rtdata, seed, exec)?;
-        stats.bind = Some(bind);
-        Ok(stats)
+        Session::execute(self, workload, policy, bind, threads, seed, exec)
     }
 
     /// Like [`Runtime::run`] but with an explicit thread→core binding
     /// (thread 0 = master).  `numa_rtdata` controls whether per-thread
     /// runtime pages are touched locally (§IV) or all by the master.
-    /// This is the ablation surface: any placement heuristic can be fed in.
+    /// Shim over [`Session::execute_bound`] — the ablation surface.
     pub fn run_bound(
         &self,
         workload: &mut dyn Workload,
@@ -72,47 +69,7 @@ impl Runtime {
         seed: u64,
         exec: Option<&mut ExecEngine>,
     ) -> Result<RunStats> {
-        let wall_start = std::time::Instant::now();
-        let threads = cores.len();
-        let binding = crate::coordinator::binding::Binding {
-            cores: cores.to_vec(),
-            priorities: None,
-        };
-        let mut mem = MemSim::new(self.topo.clone(), self.cost.clone());
-
-        // Per-thread runtime data (pools, descriptors): one page each.
-        // Baseline: the master first-touches everything (all pages land on
-        // its node). NUMA-aware: each thread touches its own page from its
-        // own core at start-up.
-        let mut rt_penalty: Vec<Time> = Vec::with_capacity(threads);
-        for t in 0..threads {
-            let region = mem.alloc(PAGE_BYTES);
-            let toucher = if numa_rtdata { binding.cores[t] } else { binding.master_core() };
-            mem.first_touch(toucher, region, 0);
-            let data_node = mem.node_of_addr(region.addr).expect("rt page resident");
-            let worker_node = self.topo.node_of(binding.cores[t]);
-            let hops = self.topo.node_hops(worker_node, data_node) as Time;
-            rt_penalty.push(hops * self.cost.rtdata_per_hop);
-        }
-
-        // Master-side workload init: allocations + first touches.
-        let init_time = workload.init(&mut mem, binding.master_core());
-
-        let victims = build_victim_lists(&self.topo, &binding.cores);
-        let root = workload.root();
-        let engine = Engine::new(
-            EngineConfig { policy, cores: binding.cores.clone(), rt_penalty, seed },
-            mem,
-            victims,
-            workload,
-            exec,
-        );
-        let mut stats = engine.run(root)?;
-        stats.bench = workload.name().to_string();
-        stats.seed = seed;
-        stats.init_time = init_time;
-        stats.wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
-        Ok(stats)
+        Session::execute_bound(self, workload, policy, cores, numa_rtdata, seed, exec)
     }
 
     /// The paper's speedup denominator: 1 thread, overhead-free depth-first
@@ -126,7 +83,8 @@ impl Runtime {
 mod tests {
     use super::*;
     use crate::coordinator::task::{BodyCtx, TaskDesc};
-    use crate::simnuma::Region;
+    use crate::simnuma::{MemSim, Region};
+    use crate::util::Time;
 
     /// Tiny deterministic workload: a two-level tree touching one array.
     struct Tree {
@@ -220,5 +178,20 @@ mod tests {
         let s = run_one(Policy::Dfwspt, BindPolicy::NumaAware, 4);
         assert_eq!(s.bind, Some(BindPolicy::NumaAware));
         assert_eq!(s.label(), "dfwspt-Scheduler-NUMA");
+    }
+
+    #[test]
+    fn shim_and_session_agree() {
+        // Runtime::run must stay byte-equivalent to the Session path it
+        // delegates to (same engine, same seed handling).
+        let rt = Runtime::paper_testbed();
+        let mut a = Tree { data: Region::EMPTY, fanout: 32 };
+        let mut b = Tree { data: Region::EMPTY, fanout: 32 };
+        let via_shim = rt.run(&mut a, Policy::Dfwspt, BindPolicy::NumaAware, 8, 9, None).unwrap();
+        let via_session =
+            Session::execute(&rt, &mut b, Policy::Dfwspt, BindPolicy::NumaAware, 8, 9, None)
+                .unwrap();
+        assert_eq!(via_shim.makespan, via_session.makespan);
+        assert_eq!(via_shim.steals, via_session.steals);
     }
 }

@@ -1,25 +1,24 @@
 //! Figure regeneration harness — one entry per paper table/figure
 //! (DESIGN.md §5 experiment index).
 //!
-//! A [`FigureSpec`] names a benchmark, a set of scheduler configurations
-//! and a thread sweep; [`run_figure`] executes the sweep against a fresh
-//! serial baseline and returns a [`SpeedupTable`] shaped exactly like the
-//! paper's figure.  [`report`] renders the table with the paper's anchor
-//! values beside the measured ones.
+//! Every figure is **sweep data**: a [`FigureSpec`] names a benchmark, a
+//! set of scheduler configurations and a thread axis, and
+//! [`sweep_for`] lowers it onto a [`Sweep`] the generic
+//! [`Session`] executor runs — there is no per-figure launch code.
+//! [`report`] renders the resulting [`SpeedupTable`] with the paper's
+//! anchor values beside the measured ones.
 
 use anyhow::Result;
 
-use crate::bots;
 use crate::config::Size;
 use crate::coordinator::binding::BindPolicy;
 use crate::coordinator::runtime::Runtime;
 use crate::coordinator::sched::Policy;
 use crate::metrics::paper;
-use crate::metrics::speedup;
 use crate::metrics::table::SpeedupTable;
+use crate::spec::{Session, Sweep};
 
-/// Thread counts on the paper's x-axis (16-core X4600).
-pub const PAPER_THREADS: &[usize] = &[2, 4, 6, 8, 12, 16];
+pub use crate::spec::sweep::PAPER_THREADS;
 
 /// One reproducible figure.
 #[derive(Clone, Debug)]
@@ -81,24 +80,42 @@ pub fn config_label(policy: Policy, bind: BindPolicy) -> String {
     }
 }
 
-/// Run one figure sweep.  `seed` shapes workload + randomized decisions;
-/// the paper takes best-of-50 wall-clock runs, we take the deterministic
-/// simulated makespan of one seed.
-pub fn run_figure(rt: &Runtime, spec: &FigureSpec, seed: u64) -> Result<SpeedupTable> {
-    let mut serial_w = bots::create(spec.bench, spec.size, seed)?;
-    let serial = rt.run_serial(serial_w.as_mut(), seed)?;
+/// Lower a figure onto generic sweep data.  `seed` shapes workload +
+/// randomized decisions; the paper takes best-of-50 wall-clock runs, we
+/// instead take the deterministic simulated makespan of one seed.
+pub fn sweep_for(spec: &FigureSpec, seed: u64) -> Sweep {
+    Sweep::new(spec.id, spec.title)
+        .with_bench(spec.bench)
+        .with_configs(spec.configs.clone())
+        .with_threads(spec.threads.clone())
+        .with_seed(seed)
+        .with_size(spec.size)
+}
 
-    let mut table = SpeedupTable::new(spec.title, spec.threads.clone());
-    for &(policy, bind) in &spec.configs {
-        let mut row = Vec::with_capacity(spec.threads.len());
-        for &threads in &spec.threads {
-            let mut w = bots::create(spec.bench, spec.size, seed)?;
-            let stats = rt.run(w.as_mut(), policy, bind, threads, seed, None)?;
-            row.push(speedup(&serial, &stats));
-        }
-        table.push_row(config_label(policy, bind), row);
-    }
-    Ok(table)
+/// All nine paper figures as sweeps — the whole evaluation as data.
+pub fn figure_sweeps(size: Size, seed: u64) -> Vec<Sweep> {
+    figures()
+        .into_iter()
+        .map(|mut f| {
+            f.size = size;
+            sweep_for(&f, seed)
+        })
+        .collect()
+}
+
+/// Run one figure sweep on a session (memoized baselines shared across
+/// figures; cells execute in parallel, deterministically).
+pub fn run_figure_with(session: &Session, spec: &FigureSpec, seed: u64) -> Result<SpeedupTable> {
+    Ok(session.run_sweep(&sweep_for(spec, seed))?.table())
+}
+
+/// Compatibility shim: run one figure on a bare runtime (the session
+/// adopts the runtime's topology and cost model).
+pub fn run_figure(rt: &Runtime, spec: &FigureSpec, seed: u64) -> Result<SpeedupTable> {
+    let session = Session::from_runtime(rt);
+    let mut sweep = sweep_for(spec, seed);
+    sweep.topo = rt.topo.name().to_string();
+    Ok(session.run_sweep(&sweep)?.table())
 }
 
 /// Render a figure's table plus paper-anchor comparison lines.
@@ -140,25 +157,48 @@ pub fn report(spec: &FigureSpec, table: &SpeedupTable) -> String {
     out
 }
 
-/// E10: the §V.A headline-gain summary across data-intensive benchmarks.
-pub fn gains_summary(rt: &Runtime, size: Size, seed: u64) -> Result<SpeedupTable> {
-    let mut table = SpeedupTable::new(
-        "NUMA-aware allocation gain at 16 threads (% faster execution)",
-        vec![16],
-    );
-    for bench in ["fft", "sort", "strassen", "sparselu_for", "nqueens", "floorplan"] {
-        let mut serial_w = bots::create(bench, size, seed)?;
-        let serial = rt.run_serial(serial_w.as_mut(), seed)?;
-        for policy in [Policy::CilkBased, Policy::WorkFirst] {
-            let mut base_w = bots::create(bench, size, seed)?;
-            let base = rt.run(base_w.as_mut(), policy, BindPolicy::Linear, 16, seed, None)?;
-            let mut numa_w = bots::create(bench, size, seed)?;
-            let numa = rt.run(numa_w.as_mut(), policy, BindPolicy::NumaAware, 16, seed, None)?;
-            let gain = (1.0 - speedup(&serial, &base) / speedup(&serial, &numa)) * 100.0;
+/// The benchmarks of the §V.A gain summary.
+const GAINS_BENCHES: &[&str] = &["fft", "sort", "strassen", "sparselu_for", "nqueens", "floorplan"];
+
+/// E10: the §V.A headline-gain summary — also just a sweep, post-processed
+/// into the paper's gain metric.
+fn gains_table(session: &Session, size: Size, seed: u64, topo: &str) -> Result<SpeedupTable> {
+    let sweep = Sweep::new("gains", "NUMA-aware allocation gain at 16 threads (% faster execution)")
+        .with_benches(GAINS_BENCHES.iter().copied())
+        .with_configs(vec![
+            (Policy::CilkBased, BindPolicy::Linear),
+            (Policy::CilkBased, BindPolicy::NumaAware),
+            (Policy::WorkFirst, BindPolicy::Linear),
+            (Policy::WorkFirst, BindPolicy::NumaAware),
+        ])
+        .with_threads(vec![16])
+        .with_seed(seed)
+        .with_size(size)
+        .with_topo(topo);
+    let result = session.run_sweep(&sweep)?;
+    let mut table = SpeedupTable::new(&sweep.title, vec![16]);
+    // cells are bench-major, config-minor: [cilk/lin, cilk/numa, wf/lin, wf/numa]
+    for (bench, chunk) in GAINS_BENCHES.iter().zip(result.records.chunks(4)) {
+        for (policy, pair) in
+            [Policy::CilkBased, Policy::WorkFirst].iter().zip(chunk.chunks(2))
+        {
+            let (base, numa) = (&pair[0], &pair[1]);
+            let gain = (1.0 - base.speedup / numa.speedup) * 100.0;
             table.push_row(format!("{bench}/{}", policy.name()), vec![gain]);
         }
     }
     Ok(table)
+}
+
+/// §V.A gain summary on a session (x4600, the paper's testbed).
+pub fn gains_summary_with(session: &Session, size: Size, seed: u64) -> Result<SpeedupTable> {
+    gains_table(session, size, seed, "x4600")
+}
+
+/// Compatibility shim: gain summary on a bare runtime (adopting its
+/// topology and cost model).
+pub fn gains_summary(rt: &Runtime, size: Size, seed: u64) -> Result<SpeedupTable> {
+    gains_table(&Session::from_runtime(rt), size, seed, rt.topo.name())
 }
 
 /// Shared entry point for the `rust/benches/figNN_*.rs` bench binaries:
@@ -172,12 +212,12 @@ pub fn bench_figure_main(id: &str) -> Result<()> {
         Ok("large") => Size::Large,
         _ => Size::Medium,
     };
-    let rt = Runtime::paper_testbed();
+    let session = Session::new();
     let mut spec = figure_by_id(id)
         .ok_or_else(|| anyhow::anyhow!("unknown figure '{id}'"))?;
     spec.size = size;
     let t0 = std::time::Instant::now();
-    let table = run_figure(&rt, &spec, seed)?;
+    let table = run_figure_with(&session, &spec, seed)?;
     println!("{}", report(&spec, &table));
     println!("{}", table.to_ascii());
     println!("[{} regenerated in {:.2}s]", spec.id, t0.elapsed().as_secs_f64());
@@ -190,6 +230,7 @@ pub fn bench_figure_main(id: &str) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bots;
 
     #[test]
     fn nine_figures_defined() {
@@ -217,6 +258,18 @@ mod tests {
     }
 
     #[test]
+    fn all_nine_figures_are_sweep_data() {
+        let sweeps = figure_sweeps(Size::Small, 7);
+        assert_eq!(sweeps.len(), 9);
+        for (f, s) in figures().iter().zip(&sweeps) {
+            assert_eq!(s.id, f.id);
+            assert_eq!(s.benches, vec![f.bench.to_string()]);
+            assert_eq!(s.cell_count(), f.configs.len() * f.threads.len());
+            assert_eq!(s.seeds, vec![7]);
+        }
+    }
+
+    #[test]
     fn tiny_figure_runs_end_to_end() {
         // a small custom spec exercising the full path quickly
         let rt = Runtime::paper_testbed();
@@ -233,6 +286,8 @@ mod tests {
         };
         let table = run_figure(&rt, &spec, 1).unwrap();
         assert_eq!(table.rows.len(), 2);
+        assert_eq!(table.rows[0].0, "wf-Scheduler");
+        assert_eq!(table.rows[1].0, "dfwsrpt-Scheduler-NUMA");
         for (_, row) in &table.rows {
             for v in row {
                 assert!(*v > 0.5, "speedup {v} nonsensical");
@@ -246,12 +301,21 @@ mod tests {
     #[test]
     fn report_contains_anchor_section() {
         let spec = figure_by_id("fig7").unwrap();
-        let mut table = SpeedupTable::new(&spec.title, PAPER_THREADS.to_vec());
+        let mut table = SpeedupTable::new(spec.title, PAPER_THREADS.to_vec());
         for (p, b) in &spec.configs {
             table.push_row(config_label(*p, *b), vec![1.0; PAPER_THREADS.len()]);
         }
         let rep = report(&spec, &table);
         assert!(rep.contains("paper anchors"));
         assert!(rep.contains("bf-Scheduler"));
+    }
+
+    #[test]
+    fn gains_summary_rows_cover_benches() {
+        let session = Session::new();
+        let t = gains_summary_with(&session, Size::Small, 3).unwrap();
+        assert_eq!(t.rows.len(), GAINS_BENCHES.len() * 2);
+        assert_eq!(t.rows[0].0, "fft/cilk");
+        assert_eq!(t.rows[1].0, "fft/wf");
     }
 }

@@ -30,9 +30,30 @@
 //! | [`bots`]     | the 11 BOTS benchmark task-graph generators |
 //! | [`runtime`]  | PJRT artifact loading + execution (the AOT bridge) |
 //! | [`metrics`]  | run statistics, speedup tables, paper reference data |
-//! | [`harness`]  | figure regeneration: sweeps, calibration, reporting |
-//! | [`config`]   | run configuration + tiny key=value config file parser |
+//! | [`harness`]  | figure regeneration: the paper figures as sweep data |
+//! | [`spec`]     | the experiment API: `RunSpec`, `Session`, `Sweep`, manifests |
+//! | [`serde`]    | self-contained JSON/TOML (de)serialization |
+//! | [`config`]   | legacy run configuration + tiny key=value config file parser |
 //! | [`util`]     | deterministic PRNG and misc helpers |
+//!
+//! The experiment surface is the [`spec`] module: build a validated
+//! [`RunSpec`], hand it to a [`Session`] (which memoizes serial
+//! baselines), or expand whole grids as [`Sweep`]s:
+//!
+//! ```
+//! use numanos::{RunSpec, Session, Policy};
+//!
+//! let spec = RunSpec::builder()
+//!     .bench("fib")
+//!     .size(numanos::config::Size::Small)
+//!     .policy(Policy::Dfwspt)
+//!     .numa()
+//!     .threads(8)
+//!     .build()
+//!     .unwrap();
+//! let record = Session::new().run(&spec).unwrap();
+//! assert!(record.speedup > 0.0 && record.stats.makespan > 0);
+//! ```
 
 pub mod bots;
 pub mod config;
@@ -40,10 +61,15 @@ pub mod coordinator;
 pub mod harness;
 pub mod metrics;
 pub mod runtime;
+pub mod serde;
 pub mod simnuma;
+pub mod spec;
 pub mod topology;
 pub mod util;
 
 pub use config::RunConfig;
+pub use coordinator::binding::BindPolicy;
 pub use coordinator::runtime::Runtime;
+pub use coordinator::sched::Policy;
+pub use spec::{ExperimentManifest, RunRecord, RunSpec, Session, Sweep};
 pub use topology::Topology;

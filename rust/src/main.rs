@@ -4,24 +4,32 @@
 //! numanos list                         # benchmarks / schedulers / topologies
 //! numanos topo   --name x4600          # fabric + §IV priorities
 //! numanos run    --bench fft --sched dfwspt --bind numa --threads 16
+//! numanos run    --bench=fft --json    # --flag=value syntax, JSON record
 //! numanos figure --id fig7             # regenerate one paper figure
 //! numanos figure --all --out results/  # regenerate all nine figures
 //! numanos gains                        # §V.A NUMA-allocation gain summary
+//! numanos sweep  --manifest exp.toml   # run a user-authored experiment file
 //! ```
+//!
+//! Everything execution-shaped goes through the [`spec`](numanos::spec)
+//! layer: `run` builds one validated [`RunSpec`], `figure`/`gains`/`sweep`
+//! expand [`Sweep`] grids on a shared [`Session`] (memoized serial
+//! baselines, cells in parallel across OS threads, deterministic output).
 
 use std::collections::HashMap;
+use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use numanos::bots;
-use numanos::config::{parse_cost_overrides, ComputeMode, RunConfig, Size};
+use numanos::config::Size;
 use numanos::coordinator::priority::core_priorities;
-use numanos::coordinator::runtime::Runtime;
 use numanos::coordinator::sched::Policy;
 use numanos::harness;
-use numanos::metrics::speedup;
-use numanos::runtime::ExecEngine;
+use numanos::serde::Json;
 use numanos::simnuma::CostModel;
+use numanos::spec::session::default_workers;
+use numanos::spec::{parse_cost_pairs, ExperimentManifest, RunSpec, Session};
 use numanos::topology::Topology;
 use numanos::util::fmt_time;
 
@@ -32,28 +40,104 @@ fn main() {
     }
 }
 
-/// Parse `--k v` flags into a map; returns (subcommand, flags).
+/// Per-command flag inventory: (command, flags taking a value, boolean flags).
+const COMMANDS: &[(&str, &[&str], &[&str])] = &[
+    ("list", &[], &[]),
+    ("topo", &["name"], &[]),
+    (
+        "run",
+        &[
+            "bench", "size", "sched", "policy", "bind", "cores", "threads", "topo", "seed",
+            "compute", "artifacts", "cost", "rtdata",
+        ],
+        &["json"],
+    ),
+    ("figure", &["id", "out", "size", "seed", "topo", "cost"], &["all", "json"]),
+    ("gains", &["size", "seed", "cost"], &["json"]),
+    ("sweep", &["manifest", "out", "workers", "seed"], &["json", "seq"]),
+    ("help", &[], &[]),
+];
+
+/// Parse `--key value` / `--key=value` / boolean `--flag` arguments,
+/// validated against the command's flag inventory.  Unknown flags are
+/// collected and reported together; a value-less flag that needs a value
+/// is a clear error instead of a silently-misparsed `"true"`.
 fn parse_args() -> Result<(String, HashMap<String, String>)> {
-    let mut args = std::env::args().skip(1);
+    let mut args = std::env::args().skip(1).peekable();
     let cmd = args.next().unwrap_or_else(|| "help".into());
+    let cmd = match cmd.as_str() {
+        "--help" | "-h" => "help".to_string(),
+        _ => cmd,
+    };
+    let (_, value_flags, bool_flags) = COMMANDS
+        .iter()
+        .find(|(name, _, _)| *name == cmd)
+        .ok_or_else(|| anyhow::anyhow!("unknown command '{cmd}' (try `numanos help`)"))?;
+
     let mut flags = HashMap::new();
-    let mut key: Option<String> = None;
-    for a in args {
-        if let Some(stripped) = a.strip_prefix("--") {
-            if let Some(k) = key.take() {
-                flags.insert(k, "true".into()); // boolean flag
+    let mut unknown: Vec<String> = Vec::new();
+    while let Some(a) = args.next() {
+        let Some(stripped) = a.strip_prefix("--") else {
+            bail!("unexpected positional argument '{a}' (flags are --key value or --key=value)");
+        };
+        let (key, explicit_value) = match stripped.split_once('=') {
+            Some((k, v)) => (k.to_string(), Some(v.to_string())),
+            None => (stripped.to_string(), None),
+        };
+        let is_value = value_flags.contains(&key.as_str());
+        let is_bool = bool_flags.contains(&key.as_str());
+        if !is_value && !is_bool {
+            unknown.push(format!("--{key}"));
+            // swallow the unknown flag's value so it isn't misread as a
+            // positional; the aggregated unknown-flag error reports it
+            if explicit_value.is_none()
+                && matches!(args.peek(), Some(next) if !next.starts_with("--"))
+            {
+                args.next();
             }
-            key = Some(stripped.to_string());
-        } else if let Some(k) = key.take() {
-            flags.insert(k, a);
-        } else {
-            bail!("unexpected positional argument '{a}'");
+            continue;
+        }
+        // only value flags consume a following token; booleans never do
+        // (`figure --all fig7` is a positional error, not a discarded token)
+        let value = match (explicit_value, is_value) {
+            (Some(v), true) => v,
+            (Some(v), false) => match v.as_str() {
+                "true" | "false" => v,
+                other => bail!("flag '--{key}' is boolean; got '--{key}={other}'"),
+            },
+            (None, true) => {
+                let has_value = matches!(args.peek(), Some(next) if !next.starts_with("--"));
+                if !has_value {
+                    bail!("flag '--{key}' expects a value (--{key} <v> or --{key}=<v>)");
+                }
+                args.next().unwrap()
+            }
+            (None, false) => "true".to_string(),
+        };
+        if flags.insert(key.clone(), value).is_some() {
+            bail!("flag '--{key}' given more than once");
         }
     }
-    if let Some(k) = key.take() {
-        flags.insert(k, "true".into());
+    if !unknown.is_empty() {
+        let mut allowed: Vec<String> = value_flags
+            .iter()
+            .chain(bool_flags.iter())
+            .map(|f| format!("--{f}"))
+            .collect();
+        allowed.sort();
+        bail!(
+            "unknown flag(s) for '{cmd}': {} (allowed: {})",
+            unknown.join(", "),
+            if allowed.is_empty() { "none".to_string() } else { allowed.join(" ") }
+        );
     }
     Ok((cmd, flags))
+}
+
+/// A boolean flag is set only when its value is literally "true"
+/// (`--json=false` disables it).
+fn bool_flag(flags: &HashMap<String, String>, key: &str) -> bool {
+    flags.get(key).map(|v| v == "true").unwrap_or(false)
 }
 
 fn run() -> Result<()> {
@@ -64,7 +148,8 @@ fn run() -> Result<()> {
         "run" => cmd_run(&flags),
         "figure" => cmd_figure(&flags),
         "gains" => cmd_gains(&flags),
-        "help" | "--help" | "-h" => {
+        "sweep" => cmd_sweep(&flags),
+        "help" => {
             print!("{}", HELP);
             Ok(())
         }
@@ -79,11 +164,18 @@ commands:
   list                      benchmarks, schedulers, topologies
   topo   --name <topo>      fabric, hop matrix, and SS IV core priorities
   run    --bench <b> [--size s|m|l] [--sched P] [--bind linear|numa]
-         [--threads N] [--topo T] [--seed S] [--compute sim|pjrt]
-         [--cost k=v,...]   single run, prints the stats summary
+         [--cores 0,2,4] [--threads N] [--topo T] [--seed S]
+         [--compute sim|pjrt] [--cost k=v,...] [--json]
+                            single run, prints the stats summary
   figure --id figN | --all  regenerate paper figures (speedup tables)
-         [--out dir] [--size s|m|l] [--seed S] [--cost k=v,...]
-  gains  [--size s|m|l]     SS V.A NUMA-allocation gain summary
+         [--out dir] [--size s|m|l] [--seed S] [--topo T] [--cost k=v,...]
+         [--json]
+  gains  [--size s|m|l] [--seed S] [--cost k=v,...]
+                            SS V.A NUMA-allocation gain summary
+  sweep  --manifest <file>  run a JSON/TOML experiment manifest
+         [--out dir] [--json] [--seq] [--workers N] [--seed S]
+
+flags accept both `--key value` and `--key=value`.
 ";
 
 fn cmd_list() -> Result<()> {
@@ -130,48 +222,25 @@ fn cmd_topo(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn build_runtime(flags: &HashMap<String, String>, topo_name: &str) -> Result<Runtime> {
-    let topo = Topology::by_name(topo_name)?;
-    let mut cost = CostModel::default();
-    if let Some(spec) = flags.get("cost") {
-        parse_cost_overrides(&mut cost, spec)?;
-    }
-    Ok(Runtime::new(topo, cost))
-}
-
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
-    let mut cfg = RunConfig::default();
-    for key in ["bench", "size", "sched", "bind", "threads", "topo", "seed", "compute", "artifacts"]
-    {
+    let mut builder = RunSpec::builder();
+    for key in [
+        "bench", "size", "sched", "policy", "bind", "cores", "threads", "topo", "seed", "compute",
+        "artifacts", "cost", "rtdata",
+    ] {
         if let Some(v) = flags.get(key) {
-            cfg.set(key, v)?;
+            builder.set(key, v)?;
         }
     }
-    let rt = build_runtime(flags, &cfg.topo)?;
-    println!("# {}", cfg.describe());
-    let mut workload = bots::create(&cfg.bench, cfg.size, cfg.seed)?;
-
-    let mut exec = match cfg.compute {
-        ComputeMode::Pjrt => {
-            let e = ExecEngine::cpu(&cfg.artifact_dir)?;
-            println!("# pjrt platform: {} ({} artifacts)", e.platform(), e.manifest_len());
-            Some(e)
-        }
-        ComputeMode::Sim => None,
-    };
-
-    // serial baseline for the speedup line
-    let mut serial_w = bots::create(&cfg.bench, cfg.size, cfg.seed)?;
-    let serial = rt.run_serial(serial_w.as_mut(), cfg.seed)?;
-
-    let stats = rt.run(
-        workload.as_mut(),
-        cfg.policy,
-        cfg.bind,
-        cfg.threads,
-        cfg.seed,
-        exec.as_mut(),
-    )?;
+    let spec = builder.build()?;
+    let session = Session::new();
+    let record = session.run(&spec)?;
+    if bool_flag(flags, "json") {
+        print!("{}", record.to_json().to_pretty());
+        return Ok(());
+    }
+    println!("# {}", spec.describe());
+    let stats = &record.stats;
     println!("{}", stats.summary());
     println!(
         "mem: l1={} l2={} miss={} (hops {:.2}) stall={} work={} overhead={}",
@@ -185,27 +254,35 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     );
     println!(
         "serial {} -> speedup {:.2}x | efficiency {:.1}% | events {} | host {:.1} ms",
-        fmt_time(serial.makespan),
-        speedup(&serial, &stats),
+        fmt_time(record.serial_makespan),
+        record.speedup,
         100.0 * stats.efficiency(),
         stats.sim_events,
         stats.wall_ms,
     );
-    if let Some(e) = &exec {
-        println!("pjrt kernel calls: {} (verified)", e.calls);
+    if stats.kernel_calls > 0 {
+        println!("pjrt kernel calls: {} (verified)", stats.kernel_calls);
     }
     Ok(())
 }
 
+/// `--cost`/`--topo` figure overrides applied onto a figure's sweep.
+fn figure_session_and_overrides(
+    flags: &HashMap<String, String>,
+) -> Result<(Session, Option<String>, Vec<(String, f64)>)> {
+    let cost = flags.get("cost").map(|c| parse_cost_pairs(c)).transpose()?.unwrap_or_default();
+    Ok((Session::new(), flags.get("topo").cloned(), cost))
+}
+
 fn cmd_figure(flags: &HashMap<String, String>) -> Result<()> {
-    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose().context("seed")?.unwrap_or(42);
     let size = flags
         .get("size")
         .map(|s| Size::from_name(s))
         .transpose()?
         .unwrap_or(Size::Medium);
-    let rt = build_runtime(flags, flags.get("topo").map(String::as_str).unwrap_or("x4600"))?;
-    let specs: Vec<harness::FigureSpec> = if flags.contains_key("all") {
+    let (session, topo, cost) = figure_session_and_overrides(flags)?;
+    let specs: Vec<harness::FigureSpec> = if bool_flag(flags, "all") {
         harness::figures()
     } else if let Some(id) = flags.get("id") {
         vec![harness::figure_by_id(id).with_context(|| format!("unknown figure '{id}'"))?]
@@ -216,31 +293,105 @@ fn cmd_figure(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(d) = &out_dir {
         std::fs::create_dir_all(d)?;
     }
+    let json = bool_flag(flags, "json");
+    let mut json_out = Vec::new();
     for mut spec in specs {
         spec.size = size;
+        let mut sweep = harness::sweep_for(&spec, seed);
+        if let Some(t) = &topo {
+            sweep.topo = t.clone();
+        }
+        sweep.cost = cost.clone();
         let t0 = std::time::Instant::now();
-        let table = harness::run_figure(&rt, &spec, seed)?;
-        let rep = harness::report(&spec, &table);
-        println!("{rep}");
-        println!("{}", table.to_ascii());
+        let result = session.run_sweep(&sweep)?;
+        let table = result.table();
+        if json {
+            json_out.push(result.to_json());
+        } else {
+            let rep = harness::report(&spec, &table);
+            println!("{rep}");
+            println!("{}", table.to_ascii());
+        }
         eprintln!("[{} took {:.1}s]", spec.id, t0.elapsed().as_secs_f64());
         if let Some(d) = &out_dir {
-            std::fs::write(format!("{d}/{}.md", spec.id), &rep)?;
+            std::fs::write(format!("{d}/{}.md", spec.id), harness::report(&spec, &table))?;
             std::fs::write(format!("{d}/{}.csv", spec.id), table.to_csv())?;
         }
+    }
+    if json {
+        print!("{}", Json::Arr(json_out).to_pretty());
     }
     Ok(())
 }
 
 fn cmd_gains(flags: &HashMap<String, String>) -> Result<()> {
-    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose().context("seed")?.unwrap_or(42);
     let size = flags
         .get("size")
         .map(|s| Size::from_name(s))
         .transpose()?
         .unwrap_or(Size::Medium);
-    let rt = build_runtime(flags, "x4600")?;
-    let table = harness::gains_summary(&rt, size, seed)?;
+    let session = match flags.get("cost") {
+        Some(spec) => {
+            let mut cm = CostModel::default();
+            numanos::config::parse_cost_overrides(&mut cm, spec)?;
+            Session::with_cost(cm)
+        }
+        None => Session::new(),
+    };
+    let table = harness::gains_summary_with(&session, size, seed)?;
     println!("{}", table.to_markdown());
+    Ok(())
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
+    let path = flags.get("manifest").context("sweep: need --manifest <file>")?;
+    let mut manifest = ExperimentManifest::load(Path::new(path))?;
+    if let Some(seed) = flags.get("seed") {
+        let seed: u64 = seed.parse().context("seed")?;
+        for s in &mut manifest.sweeps {
+            s.seeds = vec![seed];
+        }
+    }
+    let workers = if bool_flag(flags, "seq") {
+        1
+    } else if let Some(w) = flags.get("workers") {
+        w.parse::<usize>().context("workers")?.max(1)
+    } else {
+        default_workers()
+    };
+    let out_dir = flags.get("out").cloned();
+    if let Some(d) = &out_dir {
+        std::fs::create_dir_all(d)?;
+    }
+    let session = Session::new();
+    let json = bool_flag(flags, "json");
+    let mut json_sweeps = Vec::new();
+    for sweep in &manifest.sweeps {
+        let t0 = std::time::Instant::now();
+        let result = session.run_sweep_with(sweep, workers)?;
+        eprintln!(
+            "[sweep '{}': {} cells in {:.1}s on {workers} worker(s)]",
+            sweep.id,
+            result.records.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        if json {
+            json_sweeps.push(result.to_json());
+        } else {
+            println!("{}", result.table().to_markdown());
+        }
+        if let Some(d) = &out_dir {
+            std::fs::write(format!("{d}/{}.csv", sweep.id), result.to_csv())?;
+            std::fs::write(format!("{d}/{}.md", sweep.id), result.table().to_markdown())?;
+        }
+    }
+    if json {
+        let doc = Json::obj([
+            ("title", Json::from(manifest.title.as_str())),
+            ("sweeps", Json::Arr(json_sweeps)),
+        ]);
+        print!("{}", doc.to_pretty());
+    }
     Ok(())
 }

@@ -1,237 +1,19 @@
 //! Artifact manifest (`artifacts/manifest.json`) — signatures for shape
 //! checking before feeding literals to PJRT.
 //!
-//! The vendored dependency set has no serde, so this module carries a
-//! small self-contained JSON parser (objects, arrays, strings, numbers,
-//! bools, null — no unicode escapes beyond BMP, which the manifest never
-//! uses).  Parsing failures degrade gracefully: the engine simply skips
-//! signature validation.
+//! The JSON parsing that used to live here moved to [`crate::serde`]
+//! (shared with the experiment-spec layer); this module keeps the
+//! manifest model.  Parsing failures degrade gracefully: the engine
+//! simply skips signature validation.
 
 use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+pub use crate::serde::Json;
+
 use super::Buf;
-
-// ---------------------------------------------------------------------------
-// Minimal JSON value + parser
-// ---------------------------------------------------------------------------
-
-/// A parsed JSON value.
-#[derive(Clone, Debug, PartialEq)]
-pub enum Json {
-    Null,
-    Bool(bool),
-    Num(f64),
-    Str(String),
-    Arr(Vec<Json>),
-    Obj(HashMap<String, Json>),
-}
-
-impl Json {
-    pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
-        p.skip_ws();
-        let v = p.value()?;
-        p.skip_ws();
-        if p.pos != p.bytes.len() {
-            bail!("trailing garbage at byte {}", p.pos);
-        }
-        Ok(v)
-    }
-
-    pub fn get(&self, key: &str) -> Option<&Json> {
-        match self {
-            Json::Obj(m) => m.get(key),
-            _ => None,
-        }
-    }
-
-    pub fn as_arr(&self) -> Option<&[Json]> {
-        match self {
-            Json::Arr(v) => Some(v),
-            _ => None,
-        }
-    }
-
-    pub fn as_str(&self) -> Option<&str> {
-        match self {
-            Json::Str(s) => Some(s),
-            _ => None,
-        }
-    }
-
-    pub fn as_num(&self) -> Option<f64> {
-        match self {
-            Json::Num(n) => Some(*n),
-            _ => None,
-        }
-    }
-}
-
-struct Parser<'a> {
-    bytes: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Parser<'a> {
-    fn skip_ws(&mut self) {
-        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
-            self.pos += 1;
-        }
-    }
-
-    fn peek(&self) -> Option<u8> {
-        self.bytes.get(self.pos).copied()
-    }
-
-    fn expect(&mut self, b: u8) -> Result<()> {
-        if self.peek() == Some(b) {
-            self.pos += 1;
-            Ok(())
-        } else {
-            bail!("expected '{}' at byte {}", b as char, self.pos)
-        }
-    }
-
-    fn value(&mut self) -> Result<Json> {
-        self.skip_ws();
-        match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b't') => self.lit("true", Json::Bool(true)),
-            Some(b'f') => self.lit("false", Json::Bool(false)),
-            Some(b'n') => self.lit("null", Json::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
-        }
-    }
-
-    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
-        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
-            self.pos += word.len();
-            Ok(v)
-        } else {
-            bail!("bad literal at byte {}", self.pos)
-        }
-    }
-
-    fn number(&mut self) -> Result<Json> {
-        let start = self.pos;
-        while let Some(c) = self.peek() {
-            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
-                self.pos += 1;
-            } else {
-                break;
-            }
-        }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
-        Ok(Json::Num(s.parse::<f64>().with_context(|| format!("bad number '{s}'"))?))
-    }
-
-    fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
-        let mut out = String::new();
-        loop {
-            match self.peek() {
-                None => bail!("unterminated string"),
-                Some(b'"') => {
-                    self.pos += 1;
-                    return Ok(out);
-                }
-                Some(b'\\') => {
-                    self.pos += 1;
-                    match self.peek() {
-                        Some(b'n') => out.push('\n'),
-                        Some(b't') => out.push('\t'),
-                        Some(b'r') => out.push('\r'),
-                        Some(b'"') => out.push('"'),
-                        Some(b'\\') => out.push('\\'),
-                        Some(b'/') => out.push('/'),
-                        Some(b'u') => {
-                            let hex = std::str::from_utf8(
-                                self.bytes
-                                    .get(self.pos + 1..self.pos + 5)
-                                    .context("short \\u escape")?,
-                            )?;
-                            let cp = u32::from_str_radix(hex, 16)?;
-                            out.push(char::from_u32(cp).context("bad codepoint")?);
-                            self.pos += 4;
-                        }
-                        other => bail!("bad escape {:?}", other.map(|c| c as char)),
-                    }
-                    self.pos += 1;
-                }
-                Some(_) => {
-                    // consume one UTF-8 scalar
-                    let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
-                    let ch = rest.chars().next().unwrap();
-                    out.push(ch);
-                    self.pos += ch.len_utf8();
-                }
-            }
-        }
-    }
-
-    fn array(&mut self) -> Result<Json> {
-        self.expect(b'[')?;
-        let mut items = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.pos += 1;
-            return Ok(Json::Arr(items));
-        }
-        loop {
-            items.push(self.value()?);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => {
-                    self.pos += 1;
-                }
-                Some(b']') => {
-                    self.pos += 1;
-                    return Ok(Json::Arr(items));
-                }
-                other => bail!("expected , or ] got {:?}", other.map(|c| c as char)),
-            }
-        }
-    }
-
-    fn object(&mut self) -> Result<Json> {
-        self.expect(b'{')?;
-        let mut map = HashMap::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.pos += 1;
-            return Ok(Json::Obj(map));
-        }
-        loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.skip_ws();
-            self.expect(b':')?;
-            let val = self.value()?;
-            map.insert(key, val);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => {
-                    self.pos += 1;
-                }
-                Some(b'}') => {
-                    self.pos += 1;
-                    return Ok(Json::Obj(map));
-                }
-                other => bail!("expected , or }} got {:?}", other.map(|c| c as char)),
-            }
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Manifest model
-// ---------------------------------------------------------------------------
 
 /// Dtype of a tensor in the manifest.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -397,6 +179,7 @@ mod tests {
         let p = m.get("priority_f32_16").unwrap();
         assert_eq!(p.inputs[0].dtype, Dtype::I32);
         assert_eq!(p.outputs.len(), 2);
+        assert_eq!(m.names(), vec!["matmul_f32_128", "priority_f32_16"]);
     }
 
     #[test]
@@ -422,35 +205,8 @@ mod tests {
     }
 
     #[test]
-    fn json_scalars() {
-        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
-        assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
-        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
-        assert_eq!(Json::parse("null").unwrap(), Json::Null);
-        assert_eq!(Json::parse(r#""a\nb""#).unwrap(), Json::Str("a\nb".into()));
-        assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
-    }
-
-    #[test]
-    fn json_rejects_garbage() {
-        assert!(Json::parse("{").is_err());
-        assert!(Json::parse("[1,]").is_err());
-        assert!(Json::parse("{}x").is_err());
-        assert!(Json::parse(r#"{"a" 1}"#).is_err());
-    }
-
-    #[test]
-    fn json_nested() {
-        let v = Json::parse(r#"{"a": [1, {"b": "c"}], "d": {}}"#).unwrap();
-        assert_eq!(
-            v.get("a").unwrap().as_arr().unwrap()[1].get("b").unwrap().as_str(),
-            Some("c")
-        );
-    }
-
-    #[test]
-    fn empty_containers() {
-        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
-        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
+    fn bad_manifest_is_an_error_not_a_panic() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
     }
 }

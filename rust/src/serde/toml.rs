@@ -1,0 +1,480 @@
+//! TOML-subset parser lowering onto the [`Json`](super::Json) tree.
+//!
+//! Covers what experiment manifests need — and nothing more:
+//!
+//! * `key = value` pairs with bare, quoted, or dotted keys;
+//! * basic (`"…"`, with escapes) and literal (`'…'`) strings;
+//! * integers (with `_` separators), floats, booleans;
+//! * arrays, including multi-line and nested ones, with trailing commas;
+//! * inline tables `{ k = v, … }`;
+//! * `[table]` and `[[array-of-tables]]` headers, with dotted paths
+//!   (a path segment that is an array of tables resolves to its last
+//!   element, as in real TOML);
+//! * `#` comments.
+//!
+//! Unsupported (errors, never silent misparses): multi-line strings,
+//! dates/times.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::Json;
+
+/// Parse a TOML document into a [`Json::Obj`] tree.
+pub fn parse(text: &str) -> Result<Json> {
+    let mut root = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    let mut lines = text.lines().enumerate().peekable();
+    while let Some((lineno, raw)) = lines.next() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err_ctx = || format!("TOML line {}", lineno + 1);
+
+        if let Some(inner) = line.strip_prefix("[[") {
+            let path_str = inner.strip_suffix("]]").with_context(err_ctx).context("expected ]]")?;
+            let path = parse_key_path(path_str).with_context(err_ctx)?;
+            let (last, parents) = path.split_last().context("empty table path")?;
+            let parent = navigate(&mut root, parents).with_context(err_ctx)?;
+            match parent.entry(last.clone()).or_insert_with(|| Json::Arr(Vec::new())) {
+                Json::Arr(items) => items.push(Json::Obj(BTreeMap::new())),
+                _ => bail!("{}: [[{path_str}]] conflicts with a non-array value", err_ctx()),
+            }
+            current_path = path;
+        } else if let Some(inner) = line.strip_prefix('[') {
+            let path_str = inner.strip_suffix(']').with_context(err_ctx).context("expected ]")?;
+            let path = parse_key_path(path_str).with_context(err_ctx)?;
+            navigate(&mut root, &path).with_context(err_ctx)?;
+            current_path = path;
+        } else {
+            // key = value (value may continue over following lines while
+            // brackets stay open)
+            let eq = find_unquoted(&line, '=').with_context(err_ctx).context("expected key = value")?;
+            let key_part = line[..eq].trim().to_string();
+            let mut value_part = line[eq + 1..].trim().to_string();
+            while bracket_balance(&value_part)? > 0 {
+                let (_, cont) = lines.next().with_context(err_ctx).context("unclosed array")?;
+                value_part.push('\n');
+                value_part.push_str(strip_comment(cont).trim_end());
+            }
+            let key_path = parse_key_path(&key_part).with_context(err_ctx)?;
+            let value = parse_value_str(value_part.trim()).with_context(err_ctx)?;
+
+            let full: Vec<String> =
+                current_path.iter().chain(key_path.iter()).cloned().collect();
+            let (last, parents) = full.split_last().unwrap();
+            let table = navigate(&mut root, parents).with_context(err_ctx)?;
+            if table.insert(last.clone(), value).is_some() {
+                bail!("{}: duplicate key '{last}'", err_ctx());
+            }
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Walk (creating as needed) to the table at `path`; an array-of-tables
+/// segment resolves to its last element.
+fn navigate<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>> {
+    let mut cur = root;
+    for seg in path {
+        let next = cur.entry(seg.clone()).or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match next {
+            Json::Obj(m) => m,
+            Json::Arr(items) => match items.last_mut() {
+                Some(Json::Obj(m)) => m,
+                _ => bail!("path segment '{seg}' is not a table array"),
+            },
+            _ => bail!("path segment '{seg}' is not a table"),
+        };
+    }
+    Ok(cur)
+}
+
+/// `a.b."c d"` → ["a", "b", "c d"].
+fn parse_key_path(s: &str) -> Result<Vec<String>> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty key");
+    }
+    let mut out = Vec::new();
+    let mut chars = s.chars().peekable();
+    loop {
+        let seg = match chars.peek() {
+            Some('"') | Some('\'') => {
+                let quote = chars.next().unwrap();
+                let mut seg = String::new();
+                loop {
+                    match chars.next() {
+                        None => bail!("unterminated quoted key"),
+                        Some(c) if c == quote => break,
+                        Some(c) => seg.push(c),
+                    }
+                }
+                seg
+            }
+            _ => {
+                let mut seg = String::new();
+                while let Some(&c) = chars.peek() {
+                    if c == '.' {
+                        break;
+                    }
+                    if !(c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+                        bail!("bad character '{c}' in bare key '{s}'");
+                    }
+                    seg.push(c);
+                    chars.next();
+                }
+                if seg.is_empty() {
+                    bail!("empty key segment in '{s}'");
+                }
+                seg
+            }
+        };
+        out.push(seg);
+        match chars.next() {
+            None => return Ok(out),
+            Some('.') => continue,
+            Some(c) => bail!("unexpected '{c}' after key segment"),
+        }
+    }
+}
+
+/// Remove a `#` comment, honouring strings (including `\"` escapes).
+fn strip_comment(line: &str) -> &str {
+    let mut quote: Option<char> = None;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        if escaped {
+            escaped = false;
+            continue;
+        }
+        match (quote, c) {
+            (None, '#') => return &line[..i],
+            (None, '"') | (None, '\'') => quote = Some(c),
+            (Some('"'), '\\') => escaped = true,
+            (Some(q), c) if c == q => quote = None,
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Net `[`/`{` depth outside strings (for multi-line array detection).
+fn bracket_balance(s: &str) -> Result<i32> {
+    let mut depth = 0i32;
+    let mut quote: Option<char> = None;
+    let mut escaped = false;
+    for c in s.chars() {
+        if let Some(q) = quote {
+            if escaped {
+                escaped = false;
+            } else if q == '"' && c == '\\' {
+                escaped = true;
+            } else if c == q {
+                quote = None;
+            }
+            continue;
+        }
+        match c {
+            '"' | '\'' => quote = Some(c),
+            '[' | '{' => depth += 1,
+            ']' | '}' => depth -= 1,
+            _ => {}
+        }
+    }
+    if quote.is_some() {
+        bail!("unterminated string");
+    }
+    Ok(depth)
+}
+
+/// First unquoted occurrence of `needle`.
+fn find_unquoted(s: &str, needle: char) -> Option<usize> {
+    let mut quote: Option<char> = None;
+    for (i, c) in s.char_indices() {
+        match (quote, c) {
+            (None, c) if c == needle => return Some(i),
+            (None, '"') | (None, '\'') => quote = Some(c),
+            (Some(q), c) if c == q => quote = None,
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_value_str(s: &str) -> Result<Json> {
+    let mut cur = Cursor { chars: s.chars().collect(), pos: 0 };
+    let v = cur.value()?;
+    cur.skip_ws();
+    if cur.pos != cur.chars.len() {
+        bail!("trailing garbage after value in '{s}'");
+    }
+    Ok(v)
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    pos: usize,
+}
+
+impl Cursor {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(c) if c.is_whitespace()) {
+            self.pos += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            None => bail!("missing value"),
+            Some('"') => self.basic_string(),
+            Some('\'') => self.literal_string(),
+            Some('[') => self.array(),
+            Some('{') => self.inline_table(),
+            Some(c) if c.is_ascii_alphabetic() => self.keyword(),
+            Some(_) => self.number(),
+        }
+    }
+
+    fn keyword(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while matches!(self.peek(), Some(c) if c.is_ascii_alphabetic()) {
+            self.pos += 1;
+        }
+        let word: String = self.chars[start..self.pos].iter().collect();
+        match word.as_str() {
+            "true" => Ok(Json::Bool(true)),
+            "false" => Ok(Json::Bool(false)),
+            other => bail!("unsupported TOML value '{other}'"),
+        }
+    }
+
+    fn basic_string(&mut self) -> Result<Json> {
+        self.pos += 1; // opening quote
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string"),
+                Some('"') => {
+                    self.pos += 1;
+                    return Ok(Json::Str(out));
+                }
+                Some('\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some('n') => out.push('\n'),
+                        Some('t') => out.push('\t'),
+                        Some('r') => out.push('\r'),
+                        Some('"') => out.push('"'),
+                        Some('\\') => out.push('\\'),
+                        Some('u') => {
+                            let hex: String = self
+                                .chars
+                                .get(self.pos + 1..self.pos + 5)
+                                .context("short \\u escape")?
+                                .iter()
+                                .collect();
+                            let cp = u32::from_str_radix(&hex, 16)?;
+                            out.push(char::from_u32(cp).context("bad codepoint")?);
+                            self.pos += 4;
+                        }
+                        other => bail!("bad escape {other:?}"),
+                    }
+                    self.pos += 1;
+                }
+                Some(c) => {
+                    out.push(c);
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+
+    fn literal_string(&mut self) -> Result<Json> {
+        self.pos += 1;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated literal string"),
+                Some('\'') => {
+                    self.pos += 1;
+                    return Ok(Json::Str(out));
+                }
+                Some(c) => {
+                    out.push(c);
+                    self.pos += 1;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E' | '_')
+        ) {
+            self.pos += 1;
+        }
+        let raw: String =
+            self.chars[start..self.pos].iter().filter(|&&c| c != '_').collect();
+        Ok(Json::Num(raw.parse::<f64>().with_context(|| format!("bad number '{raw}'"))?))
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.pos += 1; // [
+        let mut items = Vec::new();
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                None => bail!("unterminated array"),
+                Some(']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => {
+                    items.push(self.value()?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(',') => {
+                            self.pos += 1;
+                        }
+                        Some(']') => {}
+                        other => bail!("expected , or ] got {other:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    fn inline_table(&mut self) -> Result<Json> {
+        self.pos += 1; // {
+        let mut map = BTreeMap::new();
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                None => bail!("unterminated inline table"),
+                Some('}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                _ => {
+                    let key_start = self.pos;
+                    while matches!(self.peek(), Some(c) if c != '=') {
+                        self.pos += 1;
+                    }
+                    let key: String =
+                        self.chars[key_start..self.pos].iter().collect::<String>().trim().to_string();
+                    if key.is_empty() {
+                        bail!("empty key in inline table");
+                    }
+                    self.pos += 1; // =
+                    let val = self.value()?;
+                    map.insert(key, val);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(',') => {
+                            self.pos += 1;
+                        }
+                        Some('}') => {}
+                        other => bail!("expected , or }} got {other:?}"),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_tables() {
+        let t = parse(
+            "title = \"demo\" # comment\n\
+             count = 42\n\
+             ratio = 2.5\n\
+             big = 1_000\n\
+             on = true\n\
+             [defaults]\n\
+             size = 'small'\n",
+        )
+        .unwrap();
+        assert_eq!(t.get("title").unwrap().as_str(), Some("demo"));
+        assert_eq!(t.get("count").unwrap().as_u64(), Some(42));
+        assert_eq!(t.get("ratio").unwrap().as_num(), Some(2.5));
+        assert_eq!(t.get("big").unwrap().as_u64(), Some(1000));
+        assert_eq!(t.get("on").unwrap().as_bool(), Some(true));
+        assert_eq!(t.get("defaults").unwrap().get("size").unwrap().as_str(), Some("small"));
+    }
+
+    #[test]
+    fn array_of_tables_and_multiline_arrays() {
+        let t = parse(
+            "[[sweeps]]\n\
+             id = \"a\"\n\
+             threads = [\n  2, 4, # inline comment\n  8,\n]\n\
+             [sweeps.cost]\n\
+             dram_base_ns = 100\n\
+             [[sweeps]]\n\
+             id = \"b\"\n\
+             bench = [\"fft\", \"sort\"]\n",
+        )
+        .unwrap();
+        let sweeps = t.get("sweeps").unwrap().as_arr().unwrap();
+        assert_eq!(sweeps.len(), 2);
+        assert_eq!(sweeps[0].get("id").unwrap().as_str(), Some("a"));
+        let threads: Vec<u64> = sweeps[0]
+            .get("threads")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_u64().unwrap())
+            .collect();
+        assert_eq!(threads, vec![2, 4, 8]);
+        assert_eq!(
+            sweeps[0].get("cost").unwrap().get("dram_base_ns").unwrap().as_u64(),
+            Some(100)
+        );
+        assert_eq!(sweeps[1].get("bench").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn inline_tables_and_dotted_keys() {
+        let t = parse("cost = { dram_base_ns = 100, hop_penalty_ns = 40 }\na.b = 1\n").unwrap();
+        assert_eq!(
+            t.get("cost").unwrap().get("hop_penalty_ns").unwrap().as_u64(),
+            Some(40)
+        );
+        assert_eq!(t.get("a").unwrap().get("b").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(parse("key").is_err());
+        assert!(parse("k = [1, 2").is_err());
+        assert!(parse("k = 1\nk = 2").is_err());
+        assert!(parse("k = 1979-05-27").is_err());
+        assert!(parse("bad key = 1").is_err());
+    }
+
+    #[test]
+    fn strings_with_hash_and_quotes() {
+        let t = parse("a = \"x # not a comment\"\nb = 'lit \\n raw'\n").unwrap();
+        assert_eq!(t.get("a").unwrap().as_str(), Some("x # not a comment"));
+        assert_eq!(t.get("b").unwrap().as_str(), Some("lit \\n raw"));
+    }
+}

@@ -1,0 +1,239 @@
+//! Experiment manifests: a JSON or TOML file describing named sweeps.
+//!
+//! ```toml
+//! title = "thread sweep with a slow-DRAM ablation"
+//!
+//! [defaults]
+//! size = "small"
+//! topo = "x4600"
+//! seeds = [1]
+//!
+//! [[sweeps]]
+//! id = "stock-vs-numa"
+//! bench = ["fft", "sort"]
+//! sched = ["wf", "cilk"]
+//! bind = ["linear", "numa"]
+//! threads = [2, 8, 16]
+//!
+//! [[sweeps]]
+//! id = "slow-dram"
+//! bench = ["fft"]
+//! configs = [["dfwspt", "numa"], ["dfwsrpt", "numa"]]
+//! threads = [16]
+//! [sweeps.cost]
+//! dram_base_ns = 200
+//! ```
+//!
+//! The same structure works in JSON (`{"title": …, "defaults": {…},
+//! "sweeps": [{…}]}`); `numanos sweep --manifest <file>` picks the parser
+//! by extension (`.toml` vs everything-else-is-JSON).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Size;
+use crate::serde::{toml, Json};
+use crate::spec::sweep::{Sweep, SweepDefaults};
+use crate::spec::{cost_from_json, RunSpec};
+
+/// A named collection of sweeps loaded from one file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentManifest {
+    pub title: String,
+    pub sweeps: Vec<Sweep>,
+}
+
+impl ExperimentManifest {
+    /// Load from disk, picking the parser by file extension.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let root = if path.extension().and_then(|e| e.to_str()) == Some("toml") {
+            toml::parse(&text).with_context(|| format!("parsing TOML {}", path.display()))?
+        } else {
+            Json::parse(&text).with_context(|| format!("parsing JSON {}", path.display()))?
+        };
+        Self::from_json(&root).with_context(|| format!("manifest {}", path.display()))
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        Self::from_json(&toml::parse(text)?)
+    }
+
+    pub fn from_json(root: &Json) -> Result<Self> {
+        let obj = root.as_obj().context("manifest must be an object")?;
+        let mut title = String::new();
+        let mut defaults = SweepDefaults::default();
+        let mut sweeps_json: Option<&[Json]> = None;
+        let mut unknown = Vec::new();
+        for (key, val) in obj {
+            match key.as_str() {
+                "title" => title = val.as_str().context("title must be a string")?.to_string(),
+                "defaults" => defaults = parse_defaults(val)?,
+                "sweeps" => {
+                    sweeps_json = Some(val.as_arr().context("sweeps must be an array")?)
+                }
+                _ => unknown.push(key.clone()),
+            }
+        }
+        if !unknown.is_empty() {
+            bail!(
+                "unknown manifest key(s): {} (allowed: title defaults sweeps)",
+                unknown.join(", ")
+            );
+        }
+        let sweeps_json = sweeps_json.context("manifest missing 'sweeps'")?;
+        if sweeps_json.is_empty() {
+            bail!("manifest has an empty 'sweeps' list");
+        }
+        let mut sweeps = Vec::with_capacity(sweeps_json.len());
+        let mut seen_ids = Vec::new();
+        for (i, sj) in sweeps_json.iter().enumerate() {
+            let sweep =
+                Sweep::from_json(sj, &defaults).with_context(|| format!("sweeps[{i}]"))?;
+            if seen_ids.contains(&sweep.id) {
+                bail!("duplicate sweep id '{}'", sweep.id);
+            }
+            seen_ids.push(sweep.id.clone());
+            sweeps.push(sweep);
+        }
+        Ok(Self { title, sweeps })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("title", Json::from(self.title.as_str())),
+            ("sweeps", Json::Arr(self.sweeps.iter().map(Sweep::to_json).collect())),
+        ])
+    }
+
+    /// Every cell across every sweep (validated), for sizing/reporting.
+    pub fn all_cells(&self) -> Result<Vec<RunSpec>> {
+        let mut out = Vec::new();
+        for s in &self.sweeps {
+            out.extend(s.cells()?);
+        }
+        Ok(out)
+    }
+}
+
+fn parse_defaults(v: &Json) -> Result<SweepDefaults> {
+    let obj = v.as_obj().context("defaults must be an object")?;
+    let mut d = SweepDefaults::default();
+    let mut unknown = Vec::new();
+    for (key, val) in obj {
+        match key.as_str() {
+            "size" => d.size = Size::from_name(val.as_str().context("defaults.size")?)?,
+            "topo" => d.topo = val.as_str().context("defaults.topo")?.to_string(),
+            "threads" => {
+                d.threads = val
+                    .as_arr()
+                    .context("defaults.threads must be an array")?
+                    .iter()
+                    .map(|t| t.as_usize().context("defaults.threads entries"))
+                    .collect::<Result<_>>()?
+            }
+            "seeds" | "seed" => {
+                d.seeds = crate::spec::sweep::num_list(val, "defaults.seeds")?
+            }
+            "cost" => d.cost = cost_from_json(val)?,
+            _ => unknown.push(key.clone()),
+        }
+    }
+    if !unknown.is_empty() {
+        bail!(
+            "unknown defaults key(s): {} (allowed: size topo threads seeds cost)",
+            unknown.join(", ")
+        );
+    }
+    Ok(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::binding::BindPolicy;
+    use crate::coordinator::sched::Policy;
+
+    const JSON: &str = r#"{
+      "title": "demo",
+      "defaults": {"size": "small", "seeds": [1, 2]},
+      "sweeps": [
+        {"id": "a", "bench": "fib", "sched": ["wf"], "bind": ["linear", "numa"],
+         "threads": [2, 4]},
+        {"id": "b", "bench": ["fft"], "configs": [["dfwspt", "numa"]],
+         "threads": [8], "seed": 9, "cost": {"dram_base_ns": 120}}
+      ]
+    }"#;
+
+    const TOML: &str = "\
+title = \"demo\"\n\
+\n\
+[defaults]\n\
+size = \"small\"\n\
+seeds = [1, 2]\n\
+\n\
+[[sweeps]]\n\
+id = \"a\"\n\
+bench = \"fib\"\n\
+sched = [\"wf\"]\n\
+bind = [\"linear\", \"numa\"]\n\
+threads = [2, 4]\n\
+\n\
+[[sweeps]]\n\
+id = \"b\"\n\
+bench = [\"fft\"]\n\
+configs = [[\"dfwspt\", \"numa\"]]\n\
+threads = [8]\n\
+seed = 9\n\
+\n\
+[sweeps.cost]\n\
+dram_base_ns = 120\n\
+";
+
+    #[test]
+    fn json_manifest_parses() {
+        let m = ExperimentManifest::from_json_str(JSON).unwrap();
+        assert_eq!(m.title, "demo");
+        assert_eq!(m.sweeps.len(), 2);
+        let a = &m.sweeps[0];
+        assert_eq!(a.size, Size::Small, "defaults apply");
+        assert_eq!(a.seeds, vec![1, 2], "defaults apply");
+        assert_eq!(a.configs.len(), 2);
+        let b = &m.sweeps[1];
+        assert_eq!(b.seeds, vec![9], "sweep overrides defaults");
+        assert_eq!(b.configs, vec![(Policy::Dfwspt, BindPolicy::NumaAware)]);
+        assert_eq!(b.cost, vec![("dram_base_ns".to_string(), 120.0)]);
+        assert_eq!(m.all_cells().unwrap().len(), 8 + 1, "2 configs × 2 seeds × 2 threads, + 1");
+    }
+
+    #[test]
+    fn toml_and_json_manifests_agree() {
+        let j = ExperimentManifest::from_json_str(JSON).unwrap();
+        let t = ExperimentManifest::from_toml_str(TOML).unwrap();
+        assert_eq!(j, t);
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_its_own_json() {
+        let m = ExperimentManifest::from_json_str(JSON).unwrap();
+        let back = ExperimentManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn errors_name_the_problem() {
+        assert!(ExperimentManifest::from_json_str("{}").unwrap_err().to_string().contains("sweeps"));
+        let dup = r#"{"sweeps": [{"id": "x", "bench": "fib"}, {"id": "x", "bench": "fib"}]}"#;
+        assert!(format!("{:#}", ExperimentManifest::from_json_str(dup).unwrap_err())
+            .contains("duplicate"));
+        let unk = r#"{"sweeps": [{"id": "x", "bench": "fib"}], "extra": 1}"#;
+        assert!(format!("{:#}", ExperimentManifest::from_json_str(unk).unwrap_err())
+            .contains("extra"));
+    }
+}

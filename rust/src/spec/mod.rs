@@ -1,0 +1,605 @@
+//! Declarative run specifications — the experiment API.
+//!
+//! The paper's evaluation is a grid of (benchmark × scheduler × binding ×
+//! threads × topology) runs.  This module makes that grid *data*:
+//!
+//! * [`RunSpec`] — one fully-described run, buildable fluently
+//!   (`RunSpec::builder().bench("fft").policy(Policy::Dfwspt).numa()
+//!   .threads(16).build()?`), validated eagerly, and (de)serializable
+//!   to/from JSON and TOML through [`crate::serde`];
+//! * [`Session`](session::Session) — owns runtimes and memoized serial
+//!   baselines, executes single specs and whole sweeps (cells in parallel
+//!   across OS threads, deterministically);
+//! * [`Sweep`](sweep::Sweep) — a cross-product of spec axes (the paper
+//!   figures are sweeps, not launch code);
+//! * [`ExperimentManifest`](manifest::ExperimentManifest) — a JSON/TOML
+//!   file holding named sweeps (`numanos sweep --manifest exp.json`).
+
+pub mod manifest;
+pub mod session;
+pub mod sweep;
+
+pub use manifest::ExperimentManifest;
+pub use session::{RunRecord, Session};
+pub use sweep::{Sweep, SweepResult};
+
+use anyhow::{bail, Context, Result};
+
+use crate::bots;
+use crate::config::{apply_cost_override, ComputeMode, Size};
+use crate::coordinator::binding::BindPolicy;
+use crate::coordinator::sched::Policy;
+use crate::serde::Json;
+use crate::simnuma::CostModel;
+use crate::topology::Topology;
+
+/// How threads map onto cores: a named policy, or an explicit pinning.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BindSpec {
+    /// One of the named §IV policies (`linear` / `numa`).
+    Policy(BindPolicy),
+    /// Explicit thread→core list (thread 0 = master) — the ablation
+    /// surface `Runtime::run_bound` used to expose positionally.
+    Cores(Vec<usize>),
+}
+
+impl BindSpec {
+    /// Short name for describe lines and CSV cells.
+    pub fn name(&self) -> String {
+        match self {
+            BindSpec::Policy(b) => b.name().to_string(),
+            BindSpec::Cores(cores) => {
+                let list: Vec<String> = cores.iter().map(|c| c.to_string()).collect();
+                format!("cores:{}", list.join("+"))
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            BindSpec::Policy(b) => Json::from(b.name()),
+            BindSpec::Cores(cores) => {
+                Json::Arr(cores.iter().map(|&c| Json::from(c)).collect())
+            }
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        match j {
+            Json::Str(s) => Ok(BindSpec::Policy(BindPolicy::from_name(s)?)),
+            Json::Arr(items) => {
+                let cores = items
+                    .iter()
+                    .map(|v| v.as_usize().context("bind core list entries must be integers"))
+                    .collect::<Result<Vec<usize>>>()?;
+                Ok(BindSpec::Cores(cores))
+            }
+            other => bail!("bind must be a policy name or a core list, got {other:?}"),
+        }
+    }
+}
+
+/// One fully specified, validated run — the unit every execution path
+/// (CLI, figures, sweeps, manifests) now goes through.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    pub bench: String,
+    pub size: Size,
+    pub policy: Policy,
+    pub bind: BindSpec,
+    pub threads: usize,
+    pub topo: String,
+    pub seed: u64,
+    pub compute: ComputeMode,
+    pub artifact_dir: String,
+    /// Cost-model overrides applied on top of the session's base model,
+    /// in order (`[("dram_base_ns", 100.0), …]`).
+    pub cost: Vec<(String, f64)>,
+    /// With [`BindSpec::Cores`]: whether per-thread runtime pages are
+    /// first-touched locally (§IV) or all by the master.
+    pub rtdata_local: bool,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        Self {
+            bench: "fft".into(),
+            size: Size::Medium,
+            policy: Policy::WorkFirst,
+            bind: BindSpec::Policy(BindPolicy::Linear),
+            threads: 16,
+            topo: "x4600".into(),
+            seed: 42,
+            compute: ComputeMode::Sim,
+            artifact_dir: "artifacts".into(),
+            cost: Vec::new(),
+            rtdata_local: true,
+        }
+    }
+}
+
+/// Format an override value the way the CLI accepts it back.
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl RunSpec {
+    pub fn builder() -> RunSpecBuilder {
+        RunSpecBuilder::default()
+    }
+
+    /// Human-readable one-liner (the CLI's `# …` header).
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "bench={} size={} sched={} bind={} threads={} topo={} seed={} compute={}",
+            self.bench,
+            self.size.name(),
+            self.policy.name(),
+            self.bind.name(),
+            self.threads,
+            self.topo,
+            self.seed,
+            match self.compute {
+                ComputeMode::Sim => "sim",
+                ComputeMode::Pjrt => "pjrt",
+            },
+        );
+        if !self.cost.is_empty() {
+            s.push_str(&format!(" cost={}", self.cost_sig()));
+        }
+        s
+    }
+
+    /// Paper-legend style config label (`wf-Scheduler-NUMA`).
+    pub fn label(&self) -> String {
+        let sched = match self.policy {
+            Policy::Serial => return "serial".into(),
+            p => format!("{}-Scheduler", p.name()),
+        };
+        match &self.bind {
+            BindSpec::Policy(BindPolicy::NumaAware) => format!("{sched}-NUMA"),
+            BindSpec::Policy(BindPolicy::Linear) => sched,
+            BindSpec::Cores(_) => format!("{sched}-pinned"),
+        }
+    }
+
+    /// Canonical cost-override signature (cache keys, describe lines).
+    pub fn cost_sig(&self) -> String {
+        let parts: Vec<String> =
+            self.cost.iter().map(|(k, v)| format!("{k}={}", fmt_num(*v))).collect();
+        parts.join(",")
+    }
+
+    /// The cost model this spec runs under: `base` + overrides.
+    pub fn cost_model(&self, base: &CostModel) -> Result<CostModel> {
+        let mut cm = base.clone();
+        for (k, v) in &self.cost {
+            apply_cost_override(&mut cm, k, &fmt_num(*v))?;
+        }
+        Ok(cm)
+    }
+
+    /// Check every axis; all construction paths (builder, JSON/TOML,
+    /// CLI flags) funnel through this before a spec can run.
+    pub fn validate(&self) -> Result<()> {
+        let topo = Topology::by_name(&self.topo)?;
+        self.validate_against(&topo)
+    }
+
+    /// Like [`RunSpec::validate`], but against an already-resolved
+    /// topology (sessions may carry adopted non-preset topologies).
+    pub fn validate_against(&self, topo: &Topology) -> Result<()> {
+        if !bots::NAMES.contains(&self.bench.as_str()) {
+            bail!("unknown benchmark '{}' (see `numanos list`)", self.bench);
+        }
+        if self.threads < 1 || self.threads > topo.num_cores() {
+            bail!(
+                "threads={} out of range 1..={} for topology '{}'",
+                self.threads,
+                topo.num_cores(),
+                self.topo
+            );
+        }
+        if self.policy == Policy::Serial && self.threads != 1 {
+            bail!("the serial policy is the 1-thread baseline; got threads={}", self.threads);
+        }
+        if let BindSpec::Cores(cores) = &self.bind {
+            if cores.is_empty() {
+                bail!("explicit core list is empty");
+            }
+            if cores.len() != self.threads {
+                bail!("{} cores bound but threads={}", cores.len(), self.threads);
+            }
+            let mut seen = vec![false; topo.num_cores()];
+            for &c in cores {
+                if c >= topo.num_cores() {
+                    bail!("core {c} out of range for topology '{}'", self.topo);
+                }
+                if seen[c] {
+                    bail!("core {c} bound twice");
+                }
+                seen[c] = true;
+            }
+        }
+        // cost keys/values must be applicable
+        self.cost_model(&CostModel::default())?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(String, Json)> = vec![
+            ("bench".into(), Json::from(self.bench.as_str())),
+            ("size".into(), Json::from(self.size.name())),
+            ("sched".into(), Json::from(self.policy.name())),
+            ("bind".into(), self.bind.to_json()),
+            ("threads".into(), Json::from(self.threads)),
+            ("topo".into(), Json::from(self.topo.as_str())),
+            ("seed".into(), Json::from_u64_lossless(self.seed)),
+            (
+                "compute".into(),
+                Json::from(match self.compute {
+                    ComputeMode::Sim => "sim",
+                    ComputeMode::Pjrt => "pjrt",
+                }),
+            ),
+        ];
+        if !self.cost.is_empty() {
+            pairs.push((
+                "cost".into(),
+                Json::obj(self.cost.iter().map(|(k, v)| (k.clone(), Json::from(*v)))),
+            ));
+        }
+        if self.artifact_dir != "artifacts" {
+            pairs.push(("artifacts".into(), Json::from(self.artifact_dir.as_str())));
+        }
+        if !self.rtdata_local {
+            pairs.push(("rtdata_local".into(), Json::from(false)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_pretty()
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.as_obj().context("RunSpec must be an object")?;
+        let mut b = RunSpecBuilder::default();
+        let mut unknown = Vec::new();
+        for (key, val) in obj {
+            match key.as_str() {
+                "bench" => b.spec.bench = str_field(val, key)?,
+                "size" => b.spec.size = Size::from_name(&str_field(val, key)?)?,
+                "sched" | "policy" => b.spec.policy = Policy::from_name(&str_field(val, key)?)?,
+                "bind" => b.spec.bind = BindSpec::from_json(val)?,
+                "threads" => {
+                    b.threads = Some(val.as_usize().context("threads must be a positive integer")?)
+                }
+                "topo" => b.spec.topo = str_field(val, key)?,
+                "seed" => {
+                    b.spec.seed = val
+                        .as_u64_lossless()
+                        .context("seed must be a non-negative integer (string form for ≥2^53)")?
+                }
+                "compute" => {
+                    b.spec.compute = match str_field(val, key)?.as_str() {
+                        "sim" => ComputeMode::Sim,
+                        "pjrt" => ComputeMode::Pjrt,
+                        other => bail!("unknown compute mode '{other}' (sim|pjrt)"),
+                    }
+                }
+                "artifacts" => b.spec.artifact_dir = str_field(val, key)?,
+                "cost" => b.spec.cost = cost_from_json(val)?,
+                "rtdata_local" => {
+                    b.spec.rtdata_local = val.as_bool().context("rtdata_local must be a bool")?
+                }
+                _ => unknown.push(key.clone()),
+            }
+        }
+        if !unknown.is_empty() {
+            bail!(
+                "unknown RunSpec key(s): {} (allowed: bench size sched bind threads topo \
+                 seed compute artifacts cost rtdata_local)",
+                unknown.join(", ")
+            );
+        }
+        b.build()
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        Self::from_json(&Json::parse(text).context("parsing RunSpec JSON")?)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        Self::from_json(&crate::serde::toml::parse(text).context("parsing RunSpec TOML")?)
+    }
+}
+
+fn str_field(v: &Json, key: &str) -> Result<String> {
+    v.as_str().map(str::to_string).with_context(|| format!("'{key}' must be a string"))
+}
+
+/// `{"dram_base_ns": 100, …}` → ordered override pairs (BTreeMap order).
+pub(crate) fn cost_from_json(v: &Json) -> Result<Vec<(String, f64)>> {
+    let obj = v.as_obj().context("cost must be an object of numeric overrides")?;
+    obj.iter()
+        .map(|(k, v)| {
+            let n = v.as_num().with_context(|| format!("cost.{k} must be a number"))?;
+            Ok((k.clone(), n))
+        })
+        .collect()
+}
+
+/// Parse a `k=v,k=v` override list into pairs (CLI `--cost`).
+pub fn parse_cost_pairs(spec: &str) -> Result<Vec<(String, f64)>> {
+    spec.split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|pair| {
+            let (k, v) = pair
+                .split_once('=')
+                .with_context(|| format!("bad override '{pair}' (want k=v)"))?;
+            let n: f64 =
+                v.trim().parse().with_context(|| format!("bad override value in '{pair}'"))?;
+            Ok((k.trim().to_string(), n))
+        })
+        .collect()
+}
+
+/// Fluent, validating builder for [`RunSpec`].
+#[derive(Clone, Debug, Default)]
+pub struct RunSpecBuilder {
+    spec: RunSpec,
+    /// Explicit thread count (checked against an explicit core list).
+    threads: Option<usize>,
+}
+
+impl RunSpecBuilder {
+    pub fn bench(mut self, name: &str) -> Self {
+        self.spec.bench = name.to_string();
+        self
+    }
+
+    pub fn size(mut self, size: Size) -> Self {
+        self.spec.size = size;
+        self
+    }
+
+    pub fn policy(mut self, policy: Policy) -> Self {
+        self.spec.policy = policy;
+        self
+    }
+
+    pub fn bind(mut self, bind: BindPolicy) -> Self {
+        self.spec.bind = BindSpec::Policy(bind);
+        self
+    }
+
+    /// NUMA-aware §IV binding (the paper's allocation).
+    pub fn numa(self) -> Self {
+        self.bind(BindPolicy::NumaAware)
+    }
+
+    /// Baseline linear binding.
+    pub fn linear(self) -> Self {
+        self.bind(BindPolicy::Linear)
+    }
+
+    /// Explicit thread→core pinning (thread count follows the list unless
+    /// [`threads`](Self::threads) is also given, which must then match).
+    pub fn cores(mut self, cores: Vec<usize>) -> Self {
+        self.spec.bind = BindSpec::Cores(cores);
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    pub fn topo(mut self, name: &str) -> Self {
+        self.spec.topo = name.to_string();
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = seed;
+        self
+    }
+
+    pub fn compute(mut self, mode: ComputeMode) -> Self {
+        self.spec.compute = mode;
+        self
+    }
+
+    /// Real AOT kernels through PJRT (needs `artifacts/`).
+    pub fn pjrt(self) -> Self {
+        self.compute(ComputeMode::Pjrt)
+    }
+
+    pub fn artifact_dir(mut self, dir: &str) -> Self {
+        self.spec.artifact_dir = dir.to_string();
+        self
+    }
+
+    /// Add one cost-model override (repeatable).
+    pub fn cost(mut self, key: &str, value: f64) -> Self {
+        self.spec.cost.push((key.to_string(), value));
+        self
+    }
+
+    pub fn rtdata_local(mut self, local: bool) -> Self {
+        self.spec.rtdata_local = local;
+        self
+    }
+
+    /// Apply one CLI-style `key value` setting (shared by `numanos run`
+    /// flag handling and config files).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "bench" => self.spec.bench = value.to_string(),
+            "size" => self.spec.size = Size::from_name(value)?,
+            "sched" | "policy" => self.spec.policy = Policy::from_name(value)?,
+            "bind" => self.spec.bind = BindSpec::Policy(BindPolicy::from_name(value)?),
+            "cores" => {
+                let cores = value
+                    .split(',')
+                    .filter(|s| !s.trim().is_empty())
+                    .map(|s| s.trim().parse::<usize>().context("core list"))
+                    .collect::<Result<Vec<usize>>>()?;
+                self.spec.bind = BindSpec::Cores(cores);
+            }
+            "threads" => self.threads = Some(value.parse().context("threads")?),
+            "topo" => self.spec.topo = value.to_string(),
+            "seed" => self.spec.seed = value.parse().context("seed")?,
+            "compute" => {
+                self.spec.compute = match value {
+                    "sim" => ComputeMode::Sim,
+                    "pjrt" => ComputeMode::Pjrt,
+                    other => bail!("unknown compute mode '{other}' (sim|pjrt)"),
+                }
+            }
+            "artifacts" => self.spec.artifact_dir = value.to_string(),
+            "cost" => self.spec.cost.extend(parse_cost_pairs(value)?),
+            "rtdata" => self.spec.rtdata_local = value.parse().context("rtdata")?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Validate and produce the spec.
+    pub fn build(self) -> Result<RunSpec> {
+        let mut spec = self.spec;
+        spec.threads = match (&spec.bind, self.threads) {
+            (BindSpec::Cores(cores), None) => cores.len(),
+            (_, Some(n)) => n,
+            (BindSpec::Policy(_), None) => spec.threads,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_fluent_happy_path() {
+        let spec = RunSpec::builder()
+            .bench("fft")
+            .policy(Policy::Dfwspt)
+            .numa()
+            .threads(16)
+            .seed(7)
+            .build()
+            .unwrap();
+        assert_eq!(spec.bench, "fft");
+        assert_eq!(spec.policy, Policy::Dfwspt);
+        assert_eq!(spec.bind, BindSpec::Policy(BindPolicy::NumaAware));
+        assert_eq!(spec.threads, 16);
+        assert_eq!(spec.label(), "dfwspt-Scheduler-NUMA");
+    }
+
+    #[test]
+    fn builder_rejects_bad_axes() {
+        assert!(RunSpec::builder().bench("bogus").build().is_err());
+        assert!(RunSpec::builder().threads(0).build().is_err());
+        assert!(RunSpec::builder().threads(17).build().is_err(), "x4600 has 16 cores");
+        assert!(RunSpec::builder().topo("nope").build().is_err());
+        assert!(RunSpec::builder().policy(Policy::Serial).threads(4).build().is_err());
+        assert!(RunSpec::builder().cost("bogus_knob", 1.0).build().is_err());
+        assert!(RunSpec::builder().cores(vec![0, 0]).build().is_err(), "duplicate core");
+        assert!(RunSpec::builder().cores(vec![99]).build().is_err(), "core out of range");
+        assert!(RunSpec::builder().cores(vec![0, 1]).threads(3).build().is_err());
+        assert!(RunSpec::builder().cores(vec![]).build().is_err());
+    }
+
+    #[test]
+    fn explicit_cores_imply_thread_count() {
+        let spec = RunSpec::builder().cores(vec![4, 5, 6]).build().unwrap();
+        assert_eq!(spec.threads, 3);
+        assert_eq!(spec.bind.name(), "cores:4+5+6");
+        assert_eq!(spec.label(), "wf-Scheduler-pinned");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let spec = RunSpec::builder()
+            .bench("sort")
+            .size(Size::Small)
+            .policy(Policy::Dfwsrpt)
+            .numa()
+            .threads(8)
+            .topo("x4600")
+            .seed(9)
+            .cost("dram_base_ns", 100.0)
+            .cost("remote_bw_pct_per_hop", 12.5)
+            .build()
+            .unwrap();
+        let text = spec.to_json_string();
+        let back = RunSpec::from_json_str(&text).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn huge_seeds_roundtrip_exactly() {
+        let spec = RunSpec::builder().seed(u64::MAX - 1).build().unwrap();
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(back.seed, u64::MAX - 1);
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn toml_spec_parses() {
+        let spec = RunSpec::from_toml_str(
+            "bench = \"strassen\"\nsched = \"dfwspt\"\nbind = \"numa\"\nthreads = 12\nseed = 3\n",
+        )
+        .unwrap();
+        assert_eq!(spec.bench, "strassen");
+        assert_eq!(spec.policy, Policy::Dfwspt);
+        assert_eq!(spec.threads, 12);
+    }
+
+    #[test]
+    fn unknown_json_keys_are_listed() {
+        let err = RunSpec::from_json_str(r#"{"bench": "fft", "trheads": 4, "sceed": 1}"#)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("trheads") && msg.contains("sceed"), "{msg}");
+    }
+
+    #[test]
+    fn describe_matches_legacy_format() {
+        let spec = RunSpec::builder().build().unwrap();
+        assert_eq!(
+            spec.describe(),
+            "bench=fft size=medium sched=wf bind=linear threads=16 topo=x4600 seed=42 compute=sim"
+        );
+    }
+
+    #[test]
+    fn cli_style_set() {
+        let mut b = RunSpec::builder();
+        for (k, v) in [
+            ("bench", "sort"),
+            ("sched", "dfwsrpt"),
+            ("bind", "numa"),
+            ("threads", "8"),
+            ("size", "large"),
+            ("cost", "dram_base_ns=150,hop_penalty_ns=99"),
+        ] {
+            b.set(k, v).unwrap();
+        }
+        let spec = b.build().unwrap();
+        assert_eq!(spec.policy, Policy::Dfwsrpt);
+        assert_eq!(spec.size, Size::Large);
+        assert_eq!(spec.cost.len(), 2);
+        let mut bad = RunSpec::builder();
+        assert!(bad.set("bogus", "1").is_err());
+        assert!(bad.set("threads", "abc").is_err());
+    }
+}

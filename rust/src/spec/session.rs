@@ -1,0 +1,460 @@
+//! The [`Session`]: the stateful executor behind every run.
+//!
+//! A session owns a base cost model, a cache of configured [`Runtime`]s
+//! (one per topology × cost-override combination a spec names), and a
+//! memo of **serial baselines** — the paper's speedup denominators — keyed
+//! by (bench, size, seed, topology, cost).  The four copies of
+//! serial-baseline + `bots::create` boilerplate that used to live in
+//! `cmd_run`, `run_figure`, `gains_summary` and `bench_figure_main` all
+//! collapse into [`Session::baseline`].
+//!
+//! The low-level execution sequence (the NANOS start-up the paper
+//! modifies: bind → per-thread runtime pages → first-touch init → engine)
+//! lives here as [`Session::execute`] / [`Session::execute_bound`];
+//! `Runtime::{run,run_bound,run_serial}` are thin shims over these.
+//!
+//! Sweeps execute their cells across OS threads ([`Session::run_sweep`]):
+//! every cell is an independent, deterministic simulation whose seed comes
+//! from its [`RunSpec`], so a parallel sweep produces byte-identical
+//! CSV/tables to a sequential one ([`Session::run_sweep_with`] with
+//! `workers = 1`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::bots;
+use crate::config::ComputeMode;
+use crate::coordinator::binding::{bind_threads, BindPolicy, Binding};
+use crate::coordinator::engine::{Engine, EngineConfig};
+use crate::coordinator::runtime::Runtime;
+use crate::coordinator::sched::{build_victim_lists, Policy};
+use crate::coordinator::task::Workload;
+use crate::metrics::RunStats;
+use crate::runtime::ExecEngine;
+use crate::serde::Json;
+use crate::simnuma::{CostModel, MemSim, PAGE_BYTES};
+use crate::spec::sweep::{Sweep, SweepResult};
+use crate::spec::{BindSpec, RunSpec};
+use crate::topology::Topology;
+use crate::util::{SplitMix64, Time};
+
+/// One executed spec: the input, the full stats, and the speedup against
+/// the session's memoized serial baseline.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub spec: RunSpec,
+    /// Makespan of the serial baseline this cell is normalized against.
+    pub serial_makespan: Time,
+    /// serial makespan / this makespan (the paper's metric).
+    pub speedup: f64,
+    pub stats: RunStats,
+}
+
+impl RunRecord {
+    /// Paper-legend config label (`wf-Scheduler-NUMA`; explicit-core
+    /// pinnings get `-pinned`).  Derived from the spec, not the stats:
+    /// `execute_bound` leaves `stats.bind` unset, which would mislabel a
+    /// pinned run as a linear one.
+    pub fn label(&self) -> String {
+        self.spec.label()
+    }
+
+    /// Long-form CSV header matching [`RunRecord::to_csv_row`].
+    pub const CSV_HEADER: &'static str = "bench,size,policy,bind,threads,topo,seed,\
+         makespan,serial_makespan,speedup,tasks,steals,steal_hops,remote_pct,\
+         lock_wait,work,overhead,sim_events";
+
+    /// Deterministic CSV row (no host wall-clock — parallel and sequential
+    /// sweep output must be byte-identical).
+    pub fn to_csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{},{},{:.4},{},{},{:.3},{:.4},{},{},{},{}",
+            self.spec.bench,
+            self.spec.size.name(),
+            self.spec.policy.name(),
+            self.spec.bind.name(),
+            self.spec.threads,
+            self.spec.topo,
+            self.spec.seed,
+            self.stats.makespan,
+            self.serial_makespan,
+            self.speedup,
+            self.stats.tasks,
+            self.stats.steals,
+            self.stats.mean_steal_hops,
+            100.0 * self.stats.mem.remote_ratio(),
+            self.stats.lock_wait_total,
+            self.stats.work_time,
+            self.stats.overhead_time,
+            self.stats.sim_events,
+        )
+    }
+
+    /// Deterministic JSON record (same field policy as the CSV).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("spec", self.spec.to_json()),
+            ("label", Json::from(self.label())),
+            ("makespan", Json::from(self.stats.makespan)),
+            ("serial_makespan", Json::from(self.serial_makespan)),
+            ("speedup", Json::from(self.speedup)),
+            ("tasks", Json::from(self.stats.tasks)),
+            ("peak_live", Json::from(self.stats.peak_live)),
+            ("steals", Json::from(self.stats.steals)),
+            ("steal_hops", Json::from(self.stats.mean_steal_hops)),
+            ("remote_pct", Json::from(100.0 * self.stats.mem.remote_ratio())),
+            ("lock_wait", Json::from(self.stats.lock_wait_total)),
+            ("work", Json::from(self.stats.work_time)),
+            ("overhead", Json::from(self.stats.overhead_time)),
+            ("sim_events", Json::from(self.stats.sim_events)),
+            ("kernel_calls", Json::from(self.stats.kernel_calls)),
+        ])
+    }
+}
+
+/// Worker count for parallel sweep execution.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Stateful executor: runtime cache + serial-baseline memo.
+pub struct Session {
+    base_cost: CostModel,
+    /// "{topo}|{cost_sig}" → configured runtime.
+    runtimes: Mutex<HashMap<String, Arc<Runtime>>>,
+    /// "{bench}|{size}|{seed}|{topo}|{cost_sig}" → serial baseline stats.
+    baselines: Mutex<HashMap<String, Arc<RunStats>>>,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Session {
+    /// Session over the default (paper-calibrated) cost model.
+    pub fn new() -> Self {
+        Self::with_cost(CostModel::default())
+    }
+
+    /// Session whose specs' cost overrides apply on top of `cost`.
+    pub fn with_cost(cost: CostModel) -> Self {
+        Self {
+            base_cost: cost,
+            runtimes: Mutex::new(HashMap::new()),
+            baselines: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Adopt an existing configured runtime (its cost model becomes the
+    /// session base; its topology is cached under its name so specs can
+    /// reference it even if it is not a preset).
+    pub fn from_runtime(rt: &Runtime) -> Self {
+        let s = Self::with_cost(rt.cost.clone());
+        s.runtimes
+            .lock()
+            .unwrap()
+            .insert(format!("{}|", rt.topo.name()), Arc::new(rt.clone()));
+        s
+    }
+
+    fn topology_for(&self, name: &str) -> Result<Topology> {
+        if let Some(rt) = self.runtimes.lock().unwrap().get(&format!("{name}|")) {
+            return Ok(rt.topo.clone());
+        }
+        Topology::by_name(name)
+    }
+
+    /// The configured runtime a spec executes on (cached).
+    pub fn runtime_for(&self, spec: &RunSpec) -> Result<Arc<Runtime>> {
+        let key = format!("{}|{}", spec.topo, spec.cost_sig());
+        if let Some(rt) = self.runtimes.lock().unwrap().get(&key) {
+            return Ok(rt.clone());
+        }
+        let topo = self.topology_for(&spec.topo)?;
+        let cost = spec.cost_model(&self.base_cost)?;
+        let rt = Arc::new(Runtime::new(topo, cost));
+        Ok(self.runtimes.lock().unwrap().entry(key).or_insert(rt).clone())
+    }
+
+    /// Validate a spec against the session's topology view (which may
+    /// include adopted non-preset topologies).
+    fn validate_spec(&self, spec: &RunSpec) -> Result<()> {
+        let topo = self
+            .topology_for(&spec.topo)
+            .with_context(|| format!("spec '{}'", spec.describe()))?;
+        spec.validate_against(&topo)
+    }
+
+    /// The serial baseline for a spec's (bench, size, seed, topo, cost) —
+    /// computed once, shared by every cell normalizing against it.
+    pub fn baseline(&self, spec: &RunSpec) -> Result<Arc<RunStats>> {
+        let key = format!(
+            "{}|{}|{}|{}|{}",
+            spec.bench,
+            spec.size.name(),
+            spec.seed,
+            spec.topo,
+            spec.cost_sig()
+        );
+        if let Some(b) = self.baselines.lock().unwrap().get(&key) {
+            return Ok(b.clone());
+        }
+        let rt = self.runtime_for(spec)?;
+        let mut w = bots::create(&spec.bench, spec.size, spec.seed)?;
+        let stats =
+            Self::execute(&rt, w.as_mut(), Policy::Serial, BindPolicy::Linear, 1, spec.seed, None)?;
+        let arc = Arc::new(stats);
+        Ok(self.baselines.lock().unwrap().entry(key).or_insert(arc).clone())
+    }
+
+    /// Execute one spec: create the workload, run it, normalize against
+    /// the memoized serial baseline.
+    pub fn run(&self, spec: &RunSpec) -> Result<RunRecord> {
+        self.validate_spec(spec)?;
+        let rt = self.runtime_for(spec)?;
+        let baseline = self.baseline(spec)?;
+        let mut workload = bots::create(&spec.bench, spec.size, spec.seed)?;
+        let mut exec = match spec.compute {
+            ComputeMode::Pjrt => Some(ExecEngine::cpu(&spec.artifact_dir)?),
+            ComputeMode::Sim => None,
+        };
+        let stats = match &spec.bind {
+            BindSpec::Policy(bind) => Self::execute(
+                &rt,
+                workload.as_mut(),
+                spec.policy,
+                *bind,
+                spec.threads,
+                spec.seed,
+                exec.as_mut(),
+            )?,
+            BindSpec::Cores(cores) => Self::execute_bound(
+                &rt,
+                workload.as_mut(),
+                spec.policy,
+                cores,
+                spec.rtdata_local,
+                spec.seed,
+                exec.as_mut(),
+            )?,
+        };
+        Ok(RunRecord {
+            spec: spec.clone(),
+            serial_makespan: baseline.makespan,
+            speedup: baseline.makespan as f64 / stats.makespan as f64,
+            stats,
+        })
+    }
+
+    /// Run a sweep's cells in parallel across OS threads (deterministic:
+    /// identical output to [`Session::run_sweep_with`] at `workers = 1`).
+    pub fn run_sweep(&self, sweep: &Sweep) -> Result<SweepResult> {
+        self.run_sweep_with(sweep, default_workers())
+    }
+
+    /// Run a sweep with an explicit worker count (1 = sequential).
+    pub fn run_sweep_with(&self, sweep: &Sweep, workers: usize) -> Result<SweepResult> {
+        let cells = sweep.cells()?;
+        for spec in &cells {
+            self.validate_spec(spec)?;
+        }
+        // Pre-compute the distinct baselines sequentially so parallel
+        // workers only read the memo (and no baseline is computed twice).
+        for spec in &cells {
+            self.baseline(spec)?;
+        }
+        let n = cells.len();
+        let records: Vec<RunRecord> = if workers <= 1 || n <= 1 {
+            cells.iter().map(|s| self.run(s)).collect::<Result<_>>()?
+        } else {
+            let next = AtomicUsize::new(0);
+            let done: Mutex<Vec<(usize, Result<RunRecord>)>> = Mutex::new(Vec::with_capacity(n));
+            std::thread::scope(|scope| {
+                for _ in 0..workers.min(n) {
+                    scope.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let r = self.run(&cells[i]);
+                        done.lock().unwrap().push((i, r));
+                    });
+                }
+            });
+            let mut slots = done.into_inner().unwrap();
+            slots.sort_by_key(|(i, _)| *i);
+            slots.into_iter().map(|(_, r)| r).collect::<Result<_>>()?
+        };
+        Ok(SweepResult { sweep: sweep.clone(), records })
+    }
+
+    // -----------------------------------------------------------------
+    // The canonical low-level execution sequence (previously
+    // Runtime::{run,run_bound}; those are now shims over these).
+    // -----------------------------------------------------------------
+
+    /// Execute `workload` under `policy`/`bind` with `threads` threads on
+    /// `rt`, resolving the thread→core binding from the §IV policy.
+    pub fn execute(
+        rt: &Runtime,
+        workload: &mut dyn Workload,
+        policy: Policy,
+        bind: BindPolicy,
+        threads: usize,
+        seed: u64,
+        exec: Option<&mut ExecEngine>,
+    ) -> Result<RunStats> {
+        let mut rng = SplitMix64::new(seed);
+        let binding = bind_threads(&rt.topo, threads, bind, &mut rng);
+        let numa_rtdata = bind == BindPolicy::NumaAware;
+        let mut stats =
+            Self::execute_bound(rt, workload, policy, &binding.cores, numa_rtdata, seed, exec)?;
+        stats.bind = Some(bind);
+        Ok(stats)
+    }
+
+    /// Execute with an explicit thread→core binding (thread 0 = master).
+    /// `numa_rtdata` controls whether per-thread runtime pages are touched
+    /// locally (§IV) or all by the master.  This is the ablation surface:
+    /// any placement heuristic can be fed in.
+    pub fn execute_bound(
+        rt: &Runtime,
+        workload: &mut dyn Workload,
+        policy: Policy,
+        cores: &[usize],
+        numa_rtdata: bool,
+        seed: u64,
+        exec: Option<&mut ExecEngine>,
+    ) -> Result<RunStats> {
+        let wall_start = std::time::Instant::now();
+        let threads = cores.len();
+        let binding = Binding { cores: cores.to_vec(), priorities: None };
+        let mut mem = MemSim::new(rt.topo.clone(), rt.cost.clone());
+
+        // Per-thread runtime data (pools, descriptors): one page each.
+        // Baseline: the master first-touches everything (all pages land on
+        // its node). NUMA-aware: each thread touches its own page from its
+        // own core at start-up.
+        let mut rt_penalty: Vec<Time> = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let region = mem.alloc(PAGE_BYTES);
+            let toucher = if numa_rtdata { binding.cores[t] } else { binding.master_core() };
+            mem.first_touch(toucher, region, 0);
+            let data_node = mem.node_of_addr(region.addr).expect("rt page resident");
+            let worker_node = rt.topo.node_of(binding.cores[t]);
+            let hops = rt.topo.node_hops(worker_node, data_node) as Time;
+            rt_penalty.push(hops * rt.cost.rtdata_per_hop);
+        }
+
+        // Master-side workload init: allocations + first touches.
+        let init_time = workload.init(&mut mem, binding.master_core());
+
+        let victims = build_victim_lists(&rt.topo, &binding.cores);
+        let root = workload.root();
+        let engine = Engine::new(
+            EngineConfig { policy, cores: binding.cores.clone(), rt_penalty, seed },
+            mem,
+            victims,
+            workload,
+            exec,
+        );
+        let mut stats = engine.run(root)?;
+        stats.bench = workload.name().to_string();
+        stats.seed = seed;
+        stats.init_time = init_time;
+        stats.wall_ms = wall_start.elapsed().as_secs_f64() * 1e3;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(bench: &str, policy: Policy, threads: usize) -> RunSpec {
+        RunSpec::builder()
+            .bench(bench)
+            .size(crate::config::Size::Small)
+            .policy(policy)
+            .numa()
+            .threads(threads)
+            .seed(5)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn run_normalizes_against_serial_baseline() {
+        let session = Session::new();
+        let rec = session.run(&small("fib", Policy::WorkFirst, 8)).unwrap();
+        assert!(rec.speedup > 1.0, "8 threads must beat serial, got {}", rec.speedup);
+        assert_eq!(rec.stats.threads, 8);
+        assert_eq!(rec.label(), "wf-Scheduler-NUMA");
+    }
+
+    #[test]
+    fn baseline_is_memoized() {
+        let session = Session::new();
+        let spec = small("fib", Policy::WorkFirst, 4);
+        let a = session.baseline(&spec).unwrap();
+        let b = session.baseline(&spec).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the memo");
+        // different seed → different baseline entry
+        let mut other = spec.clone();
+        other.seed = 6;
+        let c = session.baseline(&other).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn runtime_cache_distinguishes_cost_overrides() {
+        let session = Session::new();
+        let plain = small("fib", Policy::WorkFirst, 2);
+        let mut tweaked = plain.clone();
+        tweaked.cost.push(("dram_base_ns".into(), 500.0));
+        let a = session.runtime_for(&plain).unwrap();
+        let b = session.runtime_for(&tweaked).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert!(b.cost.dram_base > a.cost.dram_base);
+    }
+
+    #[test]
+    fn explicit_cores_run() {
+        let session = Session::new();
+        let spec = RunSpec::builder()
+            .bench("fib")
+            .size(crate::config::Size::Small)
+            .cores(vec![4, 5, 6, 7])
+            .seed(3)
+            .build()
+            .unwrap();
+        let rec = session.run(&spec).unwrap();
+        assert_eq!(rec.stats.threads, 4);
+        assert!(rec.stats.makespan > 0);
+    }
+
+    #[test]
+    fn records_are_deterministic() {
+        let session = Session::new();
+        let spec = small("sort", Policy::Dfwsrpt, 8);
+        let a = session.run(&spec).unwrap();
+        let b = session.run(&spec).unwrap();
+        assert_eq!(a.stats.makespan, b.stats.makespan);
+        assert_eq!(a.to_csv_row(), b.to_csv_row());
+        assert_eq!(a.to_json().to_compact(), b.to_json().to_compact());
+    }
+
+    #[test]
+    fn session_adopts_custom_runtime() {
+        let rt = Runtime::paper_testbed();
+        let session = Session::from_runtime(&rt);
+        let rec = session.run(&small("fib", Policy::WorkFirst, 2)).unwrap();
+        assert_eq!(rec.spec.topo, "x4600");
+        assert!(rec.stats.makespan > 0);
+    }
+}

@@ -1,0 +1,458 @@
+//! Cross-product sweeps: experiment grids as data.
+//!
+//! A [`Sweep`] names axes — benchmarks × (scheduler, binding) configs ×
+//! thread counts × seeds on one topology — and expands to a flat list of
+//! [`RunSpec`] cells in a fixed order (bench → config → seed → threads).
+//! Every paper figure is a sweep (see `harness::sweep_for`); user-authored
+//! sweeps come from manifests (`numanos sweep --manifest exp.toml`).
+//!
+//! A [`SweepResult`] keeps records in cell order, so its CSV/JSON/table
+//! renderings are deterministic and independent of how many OS threads
+//! executed the cells.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ComputeMode, Size};
+use crate::coordinator::binding::BindPolicy;
+use crate::coordinator::sched::Policy;
+use crate::metrics::table::SpeedupTable;
+use crate::serde::Json;
+use crate::spec::session::RunRecord;
+use crate::spec::{cost_from_json, BindSpec, RunSpec};
+
+/// Thread counts on the paper's x-axis (16-core X4600).
+pub const PAPER_THREADS: &[usize] = &[2, 4, 6, 8, 12, 16];
+
+/// One experiment grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sweep {
+    pub id: String,
+    pub title: String,
+    pub benches: Vec<String>,
+    pub size: Size,
+    pub configs: Vec<(Policy, BindPolicy)>,
+    pub threads: Vec<usize>,
+    pub seeds: Vec<u64>,
+    pub topo: String,
+    pub cost: Vec<(String, f64)>,
+}
+
+impl Sweep {
+    /// A sweep with the paper defaults: medium size, x4600, seed 42,
+    /// paper thread axis — fill the other axes with the `with_*` chainers.
+    pub fn new(id: &str, title: &str) -> Self {
+        Self {
+            id: id.to_string(),
+            title: title.to_string(),
+            benches: Vec::new(),
+            size: Size::Medium,
+            configs: Vec::new(),
+            threads: PAPER_THREADS.to_vec(),
+            seeds: vec![42],
+            topo: "x4600".into(),
+            cost: Vec::new(),
+        }
+    }
+
+    pub fn with_bench(mut self, bench: &str) -> Self {
+        self.benches.push(bench.to_string());
+        self
+    }
+
+    pub fn with_benches<I: IntoIterator<Item = S>, S: Into<String>>(mut self, benches: I) -> Self {
+        self.benches.extend(benches.into_iter().map(Into::into));
+        self
+    }
+
+    pub fn with_config(mut self, policy: Policy, bind: BindPolicy) -> Self {
+        self.configs.push((policy, bind));
+        self
+    }
+
+    pub fn with_configs(mut self, configs: Vec<(Policy, BindPolicy)>) -> Self {
+        self.configs.extend(configs);
+        self
+    }
+
+    pub fn with_threads(mut self, threads: Vec<usize>) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_seeds(mut self, seeds: Vec<u64>) -> Self {
+        self.seeds = seeds;
+        self
+    }
+
+    pub fn with_seed(self, seed: u64) -> Self {
+        self.with_seeds(vec![seed])
+    }
+
+    pub fn with_size(mut self, size: Size) -> Self {
+        self.size = size;
+        self
+    }
+
+    pub fn with_topo(mut self, topo: &str) -> Self {
+        self.topo = topo.to_string();
+        self
+    }
+
+    pub fn with_cost(mut self, key: &str, value: f64) -> Self {
+        self.cost.push((key.to_string(), value));
+        self
+    }
+
+    /// Number of cells the cross product expands to.
+    pub fn cell_count(&self) -> usize {
+        self.benches.len() * self.configs.len() * self.seeds.len() * self.threads.len()
+    }
+
+    /// Expand the cross product (bench → config → seed → threads) into
+    /// concrete run specs.
+    pub fn cells(&self) -> Result<Vec<RunSpec>> {
+        if self.benches.is_empty() {
+            bail!("sweep '{}' has no benchmarks", self.id);
+        }
+        if self.configs.is_empty() {
+            bail!("sweep '{}' has no (scheduler, binding) configs", self.id);
+        }
+        if self.threads.is_empty() {
+            bail!("sweep '{}' has no thread counts", self.id);
+        }
+        if self.seeds.is_empty() {
+            bail!("sweep '{}' has no seeds", self.id);
+        }
+        let mut cells = Vec::with_capacity(self.cell_count());
+        for bench in &self.benches {
+            for &(policy, bind) in &self.configs {
+                for &seed in &self.seeds {
+                    for &threads in &self.threads {
+                        cells.push(RunSpec {
+                            bench: bench.clone(),
+                            size: self.size,
+                            policy,
+                            bind: BindSpec::Policy(bind),
+                            threads,
+                            topo: self.topo.clone(),
+                            seed,
+                            compute: ComputeMode::Sim,
+                            artifact_dir: "artifacts".into(),
+                            cost: self.cost.clone(),
+                            rtdata_local: true,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(cells)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(String, Json)> = vec![
+            ("id".into(), Json::from(self.id.as_str())),
+            ("title".into(), Json::from(self.title.as_str())),
+            (
+                "bench".into(),
+                Json::Arr(self.benches.iter().map(|b| Json::from(b.as_str())).collect()),
+            ),
+            (
+                "configs".into(),
+                Json::Arr(
+                    self.configs
+                        .iter()
+                        .map(|(p, b)| {
+                            Json::Arr(vec![Json::from(p.name()), Json::from(b.name())])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("threads".into(), Json::Arr(self.threads.iter().map(|&t| Json::from(t)).collect())),
+            (
+                "seeds".into(),
+                Json::Arr(self.seeds.iter().map(|&s| Json::from_u64_lossless(s)).collect()),
+            ),
+            ("size".into(), Json::from(self.size.name())),
+            ("topo".into(), Json::from(self.topo.as_str())),
+        ];
+        if !self.cost.is_empty() {
+            pairs.push((
+                "cost".into(),
+                Json::obj(self.cost.iter().map(|(k, v)| (k.clone(), Json::from(*v)))),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse one sweep object, filling unset axes from `defaults`.
+    /// Configs come either as explicit `configs: [[sched, bind], …]`
+    /// pairs, or as the cross product of `sched: […]` × `bind: […]`.
+    pub fn from_json(j: &Json, defaults: &SweepDefaults) -> Result<Self> {
+        let obj = j.as_obj().context("sweep must be an object")?;
+        let mut sweep = Sweep {
+            id: String::new(),
+            title: String::new(),
+            benches: Vec::new(),
+            size: defaults.size,
+            configs: Vec::new(),
+            threads: defaults.threads.clone(),
+            seeds: defaults.seeds.clone(),
+            topo: defaults.topo.clone(),
+            cost: defaults.cost.clone(),
+        };
+        let mut scheds: Vec<String> = vec!["wf".into()];
+        let mut binds: Vec<String> = vec!["linear".into()];
+        let mut explicit_configs: Option<Vec<(Policy, BindPolicy)>> = None;
+        let mut unknown = Vec::new();
+        for (key, val) in obj {
+            match key.as_str() {
+                "id" => sweep.id = val.as_str().context("id must be a string")?.to_string(),
+                "title" => {
+                    sweep.title = val.as_str().context("title must be a string")?.to_string()
+                }
+                "bench" | "benches" => sweep.benches = str_list(val, key)?,
+                "sched" | "policies" => scheds = str_list(val, key)?,
+                "bind" | "binds" => binds = str_list(val, key)?,
+                "configs" => {
+                    let pairs = val.as_arr().context("configs must be an array")?;
+                    let mut parsed = Vec::with_capacity(pairs.len());
+                    for p in pairs {
+                        let pair = p.as_arr().context("each config must be [sched, bind]")?;
+                        if pair.len() != 2 {
+                            bail!("each config must be a [sched, bind] pair");
+                        }
+                        parsed.push((
+                            Policy::from_name(pair[0].as_str().context("config sched")?)?,
+                            BindPolicy::from_name(pair[1].as_str().context("config bind")?)?,
+                        ));
+                    }
+                    explicit_configs = Some(parsed);
+                }
+                "threads" => {
+                    sweep.threads = num_list(val, key)?
+                        .into_iter()
+                        .map(|n| usize::try_from(n).context("thread count"))
+                        .collect::<Result<_>>()?
+                }
+                "seeds" | "seed" => sweep.seeds = num_list(val, key)?,
+                "size" => sweep.size = Size::from_name(val.as_str().context("size")?)?,
+                "topo" => sweep.topo = val.as_str().context("topo")?.to_string(),
+                "cost" => sweep.cost = cost_from_json(val)?,
+                _ => unknown.push(key.clone()),
+            }
+        }
+        if !unknown.is_empty() {
+            bail!(
+                "unknown sweep key(s): {} (allowed: id title bench sched bind configs \
+                 threads seeds size topo cost)",
+                unknown.join(", ")
+            );
+        }
+        sweep.configs = match explicit_configs {
+            Some(c) => c,
+            None => {
+                let mut cross = Vec::with_capacity(scheds.len() * binds.len());
+                for s in &scheds {
+                    for b in &binds {
+                        cross.push((Policy::from_name(s)?, BindPolicy::from_name(b)?));
+                    }
+                }
+                cross
+            }
+        };
+        if sweep.id.is_empty() {
+            bail!("sweep needs an 'id'");
+        }
+        if sweep.title.is_empty() {
+            sweep.title = sweep.id.clone();
+        }
+        // surface axis errors at load time, not run time
+        sweep.cells()?;
+        Ok(sweep)
+    }
+}
+
+/// Defaults a manifest's `[defaults]` section provides to its sweeps.
+#[derive(Clone, Debug)]
+pub struct SweepDefaults {
+    pub size: Size,
+    pub topo: String,
+    pub threads: Vec<usize>,
+    pub seeds: Vec<u64>,
+    pub cost: Vec<(String, f64)>,
+}
+
+impl Default for SweepDefaults {
+    fn default() -> Self {
+        Self {
+            size: Size::Medium,
+            topo: "x4600".into(),
+            threads: PAPER_THREADS.to_vec(),
+            seeds: vec![42],
+            cost: Vec::new(),
+        }
+    }
+}
+
+/// Accept `"x"` or `["x", "y"]`.
+fn str_list(v: &Json, key: &str) -> Result<Vec<String>> {
+    match v {
+        Json::Str(s) => Ok(vec![s.clone()]),
+        Json::Arr(items) => items
+            .iter()
+            .map(|i| {
+                i.as_str()
+                    .map(str::to_string)
+                    .with_context(|| format!("'{key}' entries must be strings"))
+            })
+            .collect(),
+        other => bail!("'{key}' must be a string or array of strings, got {other:?}"),
+    }
+}
+
+/// Accept `7`, `"18446744073709551615"` (u64 beyond 2^53), or an array
+/// of either.
+pub(crate) fn num_list(v: &Json, key: &str) -> Result<Vec<u64>> {
+    match v {
+        Json::Num(_) | Json::Str(_) => Ok(vec![v
+            .as_u64_lossless()
+            .with_context(|| format!("'{key}' must be a non-negative integer"))?]),
+        Json::Arr(items) => items
+            .iter()
+            .map(|i| {
+                i.as_u64_lossless()
+                    .with_context(|| format!("'{key}' entries must be non-negative integers"))
+            })
+            .collect(),
+        other => bail!("'{key}' must be a number or array of numbers, got {other:?}"),
+    }
+}
+
+/// Executed sweep: records in cell order.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub sweep: Sweep,
+    pub records: Vec<RunRecord>,
+}
+
+impl SweepResult {
+    /// Figure-shaped table: one row per (bench ×) config (× seed), one
+    /// column per thread count, cells = speedup over the serial baseline.
+    pub fn table(&self) -> SpeedupTable {
+        let mut t = SpeedupTable::new(&self.sweep.title, self.sweep.threads.clone());
+        let multi_bench = self.sweep.benches.len() > 1;
+        let multi_seed = self.sweep.seeds.len() > 1;
+        for chunk in self.records.chunks(self.sweep.threads.len()) {
+            let first = &chunk[0];
+            let mut label = first.label();
+            if multi_bench {
+                label = format!("{}/{label}", first.spec.bench);
+            }
+            if multi_seed {
+                label = format!("{label}@s{}", first.spec.seed);
+            }
+            t.push_row(label, chunk.iter().map(|r| r.speedup).collect());
+        }
+        t
+    }
+
+    /// Long-form CSV (deterministic; identical for parallel and
+    /// sequential execution).
+    pub fn to_csv(&self) -> String {
+        let mut s = format!("sweep,{}\n", RunRecord::CSV_HEADER);
+        for r in &self.records {
+            s.push_str(&format!("{},{}\n", self.sweep.id, r.to_csv_row()));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("id", Json::from(self.sweep.id.as_str())),
+            ("title", Json::from(self.sweep.title.as_str())),
+            ("cells", Json::from(self.records.len())),
+            ("records", Json::Arr(self.records.iter().map(RunRecord::to_json).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Sweep {
+        Sweep::new("demo", "Demo sweep")
+            .with_benches(["fib", "fft"])
+            .with_config(Policy::WorkFirst, BindPolicy::Linear)
+            .with_config(Policy::Dfwspt, BindPolicy::NumaAware)
+            .with_threads(vec![2, 4, 8])
+            .with_seeds(vec![1, 2])
+            .with_size(Size::Small)
+    }
+
+    #[test]
+    fn cross_product_cell_count() {
+        let s = demo();
+        assert_eq!(s.cell_count(), 2 * 2 * 2 * 3);
+        let cells = s.cells().unwrap();
+        assert_eq!(cells.len(), 24);
+        // fixed nesting order: bench → config → seed → threads
+        assert_eq!(cells[0].bench, "fib");
+        assert_eq!(cells[0].threads, 2);
+        assert_eq!(cells[1].threads, 4);
+        assert_eq!(cells[3].seed, 2);
+        assert_eq!(cells[6].policy, Policy::Dfwspt);
+        assert_eq!(cells[12].bench, "fft");
+        for c in &cells {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn empty_axes_rejected() {
+        assert!(Sweep::new("x", "x").cells().is_err());
+        assert!(Sweep::new("x", "x").with_bench("fib").cells().is_err());
+        let no_threads = demo().with_threads(vec![]);
+        assert!(no_threads.cells().is_err());
+        let no_seeds = demo().with_seeds(vec![]);
+        assert!(no_seeds.cells().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = demo().with_cost("dram_base_ns", 123.0);
+        let j = s.to_json();
+        let back = Sweep::from_json(&j, &SweepDefaults::default()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn sched_bind_cross_product_form() {
+        let j = Json::parse(
+            r#"{"id": "g", "bench": "fib", "sched": ["wf", "cilk"],
+                "bind": ["linear", "numa"], "threads": [2], "seed": 3, "size": "small"}"#,
+        )
+        .unwrap();
+        let s = Sweep::from_json(&j, &SweepDefaults::default()).unwrap();
+        assert_eq!(s.configs.len(), 4);
+        assert_eq!(s.configs[0], (Policy::WorkFirst, BindPolicy::Linear));
+        assert_eq!(s.configs[3], (Policy::CilkBased, BindPolicy::NumaAware));
+        assert_eq!(s.seeds, vec![3]);
+        assert_eq!(s.title, "g", "title defaults to id");
+    }
+
+    #[test]
+    fn unknown_sweep_keys_listed() {
+        let j = Json::parse(r#"{"id": "g", "bench": "fib", "treads": [2]}"#).unwrap();
+        let err = Sweep::from_json(&j, &SweepDefaults::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("treads"));
+    }
+
+    #[test]
+    fn bad_axis_values_fail_at_load() {
+        let j = Json::parse(r#"{"id": "g", "bench": "bogus_bench", "threads": [2]}"#).unwrap();
+        // cells() validates lazily at run; from_json eagerly expands once
+        let s = Sweep::from_json(&j, &SweepDefaults::default()).unwrap();
+        assert!(s.cells().unwrap()[0].validate().is_err());
+    }
+}

@@ -96,3 +96,123 @@ fn gains_summary_has_all_benchmarks() {
         assert!(text.contains(bench), "{text}");
     }
 }
+
+#[test]
+fn flag_equals_syntax_accepted() {
+    let (ok, text) = numanos(&[
+        "run", "--bench=fib", "--size=small", "--sched=wf", "--threads=4", "--seed=3",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("speedup"), "{text}");
+}
+
+#[test]
+fn unknown_flags_are_listed_together() {
+    let (ok, text) = numanos(&["run", "--bench", "fib", "--bogus", "1", "--also-bad"]);
+    assert!(!ok);
+    assert!(text.contains("--bogus"), "{text}");
+    assert!(text.contains("--also-bad"), "{text}");
+    assert!(text.contains("allowed"), "{text}");
+}
+
+#[test]
+fn valueless_value_flag_is_a_clear_error() {
+    let (ok, text) = numanos(&["run", "--bench", "fib", "--threads"]);
+    assert!(!ok);
+    assert!(text.contains("expects a value"), "{text}");
+    // trailing value-less flag (the old parser silently turned this into
+    // threads="true")
+    let (ok, text) = numanos(&["run", "--threads", "--bench", "fib"]);
+    assert!(!ok);
+    assert!(text.contains("expects a value"), "{text}");
+}
+
+#[test]
+fn duplicate_flag_rejected() {
+    let (ok, text) = numanos(&["run", "--bench", "fib", "--bench", "fft"]);
+    assert!(!ok);
+    assert!(text.contains("more than once"), "{text}");
+}
+
+#[test]
+fn run_json_emits_a_record() {
+    let (ok, text) = numanos(&[
+        "run", "--bench", "fib", "--size", "small", "--threads", "2", "--json",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("\"speedup\""), "{text}");
+    assert!(text.contains("\"makespan\""), "{text}");
+    assert!(text.contains("\"spec\""), "{text}");
+}
+
+#[test]
+fn run_accepts_explicit_core_list() {
+    let (ok, text) = numanos(&[
+        "run", "--bench", "fib", "--size", "small", "--cores", "4,5,6,7", "--seed", "2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("t=4"), "thread count follows the core list: {text}");
+}
+
+fn write_manifest(dir: &std::path::Path) -> std::path::PathBuf {
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        "title = \"cli sweep\"\n\n[defaults]\nsize = \"small\"\nseed = 4\n\n\
+         [[sweeps]]\nid = \"mini\"\nbench = \"fib\"\nsched = [\"wf\", \"dfwsrpt\"]\n\
+         bind = [\"numa\"]\nthreads = [2, 4]\n",
+    )
+    .unwrap();
+    path
+}
+
+#[test]
+fn sweep_manifest_end_to_end() {
+    let dir = std::env::temp_dir().join(format!("numanos_cli_sweep_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = write_manifest(&dir);
+
+    // parallel run with table output + CSV files
+    let out_par = dir.join("par");
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--out", out_par.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("wf-Scheduler-NUMA"), "{text}");
+    assert!(text.contains("dfwsrpt-Scheduler-NUMA"), "{text}");
+
+    // sequential run: CSV must be byte-identical to the parallel one
+    let out_seq = dir.join("seq");
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--seq", "--out",
+        out_seq.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    let par_csv = std::fs::read_to_string(out_par.join("mini.csv")).unwrap();
+    let seq_csv = std::fs::read_to_string(out_seq.join("mini.csv")).unwrap();
+    assert_eq!(par_csv, seq_csv, "parallel and sequential sweep CSV must match");
+    assert_eq!(par_csv.lines().count(), 1 + 4);
+
+    // --json emits a parseable document on stdout
+    let (ok, text) = numanos(&["sweep", "--manifest", manifest.to_str().unwrap(), "--json"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("\"records\""), "{text}");
+    assert!(text.contains("\"speedup\""), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_requires_manifest() {
+    let (ok, text) = numanos(&["sweep"]);
+    assert!(!ok);
+    assert!(text.contains("--manifest"), "{text}");
+}
+
+#[test]
+fn help_mentions_sweep_and_equals_syntax() {
+    let (ok, text) = numanos(&["help"]);
+    assert!(ok);
+    assert!(text.contains("sweep"), "{text}");
+    assert!(text.contains("--key=value"), "{text}");
+}

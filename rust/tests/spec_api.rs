@@ -1,0 +1,221 @@
+//! The experiment API end-to-end: `RunSpec` validation, JSON/TOML
+//! round-trips, sweep cross-products, manifest loading, and — the load-
+//! bearing guarantee — parallel sweep execution being byte-identical to
+//! sequential execution.
+
+use numanos::config::Size;
+use numanos::coordinator::binding::BindPolicy;
+use numanos::coordinator::sched::Policy;
+use numanos::harness;
+use numanos::metrics::speedup;
+use numanos::spec::{ExperimentManifest, RunSpec, Session, Sweep};
+use numanos::{bots, Runtime};
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("numanos_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn builder_validates_every_axis() {
+    assert!(RunSpec::builder().bench("fft").numa().threads(16).build().is_ok());
+    for bad in [
+        RunSpec::builder().bench("not_a_bench"),
+        RunSpec::builder().threads(0),
+        RunSpec::builder().threads(64), // > x4600 cores
+        RunSpec::builder().topo("not_a_topo"),
+        RunSpec::builder().policy(Policy::Serial).threads(2),
+        RunSpec::builder().cost("not_a_knob", 1.0),
+        RunSpec::builder().cores(vec![3, 3]),
+    ] {
+        let err = bad.build().unwrap_err();
+        assert!(!format!("{err:#}").is_empty());
+    }
+}
+
+#[test]
+fn spec_roundtrips_json_and_toml_agree() {
+    let spec = RunSpec::builder()
+        .bench("fft")
+        .size(Size::Small)
+        .policy(Policy::Dfwsrpt)
+        .numa()
+        .threads(12)
+        .seed(77)
+        .cost("dram_base_ns", 90.0)
+        .build()
+        .unwrap();
+    // JSON round-trip
+    let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+    assert_eq!(back, spec);
+    // the equivalent TOML parses to the same spec
+    let toml = "bench = \"fft\"\nsize = \"small\"\nsched = \"dfwsrpt\"\nbind = \"numa\"\n\
+                threads = 12\nseed = 77\n\n[cost]\ndram_base_ns = 90\n";
+    assert_eq!(RunSpec::from_toml_str(toml).unwrap(), spec);
+}
+
+#[test]
+fn sweep_cross_product_counts() {
+    let sweep = Sweep::new("grid", "grid")
+        .with_benches(["fib", "sort", "fft"])
+        .with_config(Policy::WorkFirst, BindPolicy::Linear)
+        .with_config(Policy::WorkFirst, BindPolicy::NumaAware)
+        .with_threads(vec![2, 4, 8, 16])
+        .with_seeds(vec![1, 2, 3, 4, 5])
+        .with_size(Size::Small);
+    assert_eq!(sweep.cell_count(), 3 * 2 * 4 * 5);
+    let cells = sweep.cells().unwrap();
+    assert_eq!(cells.len(), sweep.cell_count());
+    for c in &cells {
+        c.validate().unwrap();
+    }
+}
+
+#[test]
+fn parallel_sweep_is_byte_identical_to_sequential() {
+    let sweep = Sweep::new("det", "determinism check")
+        .with_benches(["fib", "sort"])
+        .with_config(Policy::WorkFirst, BindPolicy::Linear)
+        .with_config(Policy::Dfwsrpt, BindPolicy::NumaAware)
+        .with_threads(vec![2, 8])
+        .with_seeds(vec![1, 9])
+        .with_size(Size::Small);
+    // independent sessions so no memo state leaks between the two modes
+    let seq = Session::new().run_sweep_with(&sweep, 1).unwrap();
+    let par = Session::new().run_sweep_with(&sweep, 8).unwrap();
+    assert_eq!(seq.records.len(), 16);
+    assert_eq!(seq.to_csv(), par.to_csv(), "parallel CSV must match sequential byte-for-byte");
+    assert_eq!(
+        seq.to_json().to_pretty(),
+        par.to_json().to_pretty(),
+        "parallel JSON must match sequential"
+    );
+    assert_eq!(seq.table().to_markdown(), par.table().to_markdown());
+    // and re-running the same sweep on the same session is stable too
+    let again = Session::new().run_sweep(&sweep).unwrap();
+    assert_eq!(again.to_csv(), seq.to_csv());
+}
+
+#[test]
+fn sweep_records_match_direct_runtime_runs() {
+    // the declarative path must reproduce exactly what the low-level
+    // Runtime verbs produce for the same axes
+    let sweep = Sweep::new("parity", "parity")
+        .with_bench("fib")
+        .with_config(Policy::Dfwspt, BindPolicy::NumaAware)
+        .with_threads(vec![4])
+        .with_seeds(vec![3])
+        .with_size(Size::Small);
+    let rec = &Session::new().run_sweep(&sweep).unwrap().records[0];
+
+    let rt = Runtime::paper_testbed();
+    let mut ws = bots::create("fib", Size::Small, 3).unwrap();
+    let serial = rt.run_serial(ws.as_mut(), 3).unwrap();
+    let mut w = bots::create("fib", Size::Small, 3).unwrap();
+    let direct = rt.run(w.as_mut(), Policy::Dfwspt, BindPolicy::NumaAware, 4, 3, None).unwrap();
+
+    assert_eq!(rec.stats.makespan, direct.makespan);
+    assert_eq!(rec.stats.steals, direct.steals);
+    assert_eq!(rec.serial_makespan, serial.makespan);
+    assert!((rec.speedup - speedup(&serial, &direct)).abs() < 1e-12);
+}
+
+#[test]
+fn figure_tables_unchanged_by_the_sweep_port() {
+    // same tiny figure both ways: through the sweep-backed harness and
+    // through a hand-rolled loop over the legacy Runtime verbs
+    let spec = harness::FigureSpec {
+        id: "t",
+        title: "t",
+        bench: "fib",
+        size: Size::Small,
+        configs: vec![
+            (Policy::WorkFirst, BindPolicy::Linear),
+            (Policy::Dfwsrpt, BindPolicy::NumaAware),
+        ],
+        threads: vec![2, 8],
+    };
+    let rt = Runtime::paper_testbed();
+    let ported = harness::run_figure(&rt, &spec, 5).unwrap();
+
+    let mut ws = bots::create("fib", Size::Small, 5).unwrap();
+    let serial = rt.run_serial(ws.as_mut(), 5).unwrap();
+    for (row, &(policy, bind)) in ported.rows.iter().zip(&spec.configs) {
+        assert_eq!(row.0, harness::config_label(policy, bind));
+        for (&threads, &got) in spec.threads.iter().zip(&row.1) {
+            let mut w = bots::create("fib", Size::Small, 5).unwrap();
+            let s = rt.run(w.as_mut(), policy, bind, threads, 5, None).unwrap();
+            let want = speedup(&serial, &s);
+            assert!((got - want).abs() < 1e-12, "{policy:?}/{bind:?}@{threads}: {got} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn nine_figures_expand_to_sweeps() {
+    let sweeps = harness::figure_sweeps(Size::Medium, 42);
+    assert_eq!(sweeps.len(), 9);
+    let total: usize = sweeps.iter().map(|s| s.cell_count()).sum();
+    // 6 figures × 6 configs × 6 threads + 3 figures × 3 configs × 6 threads
+    assert_eq!(total, 6 * 6 * 6 + 3 * 3 * 6);
+}
+
+#[test]
+fn manifest_files_run_end_to_end() {
+    let dir = tmp_dir("manifest");
+    let json_path = dir.join("exp.json");
+    std::fs::write(
+        &json_path,
+        r#"{
+          "title": "integration",
+          "defaults": {"size": "small", "seed": 2},
+          "sweeps": [
+            {"id": "mini", "bench": "fib", "sched": ["wf", "dfwspt"],
+             "bind": ["numa"], "threads": [2, 4]}
+          ]
+        }"#,
+    )
+    .unwrap();
+    let toml_path = dir.join("exp.toml");
+    std::fs::write(
+        &toml_path,
+        "title = \"integration\"\n\n[defaults]\nsize = \"small\"\nseed = 2\n\n\
+         [[sweeps]]\nid = \"mini\"\nbench = \"fib\"\nsched = [\"wf\", \"dfwspt\"]\n\
+         bind = [\"numa\"]\nthreads = [2, 4]\n",
+    )
+    .unwrap();
+
+    let mj = ExperimentManifest::load(&json_path).unwrap();
+    let mt = ExperimentManifest::load(&toml_path).unwrap();
+    assert_eq!(mj, mt, "JSON and TOML forms of the same manifest must agree");
+
+    let session = Session::new();
+    let result = session.run_sweep(&mj.sweeps[0]).unwrap();
+    assert_eq!(result.records.len(), 4);
+    let table = result.table();
+    assert_eq!(table.rows.len(), 2);
+    assert_eq!(table.rows[0].0, "wf-Scheduler-NUMA");
+    assert_eq!(table.rows[1].0, "dfwspt-Scheduler-NUMA");
+    let csv = result.to_csv();
+    assert!(csv.lines().count() == 1 + 4, "{csv}");
+    assert!(csv.starts_with("sweep,bench,size,policy,bind,threads"), "{csv}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn session_baseline_dedup_across_grid() {
+    // one bench × one seed across many configs/threads → exactly one
+    // serial baseline, shared by every record
+    let sweep = Sweep::new("dedup", "dedup")
+        .with_bench("fib")
+        .with_config(Policy::WorkFirst, BindPolicy::Linear)
+        .with_config(Policy::CilkBased, BindPolicy::Linear)
+        .with_threads(vec![2, 4])
+        .with_seeds(vec![8])
+        .with_size(Size::Small);
+    let result = Session::new().run_sweep(&sweep).unwrap();
+    let first = result.records[0].serial_makespan;
+    assert!(result.records.iter().all(|r| r.serial_makespan == first));
+}

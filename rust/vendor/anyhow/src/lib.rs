@@ -1,0 +1,236 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The build image carries no crates.io registry, so this shim provides
+//! the slice of anyhow the codebase uses, source-compatible with the real
+//! crate so swapping back is a one-line Cargo change:
+//!
+//! * [`Error`] — a context-chain error: `Display` prints the outermost
+//!   message, `{:#}` prints the whole chain (`outer: inner: root`);
+//! * [`Result<T>`] with the `Error` default;
+//! * [`anyhow!`] / [`bail!`] / [`ensure!`] macros;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both
+//!   `Result` (any error convertible into [`Error`], including `Error`
+//!   itself) and `Option`;
+//! * `From<E: std::error::Error + Send + Sync + 'static>` so `?` works on
+//!   std errors, flattening their `source()` chain into context layers.
+//!
+//! Deliberately NOT implemented (unused here): backtraces, downcasting,
+//! `Error::new` over non-`Display` payloads.
+
+use std::fmt;
+
+/// `Result` with a defaulted anyhow error, exactly like upstream.
+pub type Result<T, E = Error> = core::result::Result<T, E>;
+
+/// A message plus an optional chain of underlying causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message (the `{:#}` chain
+    /// reads outermost-first, matching upstream anyhow).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Iterate the chain outermost-first (the `Display` message of each
+    /// layer).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut layers = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            layers.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        layers.into_iter()
+    }
+
+    /// The innermost error message.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(src) = cur.source.as_deref() {
+            cur = src;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if self.source.is_some() {
+            f.write_str("\n\nCaused by:")?;
+            let mut cur = self.source.as_deref();
+            let mut i = 0;
+            while let Some(e) = cur {
+                write!(f, "\n    {i}: {}", e.msg)?;
+                cur = e.source.as_deref();
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` intentionally does NOT implement `std::error::Error`: that is
+// what keeps this blanket `From` coherent next to core's identity
+// `impl From<T> for T` (the same trick upstream anyhow relies on).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut layers = vec![e.to_string()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = cur {
+            layers.push(s.to_string());
+            cur = s.source();
+        }
+        let mut it = layers.into_iter().rev();
+        let mut err = Error::msg(it.next().expect("at least one layer"));
+        for outer in it {
+            err = err.context(outer);
+        }
+        err
+    }
+}
+
+/// Context-attachment on fallible values, as in upstream anyhow.
+pub trait Context<T>: Sized {
+    /// Attach a context message, converting the error into [`Error`].
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for core::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built as by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Bail unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_num(s: &str) -> Result<i64> {
+        let n: i64 = s.parse().context("parsing a number")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_num("42").unwrap(), 42);
+        let e = parse_num("x").unwrap_err();
+        assert_eq!(e.msg, "parsing a number");
+        assert!(format!("{e:#}").starts_with("parsing a number: "));
+    }
+
+    #[test]
+    fn context_chains_display() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn context_on_option_and_anyhow_result() {
+        let none: Option<u8> = None;
+        assert_eq!(format!("{}", none.context("missing").unwrap_err()), "missing");
+        let r: Result<u8> = Err(anyhow!("inner {}", 7));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(flag: bool) -> Result<u8> {
+            ensure!(!flag, "flag was {flag}");
+            if flag {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+        let e = anyhow!("n = {}", 3);
+        assert_eq!(format!("{e}"), "n = 3");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("root").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer") && d.contains("Caused by") && d.contains("root"));
+    }
+}
