@@ -1,0 +1,78 @@
+//! Define, register and sweep a user-defined scheduler — the ~30-line
+//! recipe the `coordinator::sched` module docs promise.
+//!
+//!     cargo run --release --example custom_scheduler
+//!
+//! The strategy here is `far-first`: it visits victims **farthest group
+//! first** — deliberately anti-NUMA, the mirror image of DFWSPT.  Running
+//! it next to `wf` and `dfwspt` on the same grid shows the registry
+//! treating a user-defined strategy exactly like a built-in one: it can
+//! be named in manifests, validated, swept, and labelled in tables, with
+//! no engine or spec-layer changes.
+
+use numanos::coordinator::sched::{self, SchedDescriptor, Scheduler, VictimList};
+use numanos::util::SplitMix64;
+use numanos::{ExperimentManifest, Session};
+
+/// Steal from the farthest distance group first (ids ascending within a
+/// group) — maximizes steal-transaction hops and remote data pulls.
+struct FarFirst;
+
+impl Scheduler for FarFirst {
+    fn name(&self) -> &str {
+        "far-first"
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor::WORK_STEALING
+    }
+
+    fn victim_order(&self, vl: &VictimList, _rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        for (_, group) in vl.groups.iter().rev() {
+            out.extend(group.iter().copied());
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // One registration call; every surface picks the name up from here.
+    sched::register(
+        sched::SchedulerInfo::new("far-first", "steal farthest groups first (anti-NUMA demo)"),
+        |_params| Ok(Box::new(FarFirst)),
+    )?;
+    println!("registered schedulers: {}\n", sched::scheduler_names().join(" "));
+
+    // The manifest names the custom scheduler like any stock one.
+    let manifest = ExperimentManifest::from_json_str(
+        r#"{
+          "title": "user-defined scheduler in a sweep",
+          "defaults": {"size": "small", "seeds": [7]},
+          "sweeps": [
+            {"id": "far-vs-near",
+             "bench": ["fft"],
+             "sched": ["wf", "dfwspt", "far-first"],
+             "bind": ["numa"],
+             "threads": [4, 8, 16]}
+          ]
+        }"#,
+    )?;
+
+    let session = Session::new();
+    for sweep in &manifest.sweeps {
+        let result = session.run_sweep(sweep)?;
+        println!("{}", result.table().to_markdown());
+        for rec in &result.records {
+            if rec.spec.threads == 16 {
+                println!(
+                    "{:<22} 16 threads: {:>5.2}x, mean steal hops {:.2}",
+                    rec.spec.sched.name_sig(),
+                    rec.speedup,
+                    rec.stats.mean_steal_hops,
+                );
+            }
+        }
+    }
+    println!("\nfar-first pays for every steal with maximum hops — the same");
+    println!("machinery that proves DFWSPT's point also quantifies its inverse.");
+    Ok(())
+}

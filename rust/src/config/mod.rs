@@ -9,7 +9,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::binding::BindPolicy;
-use crate::coordinator::sched::Policy;
+use crate::coordinator::sched::{Policy, SchedSpec};
 use crate::simnuma::CostModel;
 use crate::util::NS;
 
@@ -54,7 +54,9 @@ pub enum ComputeMode {
 pub struct RunConfig {
     pub bench: String,
     pub size: Size,
-    pub policy: Policy,
+    /// Scheduler selection — any registered scheduler, parameterized as
+    /// `name:k=v,...` in config files.
+    pub sched: SchedSpec,
     pub bind: BindPolicy,
     pub threads: usize,
     pub topo: String,
@@ -68,7 +70,7 @@ impl Default for RunConfig {
         Self {
             bench: "fft".into(),
             size: Size::Medium,
-            policy: Policy::WorkFirst,
+            sched: SchedSpec::stock(Policy::WorkFirst),
             bind: BindPolicy::Linear,
             threads: 16,
             topo: "x4600".into(),
@@ -85,7 +87,7 @@ impl RunConfig {
         match key {
             "bench" => self.bench = value.to_string(),
             "size" => self.size = Size::from_name(value)?,
-            "sched" | "policy" => self.policy = Policy::from_name(value)?,
+            "sched" | "policy" => self.sched = SchedSpec::parse(value)?,
             "bind" => self.bind = BindPolicy::from_name(value)?,
             "threads" => self.threads = value.parse().context("threads")?,
             "topo" => self.topo = value.to_string(),
@@ -128,7 +130,7 @@ impl RunConfig {
         crate::spec::RunSpec::builder()
             .bench(&self.bench)
             .size(self.size)
-            .policy(self.policy)
+            .sched(self.sched.clone())
             .bind(self.bind)
             .threads(self.threads)
             .topo(&self.topo)
@@ -143,7 +145,7 @@ impl RunConfig {
             "bench={} size={} sched={} bind={} threads={} topo={} seed={} compute={}",
             self.bench,
             self.size.name(),
-            self.policy.name(),
+            self.sched.name_sig(),
             self.bind.name(),
             self.threads,
             self.topo,
@@ -202,7 +204,7 @@ mod tests {
     fn defaults_sane() {
         let c = RunConfig::default();
         assert_eq!(c.threads, 16);
-        assert_eq!(c.policy, Policy::WorkFirst);
+        assert_eq!(c.sched, SchedSpec::stock(Policy::WorkFirst));
     }
 
     #[test]
@@ -215,7 +217,7 @@ mod tests {
         c.set("size", "large").unwrap();
         c.set("compute", "pjrt").unwrap();
         assert_eq!(c.bench, "sort");
-        assert_eq!(c.policy, Policy::Dfwsrpt);
+        assert_eq!(c.sched, SchedSpec::stock(Policy::Dfwsrpt));
         assert_eq!(c.bind, BindPolicy::NumaAware);
         assert_eq!(c.threads, 8);
         assert_eq!(c.size, Size::Large);
@@ -236,8 +238,14 @@ mod tests {
         .unwrap();
         let c = RunConfig::from_file(&path).unwrap();
         assert_eq!(c.bench, "strassen");
-        assert_eq!(c.policy, Policy::Dfwspt);
+        assert_eq!(c.sched, SchedSpec::stock(Policy::Dfwspt));
         assert_eq!(c.threads, 12);
+        // registry schedulers (with parameters) work from config files too
+        std::fs::write(&path, "bench = fib\nsched = hops-threshold:max_hops=2\nthreads = 4\n")
+            .unwrap();
+        let c = RunConfig::from_file(&path).unwrap();
+        assert_eq!(c.sched.name_sig(), "hops-threshold(max_hops=2)");
+        assert!(c.to_spec().is_ok());
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -265,7 +273,7 @@ mod tests {
         c.set("bind", "numa").unwrap();
         let spec = c.to_spec().unwrap();
         assert_eq!(spec.bench, "sort");
-        assert_eq!(spec.policy, Policy::Dfwspt);
+        assert_eq!(spec.sched, crate::coordinator::sched::SchedSpec::stock(Policy::Dfwspt));
         assert_eq!(spec.label(), "dfwspt-Scheduler-NUMA");
         c.threads = 99; // invalid configs are caught at lowering time
         assert!(c.to_spec().is_err());

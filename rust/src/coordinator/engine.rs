@@ -1,11 +1,17 @@
 //! Discrete-event execution engine.
 //!
 //! Simulates a team of worker threads (one per bound core) executing an
-//! OpenMP-style task graph under a [`Policy`], charging simulated time for
-//! every compute unit, memory touch ([`MemSim`]), queue operation, spawn,
-//! probe and steal.  Events are processed in global virtual-time order
-//! (ties FIFO), all randomness is seeded — a run is a pure function of
-//! `(workload, topology, cost model, policy, binding, seed)`.
+//! OpenMP-style task graph under a [`Scheduler`], charging simulated time
+//! for every compute unit, memory touch ([`MemSim`]), queue operation,
+//! spawn, probe and steal.  Events are processed in global virtual-time
+//! order (ties FIFO), all randomness is seeded — a run is a pure function
+//! of `(workload, topology, cost model, scheduler, binding, seed)`.
+//!
+//! The engine never matches on a policy enum: it caches the scheduler's
+//! [`SchedDescriptor`] (queue discipline, steal end, overhead accounting),
+//! asks [`Scheduler::victim_order`] for each steal sweep's visiting
+//! order, and reports spawns, steals and failed sweeps back through
+//! [`Scheduler::observe`] so adaptive strategies can react.
 //!
 //! ## Semantics (mirroring NANOS)
 //!
@@ -36,7 +42,9 @@ use std::collections::BinaryHeap;
 use anyhow::Result;
 
 use crate::coordinator::pool::Pool;
-use crate::coordinator::sched::{victim_sequence, Policy, StealEnd, VictimList};
+use crate::coordinator::sched::{
+    dfwspt, SchedDescriptor, SchedEvent, Scheduler, StealEnd, VictimList,
+};
 use crate::coordinator::task::{
     Action, BodyCtx, TaskArena, TaskId, TaskState, Workload,
 };
@@ -46,9 +54,8 @@ use crate::simnuma::MemSim;
 use crate::topology::Topology;
 use crate::util::{SplitMix64, Time};
 
-/// Engine knobs (assembled by [`crate::coordinator::runtime::Runtime`]).
+/// Engine knobs (assembled by [`crate::spec::Session`]).
 pub struct EngineConfig {
-    pub policy: Policy,
     /// Per-thread bound core ids (index = thread id, 0 = master).
     pub cores: Vec<usize>,
     /// Extra per-queue-op penalty per thread when its runtime data is
@@ -76,7 +83,9 @@ struct Worker {
 
 /// The engine; one instance per run.
 pub struct Engine<'a> {
-    policy: Policy,
+    sched: &'a dyn Scheduler,
+    /// Cached [`Scheduler::descriptor`] (hot-path reads).
+    desc: SchedDescriptor,
     topo: Topology,
     workload: &'a mut dyn Workload,
     exec: Option<&'a mut ExecEngine>,
@@ -102,6 +111,7 @@ impl<'a> Engine<'a> {
         cfg: EngineConfig,
         mem: MemSim,
         victims: Vec<VictimList>,
+        sched: &'a dyn Scheduler,
         workload: &'a mut dyn Workload,
         exec: Option<&'a mut ExecEngine>,
     ) -> Self {
@@ -134,7 +144,8 @@ impl<'a> Engine<'a> {
             .collect();
         let pools = (0..n).map(|_| Pool::new()).collect();
         Self {
-            policy: cfg.policy,
+            sched,
+            desc: sched.descriptor(),
             topo,
             workload,
             exec,
@@ -241,9 +252,9 @@ impl<'a> Engine<'a> {
         }
         if self.live != 0 {
             anyhow::bail!(
-                "engine deadlock: {} tasks live with no runnable worker (policy {})",
+                "engine deadlock: {} tasks live with no runnable worker (scheduler {})",
                 self.live,
-                self.policy.name()
+                self.sched.name()
             );
         }
         if let Some(exec) = self.exec.as_deref_mut() {
@@ -255,8 +266,8 @@ impl<'a> Engine<'a> {
     /// Idle worker tries to find work: own pool / shared FIFO, then steal,
     /// else sleep.
     fn acquire(&mut self, w: usize) {
-        let free = self.policy.overhead_free();
-        if self.policy.shared_queue() {
+        let free = self.desc.overhead_free;
+        if self.desc.shared_queue() {
             let op = if free { 0 } else { self.mem.cost_model().shared_queue_op };
             let now = self.workers[w].clock;
             let cost = self.shared.lock(now, op);
@@ -289,38 +300,36 @@ impl<'a> Engine<'a> {
             return;
         }
 
-        // steal sweep
-        let cm = self.mem.cost_model().clone();
+        // steal sweep: the scheduler names the victims, in order
         let mut buf = std::mem::take(&mut self.victim_buf);
+        buf.clear();
         {
+            let sched = self.sched;
             let wk = &mut self.workers[w];
             let mut rng = wk.rng.clone();
-            victim_sequence(self.policy, &wk.victims, &mut rng, &mut buf);
+            sched.victim_order(&wk.victims, &mut rng, &mut buf);
             wk.rng = rng;
         }
-        let mut got: Option<TaskId> = None;
-        for &v in &buf {
-            let hops = self.thops[w][v] as Time;
-            self.workers[w].steal_attempts += 1;
-            let probe = cm.probe_base + hops * cm.probe_per_hop;
-            self.workers[w].clock += probe;
-            self.workers[w].overhead_time += probe;
-            if self.pools[v].is_empty() {
-                continue;
-            }
-            let now = self.workers[w].clock;
-            let cost = self.pools[v].lock(now, cm.steal_base + hops * cm.steal_per_hop);
-            self.workers[w].clock += cost;
-            self.workers[w].overhead_time += cost;
-            let taken = match self.policy.steal_end() {
-                StealEnd::Front => self.pools[v].pop_front(),
-                StealEnd::Back => self.pools[v].pop_back(),
-            };
-            if let Some(tid) = taken {
-                self.workers[w].steals += 1;
-                self.workers[w].steal_hops += hops;
-                got = Some(tid);
-                break;
+        let mut got = self.steal_sweep(w, &buf);
+        if got.is_none() {
+            self.sched.observe(&SchedEvent::StealMiss { worker: w });
+            // Liveness net for *partial* sweeps (bounded / hierarchical
+            // strategies may skip victims): a sleeper is only woken by a
+            // future push, so the last awake worker must not park while
+            // unprobed pools still hold tasks — nobody would be left to
+            // issue the wake.  One fallback sweep in priority order
+            // (closest first) restores full coverage.  A missed *full*
+            // sweep implies every probed pool was empty (the sim is
+            // sequential, so nothing refills between probe and check),
+            // making the non-empty-pool test below exactly "work remains
+            // that this sweep skipped" — for the stock schedulers it is
+            // always false and the legacy path stays byte-identical.
+            let others_parked =
+                (0..self.workers.len()).all(|i| i == w || self.workers[i].sleeping);
+            if others_parked && self.pools.iter().any(|p| !p.is_empty()) {
+                buf.clear();
+                dfwspt::order(&self.workers[w].victims, &mut buf);
+                got = self.steal_sweep(w, &buf);
             }
         }
         self.victim_buf = buf;
@@ -336,10 +345,44 @@ impl<'a> Engine<'a> {
         }
     }
 
+    /// Probe `order`'s victims in turn, charging probe/lock costs, and
+    /// steal from the first non-empty pool (the scheduler's descriptor
+    /// picks the deque end).  Reports successful steals to the
+    /// scheduler's observe hook.
+    fn steal_sweep(&mut self, w: usize, order: &[usize]) -> Option<TaskId> {
+        let cm = self.mem.cost_model().clone();
+        for &v in order {
+            let vhops = self.thops[w][v];
+            let hops = vhops as Time;
+            self.workers[w].steal_attempts += 1;
+            let probe = cm.probe_base + hops * cm.probe_per_hop;
+            self.workers[w].clock += probe;
+            self.workers[w].overhead_time += probe;
+            if self.pools[v].is_empty() {
+                continue;
+            }
+            let now = self.workers[w].clock;
+            let cost = self.pools[v].lock(now, cm.steal_base + hops * cm.steal_per_hop);
+            self.workers[w].clock += cost;
+            self.workers[w].overhead_time += cost;
+            let taken = match self.desc.steal_end {
+                StealEnd::Front => self.pools[v].pop_front(),
+                StealEnd::Back => self.pools[v].pop_back(),
+            };
+            if let Some(tid) = taken {
+                self.workers[w].steals += 1;
+                self.workers[w].steal_hops += hops;
+                self.sched.observe(&SchedEvent::Steal { thief: w, victim: v, hops: vhops });
+                return Some(tid);
+            }
+        }
+        None
+    }
+
     /// Execute the current task until a boundary: spawn-switch (depth-
     /// first), wait-suspension, or completion.
     fn run_quantum(&mut self, w: usize) -> Result<()> {
-        let free = self.policy.overhead_free();
+        let free = self.desc.overhead_free;
         let tid = self.workers[w].current.expect("run_quantum without task");
         loop {
             // single arena access per step: copy the 16-B action out so the
@@ -378,6 +421,7 @@ impl<'a> Engine<'a> {
                 }
                 Some(Action::Spawn(desc)) => {
                     self.arena.get_mut(tid).cursor += 1;
+                    self.sched.observe(&SchedEvent::Spawn { worker: w });
                     let cm = self.mem.cost_model();
                     let spawn_cost = if free { 0 } else { cm.spawn_cost };
                     self.workers[w].clock += spawn_cost;
@@ -387,7 +431,7 @@ impl<'a> Engine<'a> {
                     self.live += 1;
                     self.arena.get_mut(tid).pending_children += 1;
 
-                    if self.policy.shared_queue() {
+                    if self.desc.shared_queue() {
                         let op = self.mem.cost_model().shared_queue_op;
                         let now = self.workers[w].clock;
                         let cost = self.shared.lock(now, op);
@@ -460,7 +504,7 @@ impl<'a> Engine<'a> {
     /// implicit taskwait clears, and cascade completion through parents
     /// whose post phase already finished (`WaitingFinal`).
     fn complete(&mut self, tid: TaskId, w: usize) {
-        let free = self.policy.overhead_free();
+        let free = self.desc.overhead_free;
         let mut finished = tid;
         loop {
             {
@@ -492,7 +536,7 @@ impl<'a> Engine<'a> {
                         pi.cursor = 0;
                         pi.owner as usize
                     };
-                    if self.policy.shared_queue() {
+                    if self.desc.shared_queue() {
                         let op = self.mem.cost_model().shared_queue_op;
                         let now = self.workers[w].clock;
                         let cost = self.shared.lock(now, op);
@@ -533,7 +577,7 @@ impl<'a> Engine<'a> {
         let steal_hops: u64 = self.workers.iter().map(|w| w.steal_hops).sum();
         RunStats {
             bench: String::new(),
-            policy: self.policy,
+            sched: self.sched.signature(),
             bind: None,
             threads: self.workers.len(),
             topo: self.topo.name().to_string(),

@@ -1,0 +1,169 @@
+//! `adaptive` — work-first that learns it is on a NUMA machine.
+//!
+//! Starts exactly like [`super::wf`]: uniform random victim sweeps, the
+//! strongest stock baseline when steals are rare or data is small.  The
+//! [`SchedEvent::Steal`] feedback hook meanwhile measures the **remote
+//! steal ratio** — the fraction of successful steals that crossed at
+//! least one interconnect hop.  Once at least `min_steals` steals have
+//! been observed and the ratio exceeds `remote_ratio`, the strategy
+//! switches (permanently, for the rest of the run) to the §VI.A
+//! hop-ordered priority list of [`super::dfwspt`].
+//!
+//! The rationale is the paper's own data read backwards: random stealing
+//! only hurts when steals actually cross the fabric (FFT/Sort/Strassen at
+//! high thread counts); when they don't (NQueens, small teams, one busy
+//! node), the priority list buys nothing.  A strategy that *observes*
+//! which regime it is in needs runtime feedback — precisely what the
+//! closed descriptor enum could not express.
+
+use std::cell::Cell;
+
+use super::{dfwspt, wf, SchedDescriptor, SchedEvent, Scheduler, VictimList};
+use crate::util::SplitMix64;
+
+/// Uniform random victim selection until the observed remote-steal ratio
+/// crosses `remote_ratio`, then the §VI.A priority list.
+pub struct Adaptive {
+    remote_ratio: f64,
+    min_steals: u64,
+    steals: Cell<u64>,
+    remote_steals: Cell<u64>,
+    switched: Cell<bool>,
+}
+
+impl Adaptive {
+    pub fn new(remote_ratio: f64, min_steals: u64) -> Self {
+        Self {
+            remote_ratio,
+            min_steals,
+            steals: Cell::new(0),
+            remote_steals: Cell::new(0),
+            switched: Cell::new(false),
+        }
+    }
+
+    /// Has the strategy switched to the priority list?
+    pub fn switched(&self) -> bool {
+        self.switched.get()
+    }
+}
+
+impl Scheduler for Adaptive {
+    fn name(&self) -> &str {
+        "adaptive"
+    }
+
+    fn signature(&self) -> String {
+        format!(
+            "adaptive(min_steals={};remote_ratio={})",
+            self.min_steals,
+            crate::util::fmt_f64(self.remote_ratio)
+        )
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor::WORK_STEALING
+    }
+
+    fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        if self.switched.get() {
+            dfwspt::order(vl, out);
+        } else {
+            wf::random_order(vl, rng, out);
+        }
+    }
+
+    fn observe(&self, event: &SchedEvent) {
+        let SchedEvent::Steal { hops, .. } = event else { return };
+        let steals = self.steals.get() + 1;
+        self.steals.set(steals);
+        if *hops > 0 {
+            self.remote_steals.set(self.remote_steals.get() + 1);
+        }
+        if !self.switched.get() && steals >= self.min_steals {
+            let ratio = self.remote_steals.get() as f64 / steals as f64;
+            if ratio > self.remote_ratio {
+                self.switched.set(true);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+    use super::*;
+
+    fn vl() -> VictimList {
+        VictimList {
+            groups: vec![(0, vec![3]), (1, vec![1, 2]), (2, vec![0])],
+        }
+    }
+
+    #[test]
+    fn starts_in_work_first_mode() {
+        let s = Adaptive::new(0.5, 4);
+        let (mut ra, mut rb) = (SplitMix64::new(1), SplitMix64::new(1));
+        let (mut got, mut want) = (Vec::new(), Vec::new());
+        s.victim_order(&vl(), &mut ra, &mut got);
+        wf::random_order(&vl(), &mut rb, &mut want);
+        assert_eq!(got, want);
+        assert!(!s.switched());
+    }
+
+    #[test]
+    fn switches_when_remote_ratio_crosses() {
+        let s = Adaptive::new(0.5, 4);
+        // 3 local steals: below min_steals, no switch
+        for _ in 0..3 {
+            s.observe(&SchedEvent::Steal { thief: 0, victim: 3, hops: 0 });
+        }
+        assert!(!s.switched());
+        // remote steals push the ratio over 0.5 once min_steals is met
+        for _ in 0..5 {
+            s.observe(&SchedEvent::Steal { thief: 0, victim: 1, hops: 2 });
+        }
+        assert!(s.switched(), "5/8 remote > 0.5");
+        let mut rng = SplitMix64::new(2);
+        let mut out = Vec::new();
+        s.victim_order(&vl(), &mut rng, &mut out);
+        assert_eq!(out, vec![3, 1, 2, 0], "priority-list order after the switch");
+    }
+
+    #[test]
+    fn switch_is_sticky() {
+        let s = Adaptive::new(0.5, 2);
+        s.observe(&SchedEvent::Steal { thief: 0, victim: 1, hops: 1 });
+        s.observe(&SchedEvent::Steal { thief: 0, victim: 1, hops: 1 });
+        assert!(s.switched());
+        // a flood of local steals later must not flip it back
+        for _ in 0..32 {
+            s.observe(&SchedEvent::Steal { thief: 0, victim: 3, hops: 0 });
+        }
+        assert!(s.switched());
+    }
+
+    #[test]
+    fn local_steals_never_trigger_a_switch() {
+        let s = Adaptive::new(0.5, 2);
+        for _ in 0..64 {
+            s.observe(&SchedEvent::Steal { thief: 0, victim: 3, hops: 0 });
+        }
+        assert!(!s.switched());
+        // misses and spawns are not steals and change nothing
+        s.observe(&SchedEvent::StealMiss { worker: 0 });
+        s.observe(&SchedEvent::Spawn { worker: 0 });
+        assert!(!s.switched());
+    }
+
+    #[test]
+    fn registry_builds_and_bounds_the_ratio() {
+        assert!(build(&SchedSpec::new("adaptive")).is_ok());
+        let spec = SchedSpec::new("adaptive")
+            .with_param("remote_ratio", 0.25)
+            .with_param("min_steals", 8.0);
+        assert_eq!(build(&spec).unwrap().name(), "adaptive");
+        assert!(build(&SchedSpec::new("adaptive").with_param("remote_ratio", -0.1)).is_err());
+        assert!(build(&SchedSpec::new("adaptive").with_param("remote_ratio", 2.0)).is_err());
+    }
+}

@@ -19,18 +19,47 @@
 //!
 //! There is no work stealing: the shared queue *is* the only pool.
 
-pub use super::Policy;
+use super::{QueueKind, SchedDescriptor, Scheduler, StealEnd, VictimList};
+use crate::util::SplitMix64;
+
+/// The shared-FIFO scheduler.
+pub struct BreadthFirst;
+
+impl Scheduler for BreadthFirst {
+    fn name(&self) -> &str {
+        "bf"
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor {
+            queue: QueueKind::SharedFifo,
+            steal_end: StealEnd::Back,
+            child_first: false,
+            overhead_free: false,
+        }
+    }
+
+    fn victim_order(&self, _vl: &VictimList, _rng: &mut SplitMix64, _out: &mut Vec<usize>) {}
+}
 
 #[cfg(test)]
 mod tests {
-    use super::super::*;
+    use super::*;
 
     #[test]
     fn bf_descriptor() {
-        let p = Policy::BreadthFirst;
-        assert!(p.shared_queue());
-        assert!(!p.depth_first());
-        assert_eq!(p.victim_kind(), VictimKind::None);
-        assert!(!p.overhead_free());
+        let d = BreadthFirst.descriptor();
+        assert!(d.shared_queue());
+        assert!(!d.child_first);
+        assert!(!d.overhead_free);
+    }
+
+    #[test]
+    fn bf_has_no_victims() {
+        let vl = VictimList { groups: vec![(0, vec![1]), (2, vec![2, 3])] };
+        let mut rng = SplitMix64::new(3);
+        let mut out = Vec::new();
+        BreadthFirst.victim_order(&vl, &mut rng, &mut out);
+        assert!(out.is_empty());
     }
 }

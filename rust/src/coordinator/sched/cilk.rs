@@ -15,18 +15,51 @@
 //! costs slightly more steals on deep trees — one of the small cilk/wf
 //! gaps visible across the paper's figures.
 
-pub use super::Policy;
+use super::wf::random_order;
+use super::{QueueKind, SchedDescriptor, Scheduler, StealEnd, VictimList};
+use crate::util::SplitMix64;
+
+/// The Cilk-style scheduler.
+pub struct CilkBased;
+
+impl Scheduler for CilkBased {
+    fn name(&self) -> &str {
+        "cilk"
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor {
+            queue: QueueKind::PerWorker,
+            steal_end: StealEnd::Front,
+            child_first: true,
+            overhead_free: false,
+        }
+    }
+
+    fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        random_order(vl, rng, out);
+    }
+}
 
 #[cfg(test)]
 mod tests {
-    use super::super::*;
+    use super::*;
 
     #[test]
     fn cilk_descriptor() {
-        let p = Policy::CilkBased;
-        assert!(p.depth_first());
-        assert!(!p.shared_queue());
-        assert_eq!(p.steal_end(), StealEnd::Front);
-        assert_eq!(p.victim_kind(), VictimKind::Random);
+        let d = CilkBased.descriptor();
+        assert!(d.child_first);
+        assert!(!d.shared_queue());
+        assert_eq!(d.steal_end, StealEnd::Front);
+    }
+
+    #[test]
+    fn cilk_and_wf_share_victim_selection() {
+        let vl = VictimList { groups: vec![(1, vec![1, 2, 3, 4])] };
+        let (mut ra, mut rb) = (SplitMix64::new(7), SplitMix64::new(7));
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        CilkBased.victim_order(&vl, &mut ra, &mut a);
+        super::super::wf::WorkFirst.victim_order(&vl, &mut rb, &mut b);
+        assert_eq!(a, b);
     }
 }

@@ -20,7 +20,8 @@
 //! [`super::dfwsrpt`] randomizes away (and why Strassen, with its high
 //! steal rate, favours DFWSRPT in Fig 15).
 
-use super::VictimList;
+use super::{SchedDescriptor, Scheduler, VictimList};
+use crate::util::SplitMix64;
 
 /// Emit the §VI.A visiting order: distance groups ascending, ids ascending
 /// within a group.  (The [`VictimList`] is already built sorted this way;
@@ -31,9 +32,27 @@ pub fn order(vl: &VictimList, out: &mut Vec<usize>) {
     }
 }
 
+/// The §VI.A scheduler.
+pub struct Dfwspt;
+
+impl Scheduler for Dfwspt {
+    fn name(&self) -> &str {
+        "dfwspt"
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor::WORK_STEALING
+    }
+
+    fn victim_order(&self, vl: &VictimList, _rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        order(vl, out);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::*;
+    use super::*;
 
     #[test]
     fn order_is_distance_then_id() {
@@ -48,17 +67,18 @@ mod tests {
     #[test]
     fn deterministic() {
         let vl = VictimList { groups: vec![(1, vec![3, 4, 7])] };
+        let mut rng = SplitMix64::new(9);
         let (mut a, mut b) = (Vec::new(), Vec::new());
-        super::order(&vl, &mut a);
-        super::order(&vl, &mut b);
+        Dfwspt.victim_order(&vl, &mut rng, &mut a);
+        Dfwspt.victim_order(&vl, &mut rng, &mut b);
         assert_eq!(a, b);
     }
 
     #[test]
     fn dfwspt_descriptor() {
-        let p = Policy::Dfwspt;
-        assert!(p.depth_first());
-        assert_eq!(p.steal_end(), StealEnd::Back);
-        assert_eq!(p.victim_kind(), VictimKind::PriorityList);
+        let d = Dfwspt.descriptor();
+        assert!(d.child_first);
+        assert_eq!(d.steal_end, StealEnd::Back);
+        assert_eq!(Policy::Dfwspt.victim_kind(), VictimKind::PriorityList);
     }
 }

@@ -13,9 +13,8 @@
 //! threads) spread across equidistant victims instead of convoying — the
 //! effect that buys Strassen its extra ~17% over work-first in Fig 15.
 
+use super::{SchedDescriptor, Scheduler, VictimList};
 use crate::util::SplitMix64;
-
-use super::VictimList;
 
 /// Emit the §VI.B visiting order: distance groups ascending, fresh random
 /// permutation within each group.
@@ -27,9 +26,27 @@ pub fn order(vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {
     }
 }
 
+/// The §VI.B scheduler.
+pub struct Dfwsrpt;
+
+impl Scheduler for Dfwsrpt {
+    fn name(&self) -> &str {
+        "dfwsrpt"
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor::WORK_STEALING
+    }
+
+    fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        order(vl, rng, out);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::*;
+    use super::*;
 
     fn vl() -> VictimList {
         VictimList {
@@ -41,7 +58,7 @@ mod tests {
     fn groups_stay_in_distance_order() {
         let mut rng = SplitMix64::new(11);
         let mut out = Vec::new();
-        super::order(&vl(), &mut rng, &mut out);
+        Dfwsrpt.victim_order(&vl(), &mut rng, &mut out);
         assert_eq!(out[0], 2, "closest group first");
         let mid: std::collections::BTreeSet<_> = out[1..5].iter().copied().collect();
         assert_eq!(mid, [1, 5, 6, 8].into_iter().collect());
@@ -55,7 +72,7 @@ mod tests {
         let mut seen = std::collections::BTreeSet::new();
         for _ in 0..32 {
             let mut out = Vec::new();
-            super::order(&vl(), &mut rng, &mut out);
+            Dfwsrpt.victim_order(&vl(), &mut rng, &mut out);
             seen.insert(out[1..5].to_vec());
         }
         assert!(seen.len() > 1, "group order must vary across sweeps");
@@ -63,9 +80,9 @@ mod tests {
 
     #[test]
     fn dfwsrpt_descriptor() {
-        let p = Policy::Dfwsrpt;
-        assert!(p.depth_first());
-        assert_eq!(p.steal_end(), StealEnd::Back);
-        assert_eq!(p.victim_kind(), VictimKind::RandomPriorityList);
+        let d = Dfwsrpt.descriptor();
+        assert!(d.child_first);
+        assert_eq!(d.steal_end, StealEnd::Back);
+        assert_eq!(Policy::Dfwsrpt.victim_kind(), VictimKind::RandomPriorityList);
     }
 }

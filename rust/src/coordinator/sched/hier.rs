@@ -1,0 +1,131 @@
+//! `hier` — two-level hierarchical stealing (after Thibault et al.'s
+//! bubble scheduling, arXiv:0706.2073).
+//!
+//! Victim selection mirrors the machine hierarchy instead of flattening
+//! it:
+//!
+//! 1. **Node-local level** — victims on the thief's own NUMA node
+//!    (hop distance 0), in random order.  Intra-node steals are nearly
+//!    free: no interconnect crossing, data on the local memory.
+//! 2. **Delegate level** — delegation to the rest of the machine is
+//!    stochastic: each sweep, a worker extends past its node with
+//!    probability `1/k` where `k` is the node's team size, so *in
+//!    expectation* one thread per node probes remote pools at a time
+//!    (several may in unlucky overlapping sweeps — the shaping is
+//!    statistical, not a mutex).  Remote groups keep the hop-ascending
+//!    priority order, randomized within a group.
+//!
+//! The effect is bubble-like traffic shaping: a starving node forwards
+//! roughly one representative across the fabric instead of stampeding
+//! every idle core over the interconnect — the many-thieves convoy that
+//! [`super::dfwsrpt`] mitigates *within* a group is damped *between*
+//! nodes too.
+
+use super::{SchedDescriptor, Scheduler, VictimList};
+use crate::util::SplitMix64;
+
+/// Two-level node-local / delegate stealing.
+pub struct Hierarchical;
+
+impl Scheduler for Hierarchical {
+    fn name(&self) -> &str {
+        "hier"
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor::WORK_STEALING
+    }
+
+    fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        // Level 1: node-local victims (hop distance 0), random order.
+        // Groups ascend by distance, so only the first can be local.
+        let mut local_len = 0;
+        if let Some((0, group)) = vl.groups.first() {
+            out.extend(group.iter().copied());
+            rng.shuffle(out);
+            local_len = group.len();
+        }
+        // Level 2: delegate election.  The node's team is this worker
+        // plus its local victims; with probability 1/team one sweep
+        // crosses the interconnect.  (A worker alone on its node always
+        // delegates itself — there is no local level to try.)
+        let team = local_len as u64 + 1;
+        if rng.gen_range(team) == 0 {
+            for (hops, group) in &vl.groups {
+                if *hops == 0 {
+                    continue;
+                }
+                let start = out.len();
+                out.extend(group.iter().copied());
+                rng.shuffle(&mut out[start..]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+    use super::*;
+
+    fn vl() -> VictimList {
+        VictimList {
+            groups: vec![(0, vec![1, 2, 3]), (1, vec![4, 5]), (2, vec![6])],
+        }
+    }
+
+    #[test]
+    fn local_victims_always_lead() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..64 {
+            let mut out = Vec::new();
+            Hierarchical.victim_order(&vl(), &mut rng, &mut out);
+            assert!(out.len() >= 3, "local group always present");
+            let local: std::collections::BTreeSet<_> = out[..3].iter().copied().collect();
+            assert_eq!(local, [1, 2, 3].into_iter().collect());
+            if out.len() > 3 {
+                // remote tail keeps hop-ascending group order
+                let mid: std::collections::BTreeSet<_> = out[3..5].iter().copied().collect();
+                assert_eq!(mid, [4, 5].into_iter().collect());
+                assert_eq!(out[5], 6);
+            }
+        }
+    }
+
+    #[test]
+    fn delegation_is_occasional_not_constant() {
+        let mut rng = SplitMix64::new(2);
+        let mut remote_sweeps = 0;
+        const SWEEPS: usize = 400;
+        for _ in 0..SWEEPS {
+            let mut out = Vec::new();
+            Hierarchical.victim_order(&vl(), &mut rng, &mut out);
+            if out.len() > 3 {
+                remote_sweeps += 1;
+            }
+        }
+        // expectation is SWEEPS/4 (team of 4); allow a wide band
+        assert!(remote_sweeps > SWEEPS / 10, "{remote_sweeps}");
+        assert!(remote_sweeps < SWEEPS / 2, "{remote_sweeps}");
+    }
+
+    #[test]
+    fn lone_worker_on_a_node_always_delegates() {
+        // no hops-0 group: every sweep must reach the remote victims,
+        // or the worker could never steal at all
+        let vl = VictimList { groups: vec![(1, vec![1]), (2, vec![2, 3])] };
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..16 {
+            let mut out = Vec::new();
+            Hierarchical.victim_order(&vl, &mut rng, &mut out);
+            assert_eq!(out.len(), 3);
+            assert_eq!(out[0], 1, "nearest group first");
+        }
+    }
+
+    #[test]
+    fn registry_resolves_hier_and_its_alias() {
+        assert_eq!(build(&SchedSpec::new("hier")).unwrap().name(), "hier");
+        assert_eq!(resolve_name("hierarchical").unwrap(), "hier");
+    }
+}

@@ -1,0 +1,170 @@
+//! `hops-threshold` — bounded-distance stealing with starvation spill.
+//!
+//! The closed enum could say *which order* to visit victims in, but never
+//! *which victims to skip*.  This strategy steals only from victims at
+//! most `max_hops` interconnect hops away (random within each distance
+//! group, like [`super::dfwsrpt`]), keeping every steal transaction — and
+//! the stolen task's first-touched data — inside a bounded NUMA
+//! neighbourhood.
+//!
+//! Pure distance-capping deadlocks a neighbourhood whose pools have all
+//! drained while work piles up across the fabric, so the cap is softened
+//! by a **starvation spill**: the [`SchedEvent::StealMiss`] feedback hook
+//! counts consecutive empty sweeps (team-wide — starvation is a property
+//! of the run, not of one thread), and once `spill_after` misses
+//! accumulate, sweeps extend past the cap until the next successful steal
+//! resets the counter.  This is the kind of stateful, feedback-driven
+//! strategy the [`Scheduler`] trait exists for.
+
+use std::cell::Cell;
+
+use super::{SchedDescriptor, SchedEvent, Scheduler, VictimList};
+use crate::util::SplitMix64;
+
+/// Steal within `max_hops`; probe beyond only after `spill_after`
+/// consecutive empty sweeps.
+pub struct HopsThreshold {
+    max_hops: u8,
+    spill_after: u32,
+    /// Consecutive empty sweeps, team-wide (one engine run is
+    /// single-threaded, so a `Cell` is race-free and deterministic).
+    starved: Cell<u32>,
+}
+
+impl HopsThreshold {
+    pub fn new(max_hops: u8, spill_after: u32) -> Self {
+        Self { max_hops, spill_after, starved: Cell::new(0) }
+    }
+
+    /// Currently spilling past the hop cap?
+    pub fn spilling(&self) -> bool {
+        self.starved.get() >= self.spill_after
+    }
+}
+
+impl Scheduler for HopsThreshold {
+    fn name(&self) -> &str {
+        "hops-threshold"
+    }
+
+    fn signature(&self) -> String {
+        format!("hops-threshold(max_hops={};spill_after={})", self.max_hops, self.spill_after)
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor::WORK_STEALING
+    }
+
+    fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        for (hops, group) in &vl.groups {
+            if *hops > self.max_hops {
+                break; // groups ascend by distance
+            }
+            let start = out.len();
+            out.extend(group.iter().copied());
+            rng.shuffle(&mut out[start..]);
+        }
+        if self.spilling() {
+            for (hops, group) in &vl.groups {
+                if *hops <= self.max_hops {
+                    continue;
+                }
+                let start = out.len();
+                out.extend(group.iter().copied());
+                rng.shuffle(&mut out[start..]);
+            }
+        }
+    }
+
+    fn observe(&self, event: &SchedEvent) {
+        match event {
+            SchedEvent::Steal { .. } => self.starved.set(0),
+            SchedEvent::StealMiss { .. } => {
+                self.starved.set(self.starved.get().saturating_add(1))
+            }
+            SchedEvent::Spawn { .. } => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+    use super::*;
+
+    fn vl() -> VictimList {
+        VictimList {
+            groups: vec![(0, vec![1]), (1, vec![2, 3]), (3, vec![4, 5, 6])],
+        }
+    }
+
+    #[test]
+    fn caps_at_max_hops_when_fed() {
+        let s = HopsThreshold::new(1, 2);
+        let mut rng = SplitMix64::new(1);
+        let mut out = Vec::new();
+        s.victim_order(&vl(), &mut rng, &mut out);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![1, 2, 3], "victims beyond 1 hop are skipped");
+        assert_eq!(out[0], 1, "the hops-0 group still comes first");
+    }
+
+    #[test]
+    fn spills_after_consecutive_misses_and_resets_on_steal() {
+        let s = HopsThreshold::new(1, 2);
+        let mut rng = SplitMix64::new(2);
+        s.observe(&SchedEvent::StealMiss { worker: 0 });
+        assert!(!s.spilling(), "one miss is not starvation");
+        s.observe(&SchedEvent::StealMiss { worker: 3 });
+        assert!(s.spilling());
+        let mut out = Vec::new();
+        s.victim_order(&vl(), &mut rng, &mut out);
+        assert_eq!(out.len(), 6, "spill extends the sweep to every victim");
+        let near: Vec<usize> = out[..3].to_vec();
+        assert!(near.contains(&1) && near.contains(&2) && near.contains(&3));
+
+        s.observe(&SchedEvent::Steal { thief: 0, victim: 1, hops: 0 });
+        assert!(!s.spilling(), "a successful steal resets the counter");
+        out.clear();
+        s.victim_order(&vl(), &mut rng, &mut out);
+        assert_eq!(out.len(), 3);
+    }
+
+    #[test]
+    fn zero_cap_is_node_local_only() {
+        let s = HopsThreshold::new(0, 2);
+        let mut rng = SplitMix64::new(3);
+        let mut out = Vec::new();
+        s.victim_order(&vl(), &mut rng, &mut out);
+        assert_eq!(out, vec![1]);
+    }
+
+    #[test]
+    fn spawn_events_are_ignored() {
+        let s = HopsThreshold::new(1, 1);
+        s.observe(&SchedEvent::StealMiss { worker: 0 });
+        s.observe(&SchedEvent::Spawn { worker: 0 });
+        assert!(s.spilling(), "spawns must not reset the starvation counter");
+    }
+
+    #[test]
+    fn signature_carries_resolved_parameters() {
+        let s = HopsThreshold::new(1, 2);
+        assert_eq!(s.signature(), "hops-threshold(max_hops=1;spill_after=2)");
+        assert_eq!(s.name(), "hops-threshold");
+    }
+
+    #[test]
+    fn registry_builds_with_defaults_and_overrides() {
+        assert!(build(&SchedSpec::new("hops-threshold")).is_ok());
+        let spec = SchedSpec::new("hops-threshold")
+            .with_param("max_hops", 2.0)
+            .with_param("spill_after", 1.0);
+        assert_eq!(build(&spec).unwrap().name(), "hops-threshold");
+        let bad = SchedSpec::new("hops-threshold").with_param("max_hops", 300.0);
+        assert!(build(&bad).is_err(), "u8 range enforced");
+        let bad = SchedSpec::new("hops-threshold").with_param("spill_after", 4294967296.0);
+        assert!(build(&bad).is_err(), "u32 range enforced, no silent wrap to 0");
+    }
+}

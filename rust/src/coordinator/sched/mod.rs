@@ -1,31 +1,100 @@
-//! Task scheduling policies — three stock NANOS schedulers plus the
-//! paper's two NUMA-aware contributions.
+//! Task scheduling — an open, pluggable strategy layer.
 //!
-//! | policy | queueing | steal end | victim selection |
+//! Scheduling used to be a closed six-variant `enum Policy` whose
+//! semantics the engine interpreted through accessor matches.  It is now
+//! a first-class [`Scheduler`] **trait** plus a string-keyed **registry**:
+//! every strategy (the three stock NANOS schedulers, the paper's two
+//! NUMA-aware contributions, the serial baseline, and any number of
+//! user-defined ones) is a value the engine drives through one small
+//! interface:
+//!
+//! * [`Scheduler::descriptor`] — the declarative part: queue discipline
+//!   ([`QueueKind`]), steal end ([`StealEnd`]), child-first execution,
+//!   overhead accounting;
+//! * [`Scheduler::victim_order`] — the behavioural part: emit this sweep's
+//!   victim visiting order from the per-worker [`VictimList`];
+//! * [`Scheduler::observe`] — an optional feedback hook ([`SchedEvent`]:
+//!   spawns, steals, failed sweeps) that lets adaptive strategies change
+//!   their victim order mid-run.
+//!
+//! | scheduler | queueing | steal end | victim selection |
 //! |---|---|---|---|
-//! | [`bf`]      breadth-first | one shared FIFO | —     | — (no stealing) |
-//! | [`cilk`]    Cilk-based    | per-worker deque, child-first | front | uniform random |
-//! | [`wf`]      work-first    | per-worker deque, child-first | back  | uniform random |
-//! | [`dfwspt`]  §VI.A         | per-worker deque, child-first | back  | hop-ordered priority list, id-ties first |
-//! | [`dfwsrpt`] §VI.B         | per-worker deque, child-first | back  | hop-ordered priority list, random within a distance group |
+//! | `serial`  overhead-free baseline | per-worker, child-first | — | — (1 thread) |
+//! | [`bf`]    breadth-first | one shared FIFO | — | — (no stealing) |
+//! | [`cilk`]  Cilk-based | per-worker deque, child-first | front | uniform random |
+//! | [`wf`]    work-first | per-worker deque, child-first | back | uniform random |
+//! | [`dfwspt`]  §VI.A | per-worker deque, child-first | back | hop-ordered priority list, id-ties first |
+//! | [`dfwsrpt`] §VI.B | per-worker deque, child-first | back | hop-ordered priority list, random within a distance group |
+//! | [`hops`]  `hops-threshold` | per-worker deque, child-first | back | near groups only (≤ `max_hops`), spill beyond on starvation |
+//! | [`hier`]  two-level | per-worker deque, child-first | back | node-local random first, ~one delegate per node (in expectation) probes remote nodes |
+//! | [`adaptive`] | per-worker deque, child-first | back | starts uniform random, switches to the priority list when the remote-steal ratio crosses `remote_ratio` |
 //!
-//! `Serial` is the measurement baseline: depth-first execution with every
-//! runtime overhead constant zeroed (the paper's "serial execution time"
-//! denominator).
+//! ## Adding a scheduler (~30 lines)
 //!
-//! The policies are *declarative* here (an enum plus descriptors); the
-//! event engine interprets them.  Victim *order* generation is delegated to
-//! the per-policy modules so each strategy's logic sits next to its
-//! documentation and tests.
+//! Implement the trait, register a factory, and every surface — `RunSpec`
+//! validation, sweep grids, manifests, `numanos list`, "unknown
+//! scheduler" error lists — picks it up automatically:
+//!
+//! ```
+//! use numanos::coordinator::sched::{
+//!     self, SchedDescriptor, Scheduler, VictimList,
+//! };
+//! use numanos::util::SplitMix64;
+//!
+//! /// Steals farthest-first — an anti-locality strawman.
+//! struct FarFirst;
+//!
+//! impl Scheduler for FarFirst {
+//!     fn name(&self) -> &str {
+//!         "far-first"
+//!     }
+//!     fn descriptor(&self) -> SchedDescriptor {
+//!         SchedDescriptor::WORK_STEALING
+//!     }
+//!     fn victim_order(&self, vl: &VictimList, _rng: &mut SplitMix64, out: &mut Vec<usize>) {
+//!         for (_, group) in vl.groups.iter().rev() {
+//!             out.extend(group.iter().copied());
+//!         }
+//!     }
+//! }
+//!
+//! sched::register(
+//!     sched::SchedulerInfo::new("far-first", "steal farthest groups first"),
+//!     |_params| Ok(Box::new(FarFirst)),
+//! )
+//! .unwrap();
+//! assert!(sched::scheduler_names().contains(&"far-first".to_string()));
+//! ```
+//!
+//! Parameterized strategies declare [`ParamInfo`]s in their
+//! [`SchedulerInfo`]; a [`SchedSpec`] (`{"name": "hops-threshold",
+//! "max_hops": 1}` in a manifest, `--sched hops-threshold:max_hops=1` on
+//! the CLI) carries the overrides and [`build`] validates them against the
+//! declaration.
+//!
+//! The legacy closed [`Policy`] enum survives as a deprecated-in-spirit
+//! shim for the six stock strategies: existing `Runtime::run(policy, …)`
+//! call sites, figure specs, and CSV columns are untouched, and
+//! [`victim_sequence`] keeps the pre-trait victim-order logic verbatim so
+//! parity tests can pin the two paths together.
 
+pub mod adaptive;
 pub mod bf;
 pub mod cilk;
 pub mod dfwsrpt;
 pub mod dfwspt;
+pub mod hier;
+pub mod hops;
+pub mod serial;
 pub mod wf;
 
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::serde::Json;
 use crate::topology::Topology;
-use crate::util::SplitMix64;
+use crate::util::{fmt_f64, SplitMix64};
 
 /// Which end of a victim's deque a thief takes from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,7 +105,481 @@ pub enum StealEnd {
     Back,
 }
 
-/// How an idle worker picks victims.
+/// Where ready tasks wait.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueKind {
+    /// One deque per worker (work-stealing family).
+    PerWorker,
+    /// A single team-wide FIFO (breadth-first).
+    SharedFifo,
+}
+
+/// The declarative half of a scheduler: everything the engine needs to
+/// know *statically* about queueing and stealing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedDescriptor {
+    pub queue: QueueKind,
+    /// Which deque end thieves take from (ignored for [`QueueKind::SharedFifo`]).
+    pub steal_end: StealEnd,
+    /// Child-first (depth-first) execution on spawn?
+    pub child_first: bool,
+    /// Charge no runtime overheads (the serial measurement baseline).
+    pub overhead_free: bool,
+}
+
+impl SchedDescriptor {
+    /// The work-stealing family default: per-worker deques, child-first,
+    /// back-end steals, full overhead accounting.
+    pub const WORK_STEALING: SchedDescriptor = SchedDescriptor {
+        queue: QueueKind::PerWorker,
+        steal_end: StealEnd::Back,
+        child_first: true,
+        overhead_free: false,
+    };
+
+    pub fn shared_queue(&self) -> bool {
+        self.queue == QueueKind::SharedFifo
+    }
+}
+
+/// Runtime events the engine reports to the scheduler — the feedback
+/// channel adaptive strategies act on.  Events arrive in deterministic
+/// simulated-event order.
+#[derive(Clone, Copy, Debug)]
+pub enum SchedEvent {
+    /// Worker `worker` spawned a task.
+    Spawn { worker: usize },
+    /// `thief` took a task from `victim`'s pool, `hops` apart.
+    Steal { thief: usize, victim: usize, hops: u8 },
+    /// `worker` swept its whole victim order and found nothing.
+    StealMiss { worker: usize },
+}
+
+/// A scheduling strategy the engine can drive.
+///
+/// Implementations are per-run values built by the registry ([`build`]);
+/// adaptive state lives in `Cell`s behind `&self` (one engine run is
+/// single-threaded, so interior mutability is race-free and
+/// deterministic).
+pub trait Scheduler {
+    /// Registry name (the `policy` column of stats output).
+    fn name(&self) -> &str;
+
+    /// Display signature with resolved parameters (`name(k=v;…)`, keys
+    /// sorted) — what the engine records in `RunStats::sched`, so two
+    /// instances of the same strategy with different parameters stay
+    /// distinguishable on every execution path.  Parameterless
+    /// strategies keep the bare name.
+    fn signature(&self) -> String {
+        self.name().to_string()
+    }
+
+    /// Static queueing/stealing shape.
+    fn descriptor(&self) -> SchedDescriptor;
+
+    /// Append this sweep's victim visiting order to `out` (the engine
+    /// clears `out` first).  `vl` is the sweeping worker's hop-grouped
+    /// victim list; `rng` is that worker's deterministic stream.
+    ///
+    /// The order may be *partial* (bounded / hierarchical strategies may
+    /// skip victims): the engine guarantees liveness with a fallback
+    /// full sweep when the last awake worker would otherwise park while
+    /// unprobed pools still hold tasks.
+    fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>);
+
+    /// Observe a runtime event (default: ignore).
+    fn observe(&self, _event: &SchedEvent) {}
+}
+
+// ---------------------------------------------------------------------
+// Parameters
+// ---------------------------------------------------------------------
+
+/// One declared scheduler parameter (name, default, one-line doc).
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub default: f64,
+    pub doc: String,
+}
+
+impl ParamInfo {
+    pub fn new(name: &str, default: f64, doc: &str) -> Self {
+        Self { name: name.to_string(), default, doc: doc.to_string() }
+    }
+}
+
+/// Resolved parameter set a factory receives: declared defaults overlaid
+/// with the [`SchedSpec`]'s overrides.
+#[derive(Clone, Debug, Default)]
+pub struct SchedParams {
+    pairs: Vec<(String, f64)>,
+}
+
+impl SchedParams {
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    /// A declared parameter (defaults make it always present).
+    pub fn req(&self, key: &str) -> Result<f64> {
+        self.get(key).with_context(|| format!("missing scheduler parameter '{key}'"))
+    }
+
+    /// A declared parameter that must be a non-negative integer.
+    pub fn req_usize(&self, key: &str) -> Result<usize> {
+        let v = self.req(key)?;
+        if v < 0.0 || v.fract() != 0.0 || v > 9.0e15 {
+            bail!("scheduler parameter '{key}' must be a non-negative integer, got {v}");
+        }
+        Ok(v as usize)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Registration metadata: canonical name, aliases, a one-line summary,
+/// and the declared parameters.
+#[derive(Clone, Debug)]
+pub struct SchedulerInfo {
+    pub name: String,
+    pub aliases: Vec<String>,
+    pub summary: String,
+    pub params: Vec<ParamInfo>,
+}
+
+impl SchedulerInfo {
+    pub fn new(name: &str, summary: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            aliases: Vec::new(),
+            summary: summary.to_string(),
+            params: Vec::new(),
+        }
+    }
+
+    pub fn alias(mut self, alias: &str) -> Self {
+        self.aliases.push(alias.to_string());
+        self
+    }
+
+    pub fn param(mut self, name: &str, default: f64, doc: &str) -> Self {
+        self.params.push(ParamInfo::new(name, default, doc));
+        self
+    }
+}
+
+type Factory = Box<dyn Fn(&SchedParams) -> Result<Box<dyn Scheduler>> + Send + Sync>;
+
+struct Entry {
+    info: SchedulerInfo,
+    factory: Factory,
+}
+
+static REGISTRY: OnceLock<Mutex<Vec<Arc<Entry>>>> = OnceLock::new();
+
+fn registry() -> &'static Mutex<Vec<Arc<Entry>>> {
+    REGISTRY.get_or_init(|| Mutex::new(builtin_entries()))
+}
+
+fn builtin_entries() -> Vec<Arc<Entry>> {
+    fn entry(
+        info: SchedulerInfo,
+        factory: impl Fn(&SchedParams) -> Result<Box<dyn Scheduler>> + Send + Sync + 'static,
+    ) -> Arc<Entry> {
+        Arc::new(Entry { info, factory: Box::new(factory) })
+    }
+    vec![
+        entry(
+            SchedulerInfo::new("serial", "overhead-free depth-first baseline (1 thread)"),
+            |_| Ok(Box::new(serial::Serial)),
+        ),
+        entry(
+            SchedulerInfo::new("bf", "breadth-first: one shared FIFO, no stealing")
+                .alias("breadth-first"),
+            |_| Ok(Box::new(bf::BreadthFirst)),
+        ),
+        entry(
+            SchedulerInfo::new("cilk", "Cilk-based: child-first, random front steals")
+                .alias("cilk-based"),
+            |_| Ok(Box::new(cilk::CilkBased)),
+        ),
+        entry(
+            SchedulerInfo::new("wf", "work-first: child-first, random back steals")
+                .alias("work-first"),
+            |_| Ok(Box::new(wf::WorkFirst)),
+        ),
+        entry(
+            SchedulerInfo::new("dfwspt", "§VI.A: hop-ordered priority list, id-ties first"),
+            |_| Ok(Box::new(dfwspt::Dfwspt)),
+        ),
+        entry(
+            SchedulerInfo::new("dfwsrpt", "§VI.B: priority list, random within a distance group"),
+            |_| Ok(Box::new(dfwsrpt::Dfwsrpt)),
+        ),
+        entry(
+            SchedulerInfo::new("hops-threshold", "steal within max_hops, spill on starvation")
+                .param("max_hops", 1.0, "steal only from victims at most this many hops away")
+                .param("spill_after", 2.0, "consecutive empty sweeps before probing beyond"),
+            |p| {
+                let max_hops = p.req_usize("max_hops")?;
+                if max_hops > u8::MAX as usize {
+                    bail!("max_hops={max_hops} out of range (0..=255)");
+                }
+                let spill_after = p.req_usize("spill_after")?;
+                if spill_after > u32::MAX as usize {
+                    bail!("spill_after={spill_after} out of range (0..=4294967295)");
+                }
+                Ok(Box::new(hops::HopsThreshold::new(max_hops as u8, spill_after as u32)))
+            },
+        ),
+        entry(
+            SchedulerInfo::new("hier", "two-level: node-local random, stochastic remote delegate")
+                .alias("hierarchical"),
+            |_| Ok(Box::new(hier::Hierarchical)),
+        ),
+        entry(
+            SchedulerInfo::new("adaptive", "work-first until the remote-steal ratio crosses")
+                .param("remote_ratio", 0.5, "remote-steal ratio that triggers the switch")
+                .param("min_steals", 16.0, "steals observed before the ratio is trusted"),
+            |p| {
+                let ratio = p.req("remote_ratio")?;
+                if !(0.0..=1.0).contains(&ratio) {
+                    bail!("remote_ratio={ratio} out of range (0..=1)");
+                }
+                let min_steals = p.req_usize("min_steals")? as u64;
+                Ok(Box::new(adaptive::Adaptive::new(ratio, min_steals)))
+            },
+        ),
+    ]
+}
+
+/// Register a scheduler.  Fails on a name/alias collision.  The factory
+/// must not call back into the registry.
+pub fn register(
+    info: SchedulerInfo,
+    factory: impl Fn(&SchedParams) -> Result<Box<dyn Scheduler>> + Send + Sync + 'static,
+) -> Result<()> {
+    let mut reg = registry().lock().unwrap();
+    let mut new_names: Vec<&str> = vec![info.name.as_str()];
+    new_names.extend(info.aliases.iter().map(String::as_str));
+    for e in reg.iter() {
+        for n in &new_names {
+            if e.info.name == *n || e.info.aliases.iter().any(|a| a == n) {
+                bail!("scheduler name '{n}' is already registered");
+            }
+        }
+    }
+    reg.push(Arc::new(Entry { info, factory: Box::new(factory) }));
+    Ok(())
+}
+
+/// Canonical names, in registration order (builtins first).
+pub fn scheduler_names() -> Vec<String> {
+    registry().lock().unwrap().iter().map(|e| e.info.name.clone()).collect()
+}
+
+/// Full registration metadata for every scheduler.
+pub fn scheduler_infos() -> Vec<SchedulerInfo> {
+    registry().lock().unwrap().iter().map(|e| e.info.clone()).collect()
+}
+
+fn find_entry(name: &str) -> Result<Arc<Entry>> {
+    let reg = registry().lock().unwrap();
+    for e in reg.iter() {
+        if e.info.name == name || e.info.aliases.iter().any(|a| a == name) {
+            return Ok(e.clone());
+        }
+    }
+    let known: Vec<String> = reg.iter().map(|e| e.info.name.clone()).collect();
+    bail!("unknown scheduler '{name}' (registered: {})", known.join("|"))
+}
+
+/// Resolve a name or alias to its canonical registry name.
+pub fn resolve_name(name: &str) -> Result<String> {
+    Ok(find_entry(name)?.info.name.clone())
+}
+
+/// Build a scheduler instance from a spec: resolves the name, validates
+/// the parameter overrides against the declared [`ParamInfo`]s, overlays
+/// them on the defaults, and calls the factory.
+pub fn build(spec: &SchedSpec) -> Result<Box<dyn Scheduler>> {
+    let entry = find_entry(&spec.name)?;
+    let declared = &entry.info.params;
+    let mut params = SchedParams {
+        pairs: declared.iter().map(|p| (p.name.clone(), p.default)).collect(),
+    };
+    for (key, value) in &spec.params {
+        let Some(slot) = params.pairs.iter_mut().find(|(k, _)| k == key) else {
+            let allowed: Vec<&str> = declared.iter().map(|p| p.name.as_str()).collect();
+            bail!(
+                "scheduler '{}' has no parameter '{key}' ({})",
+                entry.info.name,
+                if allowed.is_empty() {
+                    "it takes none".to_string()
+                } else {
+                    format!("parameters: {}", allowed.join(" "))
+                }
+            );
+        };
+        slot.1 = *value;
+    }
+    (entry.factory)(&params)
+        .with_context(|| format!("building scheduler '{}'", entry.info.name))
+}
+
+/// Build one of the six stock strategies directly (infallible; the shim
+/// behind every legacy `Policy`-typed entry point).
+pub fn stock(policy: Policy) -> Box<dyn Scheduler> {
+    match policy {
+        Policy::Serial => Box::new(serial::Serial),
+        Policy::BreadthFirst => Box::new(bf::BreadthFirst),
+        Policy::CilkBased => Box::new(cilk::CilkBased),
+        Policy::WorkFirst => Box::new(wf::WorkFirst),
+        Policy::Dfwspt => Box::new(dfwspt::Dfwspt),
+        Policy::Dfwsrpt => Box::new(dfwsrpt::Dfwsrpt),
+    }
+}
+
+// ---------------------------------------------------------------------
+// SchedSpec — the serializable scheduler selection
+// ---------------------------------------------------------------------
+
+/// A scheduler selection as data: registry name plus parameter overrides
+/// (kept sorted by key so equal selections compare equal).  This is what
+/// `RunSpec`, sweeps, manifests and the CLI carry; [`build`] turns it
+/// into a live [`Scheduler`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedSpec {
+    pub name: String,
+    pub params: Vec<(String, f64)>,
+}
+
+impl SchedSpec {
+    /// By registry name, no overrides (not validated until [`build`] /
+    /// `RunSpec::validate`).
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), params: Vec::new() }
+    }
+
+    /// The stock strategy behind a legacy [`Policy`].
+    pub fn stock(policy: Policy) -> Self {
+        Self::new(policy.name())
+    }
+
+    /// Add/replace one parameter override (kept sorted by key).
+    pub fn with_param(mut self, key: &str, value: f64) -> Self {
+        self.set_param(key, value);
+        self
+    }
+
+    pub fn set_param(&mut self, key: &str, value: f64) {
+        match self.params.binary_search_by(|(k, _)| k.as_str().cmp(key)) {
+            Ok(i) => self.params[i].1 = value,
+            Err(i) => self.params.insert(i, (key.to_string(), value)),
+        }
+    }
+
+    /// Parse the CLI form: `name` or `name:key=value,key=value`.  The
+    /// name (or alias) is resolved to its canonical form and the
+    /// parameters are validated eagerly.
+    pub fn parse(text: &str) -> Result<Self> {
+        let (name, params_text) = match text.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (text.trim(), None),
+        };
+        let mut spec = Self::new(&resolve_name(name)?);
+        if let Some(pairs) = params_text {
+            for pair in pairs.split(',').filter(|s| !s.trim().is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .with_context(|| format!("bad scheduler parameter '{pair}' (want k=v)"))?;
+                let v: f64 = v
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad scheduler parameter value in '{pair}'"))?;
+                spec.set_param(k.trim(), v);
+            }
+        }
+        spec.check()?;
+        Ok(spec)
+    }
+
+    /// Validate name + parameters against the registry.
+    pub fn check(&self) -> Result<()> {
+        build(self).map(|_| ())
+    }
+
+    /// The serial measurement baseline?
+    pub fn is_serial(&self) -> bool {
+        self.name == "serial"
+    }
+
+    /// Canonical signature for describe lines and CSV cells: `name` or
+    /// `name(k=v;k=v)` (no commas — CSV-safe).
+    pub fn name_sig(&self) -> String {
+        if self.params.is_empty() {
+            return self.name.clone();
+        }
+        let parts: Vec<String> =
+            self.params.iter().map(|(k, v)| format!("{k}={}", fmt_f64(*v))).collect();
+        format!("{}({})", self.name, parts.join(";"))
+    }
+
+    /// JSON form: a bare string without parameters, else
+    /// `{"name": …, "<param>": <value>, …}`.
+    pub fn to_json(&self) -> Json {
+        if self.params.is_empty() {
+            return Json::from(self.name.as_str());
+        }
+        let pairs = std::iter::once(("name".to_string(), Json::from(self.name.as_str())))
+            .chain(self.params.iter().map(|(k, v)| (k.clone(), Json::from(*v))));
+        Json::obj(pairs)
+    }
+
+    /// Accept both JSON forms (string name / object with parameters).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        match j {
+            Json::Str(s) => Self::parse(s),
+            _ => {
+                let obj = j
+                    .as_obj()
+                    .context("sched must be a scheduler name or {\"name\": …, params…}")?;
+                let name = obj
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("parameterized sched needs a string 'name'")?;
+                let mut spec = Self::new(&resolve_name(name)?);
+                for (key, val) in obj {
+                    if key == "name" {
+                        continue;
+                    }
+                    let v = val
+                        .as_num()
+                        .with_context(|| format!("sched parameter '{key}' must be a number"))?;
+                    spec.set_param(key, v);
+                }
+                spec.check()?;
+                Ok(spec)
+            }
+        }
+    }
+}
+
+impl From<Policy> for SchedSpec {
+    fn from(policy: Policy) -> Self {
+        SchedSpec::stock(policy)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Legacy Policy shim
+// ---------------------------------------------------------------------
+
+/// How an idle worker picks victims — the legacy declarative table
+/// (kept for the [`victim_sequence`] parity shim).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum VictimKind {
     /// No stealing (breadth-first / serial).
@@ -51,7 +594,11 @@ pub enum VictimKind {
     RandomPriorityList,
 }
 
-/// Scheduling policy selector.
+/// The six stock strategies as a closed enum — a **deprecated shim** kept
+/// so pre-registry call sites (`Runtime::run`, figure specs, config
+/// files) stay source-compatible.  New code should carry a [`SchedSpec`]
+/// and let the registry construct a [`Scheduler`]; strategies outside the
+/// stock six are not representable here.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Policy {
     /// Overhead-free depth-first baseline (speedup denominator).
@@ -86,16 +633,21 @@ impl Policy {
         }
     }
 
+    /// Resolve through the registry (so aliases and the "unknown
+    /// scheduler" list stay in sync with it), then map onto the stock
+    /// enum.  Registered non-stock strategies are rejected with a pointer
+    /// to [`SchedSpec`].
     pub fn from_name(s: &str) -> anyhow::Result<Self> {
-        Ok(match s {
+        Ok(match resolve_name(s)?.as_str() {
             "serial" => Policy::Serial,
-            "bf" | "breadth-first" => Policy::BreadthFirst,
-            "cilk" | "cilk-based" => Policy::CilkBased,
-            "wf" | "work-first" => Policy::WorkFirst,
+            "bf" => Policy::BreadthFirst,
+            "cilk" => Policy::CilkBased,
+            "wf" => Policy::WorkFirst,
             "dfwspt" => Policy::Dfwspt,
             "dfwsrpt" => Policy::Dfwsrpt,
             other => anyhow::bail!(
-                "unknown scheduler '{other}' (serial|bf|cilk|wf|dfwspt|dfwsrpt)"
+                "scheduler '{other}' is not expressible as a legacy Policy; \
+                 select it through a SchedSpec (e.g. --sched {other})"
             ),
         })
     }
@@ -131,6 +683,10 @@ impl Policy {
         matches!(self, Policy::Serial)
     }
 }
+
+// ---------------------------------------------------------------------
+// Victim lists
+// ---------------------------------------------------------------------
 
 /// Per-worker victim structure: other workers grouped by hop distance from
 /// this worker's core, groups ascending by distance, members ascending by
@@ -168,7 +724,12 @@ pub fn build_victim_lists(topo: &Topology, cores: &[usize]) -> Vec<VictimList> {
         .collect()
 }
 
-/// Produce this policy's victim visiting order into `out`.
+/// Produce a stock policy's victim visiting order into `out`.
+///
+/// This is the **pre-redesign enum interpreter**, kept verbatim: the
+/// parity tests pin every stock [`Scheduler`] implementation against it
+/// (same RNG stream, same output), which is what guarantees byte-identical
+/// sweep CSV/JSON across the trait migration.
 pub fn victim_sequence(
     policy: Policy,
     vl: &VictimList,
@@ -205,7 +766,36 @@ mod tests {
         for &p in Policy::all() {
             assert_eq!(Policy::from_name(p.name()).unwrap(), p);
         }
-        assert!(Policy::from_name("bogus").is_err());
+        let err = format!("{:#}", Policy::from_name("bogus").unwrap_err());
+        assert!(err.contains("unknown scheduler"), "{err}");
+    }
+
+    /// Builtin names, fixed (not `scheduler_names()`: other tests may
+    /// register extra schedulers concurrently).
+    const BUILTINS: [&str; 9] = [
+        "serial",
+        "bf",
+        "cilk",
+        "wf",
+        "dfwspt",
+        "dfwsrpt",
+        "hops-threshold",
+        "hier",
+        "adaptive",
+    ];
+
+    #[test]
+    fn policy_from_name_error_lists_registered_schedulers() {
+        let err = format!("{:#}", Policy::from_name("bogus").unwrap_err());
+        for name in BUILTINS {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn registered_non_stock_names_are_rejected_by_the_shim() {
+        let err = format!("{:#}", Policy::from_name("hops-threshold").unwrap_err());
+        assert!(err.contains("SchedSpec"), "{err}");
     }
 
     #[test]
@@ -244,6 +834,151 @@ mod tests {
         let mut out = vec![99];
         victim_sequence(Policy::BreadthFirst, &vls[0], &mut rng, &mut out);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn trait_victim_order_matches_legacy_enum_path() {
+        // The load-bearing parity guarantee: for every stock policy, the
+        // registry-built Scheduler consumes the same RNG stream and emits
+        // the same victim order as the pre-redesign enum interpreter.
+        for threads in [2, 5, 8, 16] {
+            let (_, vls) = lists(threads);
+            for &p in Policy::all() {
+                let sched = build(&SchedSpec::stock(p)).unwrap();
+                for seed in 0..20 {
+                    for vl in &vls {
+                        let mut rng_a = SplitMix64::new(seed);
+                        let mut rng_b = SplitMix64::new(seed);
+                        let mut legacy = Vec::new();
+                        let mut ported = Vec::new();
+                        victim_sequence(p, vl, &mut rng_a, &mut legacy);
+                        sched.victim_order(vl, &mut rng_b, &mut ported);
+                        assert_eq!(legacy, ported, "{} t={threads} seed={seed}", p.name());
+                        assert_eq!(
+                            rng_a.next_u64(),
+                            rng_b.next_u64(),
+                            "{} consumed a different amount of randomness",
+                            p.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stock_descriptors_match_legacy_accessors() {
+        for &p in Policy::all() {
+            let d = stock(p).descriptor();
+            assert_eq!(d.shared_queue(), p.shared_queue(), "{}", p.name());
+            assert_eq!(d.child_first, p.depth_first(), "{}", p.name());
+            assert_eq!(d.steal_end, p.steal_end(), "{}", p.name());
+            assert_eq!(d.overhead_free, p.overhead_free(), "{}", p.name());
+            assert_eq!(stock(p).name(), p.name());
+        }
+    }
+
+    #[test]
+    fn registry_lists_builtins_in_order() {
+        let names = scheduler_names();
+        for stock_name in ["serial", "bf", "cilk", "wf", "dfwspt", "dfwsrpt"] {
+            assert!(names.contains(&stock_name.to_string()), "{names:?}");
+        }
+        for new_name in ["hops-threshold", "hier", "adaptive"] {
+            assert!(names.contains(&new_name.to_string()), "{names:?}");
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_names() {
+        assert_eq!(resolve_name("work-first").unwrap(), "wf");
+        assert_eq!(resolve_name("breadth-first").unwrap(), "bf");
+        assert_eq!(resolve_name("hierarchical").unwrap(), "hier");
+        assert!(resolve_name("bogus").is_err());
+    }
+
+    #[test]
+    fn build_validates_parameters() {
+        // unknown parameter names are listed
+        let bad = SchedSpec::new("hops-threshold").with_param("max_hopps", 1.0);
+        let err = format!("{:#}", build(&bad).unwrap_err());
+        assert!(err.contains("max_hopps") && err.contains("max_hops"), "{err}");
+        // parameterless schedulers reject any parameter
+        let bad = SchedSpec::new("wf").with_param("x", 1.0);
+        assert!(format!("{:#}", build(&bad).unwrap_err()).contains("takes none"));
+        // out-of-range values are caught by the factory
+        let bad = SchedSpec::new("adaptive").with_param("remote_ratio", 1.5);
+        assert!(build(&bad).is_err());
+        let bad = SchedSpec::new("hops-threshold").with_param("max_hops", 1.5);
+        assert!(build(&bad).is_err(), "fractional integer parameter");
+        // defaults apply when no overrides are given
+        assert!(build(&SchedSpec::new("hops-threshold")).is_ok());
+    }
+
+    #[test]
+    fn sched_spec_parse_and_signatures() {
+        let plain = SchedSpec::parse("wf").unwrap();
+        assert_eq!(plain, SchedSpec::stock(Policy::WorkFirst));
+        assert_eq!(plain.name_sig(), "wf");
+
+        let aliased = SchedSpec::parse("work-first").unwrap();
+        assert_eq!(aliased.name, "wf", "aliases canonicalize at parse time");
+
+        let p = SchedSpec::parse("hops-threshold:max_hops=2,spill_after=1").unwrap();
+        assert_eq!(p.name_sig(), "hops-threshold(max_hops=2;spill_after=1)");
+        assert!(SchedSpec::parse("hops-threshold:max_hops=").is_err());
+        assert!(SchedSpec::parse("hops-threshold:bogus=1").is_err());
+        assert!(SchedSpec::parse("nope").is_err());
+    }
+
+    #[test]
+    fn sched_spec_json_roundtrips() {
+        let plain = SchedSpec::stock(Policy::Dfwspt);
+        assert_eq!(plain.to_json().to_compact(), "\"dfwspt\"");
+        assert_eq!(SchedSpec::from_json(&plain.to_json()).unwrap(), plain);
+
+        let p = SchedSpec::new("hops-threshold").with_param("max_hops", 1.0);
+        let back = SchedSpec::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+
+        let j = Json::parse(r#"{"name": "adaptive", "remote_ratio": 0.25}"#).unwrap();
+        let spec = SchedSpec::from_json(&j).unwrap();
+        assert_eq!(spec.name, "adaptive");
+        assert_eq!(spec.params, vec![("remote_ratio".to_string(), 0.25)]);
+
+        assert!(SchedSpec::from_json(&Json::parse("{\"max_hops\": 1}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn params_stay_sorted_so_equal_specs_compare_equal() {
+        let a = SchedSpec::new("hops-threshold")
+            .with_param("spill_after", 3.0)
+            .with_param("max_hops", 1.0);
+        let b = SchedSpec::new("hops-threshold")
+            .with_param("max_hops", 1.0)
+            .with_param("spill_after", 3.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn user_registration_shows_up_everywhere() {
+        struct Nop;
+        impl Scheduler for Nop {
+            fn name(&self) -> &str {
+                "test-nop"
+            }
+            fn descriptor(&self) -> SchedDescriptor {
+                SchedDescriptor::WORK_STEALING
+            }
+            fn victim_order(&self, _: &VictimList, _: &mut SplitMix64, _: &mut Vec<usize>) {}
+        }
+        register(SchedulerInfo::new("test-nop", "no-op test scheduler"), |_| Ok(Box::new(Nop)))
+            .unwrap();
+        assert!(scheduler_names().contains(&"test-nop".to_string()));
+        assert!(build(&SchedSpec::new("test-nop")).is_ok());
+        // duplicate registration is rejected
+        assert!(register(SchedulerInfo::new("test-nop", "dup"), |_| Ok(Box::new(Nop))).is_err());
+        assert!(register(SchedulerInfo::new("wf", "dup"), |_| Ok(Box::new(Nop))).is_err());
     }
 
     #[test]

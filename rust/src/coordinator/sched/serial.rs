@@ -1,0 +1,51 @@
+//! Serial baseline — the paper's speedup denominator.
+//!
+//! Depth-first execution on a single thread with every runtime overhead
+//! constant zeroed ([`SchedDescriptor::overhead_free`]): what the paper
+//! calls "serial execution time".  It never steals (there is nobody to
+//! steal from — `RunSpec` validation pins it to one thread).
+
+use super::{QueueKind, SchedDescriptor, Scheduler, StealEnd, VictimList};
+use crate::util::SplitMix64;
+
+/// The overhead-free single-thread baseline.
+pub struct Serial;
+
+impl Scheduler for Serial {
+    fn name(&self) -> &str {
+        "serial"
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor {
+            queue: QueueKind::PerWorker,
+            steal_end: StealEnd::Back,
+            child_first: true,
+            overhead_free: true,
+        }
+    }
+
+    fn victim_order(&self, _vl: &VictimList, _rng: &mut SplitMix64, _out: &mut Vec<usize>) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_descriptor() {
+        let d = Serial.descriptor();
+        assert!(d.overhead_free);
+        assert!(d.child_first);
+        assert!(!d.shared_queue());
+    }
+
+    #[test]
+    fn serial_never_names_victims() {
+        let vl = VictimList { groups: vec![(1, vec![1, 2, 3])] };
+        let mut rng = SplitMix64::new(1);
+        let mut out = Vec::new();
+        Serial.victim_order(&vl, &mut rng, &mut out);
+        assert!(out.is_empty());
+    }
+}

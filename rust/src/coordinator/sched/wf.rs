@@ -15,23 +15,62 @@
 //! and only replace the *victim selection* with the NUMA-aware priority
 //! list (see [`super::dfwspt`], [`super::dfwsrpt`]).
 
-pub use super::Policy;
+use super::{SchedDescriptor, Scheduler, VictimList};
+use crate::util::SplitMix64;
+
+/// Emit a uniform random sweep over every other worker: flatten the hop
+/// groups, then one Fisher–Yates shuffle of the whole list.  Shared by
+/// [`WorkFirst`] and [`super::cilk::CilkBased`] (they differ only in the
+/// steal end), and the pre-switch mode of [`super::adaptive`].
+pub fn random_order(vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {
+    out.extend(vl.groups.iter().flat_map(|(_, g)| g.iter().copied()));
+    rng.shuffle(out);
+}
+
+/// The work-first scheduler.
+pub struct WorkFirst;
+
+impl Scheduler for WorkFirst {
+    fn name(&self) -> &str {
+        "wf"
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor::WORK_STEALING
+    }
+
+    fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        random_order(vl, rng, out);
+    }
+}
 
 #[cfg(test)]
 mod tests {
     use super::super::*;
+    use super::*;
 
     #[test]
     fn wf_descriptor() {
-        let p = Policy::WorkFirst;
-        assert!(p.depth_first());
-        assert_eq!(p.steal_end(), StealEnd::Back);
-        assert_eq!(p.victim_kind(), VictimKind::Random);
+        let d = WorkFirst.descriptor();
+        assert!(d.child_first);
+        assert!(!d.shared_queue());
+        assert_eq!(d.steal_end, StealEnd::Back);
+    }
+
+    #[test]
+    fn random_order_is_a_permutation() {
+        let vl = VictimList { groups: vec![(0, vec![1]), (1, vec![2, 4]), (3, vec![0, 3])] };
+        let mut rng = SplitMix64::new(5);
+        let mut out = Vec::new();
+        WorkFirst.victim_order(&vl, &mut rng, &mut out);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
     }
 
     #[test]
     fn dfwspt_extends_wf_queue_discipline() {
-        assert_eq!(Policy::Dfwspt.steal_end(), Policy::WorkFirst.steal_end());
-        assert_eq!(Policy::Dfwspt.depth_first(), Policy::WorkFirst.depth_first());
+        assert_eq!(dfwspt::Dfwspt.descriptor().steal_end, WorkFirst.descriptor().steal_end);
+        assert_eq!(dfwspt::Dfwspt.descriptor().child_first, WorkFirst.descriptor().child_first);
     }
 }

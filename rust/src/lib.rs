@@ -26,7 +26,7 @@
 //! |---|---|
 //! | [`topology`] | NUMA fabric models (X4600 twisted ladder & friends) |
 //! | [`simnuma`]  | memory-system simulator: first-touch pages, caches, NUMA latencies, contention |
-//! | [`coordinator`] | the runtime: tasks, pools, binding, priorities, 5 schedulers, event engine |
+//! | [`coordinator`] | the runtime: tasks, pools, binding, priorities, the pluggable scheduler registry, event engine |
 //! | [`bots`]     | the 11 BOTS benchmark task-graph generators |
 //! | [`runtime`]  | PJRT artifact loading + execution (the AOT bridge) |
 //! | [`metrics`]  | run statistics, speedup tables, paper reference data |
@@ -70,6 +70,6 @@ pub mod util;
 pub use config::RunConfig;
 pub use coordinator::binding::BindPolicy;
 pub use coordinator::runtime::Runtime;
-pub use coordinator::sched::Policy;
+pub use coordinator::sched::{Policy, SchedSpec, Scheduler};
 pub use spec::{ExperimentManifest, RunRecord, RunSpec, Session, Sweep};
 pub use topology::Topology;

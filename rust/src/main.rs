@@ -1,7 +1,7 @@
 //! `numanos` — CLI launcher for the NUMA-aware task-runtime reproduction.
 //!
 //! ```text
-//! numanos list                         # benchmarks / schedulers / topologies
+//! numanos list                         # benchmarks / schedulers / bindings / topologies
 //! numanos topo   --name x4600          # fabric + §IV priorities
 //! numanos run    --bench fft --sched dfwspt --bind numa --threads 16
 //! numanos run    --bench=fft --json    # --flag=value syntax, JSON record
@@ -24,7 +24,7 @@ use anyhow::{bail, Context, Result};
 use numanos::bots;
 use numanos::config::Size;
 use numanos::coordinator::priority::core_priorities;
-use numanos::coordinator::sched::Policy;
+use numanos::coordinator::sched;
 use numanos::harness;
 use numanos::serde::Json;
 use numanos::simnuma::CostModel;
@@ -161,12 +161,15 @@ const HELP: &str = "\
 numanos — NUMA-aware OpenMP task runtime (Tahan 2014 reproduction)
 
 commands:
-  list                      benchmarks, schedulers, topologies
+  list                      benchmarks, schedulers, bindings, topologies
   topo   --name <topo>      fabric, hop matrix, and SS IV core priorities
   run    --bench <b> [--size s|m|l] [--sched P] [--bind linear|numa]
          [--cores 0,2,4] [--threads N] [--topo T] [--seed S]
          [--compute sim|pjrt] [--cost k=v,...] [--json]
                             single run, prints the stats summary
+                            (--sched takes any registered scheduler,
+                             parameterized as name:k=v,... e.g.
+                             --sched hops-threshold:max_hops=1)
   figure --id figN | --all  regenerate paper figures (speedup tables)
          [--out dir] [--size s|m|l] [--seed S] [--topo T] [--cost k=v,...]
          [--json]
@@ -178,12 +181,12 @@ commands:
 flags accept both `--key value` and `--key=value`.
 ";
 
+/// The four sweep axes (benchmarks, schedulers, bindings, topologies)
+/// plus the figure inventory — one line each.  The scheduler line comes
+/// from the registry, so registered strategies appear automatically.
 fn cmd_list() -> Result<()> {
     println!("benchmarks : {}", bots::NAMES.join(" "));
-    println!(
-        "schedulers : {}",
-        Policy::all().iter().map(|p| p.name()).collect::<Vec<_>>().join(" ")
-    );
+    println!("schedulers : {}", sched::scheduler_names().join(" "));
     println!("bindings   : linear numa");
     println!("topologies : {}", Topology::preset_names().join(" "));
     println!("figures    : {}", harness::figures().iter().map(|f| f.id).collect::<Vec<_>>().join(" "));

@@ -4,7 +4,6 @@ pub mod paper;
 pub mod table;
 
 use crate::coordinator::binding::BindPolicy;
-use crate::coordinator::sched::Policy;
 use crate::simnuma::MemStats;
 use crate::util::{fmt_time, Time};
 
@@ -12,7 +11,11 @@ use crate::util::{fmt_time, Time};
 #[derive(Clone, Debug)]
 pub struct RunStats {
     pub bench: String,
-    pub policy: Policy,
+    /// Scheduler signature of this run — the registry name, plus
+    /// resolved parameters for parameterized strategies
+    /// (`hops-threshold(max_hops=1;spill_after=2)`).  The open successor
+    /// of the old closed `Policy` enum field.
+    pub sched: String,
     pub bind: Option<BindPolicy>,
     pub threads: usize,
     pub topo: String,
@@ -44,10 +47,10 @@ pub struct RunStats {
 impl RunStats {
     /// Config label like `wf-Scheduler-NUMA` (paper figure legend style).
     pub fn label(&self) -> String {
-        let sched = match self.policy {
-            Policy::Serial => "serial".into(),
-            p => format!("{}-Scheduler", p.name()),
-        };
+        if self.sched == "serial" {
+            return "serial".into();
+        }
+        let sched = format!("{}-Scheduler", self.sched);
         match self.bind {
             Some(BindPolicy::NumaAware) => format!("{sched}-NUMA"),
             _ => sched,
@@ -87,10 +90,10 @@ pub fn speedup(serial: &RunStats, run: &RunStats) -> f64 {
 mod tests {
     use super::*;
 
-    fn stats(policy: Policy, bind: Option<BindPolicy>, makespan: Time) -> RunStats {
+    fn stats(sched: &str, bind: Option<BindPolicy>, makespan: Time) -> RunStats {
         RunStats {
             bench: "x".into(),
-            policy,
+            sched: sched.to_string(),
             bind,
             threads: 4,
             topo: "x4600".into(),
@@ -118,26 +121,28 @@ mod tests {
     #[test]
     fn labels_match_paper_legends() {
         assert_eq!(
-            stats(Policy::WorkFirst, Some(BindPolicy::NumaAware), 1).label(),
+            stats("wf", Some(BindPolicy::NumaAware), 1).label(),
             "wf-Scheduler-NUMA"
         );
+        assert_eq!(stats("bf", Some(BindPolicy::Linear), 1).label(), "bf-Scheduler");
+        assert_eq!(stats("dfwsrpt", None, 1).label(), "dfwsrpt-Scheduler");
+        assert_eq!(stats("serial", None, 1).label(), "serial");
         assert_eq!(
-            stats(Policy::BreadthFirst, Some(BindPolicy::Linear), 1).label(),
-            "bf-Scheduler"
+            stats("hops-threshold", Some(BindPolicy::NumaAware), 1).label(),
+            "hops-threshold-Scheduler-NUMA"
         );
-        assert_eq!(stats(Policy::Dfwsrpt, None, 1).label(), "dfwsrpt-Scheduler");
     }
 
     #[test]
     fn speedup_ratio() {
-        let serial = stats(Policy::Serial, None, 1000);
-        let par = stats(Policy::WorkFirst, None, 250);
+        let serial = stats("serial", None, 1000);
+        let par = stats("wf", None, 250);
         assert!((speedup(&serial, &par) - 4.0).abs() < 1e-9);
     }
 
     #[test]
     fn efficiency_bounded() {
-        let s = stats(Policy::WorkFirst, None, 100);
+        let s = stats("wf", None, 100);
         assert!(s.efficiency() > 0.0 && s.efficiency() <= 1.0);
     }
 }

@@ -26,7 +26,10 @@
 //!
 //! The same structure works in JSON (`{"title": …, "defaults": {…},
 //! "sweeps": [{…}]}`); `numanos sweep --manifest <file>` picks the parser
-//! by extension (`.toml` vs everything-else-is-JSON).
+//! by extension (`.toml` vs everything-else-is-JSON).  Scheduler entries
+//! (in `sched` lists and `configs` pairs) are registry names, or objects
+//! carrying parameters for parameterized strategies:
+//! `{"name": "hops-threshold", "max_hops": 1}`.
 
 use std::path::Path;
 
@@ -158,7 +161,7 @@ fn parse_defaults(v: &Json) -> Result<SweepDefaults> {
 mod tests {
     use super::*;
     use crate::coordinator::binding::BindPolicy;
-    use crate::coordinator::sched::Policy;
+    use crate::coordinator::sched::{Policy, SchedSpec};
 
     const JSON: &str = r#"{
       "title": "demo",
@@ -207,7 +210,7 @@ dram_base_ns = 120\n\
         assert_eq!(a.configs.len(), 2);
         let b = &m.sweeps[1];
         assert_eq!(b.seeds, vec![9], "sweep overrides defaults");
-        assert_eq!(b.configs, vec![(Policy::Dfwspt, BindPolicy::NumaAware)]);
+        assert_eq!(b.configs, vec![(SchedSpec::stock(Policy::Dfwspt), BindPolicy::NumaAware)]);
         assert_eq!(b.cost, vec![("dram_base_ns".to_string(), 120.0)]);
         assert_eq!(m.all_cells().unwrap().len(), 8 + 1, "2 configs × 2 seeds × 2 threads, + 1");
     }
@@ -224,6 +227,30 @@ dram_base_ns = 120\n\
         let m = ExperimentManifest::from_json_str(JSON).unwrap();
         let back = ExperimentManifest::from_json(&m.to_json()).unwrap();
         assert_eq!(back, m);
+    }
+
+    #[test]
+    fn parameterized_scheduler_manifests_parse() {
+        let m = ExperimentManifest::from_json_str(
+            r#"{
+              "title": "param",
+              "sweeps": [
+                {"id": "near", "bench": "fib", "threads": [2], "size": "small",
+                 "sched": [{"name": "hops-threshold", "max_hops": 1}, "adaptive"],
+                 "bind": ["numa"]}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let s = &m.sweeps[0];
+        assert_eq!(s.configs.len(), 2);
+        assert_eq!(s.configs[0].0.name_sig(), "hops-threshold(max_hops=1)");
+        assert_eq!(s.configs[1].0, SchedSpec::new("adaptive"));
+        // unknown parameter names fail at manifest load, not at run time
+        let bad = r#"{"sweeps": [{"id": "x", "bench": "fib",
+            "sched": [{"name": "hops-threshold", "max_hopps": 1}]}]}"#;
+        let err = format!("{:#}", ExperimentManifest::from_json_str(bad).unwrap_err());
+        assert!(err.contains("max_hopps"), "{err}");
     }
 
     #[test]

@@ -28,10 +28,11 @@ use anyhow::{bail, Context, Result};
 use crate::bots;
 use crate::config::{apply_cost_override, ComputeMode, Size};
 use crate::coordinator::binding::BindPolicy;
-use crate::coordinator::sched::Policy;
+use crate::coordinator::sched::{Policy, SchedSpec};
 use crate::serde::Json;
 use crate::simnuma::CostModel;
 use crate::topology::Topology;
+use crate::util::fmt_f64;
 
 /// How threads map onto cores: a named policy, or an explicit pinning.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -85,7 +86,9 @@ impl BindSpec {
 pub struct RunSpec {
     pub bench: String,
     pub size: Size,
-    pub policy: Policy,
+    /// Scheduler selection: registry name + parameter overrides.  Stock
+    /// policies arrive here through the [`RunSpecBuilder::policy`] shim.
+    pub sched: SchedSpec,
     pub bind: BindSpec,
     pub threads: usize,
     pub topo: String,
@@ -105,7 +108,7 @@ impl Default for RunSpec {
         Self {
             bench: "fft".into(),
             size: Size::Medium,
-            policy: Policy::WorkFirst,
+            sched: SchedSpec::stock(Policy::WorkFirst),
             bind: BindSpec::Policy(BindPolicy::Linear),
             threads: 16,
             topo: "x4600".into(),
@@ -115,15 +118,6 @@ impl Default for RunSpec {
             cost: Vec::new(),
             rtdata_local: true,
         }
-    }
-}
-
-/// Format an override value the way the CLI accepts it back.
-fn fmt_num(v: f64) -> String {
-    if v.fract() == 0.0 && v.abs() < 9.0e15 {
-        format!("{}", v as i64)
-    } else {
-        format!("{v}")
     }
 }
 
@@ -138,7 +132,7 @@ impl RunSpec {
             "bench={} size={} sched={} bind={} threads={} topo={} seed={} compute={}",
             self.bench,
             self.size.name(),
-            self.policy.name(),
+            self.sched.name_sig(),
             self.bind.name(),
             self.threads,
             self.topo,
@@ -156,10 +150,10 @@ impl RunSpec {
 
     /// Paper-legend style config label (`wf-Scheduler-NUMA`).
     pub fn label(&self) -> String {
-        let sched = match self.policy {
-            Policy::Serial => return "serial".into(),
-            p => format!("{}-Scheduler", p.name()),
-        };
+        if self.sched.is_serial() {
+            return "serial".into();
+        }
+        let sched = format!("{}-Scheduler", self.sched.name_sig());
         match &self.bind {
             BindSpec::Policy(BindPolicy::NumaAware) => format!("{sched}-NUMA"),
             BindSpec::Policy(BindPolicy::Linear) => sched,
@@ -170,7 +164,7 @@ impl RunSpec {
     /// Canonical cost-override signature (cache keys, describe lines).
     pub fn cost_sig(&self) -> String {
         let parts: Vec<String> =
-            self.cost.iter().map(|(k, v)| format!("{k}={}", fmt_num(*v))).collect();
+            self.cost.iter().map(|(k, v)| format!("{k}={}", fmt_f64(*v))).collect();
         parts.join(",")
     }
 
@@ -178,7 +172,7 @@ impl RunSpec {
     pub fn cost_model(&self, base: &CostModel) -> Result<CostModel> {
         let mut cm = base.clone();
         for (k, v) in &self.cost {
-            apply_cost_override(&mut cm, k, &fmt_num(*v))?;
+            apply_cost_override(&mut cm, k, &fmt_f64(*v))?;
         }
         Ok(cm)
     }
@@ -196,6 +190,8 @@ impl RunSpec {
         if !bots::NAMES.contains(&self.bench.as_str()) {
             bail!("unknown benchmark '{}' (see `numanos list`)", self.bench);
         }
+        // scheduler name + parameters must resolve against the registry
+        self.sched.check()?;
         if self.threads < 1 || self.threads > topo.num_cores() {
             bail!(
                 "threads={} out of range 1..={} for topology '{}'",
@@ -204,8 +200,8 @@ impl RunSpec {
                 self.topo
             );
         }
-        if self.policy == Policy::Serial && self.threads != 1 {
-            bail!("the serial policy is the 1-thread baseline; got threads={}", self.threads);
+        if self.sched.is_serial() && self.threads != 1 {
+            bail!("the serial scheduler is the 1-thread baseline; got threads={}", self.threads);
         }
         if let BindSpec::Cores(cores) = &self.bind {
             if cores.is_empty() {
@@ -234,7 +230,7 @@ impl RunSpec {
         let mut pairs: Vec<(String, Json)> = vec![
             ("bench".into(), Json::from(self.bench.as_str())),
             ("size".into(), Json::from(self.size.name())),
-            ("sched".into(), Json::from(self.policy.name())),
+            ("sched".into(), self.sched.to_json()),
             ("bind".into(), self.bind.to_json()),
             ("threads".into(), Json::from(self.threads)),
             ("topo".into(), Json::from(self.topo.as_str())),
@@ -274,7 +270,7 @@ impl RunSpec {
             match key.as_str() {
                 "bench" => b.spec.bench = str_field(val, key)?,
                 "size" => b.spec.size = Size::from_name(&str_field(val, key)?)?,
-                "sched" | "policy" => b.spec.policy = Policy::from_name(&str_field(val, key)?)?,
+                "sched" | "policy" => b.spec.sched = SchedSpec::from_json(val)?,
                 "bind" => b.spec.bind = BindSpec::from_json(val)?,
                 "threads" => {
                     b.threads = Some(val.as_usize().context("threads must be a positive integer")?)
@@ -368,8 +364,14 @@ impl RunSpecBuilder {
         self
     }
 
-    pub fn policy(mut self, policy: Policy) -> Self {
-        self.spec.policy = policy;
+    /// Select a stock policy (legacy shim over [`RunSpecBuilder::sched`]).
+    pub fn policy(self, policy: Policy) -> Self {
+        self.sched(SchedSpec::stock(policy))
+    }
+
+    /// Select any registered scheduler, with parameters.
+    pub fn sched(mut self, sched: SchedSpec) -> Self {
+        self.spec.sched = sched;
         self
     }
 
@@ -442,7 +444,8 @@ impl RunSpecBuilder {
         match key {
             "bench" => self.spec.bench = value.to_string(),
             "size" => self.spec.size = Size::from_name(value)?,
-            "sched" | "policy" => self.spec.policy = Policy::from_name(value)?,
+            // `name` or `name:k=v,k=v` — any registered scheduler
+            "sched" | "policy" => self.spec.sched = SchedSpec::parse(value)?,
             "bind" => self.spec.bind = BindSpec::Policy(BindPolicy::from_name(value)?),
             "cores" => {
                 let cores = value
@@ -498,10 +501,29 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(spec.bench, "fft");
-        assert_eq!(spec.policy, Policy::Dfwspt);
+        assert_eq!(spec.sched, SchedSpec::stock(Policy::Dfwspt));
         assert_eq!(spec.bind, BindSpec::Policy(BindPolicy::NumaAware));
         assert_eq!(spec.threads, 16);
         assert_eq!(spec.label(), "dfwspt-Scheduler-NUMA");
+    }
+
+    #[test]
+    fn builder_accepts_parameterized_schedulers() {
+        let spec = RunSpec::builder()
+            .bench("fib")
+            .sched(SchedSpec::new("hops-threshold").with_param("max_hops", 1.0))
+            .numa()
+            .threads(8)
+            .build()
+            .unwrap();
+        assert_eq!(spec.sched.name_sig(), "hops-threshold(max_hops=1)");
+        assert_eq!(spec.label(), "hops-threshold(max_hops=1)-Scheduler-NUMA");
+        // unknown parameters fail at build()
+        let bad = RunSpec::builder()
+            .bench("fib")
+            .sched(SchedSpec::new("hops-threshold").with_param("bogus", 1.0))
+            .threads(8);
+        assert!(bad.build().is_err());
     }
 
     #[test]
@@ -560,8 +582,27 @@ mod tests {
         )
         .unwrap();
         assert_eq!(spec.bench, "strassen");
-        assert_eq!(spec.policy, Policy::Dfwspt);
+        assert_eq!(spec.sched, SchedSpec::stock(Policy::Dfwspt));
         assert_eq!(spec.threads, 12);
+    }
+
+    #[test]
+    fn parameterized_sched_roundtrips_json() {
+        let spec = RunSpec::builder()
+            .bench("fib")
+            .sched(SchedSpec::new("adaptive").with_param("remote_ratio", 0.25))
+            .threads(8)
+            .build()
+            .unwrap();
+        let text = spec.to_json_string();
+        assert!(text.contains("\"remote_ratio\""), "{text}");
+        let back = RunSpec::from_json_str(&text).unwrap();
+        assert_eq!(back, spec);
+        // and the object form parses from authored JSON too
+        let authored = r#"{"bench": "fib", "threads": 8,
+            "sched": {"name": "hops-threshold", "max_hops": 2}}"#;
+        let spec = RunSpec::from_json_str(authored).unwrap();
+        assert_eq!(spec.sched.name_sig(), "hops-threshold(max_hops=2)");
     }
 
     #[test]
@@ -595,11 +636,23 @@ mod tests {
             b.set(k, v).unwrap();
         }
         let spec = b.build().unwrap();
-        assert_eq!(spec.policy, Policy::Dfwsrpt);
+        assert_eq!(spec.sched, SchedSpec::stock(Policy::Dfwsrpt));
         assert_eq!(spec.size, Size::Large);
         assert_eq!(spec.cost.len(), 2);
         let mut bad = RunSpec::builder();
         assert!(bad.set("bogus", "1").is_err());
         assert!(bad.set("threads", "abc").is_err());
+    }
+
+    #[test]
+    fn cli_style_set_accepts_scheduler_parameters() {
+        let mut b = RunSpec::builder();
+        b.set("bench", "fib").unwrap();
+        b.set("sched", "hops-threshold:max_hops=2,spill_after=1").unwrap();
+        b.set("threads", "8").unwrap();
+        let spec = b.build().unwrap();
+        assert_eq!(spec.sched.name_sig(), "hops-threshold(max_hops=2;spill_after=1)");
+        let mut bad = RunSpec::builder();
+        assert!(bad.set("sched", "hops-threshold:bogus=1").is_err());
     }
 }

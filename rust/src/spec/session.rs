@@ -30,7 +30,7 @@ use crate::config::ComputeMode;
 use crate::coordinator::binding::{bind_threads, BindPolicy, Binding};
 use crate::coordinator::engine::{Engine, EngineConfig};
 use crate::coordinator::runtime::Runtime;
-use crate::coordinator::sched::{build_victim_lists, Policy};
+use crate::coordinator::sched::{self, build_victim_lists, Policy, Scheduler};
 use crate::coordinator::task::Workload;
 use crate::metrics::RunStats;
 use crate::runtime::ExecEngine;
@@ -74,7 +74,7 @@ impl RunRecord {
             "{},{},{},{},{},{},{},{},{},{:.4},{},{},{:.3},{:.4},{},{},{},{}",
             self.spec.bench,
             self.spec.size.name(),
-            self.spec.policy.name(),
+            self.spec.sched.name_sig(),
             self.spec.bind.name(),
             self.spec.threads,
             self.spec.topo,
@@ -212,37 +212,44 @@ impl Session {
         Ok(self.baselines.lock().unwrap().entry(key).or_insert(arc).clone())
     }
 
-    /// Execute one spec: create the workload, run it, normalize against
-    /// the memoized serial baseline.
+    /// Execute one spec: create the workload, build the scheduler from
+    /// the registry, run it, normalize against the memoized serial
+    /// baseline.
     pub fn run(&self, spec: &RunSpec) -> Result<RunRecord> {
         self.validate_spec(spec)?;
         let rt = self.runtime_for(spec)?;
         let baseline = self.baseline(spec)?;
         let mut workload = bots::create(&spec.bench, spec.size, spec.seed)?;
+        let sched = sched::build(&spec.sched)?;
         let mut exec = match spec.compute {
             ComputeMode::Pjrt => Some(ExecEngine::cpu(&spec.artifact_dir)?),
             ComputeMode::Sim => None,
         };
-        let stats = match &spec.bind {
-            BindSpec::Policy(bind) => Self::execute(
+        let mut stats = match &spec.bind {
+            BindSpec::Policy(bind) => Self::execute_with(
                 &rt,
                 workload.as_mut(),
-                spec.policy,
+                sched.as_ref(),
                 *bind,
                 spec.threads,
                 spec.seed,
                 exec.as_mut(),
             )?,
-            BindSpec::Cores(cores) => Self::execute_bound(
+            BindSpec::Cores(cores) => Self::execute_bound_with(
                 &rt,
                 workload.as_mut(),
-                spec.policy,
+                sched.as_ref(),
                 cores,
                 spec.rtdata_local,
                 spec.seed,
                 exec.as_mut(),
             )?,
         };
+        // Normalize to the spec-level signature (overrides only) so run
+        // summaries, sweep tables and CSV all label one configuration
+        // identically; the raw execute_with paths — which have no spec —
+        // keep the engine's fully-resolved Scheduler::signature().
+        stats.sched = spec.sched.name_sig();
         Ok(RunRecord {
             spec: spec.clone(),
             serial_makespan: baseline.makespan,
@@ -298,8 +305,8 @@ impl Session {
     // Runtime::{run,run_bound}; those are now shims over these).
     // -----------------------------------------------------------------
 
-    /// Execute `workload` under `policy`/`bind` with `threads` threads on
-    /// `rt`, resolving the thread→core binding from the §IV policy.
+    /// Execute `workload` under a stock `policy` (legacy-shim form of
+    /// [`Session::execute_with`]).
     pub fn execute(
         rt: &Runtime,
         workload: &mut dyn Workload,
@@ -309,23 +316,66 @@ impl Session {
         seed: u64,
         exec: Option<&mut ExecEngine>,
     ) -> Result<RunStats> {
+        Self::execute_with(rt, workload, sched::stock(policy).as_ref(), bind, threads, seed, exec)
+    }
+
+    /// Execute `workload` under `sched`/`bind` with `threads` threads on
+    /// `rt`, resolving the thread→core binding from the §IV policy.
+    pub fn execute_with(
+        rt: &Runtime,
+        workload: &mut dyn Workload,
+        sched: &dyn Scheduler,
+        bind: BindPolicy,
+        threads: usize,
+        seed: u64,
+        exec: Option<&mut ExecEngine>,
+    ) -> Result<RunStats> {
         let mut rng = SplitMix64::new(seed);
         let binding = bind_threads(&rt.topo, threads, bind, &mut rng);
         let numa_rtdata = bind == BindPolicy::NumaAware;
-        let mut stats =
-            Self::execute_bound(rt, workload, policy, &binding.cores, numa_rtdata, seed, exec)?;
+        let mut stats = Self::execute_bound_with(
+            rt,
+            workload,
+            sched,
+            &binding.cores,
+            numa_rtdata,
+            seed,
+            exec,
+        )?;
         stats.bind = Some(bind);
         Ok(stats)
+    }
+
+    /// Explicit-binding legacy shim over [`Session::execute_bound_with`].
+    pub fn execute_bound(
+        rt: &Runtime,
+        workload: &mut dyn Workload,
+        policy: Policy,
+        cores: &[usize],
+        numa_rtdata: bool,
+        seed: u64,
+        exec: Option<&mut ExecEngine>,
+    ) -> Result<RunStats> {
+        Self::execute_bound_with(
+            rt,
+            workload,
+            sched::stock(policy).as_ref(),
+            cores,
+            numa_rtdata,
+            seed,
+            exec,
+        )
     }
 
     /// Execute with an explicit thread→core binding (thread 0 = master).
     /// `numa_rtdata` controls whether per-thread runtime pages are touched
     /// locally (§IV) or all by the master.  This is the ablation surface:
-    /// any placement heuristic can be fed in.
-    pub fn execute_bound(
+    /// any placement heuristic — and any registered scheduler — can be
+    /// fed in.
+    pub fn execute_bound_with(
         rt: &Runtime,
         workload: &mut dyn Workload,
-        policy: Policy,
+        sched: &dyn Scheduler,
         cores: &[usize],
         numa_rtdata: bool,
         seed: u64,
@@ -357,9 +407,10 @@ impl Session {
         let victims = build_victim_lists(&rt.topo, &binding.cores);
         let root = workload.root();
         let engine = Engine::new(
-            EngineConfig { policy, cores: binding.cores.clone(), rt_penalty, seed },
+            EngineConfig { cores: binding.cores.clone(), rt_penalty, seed },
             mem,
             victims,
+            sched,
             workload,
             exec,
         );

@@ -14,7 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{ComputeMode, Size};
 use crate::coordinator::binding::BindPolicy;
-use crate::coordinator::sched::Policy;
+use crate::coordinator::sched::{Policy, SchedSpec};
 use crate::metrics::table::SpeedupTable;
 use crate::serde::Json;
 use crate::spec::session::RunRecord;
@@ -30,7 +30,9 @@ pub struct Sweep {
     pub title: String,
     pub benches: Vec<String>,
     pub size: Size,
-    pub configs: Vec<(Policy, BindPolicy)>,
+    /// (scheduler, binding) pairs — any registered scheduler, stock
+    /// `Policy` values convert via `Into<SchedSpec>`.
+    pub configs: Vec<(SchedSpec, BindPolicy)>,
     pub threads: Vec<usize>,
     pub seeds: Vec<u64>,
     pub topo: String,
@@ -64,13 +66,17 @@ impl Sweep {
         self
     }
 
-    pub fn with_config(mut self, policy: Policy, bind: BindPolicy) -> Self {
-        self.configs.push((policy, bind));
+    pub fn with_config<S: Into<SchedSpec>>(mut self, sched: S, bind: BindPolicy) -> Self {
+        self.configs.push((sched.into(), bind));
         self
     }
 
-    pub fn with_configs(mut self, configs: Vec<(Policy, BindPolicy)>) -> Self {
-        self.configs.extend(configs);
+    pub fn with_configs<I, S>(mut self, configs: I) -> Self
+    where
+        I: IntoIterator<Item = (S, BindPolicy)>,
+        S: Into<SchedSpec>,
+    {
+        self.configs.extend(configs.into_iter().map(|(s, b)| (s.into(), b)));
         self
     }
 
@@ -125,14 +131,14 @@ impl Sweep {
         }
         let mut cells = Vec::with_capacity(self.cell_count());
         for bench in &self.benches {
-            for &(policy, bind) in &self.configs {
+            for (sched, bind) in &self.configs {
                 for &seed in &self.seeds {
                     for &threads in &self.threads {
                         cells.push(RunSpec {
                             bench: bench.clone(),
                             size: self.size,
-                            policy,
-                            bind: BindSpec::Policy(bind),
+                            sched: sched.clone(),
+                            bind: BindSpec::Policy(*bind),
                             threads,
                             topo: self.topo.clone(),
                             seed,
@@ -161,9 +167,7 @@ impl Sweep {
                 Json::Arr(
                     self.configs
                         .iter()
-                        .map(|(p, b)| {
-                            Json::Arr(vec![Json::from(p.name()), Json::from(b.name())])
-                        })
+                        .map(|(s, b)| Json::Arr(vec![s.to_json(), Json::from(b.name())]))
                         .collect(),
                 ),
             ),
@@ -200,9 +204,9 @@ impl Sweep {
             topo: defaults.topo.clone(),
             cost: defaults.cost.clone(),
         };
-        let mut scheds: Vec<String> = vec!["wf".into()];
+        let mut scheds: Vec<SchedSpec> = vec![SchedSpec::stock(Policy::WorkFirst)];
         let mut binds: Vec<String> = vec!["linear".into()];
-        let mut explicit_configs: Option<Vec<(Policy, BindPolicy)>> = None;
+        let mut explicit_configs: Option<Vec<(SchedSpec, BindPolicy)>> = None;
         let mut unknown = Vec::new();
         for (key, val) in obj {
             match key.as_str() {
@@ -211,7 +215,7 @@ impl Sweep {
                     sweep.title = val.as_str().context("title must be a string")?.to_string()
                 }
                 "bench" | "benches" => sweep.benches = str_list(val, key)?,
-                "sched" | "policies" => scheds = str_list(val, key)?,
+                "sched" | "policies" => scheds = sched_list(val)?,
                 "bind" | "binds" => binds = str_list(val, key)?,
                 "configs" => {
                     let pairs = val.as_arr().context("configs must be an array")?;
@@ -222,7 +226,7 @@ impl Sweep {
                             bail!("each config must be a [sched, bind] pair");
                         }
                         parsed.push((
-                            Policy::from_name(pair[0].as_str().context("config sched")?)?,
+                            SchedSpec::from_json(&pair[0]).context("config sched")?,
                             BindPolicy::from_name(pair[1].as_str().context("config bind")?)?,
                         ));
                     }
@@ -254,7 +258,7 @@ impl Sweep {
                 let mut cross = Vec::with_capacity(scheds.len() * binds.len());
                 for s in &scheds {
                     for b in &binds {
-                        cross.push((Policy::from_name(s)?, BindPolicy::from_name(b)?));
+                        cross.push((s.clone(), BindPolicy::from_name(b)?));
                     }
                 }
                 cross
@@ -291,6 +295,15 @@ impl Default for SweepDefaults {
             seeds: vec![42],
             cost: Vec::new(),
         }
+    }
+}
+
+/// Accept one scheduler selection or an array of them; each entry is a
+/// name string or a `{"name": …, params…}` object.
+fn sched_list(v: &Json) -> Result<Vec<SchedSpec>> {
+    match v {
+        Json::Arr(items) => items.iter().map(SchedSpec::from_json).collect(),
+        single => Ok(vec![SchedSpec::from_json(single)?]),
     }
 }
 
@@ -401,7 +414,7 @@ mod tests {
         assert_eq!(cells[0].threads, 2);
         assert_eq!(cells[1].threads, 4);
         assert_eq!(cells[3].seed, 2);
-        assert_eq!(cells[6].policy, Policy::Dfwspt);
+        assert_eq!(cells[6].sched, SchedSpec::stock(Policy::Dfwspt));
         assert_eq!(cells[12].bench, "fft");
         for c in &cells {
             c.validate().unwrap();
@@ -435,10 +448,34 @@ mod tests {
         .unwrap();
         let s = Sweep::from_json(&j, &SweepDefaults::default()).unwrap();
         assert_eq!(s.configs.len(), 4);
-        assert_eq!(s.configs[0], (Policy::WorkFirst, BindPolicy::Linear));
-        assert_eq!(s.configs[3], (Policy::CilkBased, BindPolicy::NumaAware));
+        assert_eq!(s.configs[0], (SchedSpec::stock(Policy::WorkFirst), BindPolicy::Linear));
+        assert_eq!(s.configs[3], (SchedSpec::stock(Policy::CilkBased), BindPolicy::NumaAware));
         assert_eq!(s.seeds, vec![3]);
         assert_eq!(s.title, "g", "title defaults to id");
+    }
+
+    #[test]
+    fn parameterized_schedulers_cross_and_roundtrip() {
+        let j = Json::parse(
+            r#"{"id": "p", "bench": "fib",
+                "sched": ["wf", {"name": "hops-threshold", "max_hops": 1}],
+                "bind": ["numa"], "threads": [2], "seed": 1, "size": "small"}"#,
+        )
+        .unwrap();
+        let s = Sweep::from_json(&j, &SweepDefaults::default()).unwrap();
+        assert_eq!(s.configs.len(), 2);
+        assert_eq!(s.configs[1].0.name_sig(), "hops-threshold(max_hops=1)");
+        let back = Sweep::from_json(&s.to_json(), &SweepDefaults::default()).unwrap();
+        assert_eq!(back, s);
+        // explicit configs accept the object form too
+        let j = Json::parse(
+            r#"{"id": "q", "bench": "fib", "threads": [2], "size": "small",
+                "configs": [[{"name": "adaptive", "remote_ratio": 0.25}, "numa"]]}"#,
+        )
+        .unwrap();
+        let s = Sweep::from_json(&j, &SweepDefaults::default()).unwrap();
+        assert_eq!(s.configs[0].0.name, "adaptive");
+        assert_eq!(s.configs[0].1, BindPolicy::NumaAware);
     }
 
     #[test]

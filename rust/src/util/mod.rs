@@ -64,6 +64,17 @@ pub const US: Time = 1_000_000;
 /// One millisecond.
 pub const MS: Time = 1_000_000_000;
 
+/// Compact float formatting: integral values print without a trailing
+/// `.0` (`1` not `1.0`), everything else as plain `{v}` — the form the
+/// CLI accepts back for cost overrides and scheduler parameters.
+pub fn fmt_f64(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
 /// Pretty-print a simulated duration.
 pub fn fmt_time(t: Time) -> String {
     if t >= MS {

@@ -25,6 +25,53 @@ fn list_shows_inventory() {
 }
 
 #[test]
+fn list_prints_all_four_sweep_axes() {
+    let (ok, text) = numanos(&["list"]);
+    assert!(ok, "{text}");
+    // one line per axis: benchmarks, schedulers, bindings, topologies
+    for axis in ["benchmarks", "schedulers", "bindings", "topologies"] {
+        assert_eq!(
+            text.lines().filter(|l| l.starts_with(axis)).count(),
+            1,
+            "missing '{axis}' line in:\n{text}"
+        );
+    }
+    let bindings = text.lines().find(|l| l.starts_with("bindings")).unwrap();
+    assert!(bindings.contains("linear") && bindings.contains("numa"), "{bindings}");
+    let topos = text.lines().find(|l| l.starts_with("topologies")).unwrap();
+    for preset in ["uma", "x4600_hetero", "altix16", "tile16", "tile64"] {
+        assert!(topos.contains(preset), "missing {preset} in: {topos}");
+    }
+    // the scheduler line is registry-derived: new strategies appear
+    let scheds = text.lines().find(|l| l.starts_with("schedulers")).unwrap();
+    let expected = [
+        "serial", "bf", "cilk", "wf", "dfwspt", "dfwsrpt", "hops-threshold", "hier", "adaptive",
+    ];
+    for sched in expected {
+        assert!(scheds.contains(sched), "missing {sched} in: {scheds}");
+    }
+}
+
+#[test]
+fn run_accepts_parameterized_scheduler() {
+    let (ok, text) = numanos(&[
+        "run", "--bench", "fib", "--size", "small", "--threads", "8",
+        "--sched", "hops-threshold:max_hops=1,spill_after=1", "--bind", "numa", "--seed", "5",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("hops-threshold(max_hops=1;spill_after=1)"), "{text}");
+    assert!(text.contains("speedup"), "{text}");
+
+    // bad parameter names are a clear error
+    let (ok, text) = numanos(&[
+        "run", "--bench", "fib", "--size", "small", "--threads", "4",
+        "--sched", "hops-threshold:bogus=3",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("bogus") && text.contains("max_hops"), "{text}");
+}
+
+#[test]
 fn topo_prints_priorities() {
     let (ok, text) = numanos(&["topo", "--name", "x4600"]);
     assert!(ok, "{text}");
@@ -199,6 +246,37 @@ fn sweep_manifest_end_to_end() {
     assert!(text.contains("\"records\""), "{text}");
     assert!(text.contains("\"speedup\""), "{text}");
 
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_manifest_with_parameterized_scheduler() {
+    let dir = std::env::temp_dir().join(format!("numanos_cli_param_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = dir.join("param.json");
+    std::fs::write(
+        &manifest,
+        r#"{
+          "title": "parameterized",
+          "defaults": {"size": "small", "seeds": [3]},
+          "sweeps": [
+            {"id": "near", "bench": "fib",
+             "sched": [{"name": "hops-threshold", "max_hops": 1}, "hier", "adaptive"],
+             "bind": ["numa"], "threads": [2, 8]}
+          ]
+        }"#,
+    )
+    .unwrap();
+    let out = dir.join("out");
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--out", out.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("hops-threshold(max_hops=1)-Scheduler-NUMA"), "{text}");
+    assert!(text.contains("hier-Scheduler-NUMA"), "{text}");
+    let csv = std::fs::read_to_string(out.join("near.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 1 + 6, "{csv}");
+    assert!(csv.contains("hops-threshold(max_hops=1)"), "{csv}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -1,0 +1,171 @@
+//! The scheduler registry end-to-end: every registered strategy runs
+//! deterministically, the stock policies are byte-identical through the
+//! trait path vs. the legacy enum verbs, and parameterized schedulers
+//! flow through manifests into sweeps.
+
+use numanos::config::Size;
+use numanos::coordinator::binding::BindPolicy;
+use numanos::coordinator::sched::{self, Policy, SchedSpec};
+use numanos::metrics::speedup;
+use numanos::spec::{ExperimentManifest, RunSpec, Session, Sweep};
+use numanos::{bots, Runtime};
+
+/// Satellite regression: for every registered scheduler, two runs with
+/// the same `(bench, topo, bind, threads, seed)` produce identical
+/// `RunStats` — guards the trait migration (and future registrations)
+/// against accidental RNG-order drift.
+#[test]
+fn every_registered_scheduler_is_deterministic() {
+    for name in sched::scheduler_names() {
+        let spec = RunSpec::builder()
+            .bench("sort")
+            .size(Size::Small)
+            .sched(SchedSpec::new(&name))
+            .numa()
+            .threads(if name == "serial" { 1 } else { 8 })
+            .seed(11)
+            .build()
+            .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        // fresh sessions: nothing shared but the registry
+        let a = Session::new().run(&spec).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let b = Session::new().run(&spec).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(a.stats.makespan, b.stats.makespan, "{name}");
+        assert_eq!(a.stats.steals, b.stats.steals, "{name}");
+        assert_eq!(a.stats.steal_attempts, b.stats.steal_attempts, "{name}");
+        assert_eq!(a.stats.sim_events, b.stats.sim_events, "{name}");
+        assert_eq!(a.to_csv_row(), b.to_csv_row(), "{name}");
+        assert_eq!(a.to_json().to_compact(), b.to_json().to_compact(), "{name}");
+        // the engine records the instance signature: registry name, plus
+        // resolved parameters for parameterized strategies
+        assert!(a.stats.sched.starts_with(&name), "{name}: {}", a.stats.sched);
+    }
+}
+
+/// Acceptance criterion: the five stock parallel policies produce
+/// byte-identical sweep CSV/JSON through the `Scheduler` trait path vs.
+/// the pre-redesign enum path (the legacy `Runtime::run` verbs, which
+/// take `Policy` and carry the old engine semantics).
+#[test]
+fn stock_policies_byte_identical_trait_vs_enum_path() {
+    let policies = [
+        Policy::BreadthFirst,
+        Policy::CilkBased,
+        Policy::WorkFirst,
+        Policy::Dfwspt,
+        Policy::Dfwsrpt,
+    ];
+    let sweep = Sweep::new("parity", "stock parity")
+        .with_bench("fft")
+        .with_configs(policies.iter().map(|&p| (p, BindPolicy::NumaAware)))
+        .with_threads(vec![2, 8])
+        .with_seeds(vec![5])
+        .with_size(Size::Small);
+    let result = Session::new().run_sweep(&sweep).unwrap();
+    assert_eq!(result.records.len(), policies.len() * 2);
+
+    let rt = Runtime::paper_testbed();
+    let mut ws = bots::create("fft", Size::Small, 5).unwrap();
+    let serial = rt.run_serial(ws.as_mut(), 5).unwrap();
+
+    let mut legacy_csv = format!("sweep,{}\n", numanos::spec::RunRecord::CSV_HEADER);
+    for (i, &policy) in policies.iter().enumerate() {
+        for (j, &threads) in [2usize, 8].iter().enumerate() {
+            let rec = &result.records[i * 2 + j];
+            let mut w = bots::create("fft", Size::Small, 5).unwrap();
+            let direct =
+                rt.run(w.as_mut(), policy, BindPolicy::NumaAware, threads, 5, None).unwrap();
+            assert_eq!(rec.stats.makespan, direct.makespan, "{}", policy.name());
+            assert_eq!(rec.stats.steals, direct.steals, "{}", policy.name());
+            assert_eq!(rec.stats.sim_events, direct.sim_events, "{}", policy.name());
+            assert_eq!(rec.stats.sched, policy.name().to_string());
+            let want = speedup(&serial, &direct);
+            assert!((rec.speedup - want).abs() < 1e-12, "{}", policy.name());
+            // reconstruct the CSV row from the legacy stats and spec axes
+            legacy_csv.push_str(&format!("parity,{}\n", rec.to_csv_row()));
+        }
+    }
+    assert_eq!(result.to_csv(), legacy_csv);
+}
+
+/// Acceptance criterion: `numanos sweep` semantics — a manifest cell
+/// selecting a parameterized scheduler runs end-to-end.
+#[test]
+fn manifest_with_parameterized_scheduler_runs_end_to_end() {
+    let manifest = ExperimentManifest::from_json_str(
+        r#"{
+          "title": "parameterized",
+          "defaults": {"size": "small", "seeds": [4]},
+          "sweeps": [
+            {"id": "bounded", "bench": "strassen",
+             "configs": [[{"name": "hops-threshold", "max_hops": 1}, "numa"],
+                         ["dfwsrpt", "numa"]],
+             "threads": [8]}
+          ]
+        }"#,
+    )
+    .unwrap();
+    let result = Session::new().run_sweep(&manifest.sweeps[0]).unwrap();
+    assert_eq!(result.records.len(), 2);
+    let bounded = &result.records[0];
+    assert_eq!(bounded.spec.sched.name_sig(), "hops-threshold(max_hops=1)");
+    assert_eq!(bounded.label(), "hops-threshold(max_hops=1)-Scheduler-NUMA");
+    assert!(bounded.stats.makespan > 0);
+    assert!(bounded.stats.steals > 0, "strassen at 8 threads must steal");
+    let csv = result.to_csv();
+    assert!(csv.contains("hops-threshold(max_hops=1)"), "{csv}");
+}
+
+/// The new strategies express behaviours the closed enum could not:
+/// hop-bounded stealing really steals closer than uniform random.
+#[test]
+fn hop_bounded_stealing_steals_closer_than_work_first() {
+    let session = Session::new();
+    let run = |sched: SchedSpec| {
+        let spec = RunSpec::builder()
+            .bench("strassen")
+            .size(Size::Small)
+            .sched(sched)
+            .numa()
+            .threads(16)
+            .seed(9)
+            .build()
+            .unwrap();
+        session.run(&spec).unwrap()
+    };
+    let wf = run(SchedSpec::stock(Policy::WorkFirst));
+    let near = run(SchedSpec::new("hops-threshold").with_param("max_hops", 1.0));
+    let hier = run(SchedSpec::new("hier"));
+    assert!(wf.stats.steals > 0 && near.stats.steals > 0 && hier.stats.steals > 0);
+    assert!(
+        near.stats.mean_steal_hops < wf.stats.mean_steal_hops,
+        "bounded {} vs wf {}",
+        near.stats.mean_steal_hops,
+        wf.stats.mean_steal_hops
+    );
+    assert!(
+        hier.stats.mean_steal_hops < wf.stats.mean_steal_hops,
+        "hier {} vs wf {}",
+        hier.stats.mean_steal_hops,
+        wf.stats.mean_steal_hops
+    );
+}
+
+/// `adaptive` runs and reports its registry name through the stats.
+#[test]
+fn adaptive_runs_across_thread_counts() {
+    let session = Session::new();
+    for threads in [2, 16] {
+        let spec = RunSpec::builder()
+            .bench("fft")
+            .size(Size::Small)
+            .sched(SchedSpec::new("adaptive").with_param("min_steals", 8.0))
+            .numa()
+            .threads(threads)
+            .seed(2)
+            .build()
+            .unwrap();
+        let rec = session.run(&spec).unwrap();
+        assert_eq!(rec.stats.sched, "adaptive(min_steals=8)", "spec-level signature");
+        assert!(rec.stats.makespan > 0);
+    }
+}

@@ -4,12 +4,13 @@
 //! sequential execution.
 
 use numanos::config::Size;
-use numanos::coordinator::binding::BindPolicy;
-use numanos::coordinator::sched::Policy;
+use numanos::coordinator::binding::{bind_threads, BindPolicy};
+use numanos::coordinator::sched::{build_victim_lists, Policy, VictimList};
 use numanos::harness;
 use numanos::metrics::speedup;
 use numanos::spec::{ExperimentManifest, RunSpec, Session, Sweep};
-use numanos::{bots, Runtime};
+use numanos::util::SplitMix64;
+use numanos::{bots, Runtime, Topology};
 
 fn tmp_dir(tag: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join(format!("numanos_{tag}_{}", std::process::id()));
@@ -202,6 +203,75 @@ fn manifest_files_run_end_to_end() {
     assert!(csv.starts_with("sweep,bench,size,policy,bind,threads"), "{csv}");
 
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// One sweep cell on `topo` with every thread bound linearly; returns
+/// the executed record set plus the victim lists of that binding.
+fn run_cell_and_victim_lists(topo_name: &str, threads: usize) -> Vec<VictimList> {
+    let sweep = Sweep::new("grid", "non-flagship grid")
+        .with_bench("fib")
+        .with_config(Policy::Dfwspt, BindPolicy::Linear)
+        .with_threads(vec![threads])
+        .with_seeds(vec![3])
+        .with_size(Size::Small)
+        .with_topo(topo_name);
+    let result = Session::new().run_sweep(&sweep).unwrap();
+    assert_eq!(result.records.len(), 1);
+    let rec = &result.records[0];
+    assert_eq!(rec.spec.topo, topo_name);
+    assert!(rec.stats.makespan > 0, "{topo_name}");
+    assert!(rec.stats.tasks > 1, "{topo_name}");
+
+    let topo = Topology::by_name(topo_name).unwrap();
+    let mut rng = SplitMix64::new(3);
+    let binding = bind_threads(&topo, threads, BindPolicy::Linear, &mut rng);
+    let vls = build_victim_lists(&topo, &binding.cores);
+    for vl in &vls {
+        assert_eq!(vl.total(), threads - 1, "{topo_name}");
+        for w in vl.groups.windows(2) {
+            assert!(w[0].0 < w[1].0, "{topo_name}: groups must ascend by distance");
+        }
+    }
+    vls
+}
+
+#[test]
+fn sweep_cell_runs_on_x4600_hetero_with_correct_hop_groups() {
+    // 24 cores: corners carry 2, inner sockets 4 (nodes 2..=5)
+    let vls = run_cell_and_victim_lists("x4600_hetero", 24);
+    // thread 0 is on corner node 0 with a single sibling
+    assert_eq!(vls[0].groups[0], (0, vec![1]));
+    // thread 4 is the first core of 4-core node 2: three same-node siblings
+    assert_eq!(vls[4].groups[0], (0, vec![5, 6, 7]));
+    // node 2 neighbours nodes 0, 4 and 5 (the twist link), so the 1-hop
+    // group holds their cores: 0,1 (node 0), 12..=15 (node 4), 16..=19 (node 5)
+    assert_eq!(vls[4].groups[1], (1, vec![0, 1, 12, 13, 14, 15, 16, 17, 18, 19]));
+}
+
+#[test]
+fn sweep_cell_runs_on_tile16_with_manhattan_hop_groups() {
+    // 4x4 single-core mesh: corner tile 0 sees Manhattan-distance rings
+    let vls = run_cell_and_victim_lists("tile16", 16);
+    let sizes: Vec<(u8, usize)> = vls[0].groups.iter().map(|(h, g)| (*h, g.len())).collect();
+    assert_eq!(sizes, vec![(1, 2), (2, 3), (3, 4), (4, 3), (5, 2), (6, 1)]);
+    assert_eq!(vls[0].groups[0], (1, vec![1, 4]), "east and south neighbours");
+    // a centre tile (row 1, col 1 = tile 5) reaches everything within 4 hops
+    let centre: Vec<(u8, usize)> = vls[5].groups.iter().map(|(h, g)| (*h, g.len())).collect();
+    assert_eq!(centre, vec![(1, 4), (2, 6), (3, 4), (4, 1)]);
+}
+
+#[test]
+fn sweep_cell_runs_on_altix16_with_deep_fabric_groups() {
+    // two bridged 8-node ladders, 2 cores per node, 32 cores
+    let vls = run_cell_and_victim_lists("altix16", 32);
+    // same-node sibling first
+    assert_eq!(vls[0].groups[0], (0, vec![1]));
+    // node 0 neighbours nodes 1 and 2 -> cores 2..=5 at one hop
+    assert_eq!(vls[0].groups[1], (1, vec![2, 3, 4, 5]));
+    // the far ladder sits beyond the single bridge: deeper than any
+    // x4600 distance (max 3 hops there)
+    let deepest = vls[0].groups.last().unwrap().0;
+    assert!(deepest > 3, "bridged fabric must exceed x4600 depth, got {deepest}");
 }
 
 #[test]
