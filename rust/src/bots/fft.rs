@@ -112,19 +112,32 @@ impl Workload for Fft {
                     return;
                 }
                 let h = n / 2;
-                ctx.spawn(TaskDesc::new(
-                    if h <= self.leaf { K_LEAF } else { K_SPLIT },
-                    [off as i64, h as i64, 0, 0],
-                ));
-                ctx.spawn(TaskDesc::new(
-                    if h <= self.leaf { K_LEAF } else { K_SPLIT },
-                    [(off + h) as i64, h as i64, 0, 0],
-                ));
+                // affinity: each half transform touches exactly its half
+                ctx.spawn_on(
+                    TaskDesc::new(
+                        if h <= self.leaf { K_LEAF } else { K_SPLIT },
+                        [off as i64, h as i64, 0, 0],
+                    ),
+                    self.data.slice(off * ELEM, h * ELEM),
+                );
+                ctx.spawn_on(
+                    TaskDesc::new(
+                        if h <= self.leaf { K_LEAF } else { K_SPLIT },
+                        [(off + h) as i64, h as i64, 0, 0],
+                    ),
+                    self.data.slice((off + h) * ELEM, h * ELEM),
+                );
                 ctx.taskwait();
-                // combine phase: butterflies over the whole range, chunked
+                // combine phase: butterflies over the whole range, chunked;
+                // chunk i reads/writes its low-half slice (and the mirrored
+                // high-half slice at the same home, touched by the same task)
                 let chunks = (h / self.chunk).max(1);
+                let c = h / chunks;
                 for i in 0..chunks {
-                    ctx.spawn(TaskDesc::new(K_COMBINE, [off as i64, n as i64, i as i64, 0]));
+                    ctx.spawn_on(
+                        TaskDesc::new(K_COMBINE, [off as i64, n as i64, i as i64, 0]),
+                        self.data.slice((off + i * c) * ELEM, c * ELEM),
+                    );
                 }
             }
             K_LEAF => leaf_actions(self, off, n, ctx),

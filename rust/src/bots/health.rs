@@ -91,7 +91,8 @@ impl Workload for Health {
         match desc.kind {
             K_STEP => {
                 let t = desc.args[0] as u32;
-                ctx.spawn(TaskDesc::new(K_VILLAGE, [0, t as i64, 0, 0]));
+                // affinity: the root village task updates village 0's lists
+                ctx.spawn_on(TaskDesc::new(K_VILLAGE, [0, t as i64, 0, 0]), self.villages[0]);
                 ctx.taskwait();
                 if t + 1 < self.steps {
                     ctx.spawn(TaskDesc::new(K_STEP, [(t + 1) as i64, 0, 0, 0]));
@@ -106,7 +107,11 @@ impl Workload for Health {
                     let b = self.branching as usize;
                     for c in 0..b {
                         let child = v * b + c + 1;
-                        ctx.spawn(TaskDesc::new(K_VILLAGE, [child as i64, t as i64, 0, 0]));
+                        // each child task walks its own village's lists
+                        ctx.spawn_on(
+                            TaskDesc::new(K_VILLAGE, [child as i64, t as i64, 0, 0]),
+                            self.villages[child],
+                        );
                     }
                 }
                 // simulate this village: patients arrive/heal/refer

@@ -91,15 +91,22 @@ impl Workload for NQueens {
         while free != 0 {
             let bit = free & free.wrapping_neg();
             free ^= bit;
-            ctx.spawn(TaskDesc::new(
-                0,
-                [
-                    (cols | bit) as i64,
-                    ((d1 | bit) << 1) as i64,
-                    ((d2 | bit) >> 1) as i64,
-                    (row + 1) as i64,
-                ],
-            ));
+            // affinity: all any subtree touches is the shared config page —
+            // a deliberately tiny hint that placement strategies should
+            // ignore (numa-home's min_kb floor), since funnelling the whole
+            // search tree onto the board's node would serialize it
+            ctx.spawn_on(
+                TaskDesc::new(
+                    0,
+                    [
+                        (cols | bit) as i64,
+                        ((d1 | bit) << 1) as i64,
+                        ((d2 | bit) >> 1) as i64,
+                        (row + 1) as i64,
+                    ],
+                ),
+                self.board,
+            );
         }
         ctx.taskwait();
         ctx.compute(UNITS_PER_NODE); // reduce the counts

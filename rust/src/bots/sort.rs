@@ -113,19 +113,28 @@ impl Workload for Sort {
                 }
                 let h = n / 2;
                 // children sort in the *other* buffer pair orientation:
-                // they sort src in place, we merge src -> dst
-                ctx.spawn(TaskDesc::new(K_SORT, [off as i64, h as i64, depth as i64 + 1, 0]));
-                ctx.spawn(TaskDesc::new(
-                    K_SORT,
-                    [(off + h) as i64, h as i64, depth as i64 + 1, 0],
-                ));
+                // they sort src in place, we merge src -> dst.  Affinity:
+                // each child sorts its half of the child-depth buffer.
+                let (child_src, _) = self.buffers(depth + 1);
+                ctx.spawn_on(
+                    TaskDesc::new(K_SORT, [off as i64, h as i64, depth as i64 + 1, 0]),
+                    child_src.slice(off * ELEM, h * ELEM),
+                );
+                ctx.spawn_on(
+                    TaskDesc::new(K_SORT, [(off + h) as i64, h as i64, depth as i64 + 1, 0]),
+                    child_src.slice((off + h) * ELEM, h * ELEM),
+                );
                 ctx.taskwait();
                 let chunks = (n / self.chunk).max(1);
+                let c = n / chunks;
                 for i in 0..chunks {
-                    ctx.spawn(TaskDesc::new(
-                        K_MERGE,
-                        [off as i64, n as i64, depth as i64, i as i64],
-                    ));
+                    // the chunk's low-half read slice (mirrors K_MERGE's `a`)
+                    let read = child_src
+                        .slice((off + (i * c / 2).min(h - c / 2)) * ELEM, c / 2 * ELEM);
+                    ctx.spawn_on(
+                        TaskDesc::new(K_MERGE, [off as i64, n as i64, depth as i64, i as i64]),
+                        read,
+                    );
                 }
             }
             K_MERGE => {

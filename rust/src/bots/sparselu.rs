@@ -218,14 +218,21 @@ impl Workload for SparseLu {
                 ctx.write(diag);
                 match self.variant {
                     Variant::Single => {
+                        // affinity: each task updates one block in place
                         for j in (k + 1)..nb {
                             if self.nonnull(k, j) {
-                                ctx.spawn(TaskDesc::new(K_FWD, [k as i64, j as i64, 0, 0]));
+                                ctx.spawn_on(
+                                    TaskDesc::new(K_FWD, [k as i64, j as i64, 0, 0]),
+                                    self.block(k, j),
+                                );
                             }
                         }
                         for i in (k + 1)..nb {
                             if self.nonnull(i, k) {
-                                ctx.spawn(TaskDesc::new(K_BDIV, [i as i64, k as i64, 0, 0]));
+                                ctx.spawn_on(
+                                    TaskDesc::new(K_BDIV, [i as i64, k as i64, 0, 0]),
+                                    self.block(i, k),
+                                );
                             }
                         }
                     }
@@ -239,6 +246,8 @@ impl Workload for SparseLu {
                     }
                 }
                 ctx.taskwait();
+                // the phase task only spawns; its children carry their own
+                // block affinities
                 ctx.spawn(TaskDesc::new(K_BMOD_PHASE, [k as i64, 0, 0, 0]));
             }
             K_BMOD_PHASE => {
@@ -251,10 +260,10 @@ impl Workload for SparseLu {
                             }
                             for j in (k + 1)..nb {
                                 if self.nonnull(k, j) {
-                                    ctx.spawn(TaskDesc::new(
-                                        K_BMOD,
-                                        [i as i64, j as i64, k as i64, 0],
-                                    ));
+                                    ctx.spawn_on(
+                                        TaskDesc::new(K_BMOD, [i as i64, j as i64, k as i64, 0]),
+                                        self.block(i, j),
+                                    );
                                 }
                             }
                         }
@@ -270,7 +279,11 @@ impl Workload for SparseLu {
                 }
                 ctx.taskwait();
                 if k + 1 < nb {
-                    ctx.spawn(TaskDesc::new(K_STEP, [(k + 1) as i64, 0, 0, 0]));
+                    // the next step factors its diagonal block inline
+                    ctx.spawn_on(
+                        TaskDesc::new(K_STEP, [(k + 1) as i64, 0, 0, 0]),
+                        self.block(k + 1, k + 1),
+                    );
                 }
             }
             K_SPLIT_FWD_BDIV | K_SPLIT_BMOD => {
@@ -287,10 +300,16 @@ impl Workload for SparseLu {
                 for x in lo..hi {
                     if desc.kind == K_SPLIT_FWD_BDIV {
                         if self.nonnull(k, x) {
-                            ctx.spawn(TaskDesc::new(K_FWD, [k as i64, x as i64, 0, 0]));
+                            ctx.spawn_on(
+                                TaskDesc::new(K_FWD, [k as i64, x as i64, 0, 0]),
+                                self.block(k, x),
+                            );
                         }
                         if self.nonnull(x, k) {
-                            ctx.spawn(TaskDesc::new(K_BDIV, [x as i64, k as i64, 0, 0]));
+                            ctx.spawn_on(
+                                TaskDesc::new(K_BDIV, [x as i64, k as i64, 0, 0]),
+                                self.block(x, k),
+                            );
                         }
                     } else {
                         // bmod row x
@@ -299,10 +318,10 @@ impl Workload for SparseLu {
                         }
                         for j in (k + 1)..nb {
                             if self.nonnull(k, j) {
-                                ctx.spawn(TaskDesc::new(
-                                    K_BMOD,
-                                    [x as i64, j as i64, k as i64, 0],
-                                ));
+                                ctx.spawn_on(
+                                    TaskDesc::new(K_BMOD, [x as i64, j as i64, k as i64, 0]),
+                                    self.block(x, j),
+                                );
                             }
                         }
                     }

@@ -165,7 +165,14 @@ impl Workload for Strassen {
         ctx.read(bv);
         ctx.compute(10 * (s / 2) * (s / 2) / 4); // Winograd pre-adds
         for k in 0..7usize {
-            ctx.spawn(TaskDesc::new(K_MUL, [(7 * node + 1 + k) as i64, depth as i64 + 1, 0, 0]));
+            let child = 7 * node + 1 + k;
+            // affinity: the sub-product streams its operand quadrant (its
+            // temp result is first-touched wherever the child executes)
+            let (child_a, _, _) = self.views(child);
+            ctx.spawn_on(
+                TaskDesc::new(K_MUL, [child as i64, depth as i64 + 1, 0, 0]),
+                child_a,
+            );
         }
         ctx.taskwait();
         // post: recombine the seven products into C_v

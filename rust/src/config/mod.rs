@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::binding::BindPolicy;
 use crate::coordinator::sched::{Policy, SchedSpec};
-use crate::simnuma::CostModel;
+use crate::simnuma::{CostModel, MemSpec};
 use crate::util::NS;
 
 /// Benchmark input scale (the paper's Medium/Large; Small for tests).
@@ -57,6 +57,8 @@ pub struct RunConfig {
     /// Scheduler selection — any registered scheduler, parameterized as
     /// `name:k=v,...` in config files.
     pub sched: SchedSpec,
+    /// Page-placement policy, same `name:k=v,...` grammar.
+    pub mem: MemSpec,
     pub bind: BindPolicy,
     pub threads: usize,
     pub topo: String,
@@ -71,6 +73,7 @@ impl Default for RunConfig {
             bench: "fft".into(),
             size: Size::Medium,
             sched: SchedSpec::stock(Policy::WorkFirst),
+            mem: MemSpec::default(),
             bind: BindPolicy::Linear,
             threads: 16,
             topo: "x4600".into(),
@@ -88,6 +91,7 @@ impl RunConfig {
             "bench" => self.bench = value.to_string(),
             "size" => self.size = Size::from_name(value)?,
             "sched" | "policy" => self.sched = SchedSpec::parse(value)?,
+            "mem" => self.mem = MemSpec::parse(value)?,
             "bind" => self.bind = BindPolicy::from_name(value)?,
             "threads" => self.threads = value.parse().context("threads")?,
             "topo" => self.topo = value.to_string(),
@@ -131,6 +135,7 @@ impl RunConfig {
             .bench(&self.bench)
             .size(self.size)
             .sched(self.sched.clone())
+            .mem(self.mem.clone())
             .bind(self.bind)
             .threads(self.threads)
             .topo(&self.topo)
@@ -246,6 +251,15 @@ mod tests {
         let c = RunConfig::from_file(&path).unwrap();
         assert_eq!(c.sched.name_sig(), "hops-threshold(max_hops=2)");
         assert!(c.to_spec().is_ok());
+        // page policies too, same name:k=v grammar
+        std::fs::write(
+            &path,
+            "bench = fib\nsched = numa-home\nmem = next-touch:max_moves=2\nthreads = 4\n",
+        )
+        .unwrap();
+        let c = RunConfig::from_file(&path).unwrap();
+        assert_eq!(c.mem.name_sig(), "next-touch(max_moves=2)");
+        assert_eq!(c.to_spec().unwrap().mem, c.mem);
         std::fs::remove_dir_all(&dir).ok();
     }
 

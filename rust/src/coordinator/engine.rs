@@ -11,7 +11,12 @@
 //! [`SchedDescriptor`] (queue discipline, steal end, overhead accounting),
 //! asks [`Scheduler::victim_order`] for each steal sweep's visiting
 //! order, and reports spawns, steals and failed sweeps back through
-//! [`Scheduler::observe`] so adaptive strategies can react.
+//! [`Scheduler::observe`] so adaptive strategies can react.  For
+//! schedulers that opt into placement ([`SchedDescriptor::places`]),
+//! every spawn is additionally routed through [`Scheduler::place`]: a
+//! [`Placement::HomeNode`] answer pushes the child onto a worker bound to
+//! its data's home node (the parent keeps running) instead of the local
+//! child-first switch.
 //!
 //! ## Semantics (mirroring NANOS)
 //!
@@ -43,7 +48,7 @@ use anyhow::Result;
 
 use crate::coordinator::pool::Pool;
 use crate::coordinator::sched::{
-    dfwspt, SchedDescriptor, SchedEvent, Scheduler, StealEnd, VictimList,
+    dfwspt, Placement, SchedDescriptor, SchedEvent, Scheduler, SpawnCtx, StealEnd, VictimList,
 };
 use crate::coordinator::task::{
     Action, BodyCtx, TaskArena, TaskId, TaskState, Workload,
@@ -96,12 +101,19 @@ pub struct Engine<'a> {
     shared: Pool,
     /// thread-to-thread hop distances (precomputed from the binding).
     thops: Vec<Vec<u8>>,
+    /// node -> worker ids bound there (placement targets).
+    node_workers: Vec<Vec<usize>>,
+    /// node -> nearest node that actually has bound workers (identity
+    /// when the node itself has some).
+    place_node: Vec<usize>,
     events: BinaryHeap<Reverse<(Time, u64, usize)>>,
     seq: u64,
     live: u64,
     makespan: Time,
     kernel_calls: u64,
     sim_events: u64,
+    pushed_home: u64,
+    affinity_hits: u64,
     victim_buf: Vec<usize>,
     wake_rr: usize,
 }
@@ -143,6 +155,18 @@ impl<'a> Engine<'a> {
             .map(|a| (0..n).map(|b| topo.core_hops(workers[a].core, workers[b].core)).collect())
             .collect();
         let pools = (0..n).map(|_| Pool::new()).collect();
+        let mut node_workers = vec![Vec::new(); topo.num_nodes()];
+        for (i, wk) in workers.iter().enumerate() {
+            node_workers[topo.node_of(wk.core)].push(i);
+        }
+        let place_node = (0..topo.num_nodes())
+            .map(|node| {
+                topo.nodes_by_distance(node)
+                    .into_iter()
+                    .find(|&m| !node_workers[m].is_empty())
+                    .expect("a team has at least one bound worker")
+            })
+            .collect();
         Self {
             sched,
             desc: sched.descriptor(),
@@ -155,12 +179,16 @@ impl<'a> Engine<'a> {
             pools,
             shared: Pool::new(),
             thops,
+            node_workers,
+            place_node,
             events: BinaryHeap::new(),
             seq: 0,
             live: 0,
             makespan: 0,
             kernel_calls: 0,
             sim_events: 0,
+            pushed_home: 0,
+            affinity_hits: 0,
             victim_buf: Vec::new(),
             wake_rr: 0,
         }
@@ -385,8 +413,8 @@ impl<'a> Engine<'a> {
         let free = self.desc.overhead_free;
         let tid = self.workers[w].current.expect("run_quantum without task");
         loop {
-            // single arena access per step: copy the 16-B action out so the
-            // arena can be mutated freely below (hot path — see
+            // single arena access per step: copy the small Copy action out
+            // so the arena can be mutated freely below (hot path — see
             // EXPERIMENTS.md §Perf)
             let (state, action) = {
                 let inst = self.arena.get(tid);
@@ -419,7 +447,7 @@ impl<'a> Engine<'a> {
                     }
                     self.arena.get_mut(tid).cursor += 1;
                 }
-                Some(Action::Spawn(desc)) => {
+                Some(Action::Spawn { desc, affinity }) => {
                     self.arena.get_mut(tid).cursor += 1;
                     self.sched.observe(&SchedEvent::Spawn { worker: w });
                     let cm = self.mem.cost_model();
@@ -430,6 +458,32 @@ impl<'a> Engine<'a> {
                     let child = self.arena.create(desc, Some(tid), depth);
                     self.live += 1;
                     self.arena.get_mut(tid).pending_children += 1;
+
+                    // Placement hook: only schedulers whose descriptor
+                    // opts in pay for it (stock strategies skip the home
+                    // query and the hook entirely — the byte-parity
+                    // guarantee for non-placing schedulers).
+                    if self.desc.places
+                        && !self.desc.shared_queue()
+                        && affinity.bytes > 0
+                        && affinity.bytes >= self.desc.min_hint_bytes
+                    {
+                        let worker_node = self.topo.node_of(self.workers[w].core);
+                        let home = self.mem.home_node(affinity);
+                        if home == Some(worker_node) {
+                            self.affinity_hits += 1;
+                        }
+                        let sctx = SpawnCtx { worker: w, worker_node, affinity, home };
+                        if let Placement::HomeNode(node) = self.sched.place(&sctx) {
+                            if let Some(target) = self.home_worker(node) {
+                                if target != w {
+                                    self.push_home(child, w, target);
+                                    // parent keeps running: loop continues
+                                    continue;
+                                }
+                            }
+                        }
+                    }
 
                     if self.desc.shared_queue() {
                         let op = self.mem.cost_model().shared_queue_op;
@@ -497,6 +551,48 @@ impl<'a> Engine<'a> {
                     }
                 }
             }
+        }
+    }
+
+    /// The worker a [`Placement::HomeNode`] push targets: on the node
+    /// itself when workers are bound there (else the nearest node that
+    /// has some), the member with the shortest pool, ties to the lowest
+    /// thread id — deterministic.  `None` for an out-of-range node (a
+    /// misbehaving custom scheduler falls back to the local path).
+    fn home_worker(&self, node: usize) -> Option<usize> {
+        let node = *self.place_node.get(node)?;
+        let team = &self.node_workers[node];
+        let mut best = team[0];
+        for &cand in &team[1..] {
+            if self.pools[cand].len() < self.pools[best].len() {
+                best = cand;
+            }
+        }
+        Some(best)
+    }
+
+    /// Push freshly spawned `child` onto `target`'s pool (a cross-node
+    /// "push to home").  The spawning worker `w` pays the remote queue
+    /// op — a local op plus the same per-hop transfer a steal would pay,
+    /// charged on the target pool's lock (contention included) — and the
+    /// target is woken if parked.  FIFO entry (push_back): the home
+    /// worker drains its own child-first stack before mailbox arrivals,
+    /// and back-end thieves re-balance the oldest pushes first.
+    fn push_home(&mut self, child: TaskId, w: usize, target: usize) {
+        let cm = self.mem.cost_model();
+        let hops = self.thops[w][target] as Time;
+        let op = cm.queue_op + hops * cm.steal_per_hop + self.workers[w].rt_penalty;
+        let now = self.workers[w].clock;
+        let cost = self.pools[target].lock(now, op);
+        self.workers[w].clock += cost;
+        self.workers[w].overhead_time += cost;
+        self.pools[target].push_back(child);
+        self.pushed_home += 1;
+        if self.workers[target].sleeping {
+            self.workers[target].sleeping = false;
+            let t = (self.workers[w].clock + 120).max(self.workers[target].clock);
+            self.workers[target].clock = t;
+            self.schedule(target, t);
         }
     }
 
@@ -589,6 +685,8 @@ impl<'a> Engine<'a> {
             steals,
             steal_attempts,
             mean_steal_hops: if steals == 0 { 0.0 } else { steal_hops as f64 / steals as f64 },
+            pushed_home: self.pushed_home,
+            affinity_hits: self.affinity_hits,
             lock_wait_total,
             shared_lock_wait: self.shared.lock_wait,
             shared_ops: self.shared.ops,

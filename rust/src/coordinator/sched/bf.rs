@@ -36,6 +36,8 @@ impl Scheduler for BreadthFirst {
             steal_end: StealEnd::Back,
             child_first: false,
             overhead_free: false,
+            places: false,
+            min_hint_bytes: 0,
         }
     }
 

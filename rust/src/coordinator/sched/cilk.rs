@@ -33,6 +33,8 @@ impl Scheduler for CilkBased {
             steal_end: StealEnd::Front,
             child_first: true,
             overhead_free: false,
+            places: false,
+            min_hint_bytes: 0,
         }
     }
 

@@ -1,0 +1,170 @@
+//! `numa-home` — the paper's placement strategy: push tasks to their
+//! data's home node.
+//!
+//! The steal side of the paper's technique (DFWSPT/DFWSRPT) moves *idle
+//! workers toward work*; this strategy adds the allocation side and moves
+//! *work toward its data*.  Every spawn annotated with a data-affinity
+//! hint ([`BodyCtx::spawn_on`](crate::coordinator::task::BodyCtx::spawn_on))
+//! is routed through [`Scheduler::place`]: if the hint's pages mostly
+//! live on a node other than the spawner's, the child is pushed onto a
+//! worker bound to that node instead of running child-first locally.
+//! Executing on the owner node turns would-be remote misses into local
+//! ones — the `remote_ratio` drop Wittmann & Hager (arXiv:1101.0093)
+//! attribute to task-to-data affinity.
+//!
+//! Two guard rails keep the push from degenerating:
+//!
+//! * **Hint-size floor** (`min_kb`): tiny shared regions (a config page
+//!   every task reads, like nqueens' board) would otherwise funnel the
+//!   entire task graph onto one node.  Hints below the floor are ignored
+//!   — caches absorb small shared state anyway.
+//! * **Local-home fast path**: when the data is already home (or nothing
+//!   is resident yet), the spawn stays on today's child-first path, so
+//!   well-placed graphs schedule exactly like `dfwsrpt`.
+//!
+//! Stealing stays NUMA-aware (§VI.B random priority list): pushed-home
+//! queues drain locally first, and any imbalance is corrected by
+//! closest-first steals.
+
+use super::{dfwsrpt, Placement, SchedDescriptor, Scheduler, SpawnCtx, VictimList};
+use crate::util::SplitMix64;
+
+/// Default hint-size floor in KiB (4 pages).
+pub const DEFAULT_MIN_KB: f64 = 16.0;
+
+/// Push-to-home placement over §VI.B locality stealing.
+pub struct NumaHome {
+    /// Minimum affinity-hint size (bytes) that may trigger a push.
+    min_bytes: u64,
+}
+
+impl NumaHome {
+    pub fn new(min_kb: f64) -> Self {
+        Self { min_bytes: (min_kb * 1024.0) as u64 }
+    }
+}
+
+impl Scheduler for NumaHome {
+    fn name(&self) -> &str {
+        "numa-home"
+    }
+
+    fn signature(&self) -> String {
+        format!("numa-home(min_kb={})", crate::util::fmt_f64(self.min_bytes as f64 / 1024.0))
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor {
+            places: true,
+            // surfaces the floor so the engine never resolves homes for
+            // hints place() would discard anyway
+            min_hint_bytes: self.min_bytes,
+            ..SchedDescriptor::WORK_STEALING
+        }
+    }
+
+    fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        dfwsrpt::order(vl, rng, out);
+    }
+
+    fn place(&self, ctx: &SpawnCtx) -> Placement {
+        // the engine already gates on descriptor().min_hint_bytes; this
+        // re-check keeps the strategy self-contained for direct callers
+        if ctx.affinity.bytes < self.min_bytes {
+            return Placement::LocalQueue;
+        }
+        match ctx.home {
+            Some(node) if node != ctx.worker_node => Placement::HomeNode(node),
+            _ => Placement::LocalQueue,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+    use super::*;
+    use crate::simnuma::Region;
+
+    fn ctx(worker_node: usize, bytes: u64, home: Option<usize>) -> SpawnCtx {
+        SpawnCtx {
+            worker: 0,
+            worker_node,
+            affinity: Region { addr: 1 << 20, bytes },
+            home,
+        }
+    }
+
+    #[test]
+    fn pushes_to_a_remote_home() {
+        let s = NumaHome::new(16.0);
+        assert_eq!(s.place(&ctx(0, 1 << 20, Some(5))), Placement::HomeNode(5));
+    }
+
+    #[test]
+    fn local_home_stays_on_the_child_first_path() {
+        let s = NumaHome::new(16.0);
+        assert_eq!(s.place(&ctx(3, 1 << 20, Some(3))), Placement::LocalQueue);
+    }
+
+    #[test]
+    fn unresident_hint_stays_local() {
+        let s = NumaHome::new(16.0);
+        assert_eq!(s.place(&ctx(0, 1 << 20, None)), Placement::LocalQueue);
+    }
+
+    #[test]
+    fn tiny_hints_are_ignored() {
+        let s = NumaHome::new(16.0);
+        assert_eq!(s.place(&ctx(0, 256, Some(5))), Placement::LocalQueue, "below the floor");
+        assert_eq!(s.place(&ctx(0, 16 * 1024, Some(5))), Placement::HomeNode(5), "at the floor");
+        let eager = NumaHome::new(0.0);
+        assert_eq!(eager.place(&ctx(0, 256, Some(5))), Placement::HomeNode(5), "floor disabled");
+    }
+
+    #[test]
+    fn descriptor_opts_into_placement() {
+        let d = NumaHome::new(16.0).descriptor();
+        assert!(d.places);
+        assert!(d.child_first);
+        assert_eq!(d.steal_end, StealEnd::Back);
+        assert_eq!(d.min_hint_bytes, 16 * 1024, "the floor is engine-visible");
+        // stock strategies never opt in
+        for &p in Policy::all() {
+            assert!(!stock(p).descriptor().places, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn steals_like_dfwsrpt() {
+        let vl = VictimList { groups: vec![(0, vec![1]), (2, vec![2, 3])] };
+        for seed in 0..8 {
+            let mut rng_a = SplitMix64::new(seed);
+            let mut rng_b = SplitMix64::new(seed);
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            NumaHome::new(16.0).victim_order(&vl, &mut rng_a, &mut a);
+            dfwsrpt::order(&vl, &mut rng_b, &mut b);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn registry_builds_with_defaults_and_overrides() {
+        let s = build(&SchedSpec::new("numa-home")).unwrap();
+        assert_eq!(s.name(), "numa-home");
+        assert_eq!(s.signature(), "numa-home(min_kb=16)");
+        let s = build(&SchedSpec::new("numa-home").with_param("min_kb", 4.0)).unwrap();
+        assert_eq!(s.signature(), "numa-home(min_kb=4)");
+        assert!(build(&SchedSpec::new("numa-home").with_param("min_kb", -1.0)).is_err());
+        assert!(build(&SchedSpec::new("numa-home").with_param("bogus", 1.0)).is_err());
+    }
+
+    #[test]
+    fn default_place_hook_is_local() {
+        // the trait default keeps every non-placing scheduler on today's
+        // path even if the engine were to call it
+        let wf = stock(Policy::WorkFirst);
+        assert_eq!(wf.place(&ctx(0, 1 << 20, Some(7))), Placement::LocalQueue);
+    }
+}

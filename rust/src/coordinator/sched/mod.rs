@@ -15,7 +15,15 @@
 //!   victim visiting order from the per-worker [`VictimList`];
 //! * [`Scheduler::observe`] — an optional feedback hook ([`SchedEvent`]:
 //!   spawns, steals, failed sweeps) that lets adaptive strategies change
-//!   their victim order mid-run.
+//!   their victim order mid-run;
+//! * [`Scheduler::place`] — an optional *task-placement* hook: for
+//!   schedulers whose descriptor sets [`SchedDescriptor::places`], every
+//!   spawn's [`SpawnCtx`] (affinity hint + resolved home node) is offered
+//!   to the strategy, which answers [`Placement::LocalQueue`] (today's
+//!   child-first behaviour) or [`Placement::HomeNode`] (push the child to
+//!   a worker on its data's node; the parent keeps running).  Non-placing
+//!   schedulers never see the hook and stay byte-identical to the
+//!   pre-placement engine.
 //!
 //! | scheduler | queueing | steal end | victim selection |
 //! |---|---|---|---|
@@ -27,6 +35,7 @@
 //! | [`dfwsrpt`] §VI.B | per-worker deque, child-first | back | hop-ordered priority list, random within a distance group |
 //! | [`hops`]  `hops-threshold` | per-worker deque, child-first | back | near groups only (≤ `max_hops`), spill beyond on starvation |
 //! | [`hier`]  two-level | per-worker deque, child-first | back | node-local random first, ~one delegate per node (in expectation) probes remote nodes |
+//! | [`home`]  `numa-home` | per-worker deque, child-first, **push-to-home placement** | back | hop-ordered priority list, random within a distance group |
 //! | [`adaptive`] | per-worker deque, child-first | back | starts uniform random, switches to the priority list when the remote-steal ratio crosses `remote_ratio` |
 //!
 //! ## Adding a scheduler (~30 lines)
@@ -84,6 +93,7 @@ pub mod cilk;
 pub mod dfwsrpt;
 pub mod dfwspt;
 pub mod hier;
+pub mod home;
 pub mod hops;
 pub mod serial;
 pub mod wf;
@@ -93,6 +103,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use anyhow::{bail, Context, Result};
 
 use crate::serde::Json;
+use crate::simnuma::Region;
 use crate::topology::Topology;
 use crate::util::{fmt_f64, SplitMix64};
 
@@ -125,21 +136,66 @@ pub struct SchedDescriptor {
     pub child_first: bool,
     /// Charge no runtime overheads (the serial measurement baseline).
     pub overhead_free: bool,
+    /// Consult [`Scheduler::place`] on every spawn?  When false (the
+    /// stock default) the engine skips placement entirely — no home-node
+    /// query, no hook call — which is what keeps non-placing schedulers
+    /// byte-identical to the pre-placement engine.
+    pub places: bool,
+    /// Smallest affinity hint (bytes) worth resolving: below this the
+    /// engine skips the home-node page-table sample *and* the hook call
+    /// (the spawn stays on the local path).  Placement strategies with a
+    /// hint floor (numa-home's `min_kb`) surface it here so hot spawn
+    /// loops over tiny shared regions — nqueens' board — never pay the
+    /// query they are guaranteed to discard.
+    pub min_hint_bytes: u64,
 }
 
 impl SchedDescriptor {
     /// The work-stealing family default: per-worker deques, child-first,
-    /// back-end steals, full overhead accounting.
+    /// back-end steals, full overhead accounting, no placement hook.
     pub const WORK_STEALING: SchedDescriptor = SchedDescriptor {
         queue: QueueKind::PerWorker,
         steal_end: StealEnd::Back,
         child_first: true,
         overhead_free: false,
+        places: false,
+        min_hint_bytes: 0,
     };
 
     pub fn shared_queue(&self) -> bool {
         self.queue == QueueKind::SharedFifo
     }
+}
+
+/// Where a freshly spawned task should go — the answer a scheduler's
+/// [`Scheduler::place`] hook returns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Today's NANOS behaviour: child-first switch on the spawning worker
+    /// (or the shared FIFO under breadth-first).
+    LocalQueue,
+    /// Push the child onto a worker bound to NUMA node `n` — the
+    /// paper's "smart allocation": run the task where its data lives.
+    /// The parent keeps executing (no child-first switch).
+    HomeNode(usize),
+}
+
+/// Everything a [`Scheduler::place`] decision can see about one spawn.
+/// The engine resolves the affinity hint's home node *before* calling the
+/// hook (and only for schedulers whose descriptor sets
+/// [`SchedDescriptor::places`] — the query costs a page-table sample).
+#[derive(Clone, Copy, Debug)]
+pub struct SpawnCtx {
+    /// Spawning worker (thread id).
+    pub worker: usize,
+    /// NUMA node of the spawning worker's core.
+    pub worker_node: usize,
+    /// The spawn's data-affinity hint ([`Region::EMPTY`] when unhinted).
+    pub affinity: Region,
+    /// Majority owner of the hint's resident pages
+    /// ([`crate::simnuma::MemSim::home_node`]); `None` when unhinted or
+    /// nothing is resident yet.
+    pub home: Option<usize>,
 }
 
 /// Runtime events the engine reports to the scheduler — the feedback
@@ -189,6 +245,17 @@ pub trait Scheduler {
 
     /// Observe a runtime event (default: ignore).
     fn observe(&self, _event: &SchedEvent) {}
+
+    /// Decide where a freshly spawned task goes.  Only called when the
+    /// descriptor sets [`SchedDescriptor::places`]; the default preserves
+    /// today's child-first/local behaviour, so stock schedulers are
+    /// untouched by the placement layer.  Returning
+    /// [`Placement::HomeNode`] pushes the child to a worker on that node
+    /// (the engine resolves nodes without bound workers to the nearest
+    /// one that has some) and the parent keeps running.
+    fn place(&self, _ctx: &SpawnCtx) -> Placement {
+        Placement::LocalQueue
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -341,6 +408,21 @@ fn builtin_entries() -> Vec<Arc<Entry>> {
             |_| Ok(Box::new(hier::Hierarchical)),
         ),
         entry(
+            SchedulerInfo::new("numa-home", "push affinity-tagged tasks to their data's home node")
+                .param(
+                    "min_kb",
+                    home::DEFAULT_MIN_KB,
+                    "ignore affinity hints smaller than this many KiB",
+                ),
+            |p| {
+                let min_kb = p.req("min_kb")?;
+                if min_kb < 0.0 {
+                    bail!("min_kb={min_kb} must be non-negative");
+                }
+                Ok(Box::new(home::NumaHome::new(min_kb)))
+            },
+        ),
+        entry(
             SchedulerInfo::new("adaptive", "work-first until the remote-steal ratio crosses")
                 .param("remote_ratio", 0.5, "remote-steal ratio that triggers the switch")
                 .param("min_steals", 16.0, "steals observed before the ratio is trusted"),
@@ -428,6 +510,42 @@ pub fn build(spec: &SchedSpec) -> Result<Box<dyn Scheduler>> {
     }
     (entry.factory)(&params)
         .with_context(|| format!("building scheduler '{}'", entry.info.name))
+}
+
+/// Expand a parameter grid into concrete [`SchedSpec`]s: the cross
+/// product of every `(param, values)` axis over one scheduler, validated
+/// against its declared [`ParamInfo`]s — the ROADMAP's "tunable-grid
+/// sweep axis" without hand-enumerated manifest cells.
+///
+/// ```
+/// use numanos::coordinator::sched;
+/// let grid = sched::param_grid(
+///     "hops-threshold",
+///     &[("max_hops", &[0.0, 1.0, 2.0, 3.0]), ("spill_after", &[2.0])],
+/// )
+/// .unwrap();
+/// assert_eq!(grid.len(), 4);
+/// assert_eq!(grid[1].name_sig(), "hops-threshold(max_hops=1;spill_after=2)");
+/// ```
+pub fn param_grid(name: &str, axes: &[(&str, &[f64])]) -> Result<Vec<SchedSpec>> {
+    let base = SchedSpec::new(&resolve_name(name)?);
+    let mut specs = vec![base];
+    for (param, values) in axes {
+        if values.is_empty() {
+            bail!("parameter grid axis '{param}' has no values");
+        }
+        let mut next = Vec::with_capacity(specs.len() * values.len());
+        for spec in &specs {
+            for &v in *values {
+                next.push(spec.clone().with_param(param, v));
+            }
+        }
+        specs = next;
+    }
+    for spec in &specs {
+        spec.check()?;
+    }
+    Ok(specs)
 }
 
 /// Build one of the six stock strategies directly (infallible; the shim
@@ -772,7 +890,7 @@ mod tests {
 
     /// Builtin names, fixed (not `scheduler_names()`: other tests may
     /// register extra schedulers concurrently).
-    const BUILTINS: [&str; 9] = [
+    const BUILTINS: [&str; 10] = [
         "serial",
         "bf",
         "cilk",
@@ -781,6 +899,7 @@ mod tests {
         "dfwsrpt",
         "hops-threshold",
         "hier",
+        "numa-home",
         "adaptive",
     ];
 
@@ -884,7 +1003,7 @@ mod tests {
         for stock_name in ["serial", "bf", "cilk", "wf", "dfwspt", "dfwsrpt"] {
             assert!(names.contains(&stock_name.to_string()), "{names:?}");
         }
-        for new_name in ["hops-threshold", "hier", "adaptive"] {
+        for new_name in ["hops-threshold", "hier", "numa-home", "adaptive"] {
             assert!(names.contains(&new_name.to_string()), "{names:?}");
         }
     }
@@ -947,6 +1066,26 @@ mod tests {
         assert_eq!(spec.params, vec![("remote_ratio".to_string(), 0.25)]);
 
         assert!(SchedSpec::from_json(&Json::parse("{\"max_hops\": 1}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn param_grid_expands_the_cross_product() {
+        let grid = param_grid(
+            "hops-threshold",
+            &[("max_hops", &[0.0, 1.0, 2.0, 3.0]), ("spill_after", &[1.0, 2.0])],
+        )
+        .unwrap();
+        assert_eq!(grid.len(), 8);
+        assert_eq!(grid[0].name_sig(), "hops-threshold(max_hops=0;spill_after=1)");
+        assert_eq!(grid[7].name_sig(), "hops-threshold(max_hops=3;spill_after=2)");
+        // aliases canonicalize, single-axis grids work
+        let grid = param_grid("hierarchical", &[]).unwrap();
+        assert_eq!(grid, vec![SchedSpec::new("hier")]);
+        // invalid axes fail loudly
+        assert!(param_grid("bogus", &[]).is_err());
+        assert!(param_grid("hops-threshold", &[("bogus", &[1.0])]).is_err());
+        assert!(param_grid("hops-threshold", &[("max_hops", &[])]).is_err(), "empty axis");
+        assert!(param_grid("hops-threshold", &[("max_hops", &[300.0])]).is_err(), "u8 range");
     }
 
     #[test]

@@ -22,6 +22,8 @@ impl Scheduler for Serial {
             steal_end: StealEnd::Back,
             child_first: true,
             overhead_free: true,
+            places: false,
+            min_hint_bytes: 0,
         }
     }
 

@@ -37,16 +37,19 @@ impl TaskDesc {
 }
 
 /// One step of a task body.  `Copy`: the engine's inner loop copies one
-/// action out of the body per step (16 B, no heap) instead of borrowing
-/// across the arena mutations the action triggers.
+/// action out of the body per step (a few dozen bytes, no heap) instead
+/// of borrowing across the arena mutations the action triggers.
 #[derive(Clone, Copy, Debug)]
 pub enum Action {
     /// Pure ALU work in compute units (1 unit ≈ 1 ns, see `CostModel`).
     Compute(u64),
     /// Memory traffic over a simulated region.
     Touch { region: Region, write: bool },
-    /// Create a child task (placement decided by the scheduler policy).
-    Spawn(TaskDesc),
+    /// Create a child task.  `affinity` is the region the child will
+    /// mostly touch ([`Region::EMPTY`] = no hint); placement-aware
+    /// schedulers may push the child toward that data's home node, the
+    /// rest ignore it entirely.
+    Spawn { desc: TaskDesc, affinity: Region },
     /// Invoke a real AOT kernel (PJRT mode only; tag is workload-defined).
     /// Simulated cost must be modeled by an accompanying `Compute`/`Touch`.
     Kernel(u64),
@@ -104,9 +107,17 @@ impl BodyCtx {
         }
     }
 
-    /// Spawn a child task.
+    /// Spawn a child task with no data-affinity hint.
     pub fn spawn(&mut self, desc: TaskDesc) {
-        self.actions().push(Action::Spawn(desc));
+        self.spawn_on(desc, Region::EMPTY);
+    }
+
+    /// Spawn a child task hinting the region it will mostly touch — the
+    /// OpenMP `affinity(data)` clause analogue.  Purely a hint:
+    /// schedulers without a placement strategy (and hints over unresident
+    /// regions) behave exactly like [`BodyCtx::spawn`].
+    pub fn spawn_on(&mut self, desc: TaskDesc, affinity: Region) {
+        self.actions().push(Action::Spawn { desc, affinity });
     }
 
     /// `#pragma omp taskwait`: subsequent actions form the continuation.
@@ -300,6 +311,28 @@ mod tests {
         assert_eq!(body.pre.len(), 2);
         assert_eq!(body.post.len(), 1);
         assert!(matches!(body.post[0], Action::Compute(7)));
+    }
+
+    #[test]
+    fn spawn_on_records_the_affinity_hint() {
+        let mut ctx = BodyCtx::default();
+        let region = Region { addr: 4096, bytes: 512 };
+        ctx.spawn_on(TaskDesc::leaf(1), region);
+        ctx.spawn(TaskDesc::leaf(2));
+        let body = ctx.finish();
+        match body.pre[0] {
+            Action::Spawn { desc, affinity } => {
+                assert_eq!(desc.kind, 1);
+                assert_eq!(affinity, region);
+            }
+            ref other => panic!("expected a spawn, got {other:?}"),
+        }
+        match body.pre[1] {
+            Action::Spawn { affinity, .. } => {
+                assert_eq!(affinity, Region::EMPTY, "plain spawn carries no hint")
+            }
+            ref other => panic!("expected a spawn, got {other:?}"),
+        }
     }
 
     #[test]

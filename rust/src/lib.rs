@@ -25,7 +25,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`topology`] | NUMA fabric models (X4600 twisted ladder & friends) |
-//! | [`simnuma`]  | memory-system simulator: first-touch pages, caches, NUMA latencies, contention |
+//! | [`simnuma`]  | memory-system simulator: pluggable page placement (first-touch / interleave / bind / next-touch), caches, NUMA latencies, contention |
 //! | [`coordinator`] | the runtime: tasks, pools, binding, priorities, the pluggable scheduler registry, event engine |
 //! | [`bots`]     | the 11 BOTS benchmark task-graph generators |
 //! | [`runtime`]  | PJRT artifact loading + execution (the AOT bridge) |
@@ -71,5 +71,6 @@ pub use config::RunConfig;
 pub use coordinator::binding::BindPolicy;
 pub use coordinator::runtime::Runtime;
 pub use coordinator::sched::{Policy, SchedSpec, Scheduler};
+pub use simnuma::MemSpec;
 pub use spec::{ExperimentManifest, RunRecord, RunSpec, Session, Sweep};
 pub use topology::Topology;

@@ -1,7 +1,7 @@
 //! `numanos` — CLI launcher for the NUMA-aware task-runtime reproduction.
 //!
 //! ```text
-//! numanos list                         # benchmarks / schedulers / bindings / topologies
+//! numanos list                         # benchmarks / schedulers / mem policies / bindings / topologies
 //! numanos topo   --name x4600          # fabric + §IV priorities
 //! numanos run    --bench fft --sched dfwspt --bind numa --threads 16
 //! numanos run    --bench=fft --json    # --flag=value syntax, JSON record
@@ -47,8 +47,8 @@ const COMMANDS: &[(&str, &[&str], &[&str])] = &[
     (
         "run",
         &[
-            "bench", "size", "sched", "policy", "bind", "cores", "threads", "topo", "seed",
-            "compute", "artifacts", "cost", "rtdata",
+            "bench", "size", "sched", "policy", "mem", "bind", "cores", "threads", "topo",
+            "seed", "compute", "artifacts", "cost", "rtdata",
         ],
         &["json"],
     ),
@@ -161,15 +161,19 @@ const HELP: &str = "\
 numanos — NUMA-aware OpenMP task runtime (Tahan 2014 reproduction)
 
 commands:
-  list                      benchmarks, schedulers, bindings, topologies
+  list                      benchmarks, schedulers, mem policies, bindings, topologies
   topo   --name <topo>      fabric, hop matrix, and SS IV core priorities
-  run    --bench <b> [--size s|m|l] [--sched P] [--bind linear|numa]
-         [--cores 0,2,4] [--threads N] [--topo T] [--seed S]
-         [--compute sim|pjrt] [--cost k=v,...] [--json]
+  run    --bench <b> [--size s|m|l] [--sched P] [--mem M]
+         [--bind linear|numa] [--cores 0,2,4] [--threads N] [--topo T]
+         [--seed S] [--compute sim|pjrt] [--cost k=v,...] [--json]
                             single run, prints the stats summary
                             (--sched takes any registered scheduler,
                              parameterized as name:k=v,... e.g.
-                             --sched hops-threshold:max_hops=1)
+                             --sched hops-threshold:max_hops=1;
+                             --mem takes a page policy: first-touch,
+                             interleave, bind:node=N, next-touch
+                             [:max_moves=N] — pair --mem with
+                             --sched numa-home for push-to-home placement)
   figure --id figN | --all  regenerate paper figures (speedup tables)
          [--out dir] [--size s|m|l] [--seed S] [--topo T] [--cost k=v,...]
          [--json]
@@ -181,12 +185,32 @@ commands:
 flags accept both `--key value` and `--key=value`.
 ";
 
-/// The four sweep axes (benchmarks, schedulers, bindings, topologies)
-/// plus the figure inventory — one line each.  The scheduler line comes
-/// from the registry, so registered strategies appear automatically.
+/// The sweep axes (benchmarks, schedulers, page policies, bindings,
+/// topologies) plus the figure inventory — one line each.  The scheduler
+/// line comes from the registry, so registered strategies appear
+/// automatically; the page-policy line shows declared parameters with
+/// their defaults.
 fn cmd_list() -> Result<()> {
     println!("benchmarks : {}", bots::NAMES.join(" "));
     println!("schedulers : {}", sched::scheduler_names().join(" "));
+    // page policies carry their declared parameters, like `topo` shows
+    // the fabric: `bind(node=0)` reads as "parameter node, default 0"
+    let mems: Vec<String> = numanos::simnuma::page_policy_infos()
+        .iter()
+        .map(|info| {
+            if info.params.is_empty() {
+                info.name.to_string()
+            } else {
+                let params: Vec<String> = info
+                    .params
+                    .iter()
+                    .map(|(name, default, _)| format!("{name}={}", numanos::util::fmt_f64(*default)))
+                    .collect();
+                format!("{}({})", info.name, params.join(";"))
+            }
+        })
+        .collect();
+    println!("mem        : {}", mems.join(" "));
     println!("bindings   : linear numa");
     println!("topologies : {}", Topology::preset_names().join(" "));
     println!("figures    : {}", harness::figures().iter().map(|f| f.id).collect::<Vec<_>>().join(" "));
@@ -228,8 +252,8 @@ fn cmd_topo(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let mut builder = RunSpec::builder();
     for key in [
-        "bench", "size", "sched", "policy", "bind", "cores", "threads", "topo", "seed", "compute",
-        "artifacts", "cost", "rtdata",
+        "bench", "size", "sched", "policy", "mem", "bind", "cores", "threads", "topo", "seed",
+        "compute", "artifacts", "cost", "rtdata",
     ] {
         if let Some(v) = flags.get(key) {
             builder.set(key, v)?;

@@ -29,6 +29,14 @@ pub struct RunStats {
     pub steals: u64,
     pub steal_attempts: u64,
     pub mean_steal_hops: f64,
+    /// Spawns a placement-aware scheduler pushed to a remote home-node
+    /// pool instead of the local child-first switch (0 for stock
+    /// schedulers).
+    pub pushed_home: u64,
+    /// Affinity-hinted spawns (at or above the scheduler's declared hint
+    /// floor) whose data was already home on the spawner's node — the
+    /// locality fast path (0 for stock schedulers).
+    pub affinity_hits: u64,
     /// Total simulated time spent waiting on pool locks (contention).
     pub lock_wait_total: Time,
     pub shared_lock_wait: Time,
@@ -105,6 +113,8 @@ mod tests {
             steals: 3,
             steal_attempts: 5,
             mean_steal_hops: 1.0,
+            pushed_home: 0,
+            affinity_hits: 0,
             lock_wait_total: 0,
             shared_lock_wait: 0,
             shared_ops: 0,

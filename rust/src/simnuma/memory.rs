@@ -8,6 +8,7 @@
 use crate::simnuma::cache::{CacheHit, CoreCache};
 use crate::simnuma::latency::CostModel;
 use crate::simnuma::page::{PageTable, PAGE_BYTES};
+use crate::simnuma::policy::PagePolicy;
 use crate::topology::Topology;
 use crate::util::Time;
 
@@ -21,12 +22,19 @@ pub struct Region {
 impl Region {
     pub const EMPTY: Region = Region { addr: 0, bytes: 0 };
 
-    /// Sub-range `[offset, offset+len)` of this region.
+    /// Sub-range `[offset, offset+len)` of this region.  Bounds-checked in
+    /// every profile with overflow-safe arithmetic: `offset + len` could
+    /// wrap in release and silently build an out-of-range region that
+    /// aliases someone else's allocation.
     pub fn slice(&self, offset: u64, len: u64) -> Region {
-        debug_assert!(offset + len <= self.bytes, "slice out of bounds");
+        let end = offset.checked_add(len).expect("slice bounds overflow u64");
+        assert!(
+            end <= self.bytes,
+            "slice [{offset}, {end}) out of bounds for a {}-byte region",
+            self.bytes
+        );
         Region { addr: self.addr + offset, bytes: len }
     }
-
 }
 
 /// Aggregate memory-system statistics for one run.
@@ -36,6 +44,10 @@ pub struct MemStats {
     pub l2_hit_lines: u64,
     pub miss_lines_by_hop: [u64; 9],
     pub first_touch_pages: u64,
+    /// Pages moved by the `next-touch` policy (0 under other policies).
+    pub migrated_pages: u64,
+    /// Simulated time spent copying pages across nodes (`next-touch`).
+    pub migration_stall: Time,
     pub contention_stall: Time,
     pub bytes_touched: u64,
 }
@@ -123,14 +135,20 @@ pub struct MemSim {
 }
 
 impl MemSim {
+    /// First-touch memory system (the pre-policy default).
     pub fn new(topo: Topology, cost: CostModel) -> Self {
+        Self::with_policy(topo, cost, PagePolicy::FirstTouch)
+    }
+
+    /// Memory system placing pages under `policy`.
+    pub fn with_policy(topo: Topology, cost: CostModel, policy: PagePolicy) -> Self {
         let nodes = topo.num_nodes();
         let cores = topo.num_cores();
         let caches = (0..cores)
             .map(|_| CoreCache::new(cost.l1_pages, cost.l2_pages))
             .collect();
         Self {
-            pages: PageTable::new(nodes, topo.node_capacity_pages()),
+            pages: PageTable::with_policy(nodes, topo.node_capacity_pages(), policy),
             caches,
             node_load: vec![NodeLoad::default(); nodes],
             stats: MemStats::default(),
@@ -167,9 +185,22 @@ impl MemSim {
             addr += take;
             let lines = take.div_ceil(self.cost.line_bytes);
 
-            let (mut info, fresh) = self.pages.resolve(page, local_node, &self.topo);
-            if fresh {
+            let (mut info, outcome) = self.pages.resolve(page, local_node, &self.topo);
+            if outcome.fresh {
                 self.stats.first_touch_pages += 1;
+            }
+            if let Some(from) = outcome.migrated_from {
+                // next-touch migration: charge a full page copy from the
+                // old owner to the new one (kernel move_pages()-style).
+                let hops = self.topo.node_hops(from as usize, info.node as usize) as Time;
+                let lines = PAGE_BYTES.div_ceil(self.cost.line_bytes);
+                let copy = self.cost.dram_base
+                    + hops * self.cost.hop_penalty
+                    + lines * self.cost.service_per_line(hops as u8);
+                cost += copy;
+                self.stats.migration_stall += copy;
+                // mirror the page table's count (single source of truth)
+                self.stats.migrated_pages = self.pages.migrated_pages();
             }
             let hit = self.caches[core].access(page, info.version);
             match hit {
@@ -229,6 +260,51 @@ impl MemSim {
     /// Owning node of an address, if resident.
     pub fn node_of_addr(&self, addr: u64) -> Option<usize> {
         self.pages.lookup(addr / PAGE_BYTES).map(|i| i.node as usize)
+    }
+
+    /// The page policy this simulator places under.
+    pub fn page_policy(&self) -> PagePolicy {
+        self.pages.policy()
+    }
+
+    /// Maximum pages sampled by [`MemSim::home_node`]: placement is a
+    /// per-spawn decision, so the query must stay O(1)-ish even for
+    /// multi-megabyte regions.  A strided sample of 64 pages decides the
+    /// majority owner deterministically.
+    const HOME_SAMPLE_PAGES: u64 = 64;
+
+    /// Majority owner of `region`'s *resident* pages — the "home node"
+    /// placement decisions target.  Ties break to the lower node id
+    /// (deterministic); `None` when the region is empty or no sampled
+    /// page is resident yet (nothing to be near).
+    pub fn home_node(&self, region: Region) -> Option<usize> {
+        if region.bytes == 0 {
+            return None;
+        }
+        let first = region.addr / PAGE_BYTES;
+        let last = (region.addr + region.bytes - 1) / PAGE_BYTES;
+        let pages = last - first + 1;
+        let stride = pages.div_ceil(Self::HOME_SAMPLE_PAGES).max(1);
+        let mut counts = vec![0u32; self.topo.num_nodes()];
+        let mut any = false;
+        let mut page = first;
+        while page <= last {
+            if let Some(info) = self.pages.lookup(page) {
+                counts[info.node as usize] += 1;
+                any = true;
+            }
+            page += stride;
+        }
+        if !any {
+            return None;
+        }
+        let mut best = 0;
+        for (node, &c) in counts.iter().enumerate() {
+            if c > counts[best] {
+                best = node;
+            }
+        }
+        Some(best)
     }
 }
 
@@ -324,6 +400,103 @@ mod tests {
     fn empty_region_free() {
         let mut m = sim();
         assert_eq!(m.access(0, Region::EMPTY, true, 0), 0);
+    }
+
+    #[test]
+    fn slice_bounds_checked_in_all_profiles() {
+        let r = Region { addr: 4096, bytes: 100 };
+        let s = r.slice(10, 20);
+        assert_eq!(s.addr, 4106);
+        assert_eq!(s.bytes, 20);
+        assert!(std::panic::catch_unwind(|| r.slice(90, 20)).is_err(), "past the end");
+        // offset + len wraps u64: must panic, not silently alias addr space
+        assert!(std::panic::catch_unwind(|| r.slice(u64::MAX, 2)).is_err(), "overflow");
+    }
+
+    #[test]
+    fn interleave_spreads_a_master_touched_region() {
+        let mut m = MemSim::with_policy(
+            Topology::x4600(),
+            CostModel::default(),
+            PagePolicy::Interleave,
+        );
+        let r = m.alloc(64 * PAGE_BYTES);
+        m.first_touch(0, r, 0); // master on node 0 touches everything
+        let used = m.node_used();
+        assert!(used.iter().all(|&u| u == 8), "even spread, got {used:?}");
+    }
+
+    #[test]
+    fn bind_keeps_residency_on_the_named_node() {
+        let mut m =
+            MemSim::with_policy(Topology::x4600(), CostModel::default(), PagePolicy::Bind(6));
+        let r = m.alloc(16 * PAGE_BYTES);
+        m.first_touch(3, r, 0); // toucher's node is irrelevant under bind
+        assert_eq!(m.node_used()[6], 16);
+        assert_eq!(m.home_node(r), Some(6));
+    }
+
+    #[test]
+    fn next_touch_migration_costs_time_and_counts() {
+        let mut m = MemSim::with_policy(
+            Topology::x4600(),
+            CostModel::default(),
+            PagePolicy::NextTouch { max_moves: 1 },
+        );
+        let r = m.alloc(PAGE_BYTES);
+        m.first_touch(0, r, 0); // placed on node 0
+        // same remote access under plain first-touch, for comparison
+        let mut base = sim();
+        let rb = base.alloc(PAGE_BYTES);
+        base.first_touch(0, rb, 0);
+        let plain = base.access(15, rb, false, 0);
+        let migrating = m.access(15, r, false, 0); // node 7 re-touch migrates
+        assert_eq!(m.stats().migrated_pages, 1);
+        assert!(m.stats().migration_stall > 0);
+        assert_eq!(m.node_of_addr(r.addr), Some(7), "page followed the toucher");
+        assert!(
+            migrating > plain,
+            "migration {migrating} must cost more than the plain remote access {plain}"
+        );
+        // after the move, node-7 accesses are local (cold-cache core 14
+        // shares node 7 with core 15)
+        let after = m.access(14, r, false, 0);
+        assert!(after < migrating, "local re-access {after} vs migrating {migrating}");
+        assert_eq!(m.stats().migrated_pages, 1, "budget of 1 spent");
+    }
+
+    #[test]
+    fn home_node_majority_and_ties() {
+        let mut m = sim();
+        let r = m.alloc(4 * PAGE_BYTES);
+        // core 0 = node 0, core 2 = node 1: 3 pages on node 0, 1 on node 1
+        m.first_touch(0, r.slice(0, 3 * PAGE_BYTES), 0);
+        m.first_touch(2, r.slice(3 * PAGE_BYTES, PAGE_BYTES), 0);
+        assert_eq!(m.home_node(r), Some(0));
+        // 2-2 tie: lower node id wins, deterministically
+        let t = m.alloc(4 * PAGE_BYTES);
+        m.first_touch(2, t.slice(0, 2 * PAGE_BYTES), 0); // node 1
+        m.first_touch(0, t.slice(2 * PAGE_BYTES, 2 * PAGE_BYTES), 0); // node 0
+        assert_eq!(m.home_node(t), Some(0), "tie breaks to the lower node id");
+    }
+
+    #[test]
+    fn home_node_unresident_and_empty() {
+        let mut m = sim();
+        assert_eq!(m.home_node(Region::EMPTY), None);
+        let r = m.alloc(8 * PAGE_BYTES);
+        assert_eq!(m.home_node(r), None, "no page resident yet");
+        m.first_touch(4, r, 0); // core 4 = node 2
+        assert_eq!(m.home_node(r), Some(2));
+    }
+
+    #[test]
+    fn home_node_samples_large_regions() {
+        let mut m = sim();
+        let r = m.alloc(1024 * PAGE_BYTES);
+        m.first_touch(6, r, 0); // core 6 = node 3 (with capacity spill)
+        // sampling must still find the majority without walking every page
+        assert_eq!(m.home_node(r), Some(3));
     }
 
     #[test]

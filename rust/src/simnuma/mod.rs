@@ -9,18 +9,25 @@
 //! discrete-event engine can reproduce the paper's speedup curves.
 //!
 //! Submodules:
-//! * [`page`]   — page table with **first-touch** placement and nearest-node
-//!   spill (the Linux policy the paper's §V.B analysis leans on);
+//! * [`policy`] — pluggable [`PagePolicy`] (`first-touch` / `interleave` /
+//!   `bind` / `next-touch`) and the serializable [`MemSpec`] selection the
+//!   experiment surface sweeps;
+//! * [`page`]   — page table executing the policy, with nearest-node
+//!   capacity spill (the Linux rule the paper's §V.B analysis leans on);
 //! * [`cache`]  — per-core two-level cache model (page-granular tags with
 //!   version-based coherence);
 //! * [`latency`]— the [`CostModel`]: NUMA factors, bandwidth, contention;
-//! * [`memory`] — the [`MemSim`] façade the engine calls.
+//! * [`memory`] — the [`MemSim`] façade the engine calls, including the
+//!   [`MemSim::home_node`] majority-owner query that placement decisions
+//!   (the scheduler `place()` hook) consult.
 
 pub mod cache;
 pub mod latency;
 pub mod memory;
 pub mod page;
+pub mod policy;
 
 pub use latency::CostModel;
 pub use memory::{MemSim, MemStats, Region};
 pub use page::{PageTable, PAGE_BYTES};
+pub use policy::{page_policy_infos, page_policy_names, MemSpec, PagePolicy};

@@ -1,13 +1,22 @@
-//! Page table with first-touch NUMA placement.
+//! Page table with pluggable NUMA placement.
 //!
-//! Models the policy the paper describes in §V.B: physical allocation is
-//! deferred until the first read/write; the page then lands on the local
-//! node of the touching CPU, falling back to the *closest* node with free
-//! capacity when the local node is full (`set_mempolicy(2)` default
-//! behaviour).  This is exactly why the paper's master-thread placement
-//! matters — the master first-touches the program's data during
+//! Models the policies the paper's allocation side turns on: physical
+//! allocation is deferred until the first read/write; where the page then
+//! lands is the [`PagePolicy`]'s decision.  The default, first-touch,
+//! places it on the local node of the touching CPU (`set_mempolicy(2)`
+//! default behaviour) — which is exactly why the paper's master-thread
+//! placement matters: the master first-touches the program's data during
 //! initialization, so its node choice decides everyone's access distances.
+//! `interleave`/`bind` reproduce the `numactl` overrides, and `next-touch`
+//! adds the migrate-on-remote-re-touch behaviour of Wittmann & Hager
+//! (arXiv:1101.0093).
+//!
+//! Every policy shares one spill rule: when the preferred node is full,
+//! the page falls back to the *closest* node (by hop distance, ties to
+//! lower id — deterministic) with free capacity; when everything is full,
+//! placement over-commits on the preferred node (real kernels would swap).
 
+use crate::simnuma::policy::PagePolicy;
 use crate::topology::Topology;
 
 /// Page size in bytes (x86-64 default).
@@ -16,13 +25,29 @@ pub const PAGE_BYTES: u64 = 4096;
 /// Placement + coherence info for one resident page.
 #[derive(Clone, Copy, Debug)]
 pub struct PageInfo {
-    /// Owning NUMA node (fixed at first touch).
+    /// Owning NUMA node (fixed at first touch, unless `next-touch`
+    /// migrates it).
     pub node: u32,
     /// Bumped on every write; caches holding an older version are stale.
     pub version: u32,
+    /// Migrations performed so far (`next-touch` budget accounting).
+    pub moves: u32,
 }
 
-/// First-touch page table over the simulated physical memory.
+/// What one [`PageTable::resolve`] call did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TouchOutcome {
+    /// The page was placed by this touch.
+    pub fresh: bool,
+    /// `next-touch` migrated the page here; carries the previous owner.
+    pub migrated_from: Option<u32>,
+}
+
+impl TouchOutcome {
+    const NONE: TouchOutcome = TouchOutcome { fresh: false, migrated_from: None };
+}
+
+/// Policy-driven page table over the simulated physical memory.
 ///
 /// Page ids come from [`super::MemSim`]'s bump allocator, so they are
 /// dense — a flat `Vec` beats a hash map on the access hot path
@@ -30,16 +55,25 @@ pub struct PageInfo {
 #[derive(Debug)]
 pub struct PageTable {
     map: Vec<Option<PageInfo>>,
+    policy: PagePolicy,
     resident: usize,
+    migrated: u64,
     node_used: Vec<u64>,
     capacity_per_node: u64,
 }
 
 impl PageTable {
+    /// First-touch table (the pre-policy default).
     pub fn new(nodes: usize, capacity_per_node: u64) -> Self {
+        Self::with_policy(nodes, capacity_per_node, PagePolicy::FirstTouch)
+    }
+
+    pub fn with_policy(nodes: usize, capacity_per_node: u64, policy: PagePolicy) -> Self {
         Self {
             map: Vec::new(),
+            policy,
             resident: 0,
+            migrated: 0,
             node_used: vec![0; nodes],
             capacity_per_node,
         }
@@ -56,38 +90,67 @@ impl PageTable {
 
     /// Resolve `page` for an access by a core on `local_node`.
     ///
-    /// Returns `(info, first_touch)`.  On first touch the page is placed on
-    /// `local_node` if it has room, otherwise on the nearest node (by hop
-    /// distance, ties to lower id — deterministic) with free capacity; if
-    /// everything is full, placement falls back to `local_node` regardless
-    /// (real kernels would swap; the simulator just over-commits).
+    /// Returns `(info, outcome)`.  On first touch the page is placed on
+    /// the policy's preferred node (spilling to the nearest node with
+    /// free capacity); under `next-touch`, a later access from a node
+    /// other than the owner migrates the page toward the toucher while
+    /// the page's move budget lasts.
     pub fn resolve(
         &mut self,
         page: u64,
         local_node: usize,
         topo: &Topology,
-    ) -> (PageInfo, bool) {
+    ) -> (PageInfo, TouchOutcome) {
         if let Some(info) = *self.slot(page) {
-            return (info, false);
+            if let PagePolicy::NextTouch { max_moves } = self.policy {
+                let from = info.node as usize;
+                if from != local_node && info.moves < max_moves {
+                    let target = self.place_from(local_node, topo);
+                    if target != from {
+                        self.node_used[from] -= 1;
+                        self.node_used[target] += 1;
+                        self.migrated += 1;
+                        let moved = PageInfo {
+                            node: target as u32,
+                            version: info.version,
+                            moves: info.moves + 1,
+                        };
+                        *self.slot(page) = Some(moved);
+                        return (
+                            moved,
+                            TouchOutcome { fresh: false, migrated_from: Some(info.node) },
+                        );
+                    }
+                }
+            }
+            return (info, TouchOutcome::NONE);
         }
-        let node = self.place(local_node, topo);
-        let info = PageInfo { node: node as u32, version: 0 };
+        let preferred = match self.policy {
+            PagePolicy::FirstTouch | PagePolicy::NextTouch { .. } => local_node,
+            PagePolicy::Interleave => (page % self.node_used.len() as u64) as usize,
+            PagePolicy::Bind(node) => node,
+        };
+        let node = self.place_from(preferred, topo);
+        let info = PageInfo { node: node as u32, version: 0, moves: 0 };
         *self.slot(page) = Some(info);
         self.resident += 1;
         self.node_used[node] += 1;
-        (info, true)
+        (info, TouchOutcome { fresh: true, migrated_from: None })
     }
 
-    fn place(&self, local_node: usize, topo: &Topology) -> usize {
-        if self.node_used[local_node] < self.capacity_per_node {
-            return local_node;
+    /// `preferred` if it has room, else the nearest node (by hop
+    /// distance, ties to lower id) with free capacity, else `preferred`
+    /// regardless (over-commit).
+    fn place_from(&self, preferred: usize, topo: &Topology) -> usize {
+        if self.node_used[preferred] < self.capacity_per_node {
+            return preferred;
         }
-        for node in topo.nodes_by_distance(local_node) {
+        for node in topo.nodes_by_distance(preferred) {
             if self.node_used[node] < self.capacity_per_node {
                 return node;
             }
         }
-        local_node // over-commit
+        preferred // over-commit
     }
 
     /// Record a write: bump the page version (invalidates remote copies).
@@ -110,6 +173,15 @@ impl PageTable {
     pub fn resident_pages(&self) -> usize {
         self.resident
     }
+
+    /// Total `next-touch` migrations performed.
+    pub fn migrated_pages(&self) -> u64 {
+        self.migrated
+    }
+
+    pub fn policy(&self) -> PagePolicy {
+        self.policy
+    }
 }
 
 #[cfg(test)]
@@ -124,12 +196,13 @@ mod tests {
     fn first_touch_lands_local() {
         let t = topo();
         let mut pt = PageTable::new(8, 100);
-        let (info, fresh) = pt.resolve(42, 3, &t);
-        assert!(fresh);
+        let (info, out) = pt.resolve(42, 3, &t);
+        assert!(out.fresh);
         assert_eq!(info.node, 3);
-        let (again, fresh2) = pt.resolve(42, 5, &t);
-        assert!(!fresh2, "second touch must not re-place");
+        let (again, out2) = pt.resolve(42, 5, &t);
+        assert!(!out2.fresh, "second touch must not re-place");
         assert_eq!(again.node, 3, "placement is sticky");
+        assert_eq!(out2.migrated_from, None, "first-touch never migrates");
     }
 
     #[test]
@@ -174,5 +247,99 @@ mod tests {
         }
         assert_eq!(pt.node_used()[2], 5);
         assert_eq!(pt.resident_pages(), 5);
+    }
+
+    #[test]
+    fn interleave_round_robins_by_page_id() {
+        let t = topo();
+        let mut pt = PageTable::with_policy(8, 100, PagePolicy::Interleave);
+        for p in 0..32u64 {
+            let (info, out) = pt.resolve(p, 0, &t);
+            assert!(out.fresh);
+            assert_eq!(info.node as u64, p % 8, "page {p} on node page%8");
+        }
+        // every node holds exactly its share, regardless of the toucher
+        assert!(pt.node_used().iter().all(|&u| u == 4), "{:?}", pt.node_used());
+    }
+
+    #[test]
+    fn interleave_spills_near_the_preferred_node() {
+        let t = topo();
+        let mut pt = PageTable::with_policy(8, 1, PagePolicy::Interleave);
+        pt.resolve(0, 3, &t); // node 0 now full
+        let (info, _) = pt.resolve(8, 3, &t); // prefers node 0 again
+        assert_ne!(info.node, 0);
+        assert_eq!(t.node_hops(0, info.node as usize), 1, "spill stays near node 0");
+    }
+
+    #[test]
+    fn bind_pins_every_page() {
+        let t = topo();
+        let mut pt = PageTable::with_policy(8, 100, PagePolicy::Bind(5));
+        for p in 0..16u64 {
+            let (info, _) = pt.resolve(p, (p % 8) as usize, &t);
+            assert_eq!(info.node, 5);
+        }
+        assert_eq!(pt.node_used()[5], 16);
+    }
+
+    #[test]
+    fn next_touch_migrates_on_remote_retouch() {
+        let t = topo();
+        let mut pt = PageTable::with_policy(8, 100, PagePolicy::NextTouch { max_moves: 1 });
+        let (info, out) = pt.resolve(7, 0, &t);
+        assert!(out.fresh);
+        assert_eq!(info.node, 0);
+        // local re-touch does not move the page
+        let (_, out) = pt.resolve(7, 0, &t);
+        assert_eq!(out.migrated_from, None);
+        // remote re-touch migrates to the toucher
+        let (info, out) = pt.resolve(7, 4, &t);
+        assert_eq!(out.migrated_from, Some(0));
+        assert_eq!(info.node, 4);
+        assert_eq!(info.moves, 1);
+        assert_eq!(pt.node_used()[0], 0);
+        assert_eq!(pt.node_used()[4], 1);
+        assert_eq!(pt.migrated_pages(), 1);
+        // budget exhausted: a further remote touch stays put
+        let (info, out) = pt.resolve(7, 2, &t);
+        assert_eq!(out.migrated_from, None);
+        assert_eq!(info.node, 4);
+        assert_eq!(pt.migrated_pages(), 1);
+    }
+
+    #[test]
+    fn next_touch_budget_of_two_allows_two_moves() {
+        let t = topo();
+        let mut pt = PageTable::with_policy(8, 100, PagePolicy::NextTouch { max_moves: 2 });
+        pt.resolve(1, 0, &t);
+        pt.resolve(1, 3, &t);
+        pt.resolve(1, 6, &t);
+        assert_eq!(pt.lookup(1).unwrap().node, 6);
+        assert_eq!(pt.migrated_pages(), 2);
+        pt.resolve(1, 0, &t);
+        assert_eq!(pt.lookup(1).unwrap().node, 6, "budget spent");
+    }
+
+    #[test]
+    fn next_touch_zero_budget_is_first_touch() {
+        let t = topo();
+        let mut pt = PageTable::with_policy(8, 100, PagePolicy::NextTouch { max_moves: 0 });
+        pt.resolve(1, 2, &t);
+        pt.resolve(1, 5, &t);
+        assert_eq!(pt.lookup(1).unwrap().node, 2);
+        assert_eq!(pt.migrated_pages(), 0);
+    }
+
+    #[test]
+    fn next_touch_migration_preserves_version() {
+        let t = topo();
+        let mut pt = PageTable::with_policy(8, 100, PagePolicy::NextTouch { max_moves: 1 });
+        pt.resolve(3, 0, &t);
+        pt.bump_version(3);
+        pt.bump_version(3);
+        let (info, out) = pt.resolve(3, 7, &t);
+        assert_eq!(out.migrated_from, Some(0));
+        assert_eq!(info.version, 2, "coherence state survives the move");
     }
 }

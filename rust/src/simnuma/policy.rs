@@ -1,0 +1,357 @@
+//! Page-placement policies — the allocation side of the paper's technique.
+//!
+//! First-touch used to be hard-coded inside [`super::page::PageTable`];
+//! this module opens it into a [`PagePolicy`] the whole experiment surface
+//! can select and sweep.  Wittmann & Hager (arXiv:1101.0093) show the
+//! choice of first-touch vs. next-touch page policy — and task-to-data
+//! affinity built on top of it — dominates ccNUMA task throughput, so the
+//! policy is a first-class [`RunSpec`](crate::spec::RunSpec) axis exactly
+//! like the scheduler:
+//!
+//! | policy | placement of a fresh page | extra behaviour |
+//! |---|---|---|
+//! | `first-touch` | node of the first touching core (Linux default) | — |
+//! | `interleave`  | round-robin by page id over all nodes | — |
+//! | `bind`        | one fixed node (`node` parameter) | — |
+//! | `next-touch`  | like first-touch | a *remote* re-touch migrates the page to the toucher's node (at most `max_moves` times per page) |
+//!
+//! Every policy falls back to the nearest node with free capacity when its
+//! preferred node is full (the same spill rule first-touch always had), so
+//! capacity behaviour stays comparable across policies.
+//!
+//! [`MemSpec`] is the serializable selection (CLI `--mem next-touch:max_moves=2`,
+//! manifest `"mem": {"name": "bind", "node": 3}`), mirroring
+//! [`SchedSpec`](crate::coordinator::sched::SchedSpec) so placement ×
+//! scheduler × topology sweeps are plain data.
+
+use anyhow::{bail, Context, Result};
+
+use crate::serde::Json;
+use crate::util::fmt_f64;
+
+/// A resolved page-placement policy (what [`super::PageTable`] executes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PagePolicy {
+    /// Fresh pages land on the touching core's node (Linux default).
+    #[default]
+    FirstTouch,
+    /// Fresh pages round-robin over nodes by page id (`numactl -i all`).
+    Interleave,
+    /// Fresh pages all land on one node (`numactl -m <node>`).
+    Bind(usize),
+    /// First-touch placement, but a remote re-touch migrates the page to
+    /// the toucher's node, at most `max_moves` times per page.
+    NextTouch { max_moves: u32 },
+}
+
+/// One declared policy parameter: (name, default, one-line doc).
+pub type MemParam = (&'static str, f64, &'static str);
+
+/// Registration-style metadata for one page policy (the `numanos list`
+/// and error-message surface; the set is closed, unlike the scheduler
+/// registry — policies need page-table support, not just a trait impl).
+#[derive(Clone, Copy, Debug)]
+pub struct PagePolicyInfo {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub summary: &'static str,
+    pub params: &'static [MemParam],
+}
+
+/// Every supported policy with its declared parameters.
+pub fn page_policy_infos() -> &'static [PagePolicyInfo] {
+    &[
+        PagePolicyInfo {
+            name: "first-touch",
+            aliases: &["ft"],
+            summary: "pages land on the first toucher's node (Linux default)",
+            params: &[],
+        },
+        PagePolicyInfo {
+            name: "interleave",
+            aliases: &["il"],
+            summary: "pages round-robin over nodes by page id",
+            params: &[],
+        },
+        PagePolicyInfo {
+            name: "bind",
+            aliases: &[],
+            summary: "all pages on one fixed node",
+            params: &[("node", 0.0, "NUMA node the pages bind to")],
+        },
+        PagePolicyInfo {
+            name: "next-touch",
+            aliases: &["nt"],
+            summary: "first-touch + migrate on remote re-touch",
+            params: &[("max_moves", 1.0, "migration budget per page")],
+        },
+    ]
+}
+
+/// Canonical policy names, in table order.
+pub fn page_policy_names() -> Vec<&'static str> {
+    page_policy_infos().iter().map(|i| i.name).collect()
+}
+
+fn find_info(name: &str) -> Result<&'static PagePolicyInfo> {
+    for info in page_policy_infos() {
+        if info.name == name || info.aliases.contains(&name) {
+            return Ok(info);
+        }
+    }
+    bail!(
+        "unknown page policy '{name}' (available: {})",
+        page_policy_names().join("|")
+    )
+}
+
+/// A page-policy selection as data: canonical name plus parameter
+/// overrides (kept sorted by key so equal selections compare equal) —
+/// the memory-side sibling of [`SchedSpec`](crate::coordinator::sched::SchedSpec).
+/// `RunSpec`, sweeps, manifests and the CLI carry this; [`MemSpec::build`]
+/// turns it into a live [`PagePolicy`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemSpec {
+    pub name: String,
+    pub params: Vec<(String, f64)>,
+}
+
+impl Default for MemSpec {
+    /// The pre-refactor behaviour: plain first-touch.
+    fn default() -> Self {
+        Self::new("first-touch")
+    }
+}
+
+impl MemSpec {
+    /// By policy name, no overrides (not validated until [`MemSpec::check`]
+    /// / `RunSpec::validate`).
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), params: Vec::new() }
+    }
+
+    /// Add/replace one parameter override (kept sorted by key).
+    pub fn with_param(mut self, key: &str, value: f64) -> Self {
+        self.set_param(key, value);
+        self
+    }
+
+    pub fn set_param(&mut self, key: &str, value: f64) {
+        match self.params.binary_search_by(|(k, _)| k.as_str().cmp(key)) {
+            Ok(i) => self.params[i].1 = value,
+            Err(i) => self.params.insert(i, (key.to_string(), value)),
+        }
+    }
+
+    fn param(&self, key: &str, default: f64) -> f64 {
+        self.params.iter().find(|(k, _)| k == key).map(|(_, v)| *v).unwrap_or(default)
+    }
+
+    /// The default (first-touch, no overrides) selection?
+    pub fn is_default(&self) -> bool {
+        self.name == "first-touch" && self.params.is_empty()
+    }
+
+    /// Parse the CLI form: `name` or `name:key=value,key=value` — same
+    /// grammar as `--sched`.  Aliases canonicalize; parameters validate
+    /// eagerly.
+    pub fn parse(text: &str) -> Result<Self> {
+        let (name, params_text) = match text.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (text.trim(), None),
+        };
+        let mut spec = Self::new(find_info(name)?.name);
+        if let Some(pairs) = params_text {
+            for pair in pairs.split(',').filter(|s| !s.trim().is_empty()) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .with_context(|| format!("bad page-policy parameter '{pair}' (want k=v)"))?;
+                let v: f64 = v
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad page-policy parameter value in '{pair}'"))?;
+                spec.set_param(k.trim(), v);
+            }
+        }
+        spec.check()?;
+        Ok(spec)
+    }
+
+    /// Validate name + parameters against the policy table (node ranges
+    /// are checked later against the topology by [`MemSpec::build`]).
+    pub fn check(&self) -> Result<()> {
+        let info = find_info(&self.name)?;
+        for (key, _) in &self.params {
+            if !info.params.iter().any(|(name, _, _)| name == key) {
+                let allowed: Vec<&str> = info.params.iter().map(|(n, _, _)| *n).collect();
+                bail!(
+                    "page policy '{}' has no parameter '{key}' ({})",
+                    info.name,
+                    if allowed.is_empty() {
+                        "it takes none".to_string()
+                    } else {
+                        format!("parameters: {}", allowed.join(" "))
+                    }
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve into a [`PagePolicy`] for a machine with `nodes` NUMA
+    /// nodes (validates node-indexed parameters against the topology).
+    pub fn build(&self, nodes: usize) -> Result<PagePolicy> {
+        self.check()?;
+        Ok(match find_info(&self.name)?.name {
+            "first-touch" => PagePolicy::FirstTouch,
+            "interleave" => PagePolicy::Interleave,
+            "bind" => {
+                let node = self.param("node", 0.0);
+                if node < 0.0 || node.fract() != 0.0 {
+                    bail!("bind node must be a non-negative integer, got {node}");
+                }
+                let node = node as usize;
+                if node >= nodes {
+                    bail!("bind node {node} out of range for a {nodes}-node topology");
+                }
+                PagePolicy::Bind(node)
+            }
+            "next-touch" => {
+                let moves = self.param("max_moves", 1.0);
+                if moves < 0.0 || moves.fract() != 0.0 || moves > u32::MAX as f64 {
+                    bail!("max_moves must be a non-negative integer, got {moves}");
+                }
+                PagePolicy::NextTouch { max_moves: moves as u32 }
+            }
+            other => unreachable!("unhandled page policy '{other}'"),
+        })
+    }
+
+    /// Canonical signature for describe lines and CSV cells: `name` or
+    /// `name(k=v;k=v)` (no commas — CSV-safe).
+    pub fn name_sig(&self) -> String {
+        if self.params.is_empty() {
+            return self.name.clone();
+        }
+        let parts: Vec<String> =
+            self.params.iter().map(|(k, v)| format!("{k}={}", fmt_f64(*v))).collect();
+        format!("{}({})", self.name, parts.join(";"))
+    }
+
+    /// JSON form: a bare string without parameters, else
+    /// `{"name": …, "<param>": <value>, …}` — same shape as `sched`.
+    pub fn to_json(&self) -> Json {
+        if self.params.is_empty() {
+            return Json::from(self.name.as_str());
+        }
+        let pairs = std::iter::once(("name".to_string(), Json::from(self.name.as_str())))
+            .chain(self.params.iter().map(|(k, v)| (k.clone(), Json::from(*v))));
+        Json::obj(pairs)
+    }
+
+    /// Accept both JSON forms (string name / object with parameters).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        match j {
+            Json::Str(s) => Self::parse(s),
+            _ => {
+                let obj = j
+                    .as_obj()
+                    .context("mem must be a page-policy name or {\"name\": …, params…}")?;
+                let name = obj
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("parameterized mem needs a string 'name'")?;
+                let mut spec = Self::new(find_info(name)?.name);
+                for (key, val) in obj {
+                    if key == "name" {
+                        continue;
+                    }
+                    let v = val
+                        .as_num()
+                        .with_context(|| format!("mem parameter '{key}' must be a number"))?;
+                    spec.set_param(key, v);
+                }
+                spec.check()?;
+                Ok(spec)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_first_touch() {
+        let spec = MemSpec::default();
+        assert!(spec.is_default());
+        assert_eq!(spec.build(8).unwrap(), PagePolicy::FirstTouch);
+        assert_eq!(spec.name_sig(), "first-touch");
+    }
+
+    #[test]
+    fn parse_forms_and_aliases() {
+        assert_eq!(MemSpec::parse("ft").unwrap().name, "first-touch");
+        assert_eq!(MemSpec::parse("il").unwrap().name, "interleave");
+        assert_eq!(MemSpec::parse("nt").unwrap().name, "next-touch");
+        let b = MemSpec::parse("bind:node=3").unwrap();
+        assert_eq!(b.name_sig(), "bind(node=3)");
+        assert_eq!(b.build(8).unwrap(), PagePolicy::Bind(3));
+        let n = MemSpec::parse("next-touch:max_moves=2").unwrap();
+        assert_eq!(n.build(4).unwrap(), PagePolicy::NextTouch { max_moves: 2 });
+        assert!(MemSpec::parse("bogus").is_err());
+        assert!(MemSpec::parse("bind:nod=1").is_err(), "unknown parameter");
+        assert!(MemSpec::parse("interleave:x=1").is_err(), "takes none");
+        assert!(MemSpec::parse("bind:node=").is_err());
+    }
+
+    #[test]
+    fn build_validates_against_topology() {
+        let b = MemSpec::new("bind").with_param("node", 7.0);
+        assert!(b.build(8).is_ok());
+        let err = format!("{:#}", b.build(4).unwrap_err());
+        assert!(err.contains("out of range"), "{err}");
+        let frac = MemSpec::new("bind").with_param("node", 1.5);
+        assert!(frac.build(8).is_err());
+        let neg = MemSpec::new("next-touch").with_param("max_moves", -1.0);
+        assert!(neg.build(8).is_err());
+        // bind with no override defaults to node 0
+        assert_eq!(MemSpec::new("bind").build(2).unwrap(), PagePolicy::Bind(0));
+    }
+
+    #[test]
+    fn json_roundtrips_both_forms() {
+        let plain = MemSpec::new("interleave");
+        assert_eq!(plain.to_json().to_compact(), "\"interleave\"");
+        assert_eq!(MemSpec::from_json(&plain.to_json()).unwrap(), plain);
+
+        let p = MemSpec::new("bind").with_param("node", 2.0);
+        let back = MemSpec::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+
+        let j = Json::parse(r#"{"name": "next-touch", "max_moves": 3}"#).unwrap();
+        let spec = MemSpec::from_json(&j).unwrap();
+        assert_eq!(spec.name_sig(), "next-touch(max_moves=3)");
+
+        assert!(MemSpec::from_json(&Json::parse("{\"node\": 1}").unwrap()).is_err());
+        assert!(MemSpec::from_json(&Json::parse("{\"name\": \"bind\", \"node\": \"x\"}").unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn error_lists_available_policies() {
+        let err = format!("{:#}", MemSpec::parse("bogus").unwrap_err());
+        for name in page_policy_names() {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn info_table_is_complete() {
+        let names = page_policy_names();
+        assert_eq!(names, vec!["first-touch", "interleave", "bind", "next-touch"]);
+        let bind = page_policy_infos().iter().find(|i| i.name == "bind").unwrap();
+        assert_eq!(bind.params[0].0, "node");
+    }
+}

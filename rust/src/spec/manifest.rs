@@ -37,6 +37,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::Size;
 use crate::serde::{toml, Json};
+use crate::simnuma::MemSpec;
 use crate::spec::sweep::{Sweep, SweepDefaults};
 use crate::spec::{cost_from_json, RunSpec};
 
@@ -97,13 +98,15 @@ impl ExperimentManifest {
         let mut sweeps = Vec::with_capacity(sweeps_json.len());
         let mut seen_ids = Vec::new();
         for (i, sj) in sweeps_json.iter().enumerate() {
-            let sweep =
-                Sweep::from_json(sj, &defaults).with_context(|| format!("sweeps[{i}]"))?;
-            if seen_ids.contains(&sweep.id) {
-                bail!("duplicate sweep id '{}'", sweep.id);
+            for sweep in
+                expand_topos(sj, &defaults).with_context(|| format!("sweeps[{i}]"))?
+            {
+                if seen_ids.contains(&sweep.id) {
+                    bail!("duplicate sweep id '{}'", sweep.id);
+                }
+                seen_ids.push(sweep.id.clone());
+                sweeps.push(sweep);
             }
-            seen_ids.push(sweep.id.clone());
-            sweeps.push(sweep);
         }
         Ok(Self { title, sweeps })
     }
@@ -125,6 +128,47 @@ impl ExperimentManifest {
     }
 }
 
+/// A sweep with a `"topos": [...]` list expands into one sweep per
+/// topology, ids suffixed `-<topo>` — the grid form of "same experiment
+/// across fabrics" without copy-pasting the sweep body.
+fn expand_topos(sj: &Json, defaults: &SweepDefaults) -> Result<Vec<Sweep>> {
+    let topos = match sj.get("topos") {
+        None => return Ok(vec![Sweep::from_json(sj, defaults)?]),
+        Some(v) => v
+            .as_arr()
+            .context("'topos' must be an array of topology names")?
+            .iter()
+            .map(|t| {
+                t.as_str()
+                    .map(str::to_string)
+                    .context("'topos' entries must be strings")
+            })
+            .collect::<Result<Vec<String>>>()?,
+    };
+    if topos.is_empty() {
+        bail!("'topos' has no entries");
+    }
+    if sj.get("topo").is_some() {
+        bail!("a sweep takes either 'topo' or 'topos', not both");
+    }
+    // strip the manifest-level key: `Sweep::from_json` rejects 'topos'
+    // so direct spec-layer callers can't silently lose the axis
+    let stripped = {
+        let mut obj = sj.as_obj().context("sweep must be an object")?.clone();
+        obj.remove("topos");
+        Json::Obj(obj)
+    };
+    let mut out = Vec::with_capacity(topos.len());
+    for topo in &topos {
+        let mut d = defaults.clone();
+        d.topo = topo.clone();
+        let mut sweep = Sweep::from_json(&stripped, &d)?;
+        sweep.id = format!("{}-{topo}", sweep.id);
+        out.push(sweep);
+    }
+    Ok(out)
+}
+
 fn parse_defaults(v: &Json) -> Result<SweepDefaults> {
     let obj = v.as_obj().context("defaults must be an object")?;
     let mut d = SweepDefaults::default();
@@ -144,13 +188,20 @@ fn parse_defaults(v: &Json) -> Result<SweepDefaults> {
             "seeds" | "seed" => {
                 d.seeds = crate::spec::sweep::num_list(val, "defaults.seeds")?
             }
+            "mem" | "mems" => {
+                let mems = val
+                    .as_arr()
+                    .map(|items| items.iter().map(MemSpec::from_json).collect::<Result<Vec<_>>>())
+                    .unwrap_or_else(|| Ok(vec![MemSpec::from_json(val)?]))?;
+                d.mems = mems;
+            }
             "cost" => d.cost = cost_from_json(val)?,
             _ => unknown.push(key.clone()),
         }
     }
     if !unknown.is_empty() {
         bail!(
-            "unknown defaults key(s): {} (allowed: size topo threads seeds cost)",
+            "unknown defaults key(s): {} (allowed: size topo threads seeds mem cost)",
             unknown.join(", ")
         );
     }
@@ -251,6 +302,52 @@ dram_base_ns = 120\n\
             "sched": [{"name": "hops-threshold", "max_hopps": 1}]}]}"#;
         let err = format!("{:#}", ExperimentManifest::from_json_str(bad).unwrap_err());
         assert!(err.contains("max_hopps"), "{err}");
+    }
+
+    #[test]
+    fn topos_expand_into_one_sweep_per_fabric() {
+        let m = ExperimentManifest::from_json_str(
+            r#"{
+              "title": "fabrics",
+              "sweeps": [
+                {"id": "grid", "bench": "fib", "sched": ["wf"], "bind": ["numa"],
+                 "threads": [2], "size": "small", "topos": ["x4600", "tile16", "altix16"]}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(m.sweeps.len(), 3);
+        assert_eq!(m.sweeps[0].id, "grid-x4600");
+        assert_eq!(m.sweeps[0].topo, "x4600");
+        assert_eq!(m.sweeps[1].id, "grid-tile16");
+        assert_eq!(m.sweeps[1].topo, "tile16");
+        assert_eq!(m.sweeps[2].topo, "altix16");
+        // topo + topos together is ambiguous
+        let bad = r#"{"sweeps": [{"id": "x", "bench": "fib", "topo": "dual",
+                                  "topos": ["x4600"]}]}"#;
+        let err = format!("{:#}", ExperimentManifest::from_json_str(bad).unwrap_err());
+        assert!(err.contains("not both"), "{err}");
+        let empty = r#"{"sweeps": [{"id": "x", "bench": "fib", "topos": []}]}"#;
+        assert!(ExperimentManifest::from_json_str(empty).is_err());
+    }
+
+    #[test]
+    fn mem_defaults_flow_into_sweeps() {
+        let m = ExperimentManifest::from_json_str(
+            r#"{
+              "title": "mem defaults",
+              "defaults": {"size": "small", "mem": ["first-touch", "interleave"]},
+              "sweeps": [
+                {"id": "a", "bench": "fib", "sched": ["wf"], "threads": [2]},
+                {"id": "b", "bench": "fib", "sched": ["wf"], "threads": [2],
+                 "mem": "bind"}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(m.sweeps[0].mems.len(), 2, "defaults apply");
+        assert_eq!(m.sweeps[1].mems, vec![MemSpec::new("bind")], "sweep overrides");
+        assert_eq!(m.all_cells().unwrap().len(), 2 + 1);
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::config::{apply_cost_override, ComputeMode, Size};
 use crate::coordinator::binding::BindPolicy;
 use crate::coordinator::sched::{Policy, SchedSpec};
 use crate::serde::Json;
-use crate::simnuma::CostModel;
+use crate::simnuma::{CostModel, MemSpec};
 use crate::topology::Topology;
 use crate::util::fmt_f64;
 
@@ -89,6 +89,9 @@ pub struct RunSpec {
     /// Scheduler selection: registry name + parameter overrides.  Stock
     /// policies arrive here through the [`RunSpecBuilder::policy`] shim.
     pub sched: SchedSpec,
+    /// Page-placement policy selection (default: plain first-touch, the
+    /// pre-placement behaviour).
+    pub mem: MemSpec,
     pub bind: BindSpec,
     pub threads: usize,
     pub topo: String,
@@ -109,6 +112,7 @@ impl Default for RunSpec {
             bench: "fft".into(),
             size: Size::Medium,
             sched: SchedSpec::stock(Policy::WorkFirst),
+            mem: MemSpec::default(),
             bind: BindSpec::Policy(BindPolicy::Linear),
             threads: 16,
             topo: "x4600".into(),
@@ -142,6 +146,9 @@ impl RunSpec {
                 ComputeMode::Pjrt => "pjrt",
             },
         );
+        if !self.mem.is_default() {
+            s.push_str(&format!(" mem={}", self.mem.name_sig()));
+        }
         if !self.cost.is_empty() {
             s.push_str(&format!(" cost={}", self.cost_sig()));
         }
@@ -192,6 +199,8 @@ impl RunSpec {
         }
         // scheduler name + parameters must resolve against the registry
         self.sched.check()?;
+        // page policy must resolve and fit the topology (bind node range)
+        self.mem.build(topo.num_nodes())?;
         if self.threads < 1 || self.threads > topo.num_cores() {
             bail!(
                 "threads={} out of range 1..={} for topology '{}'",
@@ -243,6 +252,9 @@ impl RunSpec {
                 }),
             ),
         ];
+        if !self.mem.is_default() {
+            pairs.push(("mem".into(), self.mem.to_json()));
+        }
         if !self.cost.is_empty() {
             pairs.push((
                 "cost".into(),
@@ -271,6 +283,7 @@ impl RunSpec {
                 "bench" => b.spec.bench = str_field(val, key)?,
                 "size" => b.spec.size = Size::from_name(&str_field(val, key)?)?,
                 "sched" | "policy" => b.spec.sched = SchedSpec::from_json(val)?,
+                "mem" => b.spec.mem = MemSpec::from_json(val)?,
                 "bind" => b.spec.bind = BindSpec::from_json(val)?,
                 "threads" => {
                     b.threads = Some(val.as_usize().context("threads must be a positive integer")?)
@@ -298,7 +311,7 @@ impl RunSpec {
         }
         if !unknown.is_empty() {
             bail!(
-                "unknown RunSpec key(s): {} (allowed: bench size sched bind threads topo \
+                "unknown RunSpec key(s): {} (allowed: bench size sched mem bind threads topo \
                  seed compute artifacts cost rtdata_local)",
                 unknown.join(", ")
             );
@@ -375,6 +388,12 @@ impl RunSpecBuilder {
         self
     }
 
+    /// Select a page-placement policy, with parameters.
+    pub fn mem(mut self, mem: MemSpec) -> Self {
+        self.spec.mem = mem;
+        self
+    }
+
     pub fn bind(mut self, bind: BindPolicy) -> Self {
         self.spec.bind = BindSpec::Policy(bind);
         self
@@ -446,6 +465,8 @@ impl RunSpecBuilder {
             "size" => self.spec.size = Size::from_name(value)?,
             // `name` or `name:k=v,k=v` — any registered scheduler
             "sched" | "policy" => self.spec.sched = SchedSpec::parse(value)?,
+            // `name` or `name:k=v,k=v` — any page policy
+            "mem" => self.spec.mem = MemSpec::parse(value)?,
             "bind" => self.spec.bind = BindSpec::Policy(BindPolicy::from_name(value)?),
             "cores" => {
                 let cores = value
@@ -603,6 +624,62 @@ mod tests {
             "sched": {"name": "hops-threshold", "max_hops": 2}}"#;
         let spec = RunSpec::from_json_str(authored).unwrap();
         assert_eq!(spec.sched.name_sig(), "hops-threshold(max_hops=2)");
+    }
+
+    #[test]
+    fn mem_axis_roundtrips_and_validates() {
+        // default stays implicit: old JSON shape is unchanged
+        let plain = RunSpec::builder().build().unwrap();
+        assert!(plain.mem.is_default());
+        assert!(!plain.to_json_string().contains("\"mem\""), "{}", plain.to_json_string());
+
+        let spec = RunSpec::builder()
+            .bench("sort")
+            .mem(MemSpec::new("interleave"))
+            .threads(8)
+            .build()
+            .unwrap();
+        let text = spec.to_json_string();
+        assert!(text.contains("\"mem\"") && text.contains("interleave"), "{text}");
+        assert_eq!(RunSpec::from_json_str(&text).unwrap(), spec);
+
+        let spec = RunSpec::builder()
+            .mem(MemSpec::new("bind").with_param("node", 3.0))
+            .build()
+            .unwrap();
+        let back = RunSpec::from_json_str(&spec.to_json_string()).unwrap();
+        assert_eq!(back.mem.name_sig(), "bind(node=3)");
+        assert!(
+            spec.describe().contains("mem=bind(node=3)"),
+            "{}",
+            spec.describe()
+        );
+
+        // validation catches bad policies and topology-range violations
+        assert!(RunSpec::builder().mem(MemSpec::new("bogus")).build().is_err());
+        let out_of_range = RunSpec::builder()
+            .mem(MemSpec::new("bind").with_param("node", 9.0))
+            .topo("x4600"); // 8 nodes
+        assert!(out_of_range.build().is_err());
+        // ... but bind:node=9 is fine on a 16-node fabric
+        assert!(RunSpec::builder()
+            .mem(MemSpec::new("bind").with_param("node", 9.0))
+            .topo("altix16")
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn cli_style_set_accepts_mem_policies() {
+        let mut b = RunSpec::builder();
+        b.set("bench", "fib").unwrap();
+        b.set("mem", "next-touch:max_moves=2").unwrap();
+        b.set("threads", "4").unwrap();
+        let spec = b.build().unwrap();
+        assert_eq!(spec.mem.name_sig(), "next-touch(max_moves=2)");
+        let mut bad = RunSpec::builder();
+        assert!(bad.set("mem", "bogus").is_err());
+        assert!(bad.set("mem", "bind:bogus=1").is_err());
     }
 
     #[test]

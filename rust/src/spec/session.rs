@@ -35,7 +35,7 @@ use crate::coordinator::task::Workload;
 use crate::metrics::RunStats;
 use crate::runtime::ExecEngine;
 use crate::serde::Json;
-use crate::simnuma::{CostModel, MemSim, PAGE_BYTES};
+use crate::simnuma::{CostModel, MemSim, MemSpec, PAGE_BYTES};
 use crate::spec::sweep::{Sweep, SweepResult};
 use crate::spec::{BindSpec, RunSpec};
 use crate::topology::Topology;
@@ -62,20 +62,24 @@ impl RunRecord {
         self.spec.label()
     }
 
-    /// Long-form CSV header matching [`RunRecord::to_csv_row`].
-    pub const CSV_HEADER: &'static str = "bench,size,policy,bind,threads,topo,seed,\
+    /// Long-form CSV header matching [`RunRecord::to_csv_row`].  The
+    /// placement refactor added the `mem` axis column (after `bind`) and
+    /// the three placement counters at the tail; every pre-existing
+    /// column keeps its name, order and formatting.
+    pub const CSV_HEADER: &'static str = "bench,size,policy,bind,mem,threads,topo,seed,\
          makespan,serial_makespan,speedup,tasks,steals,steal_hops,remote_pct,\
-         lock_wait,work,overhead,sim_events";
+         lock_wait,work,overhead,sim_events,pushed_home,affinity_hits,migrated_pages";
 
     /// Deterministic CSV row (no host wall-clock — parallel and sequential
     /// sweep output must be byte-identical).
     pub fn to_csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{:.4},{},{},{:.3},{:.4},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{:.4},{},{},{:.3},{:.4},{},{},{},{},{},{},{}",
             self.spec.bench,
             self.spec.size.name(),
             self.spec.sched.name_sig(),
             self.spec.bind.name(),
+            self.spec.mem.name_sig(),
             self.spec.threads,
             self.spec.topo,
             self.spec.seed,
@@ -90,6 +94,9 @@ impl RunRecord {
             self.stats.work_time,
             self.stats.overhead_time,
             self.stats.sim_events,
+            self.stats.pushed_home,
+            self.stats.affinity_hits,
+            self.stats.mem.migrated_pages,
         )
     }
 
@@ -111,6 +118,9 @@ impl RunRecord {
             ("overhead", Json::from(self.stats.overhead_time)),
             ("sim_events", Json::from(self.stats.sim_events)),
             ("kernel_calls", Json::from(self.stats.kernel_calls)),
+            ("pushed_home", Json::from(self.stats.pushed_home)),
+            ("affinity_hits", Json::from(self.stats.affinity_hits)),
+            ("migrated_pages", Json::from(self.stats.mem.migrated_pages)),
         ])
     }
 }
@@ -190,15 +200,19 @@ impl Session {
         spec.validate_against(&topo)
     }
 
-    /// The serial baseline for a spec's (bench, size, seed, topo, cost) —
-    /// computed once, shared by every cell normalizing against it.
+    /// The serial baseline for a spec's (bench, size, seed, topo, mem,
+    /// cost) — computed once, shared by every cell normalizing against
+    /// it.  The baseline runs under the spec's page policy: a placement
+    /// sweep compares schedulers against a serial denominator that paid
+    /// the same allocation behaviour.
     pub fn baseline(&self, spec: &RunSpec) -> Result<Arc<RunStats>> {
         let key = format!(
-            "{}|{}|{}|{}|{}",
+            "{}|{}|{}|{}|{}|{}",
             spec.bench,
             spec.size.name(),
             spec.seed,
             spec.topo,
+            spec.mem.name_sig(),
             spec.cost_sig()
         );
         if let Some(b) = self.baselines.lock().unwrap().get(&key) {
@@ -206,8 +220,19 @@ impl Session {
         }
         let rt = self.runtime_for(spec)?;
         let mut w = bots::create(&spec.bench, spec.size, spec.seed)?;
-        let stats =
-            Self::execute(&rt, w.as_mut(), Policy::Serial, BindPolicy::Linear, 1, spec.seed, None)?;
+        let mut rng = SplitMix64::new(spec.seed);
+        let binding = bind_threads(&rt.topo, 1, BindPolicy::Linear, &mut rng);
+        let mut stats = Self::execute_bound_placed(
+            &rt,
+            w.as_mut(),
+            sched::stock(Policy::Serial).as_ref(),
+            &binding.cores,
+            false,
+            &spec.mem,
+            spec.seed,
+            None,
+        )?;
+        stats.bind = Some(BindPolicy::Linear);
         let arc = Arc::new(stats);
         Ok(self.baselines.lock().unwrap().entry(key).or_insert(arc).clone())
     }
@@ -226,21 +251,23 @@ impl Session {
             ComputeMode::Sim => None,
         };
         let mut stats = match &spec.bind {
-            BindSpec::Policy(bind) => Self::execute_with(
+            BindSpec::Policy(bind) => Self::execute_placed(
                 &rt,
                 workload.as_mut(),
                 sched.as_ref(),
                 *bind,
                 spec.threads,
+                &spec.mem,
                 spec.seed,
                 exec.as_mut(),
             )?,
-            BindSpec::Cores(cores) => Self::execute_bound_with(
+            BindSpec::Cores(cores) => Self::execute_bound_placed(
                 &rt,
                 workload.as_mut(),
                 sched.as_ref(),
                 cores,
                 spec.rtdata_local,
+                &spec.mem,
                 spec.seed,
                 exec.as_mut(),
             )?,
@@ -320,7 +347,8 @@ impl Session {
     }
 
     /// Execute `workload` under `sched`/`bind` with `threads` threads on
-    /// `rt`, resolving the thread→core binding from the §IV policy.
+    /// `rt`, resolving the thread→core binding from the §IV policy
+    /// (first-touch shim over [`Session::execute_placed`]).
     pub fn execute_with(
         rt: &Runtime,
         workload: &mut dyn Workload,
@@ -330,15 +358,32 @@ impl Session {
         seed: u64,
         exec: Option<&mut ExecEngine>,
     ) -> Result<RunStats> {
+        Self::execute_placed(rt, workload, sched, bind, threads, &MemSpec::default(), seed, exec)
+    }
+
+    /// Like [`Session::execute_with`], but placing pages under `mem`'s
+    /// page policy.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_placed(
+        rt: &Runtime,
+        workload: &mut dyn Workload,
+        sched: &dyn Scheduler,
+        bind: BindPolicy,
+        threads: usize,
+        mem: &MemSpec,
+        seed: u64,
+        exec: Option<&mut ExecEngine>,
+    ) -> Result<RunStats> {
         let mut rng = SplitMix64::new(seed);
         let binding = bind_threads(&rt.topo, threads, bind, &mut rng);
         let numa_rtdata = bind == BindPolicy::NumaAware;
-        let mut stats = Self::execute_bound_with(
+        let mut stats = Self::execute_bound_placed(
             rt,
             workload,
             sched,
             &binding.cores,
             numa_rtdata,
+            mem,
             seed,
             exec,
         )?;
@@ -367,11 +412,8 @@ impl Session {
         )
     }
 
-    /// Execute with an explicit thread→core binding (thread 0 = master).
-    /// `numa_rtdata` controls whether per-thread runtime pages are touched
-    /// locally (§IV) or all by the master.  This is the ablation surface:
-    /// any placement heuristic — and any registered scheduler — can be
-    /// fed in.
+    /// Explicit-binding first-touch shim over
+    /// [`Session::execute_bound_placed`].
     pub fn execute_bound_with(
         rt: &Runtime,
         workload: &mut dyn Workload,
@@ -381,10 +423,39 @@ impl Session {
         seed: u64,
         exec: Option<&mut ExecEngine>,
     ) -> Result<RunStats> {
+        Self::execute_bound_placed(
+            rt,
+            workload,
+            sched,
+            cores,
+            numa_rtdata,
+            &MemSpec::default(),
+            seed,
+            exec,
+        )
+    }
+
+    /// Execute with an explicit thread→core binding (thread 0 = master).
+    /// `numa_rtdata` controls whether per-thread runtime pages are touched
+    /// locally (§IV) or all by the master; `mem` selects the page
+    /// policy.  This is the ablation surface: any placement heuristic —
+    /// and any registered scheduler — can be fed in.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_bound_placed(
+        rt: &Runtime,
+        workload: &mut dyn Workload,
+        sched: &dyn Scheduler,
+        cores: &[usize],
+        numa_rtdata: bool,
+        mem_spec: &MemSpec,
+        seed: u64,
+        exec: Option<&mut ExecEngine>,
+    ) -> Result<RunStats> {
         let wall_start = std::time::Instant::now();
         let threads = cores.len();
         let binding = Binding { cores: cores.to_vec(), priorities: None };
-        let mut mem = MemSim::new(rt.topo.clone(), rt.cost.clone());
+        let policy = mem_spec.build(rt.topo.num_nodes())?;
+        let mut mem = MemSim::with_policy(rt.topo.clone(), rt.cost.clone(), policy);
 
         // Per-thread runtime data (pools, descriptors): one page each.
         // Baseline: the master first-touches everything (all pages land on

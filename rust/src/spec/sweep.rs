@@ -1,8 +1,9 @@
 //! Cross-product sweeps: experiment grids as data.
 //!
 //! A [`Sweep`] names axes — benchmarks × (scheduler, binding) configs ×
-//! thread counts × seeds on one topology — and expands to a flat list of
-//! [`RunSpec`] cells in a fixed order (bench → config → seed → threads).
+//! page policies × thread counts × seeds on one topology — and expands
+//! to a flat list of [`RunSpec`] cells in a fixed order
+//! (bench → config → mem → seed → threads).
 //! Every paper figure is a sweep (see `harness::sweep_for`); user-authored
 //! sweeps come from manifests (`numanos sweep --manifest exp.toml`).
 //!
@@ -17,6 +18,7 @@ use crate::coordinator::binding::BindPolicy;
 use crate::coordinator::sched::{Policy, SchedSpec};
 use crate::metrics::table::SpeedupTable;
 use crate::serde::Json;
+use crate::simnuma::MemSpec;
 use crate::spec::session::RunRecord;
 use crate::spec::{cost_from_json, BindSpec, RunSpec};
 
@@ -33,6 +35,9 @@ pub struct Sweep {
     /// (scheduler, binding) pairs — any registered scheduler, stock
     /// `Policy` values convert via `Into<SchedSpec>`.
     pub configs: Vec<(SchedSpec, BindPolicy)>,
+    /// Page-placement policies (the memory axis; default: first-touch
+    /// only, which keeps pre-placement sweeps bit-for-bit identical).
+    pub mems: Vec<MemSpec>,
     pub threads: Vec<usize>,
     pub seeds: Vec<u64>,
     pub topo: String,
@@ -49,6 +54,7 @@ impl Sweep {
             benches: Vec::new(),
             size: Size::Medium,
             configs: Vec::new(),
+            mems: vec![MemSpec::default()],
             threads: PAPER_THREADS.to_vec(),
             seeds: vec![42],
             topo: "x4600".into(),
@@ -77,6 +83,17 @@ impl Sweep {
         S: Into<SchedSpec>,
     {
         self.configs.extend(configs.into_iter().map(|(s, b)| (s.into(), b)));
+        self
+    }
+
+    /// Replace the memory axis with one policy.
+    pub fn with_mem(self, mem: MemSpec) -> Self {
+        self.with_mems(vec![mem])
+    }
+
+    /// Replace the memory axis (page policy × everything else).
+    pub fn with_mems(mut self, mems: Vec<MemSpec>) -> Self {
+        self.mems = mems;
         self
     }
 
@@ -111,17 +128,24 @@ impl Sweep {
 
     /// Number of cells the cross product expands to.
     pub fn cell_count(&self) -> usize {
-        self.benches.len() * self.configs.len() * self.seeds.len() * self.threads.len()
+        self.benches.len()
+            * self.configs.len()
+            * self.mems.len()
+            * self.seeds.len()
+            * self.threads.len()
     }
 
-    /// Expand the cross product (bench → config → seed → threads) into
-    /// concrete run specs.
+    /// Expand the cross product (bench → config → mem → seed → threads)
+    /// into concrete run specs.
     pub fn cells(&self) -> Result<Vec<RunSpec>> {
         if self.benches.is_empty() {
             bail!("sweep '{}' has no benchmarks", self.id);
         }
         if self.configs.is_empty() {
             bail!("sweep '{}' has no (scheduler, binding) configs", self.id);
+        }
+        if self.mems.is_empty() {
+            bail!("sweep '{}' has no page policies", self.id);
         }
         if self.threads.is_empty() {
             bail!("sweep '{}' has no thread counts", self.id);
@@ -132,21 +156,24 @@ impl Sweep {
         let mut cells = Vec::with_capacity(self.cell_count());
         for bench in &self.benches {
             for (sched, bind) in &self.configs {
-                for &seed in &self.seeds {
-                    for &threads in &self.threads {
-                        cells.push(RunSpec {
-                            bench: bench.clone(),
-                            size: self.size,
-                            sched: sched.clone(),
-                            bind: BindSpec::Policy(*bind),
-                            threads,
-                            topo: self.topo.clone(),
-                            seed,
-                            compute: ComputeMode::Sim,
-                            artifact_dir: "artifacts".into(),
-                            cost: self.cost.clone(),
-                            rtdata_local: true,
-                        });
+                for mem in &self.mems {
+                    for &seed in &self.seeds {
+                        for &threads in &self.threads {
+                            cells.push(RunSpec {
+                                bench: bench.clone(),
+                                size: self.size,
+                                sched: sched.clone(),
+                                mem: mem.clone(),
+                                bind: BindSpec::Policy(*bind),
+                                threads,
+                                topo: self.topo.clone(),
+                                seed,
+                                compute: ComputeMode::Sim,
+                                artifact_dir: "artifacts".into(),
+                                cost: self.cost.clone(),
+                                rtdata_local: true,
+                            });
+                        }
                     }
                 }
             }
@@ -170,6 +197,10 @@ impl Sweep {
                         .map(|(s, b)| Json::Arr(vec![s.to_json(), Json::from(b.name())]))
                         .collect(),
                 ),
+            ),
+            (
+                "mem".into(),
+                Json::Arr(self.mems.iter().map(MemSpec::to_json).collect()),
             ),
             ("threads".into(), Json::Arr(self.threads.iter().map(|&t| Json::from(t)).collect())),
             (
@@ -199,6 +230,7 @@ impl Sweep {
             benches: Vec::new(),
             size: defaults.size,
             configs: Vec::new(),
+            mems: defaults.mems.clone(),
             threads: defaults.threads.clone(),
             seeds: defaults.seeds.clone(),
             topo: defaults.topo.clone(),
@@ -216,7 +248,12 @@ impl Sweep {
                 }
                 "bench" | "benches" => sweep.benches = str_list(val, key)?,
                 "sched" | "policies" => scheds = sched_list(val)?,
+                "mem" | "mems" => sweep.mems = mem_list(val)?,
                 "bind" | "binds" => binds = str_list(val, key)?,
+                "topos" => bail!(
+                    "'topos' is a manifest-level key (it expands into one sweep per \
+                     topology); load the file through ExperimentManifest, or use 'topo'"
+                ),
                 "configs" => {
                     let pairs = val.as_arr().context("configs must be an array")?;
                     let mut parsed = Vec::with_capacity(pairs.len());
@@ -247,7 +284,7 @@ impl Sweep {
         }
         if !unknown.is_empty() {
             bail!(
-                "unknown sweep key(s): {} (allowed: id title bench sched bind configs \
+                "unknown sweep key(s): {} (allowed: id title bench sched mem bind configs \
                  threads seeds size topo cost)",
                 unknown.join(", ")
             );
@@ -283,6 +320,7 @@ pub struct SweepDefaults {
     pub topo: String,
     pub threads: Vec<usize>,
     pub seeds: Vec<u64>,
+    pub mems: Vec<MemSpec>,
     pub cost: Vec<(String, f64)>,
 }
 
@@ -293,17 +331,81 @@ impl Default for SweepDefaults {
             topo: "x4600".into(),
             threads: PAPER_THREADS.to_vec(),
             seeds: vec![42],
+            mems: vec![MemSpec::default()],
             cost: Vec::new(),
         }
     }
 }
 
 /// Accept one scheduler selection or an array of them; each entry is a
-/// name string or a `{"name": …, params…}` object.
+/// name string, a `{"name": …, params…}` object, or a parameter *grid*
+/// `{"name": …, fixed params…, "grid": {"<param>": [v, …], …}}` that
+/// expands to the cross product of its axes (the ROADMAP's tunable-grid
+/// sweep, e.g. `max_hops 0..3` without enumerating four manifest cells).
 fn sched_list(v: &Json) -> Result<Vec<SchedSpec>> {
+    let items = match v {
+        Json::Arr(items) => items,
+        single => std::slice::from_ref(single),
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for item in items {
+        match item.get("grid") {
+            Some(grid) => out.extend(expand_sched_grid(item, grid)?),
+            None => out.push(SchedSpec::from_json(item)?),
+        }
+    }
+    Ok(out)
+}
+
+/// Expand one `{"name": …, "grid": {…}}` scheduler entry.
+fn expand_sched_grid(item: &Json, grid: &Json) -> Result<Vec<SchedSpec>> {
+    let obj = item.as_obj().context("gridded sched entry must be an object")?;
+    let name = obj
+        .get("name")
+        .and_then(Json::as_str)
+        .context("gridded sched entry needs a string 'name'")?;
+    let mut base = SchedSpec::new(&crate::coordinator::sched::resolve_name(name)?);
+    for (key, val) in obj {
+        if key == "name" || key == "grid" {
+            continue;
+        }
+        let v = val
+            .as_num()
+            .with_context(|| format!("sched parameter '{key}' must be a number"))?;
+        base.set_param(key, v);
+    }
+    let axes = grid.as_obj().context("sched 'grid' must map parameters to value arrays")?;
+    let mut specs = vec![base];
+    for (param, values) in axes {
+        let values = values
+            .as_arr()
+            .with_context(|| format!("grid axis '{param}' must be an array of numbers"))?;
+        if values.is_empty() {
+            bail!("grid axis '{param}' has no values");
+        }
+        let mut next = Vec::with_capacity(specs.len() * values.len());
+        for spec in &specs {
+            for v in values {
+                let v = v
+                    .as_num()
+                    .with_context(|| format!("grid axis '{param}' values must be numbers"))?;
+                next.push(spec.clone().with_param(param, v));
+            }
+        }
+        specs = next;
+    }
+    for spec in &specs {
+        spec.check()?;
+    }
+    Ok(specs)
+}
+
+/// Accept one page-policy selection or an array of them; entries are
+/// names or `{"name": …, params…}` objects, like `sched`.
+fn mem_list(v: &Json) -> Result<Vec<MemSpec>> {
     match v {
-        Json::Arr(items) => items.iter().map(SchedSpec::from_json).collect(),
-        single => Ok(vec![SchedSpec::from_json(single)?]),
+        Json::Arr(items) => items.iter().map(MemSpec::from_json).collect(),
+        single => Ok(vec![MemSpec::from_json(single)?]),
     }
 }
 
@@ -354,12 +456,16 @@ impl SweepResult {
     pub fn table(&self) -> SpeedupTable {
         let mut t = SpeedupTable::new(&self.sweep.title, self.sweep.threads.clone());
         let multi_bench = self.sweep.benches.len() > 1;
+        let multi_mem = self.sweep.mems.len() > 1;
         let multi_seed = self.sweep.seeds.len() > 1;
         for chunk in self.records.chunks(self.sweep.threads.len()) {
             let first = &chunk[0];
             let mut label = first.label();
             if multi_bench {
                 label = format!("{}/{label}", first.spec.bench);
+            }
+            if multi_mem {
+                label = format!("{label}+{}", first.spec.mem.name_sig());
             }
             if multi_seed {
                 label = format!("{label}@s{}", first.spec.seed);
@@ -437,6 +543,90 @@ mod tests {
         let j = s.to_json();
         let back = Sweep::from_json(&j, &SweepDefaults::default()).unwrap();
         assert_eq!(back, s);
+        // a non-default memory axis survives the roundtrip too
+        let s = demo().with_mems(vec![
+            MemSpec::default(),
+            MemSpec::new("interleave"),
+            MemSpec::new("bind").with_param("node", 2.0),
+        ]);
+        let back = Sweep::from_json(&s.to_json(), &SweepDefaults::default()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn mem_axis_multiplies_cells_between_config_and_seed() {
+        let s = demo().with_mems(vec![MemSpec::default(), MemSpec::new("interleave")]);
+        assert_eq!(s.cell_count(), 2 * 2 * 2 * 2 * 3);
+        let cells = s.cells().unwrap();
+        assert_eq!(cells.len(), 48);
+        // nesting order: bench → config → mem → seed → threads
+        assert!(cells[0].mem.is_default());
+        assert_eq!(cells[6].mem.name_sig(), "interleave", "{:?}", cells[6].mem);
+        assert_eq!(cells[6].seed, 1, "seed resets inside the mem axis");
+        assert_eq!(cells[3].seed, 2);
+        for c in &cells {
+            c.validate().unwrap();
+        }
+        // empty mem axis is rejected
+        assert!(demo().with_mems(vec![]).cells().is_err());
+    }
+
+    #[test]
+    fn mem_axis_parses_from_json_forms() {
+        let j = Json::parse(
+            r#"{"id": "m", "bench": "fib", "sched": ["wf"], "bind": ["numa"],
+                "threads": [2], "seed": 1, "size": "small",
+                "mem": ["first-touch", "interleave", {"name": "next-touch", "max_moves": 2}]}"#,
+        )
+        .unwrap();
+        let s = Sweep::from_json(&j, &SweepDefaults::default()).unwrap();
+        assert_eq!(s.mems.len(), 3);
+        assert_eq!(s.mems[2].name_sig(), "next-touch(max_moves=2)");
+        assert_eq!(s.cells().unwrap().len(), 3);
+        // defaults flow in when the sweep names no mem axis
+        let j = Json::parse(r#"{"id": "d", "bench": "fib", "threads": [2], "size": "small"}"#)
+            .unwrap();
+        let defaults = SweepDefaults {
+            mems: vec![MemSpec::new("interleave")],
+            ..SweepDefaults::default()
+        };
+        let s = Sweep::from_json(&j, &defaults).unwrap();
+        assert_eq!(s.mems, vec![MemSpec::new("interleave")]);
+        // bad entries fail at parse
+        let j = Json::parse(r#"{"id": "x", "bench": "fib", "mem": ["bogus"]}"#).unwrap();
+        assert!(Sweep::from_json(&j, &SweepDefaults::default()).is_err());
+    }
+
+    #[test]
+    fn sched_grid_expands_in_manifest_lists() {
+        let j = Json::parse(
+            r#"{"id": "g", "bench": "fib", "bind": ["numa"], "threads": [2], "size": "small",
+                "sched": [{"name": "hops-threshold", "spill_after": 1,
+                           "grid": {"max_hops": [0, 1, 2, 3]}}]}"#,
+        )
+        .unwrap();
+        let s = Sweep::from_json(&j, &SweepDefaults::default()).unwrap();
+        assert_eq!(s.configs.len(), 4);
+        assert_eq!(s.configs[0].0.name_sig(), "hops-threshold(max_hops=0;spill_after=1)");
+        assert_eq!(s.configs[3].0.name_sig(), "hops-threshold(max_hops=3;spill_after=1)");
+        // two-axis grids cross; plain entries mix with gridded ones
+        let j = Json::parse(
+            r#"{"id": "g2", "bench": "fib", "threads": [2], "size": "small",
+                "sched": ["wf", {"name": "hops-threshold",
+                                 "grid": {"max_hops": [1, 2], "spill_after": [1, 2]}}]}"#,
+        )
+        .unwrap();
+        let s = Sweep::from_json(&j, &SweepDefaults::default()).unwrap();
+        assert_eq!(s.configs.len(), 1 + 4);
+        // bad grids fail at parse, naming the problem
+        for bad in [
+            r#"{"id": "b", "bench": "fib", "sched": [{"name": "hops-threshold", "grid": {"bogus": [1]}}]}"#,
+            r#"{"id": "b", "bench": "fib", "sched": [{"name": "hops-threshold", "grid": {"max_hops": []}}]}"#,
+            r#"{"id": "b", "bench": "fib", "sched": [{"grid": {"max_hops": [1]}}]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Sweep::from_json(&j, &SweepDefaults::default()).is_err(), "{bad}");
+        }
     }
 
     #[test]
@@ -476,6 +666,18 @@ mod tests {
         let s = Sweep::from_json(&j, &SweepDefaults::default()).unwrap();
         assert_eq!(s.configs[0].0.name, "adaptive");
         assert_eq!(s.configs[0].1, BindPolicy::NumaAware);
+    }
+
+    #[test]
+    fn topos_rejected_outside_manifests() {
+        // 'topos' only expands at the manifest layer; accepting it here
+        // would silently drop the axis for direct Sweep::from_json users
+        let j = Json::parse(
+            r#"{"id": "t", "bench": "fib", "threads": [2], "topos": ["x4600", "tile16"]}"#,
+        )
+        .unwrap();
+        let err = format!("{:#}", Sweep::from_json(&j, &SweepDefaults::default()).unwrap_err());
+        assert!(err.contains("ExperimentManifest"), "{err}");
     }
 
     #[test]

@@ -53,6 +53,45 @@ fn list_prints_all_four_sweep_axes() {
 }
 
 #[test]
+fn list_prints_page_policies_with_parameters() {
+    let (ok, text) = numanos(&["list"]);
+    assert!(ok, "{text}");
+    let mems = text.lines().find(|l| l.starts_with("mem")).expect("mem line");
+    for needle in ["first-touch", "interleave", "bind(node=0)", "next-touch(max_moves=1)"] {
+        assert!(mems.contains(needle), "missing {needle} in: {mems}");
+    }
+    // the scheduler line picked up the placement strategy
+    let scheds = text.lines().find(|l| l.starts_with("schedulers")).unwrap();
+    assert!(scheds.contains("numa-home"), "{scheds}");
+}
+
+#[test]
+fn run_accepts_mem_policy_and_numa_home() {
+    let (ok, text) = numanos(&[
+        "run", "--bench", "sparselu_for", "--size", "small", "--threads", "8",
+        "--sched", "numa-home", "--mem", "interleave", "--bind", "numa", "--seed", "5",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("mem=interleave"), "describe line carries the axis: {text}");
+    assert!(text.contains("speedup"), "{text}");
+
+    // parameterized policy form
+    let (ok, text) = numanos(&[
+        "run", "--bench", "fib", "--size", "small", "--threads", "4",
+        "--mem", "next-touch:max_moves=2",
+    ]);
+    assert!(ok, "{text}");
+
+    // bad policies and parameters are clear errors
+    let (ok, text) = numanos(&["run", "--bench", "fib", "--mem", "bogus"]);
+    assert!(!ok);
+    assert!(text.contains("unknown page policy"), "{text}");
+    let (ok, text) = numanos(&["run", "--bench", "fib", "--mem", "bind:node=99"]);
+    assert!(!ok);
+    assert!(text.contains("out of range"), "{text}");
+}
+
+#[test]
 fn run_accepts_parameterized_scheduler() {
     let (ok, text) = numanos(&[
         "run", "--bench", "fib", "--size", "small", "--threads", "8",
@@ -277,6 +316,48 @@ fn sweep_manifest_with_parameterized_scheduler() {
     let csv = std::fs::read_to_string(out.join("near.csv")).unwrap();
     assert_eq!(csv.lines().count(), 1 + 6, "{csv}");
     assert!(csv.contains("hops-threshold(max_hops=1)"), "{csv}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_manifest_with_placement_axis() {
+    let dir = std::env::temp_dir().join(format!("numanos_cli_place_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = dir.join("place.json");
+    std::fs::write(
+        &manifest,
+        r#"{
+          "title": "placement grid",
+          "defaults": {"size": "small", "seeds": [3]},
+          "sweeps": [
+            {"id": "place", "bench": "sparselu_for",
+             "sched": ["bf", "numa-home"],
+             "mem": ["first-touch", "interleave"],
+             "bind": ["numa"], "threads": [8],
+             "topos": ["x4600", "tile16"]}
+          ]
+        }"#,
+    )
+    .unwrap();
+    let out = dir.join("out");
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--out", out.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    // topos expanded into one sweep (and CSV) per fabric
+    for id in ["place-x4600", "place-tile16"] {
+        let csv = std::fs::read_to_string(out.join(format!("{id}.csv")))
+            .unwrap_or_else(|e| panic!("{id}: {e}"));
+        let header = csv.lines().next().unwrap();
+        for col in ["mem", "pushed_home", "affinity_hits", "migrated_pages"] {
+            assert!(header.contains(col), "{id}: missing {col} in {header}");
+        }
+        assert!(csv.contains("interleave"), "{id}: {csv}");
+        assert!(csv.contains("numa-home"), "{id}: {csv}");
+        assert_eq!(csv.lines().count(), 1 + 4, "{id}: {csv}");
+    }
+    // the table disambiguates the memory axis in row labels
+    assert!(text.contains("+interleave"), "{text}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

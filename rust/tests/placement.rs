@@ -1,0 +1,223 @@
+//! The locality/placement layer end-to-end: page-policy selection flows
+//! spec → session → engine, `numa-home` pushes work to its data, stock
+//! schedulers under the default policy stay byte-identical to the legacy
+//! execution path, and placement × scheduler × topology sweeps run from
+//! manifests.
+
+use numanos::config::Size;
+use numanos::coordinator::binding::BindPolicy;
+use numanos::coordinator::sched::{self, Policy, SchedSpec};
+use numanos::simnuma::MemSpec;
+use numanos::spec::{ExperimentManifest, RunSpec, Session};
+use numanos::{bots, Runtime};
+
+fn spec(bench: &str, sched: SchedSpec, mem: MemSpec, topo: &str, threads: usize) -> RunSpec {
+    RunSpec::builder()
+        .bench(bench)
+        .size(Size::Small)
+        .sched(sched)
+        .mem(mem)
+        .numa()
+        .threads(threads)
+        .topo(topo)
+        .seed(7)
+        .build()
+        .unwrap()
+}
+
+/// Acceptance criterion (parity half): stock schedulers with the default
+/// `MemSpec` produce byte-identical stats/CSV through the new
+/// placement-aware path vs. the legacy `Runtime::run` verbs, and an
+/// *explicit* `first-touch` selection is indistinguishable from the
+/// default.
+#[test]
+fn stock_schedulers_with_default_mem_match_the_legacy_path() {
+    let session = Session::new();
+    let rt = Runtime::paper_testbed();
+    for policy in [Policy::BreadthFirst, Policy::WorkFirst, Policy::Dfwsrpt] {
+        let s = spec("fft", SchedSpec::stock(policy), MemSpec::default(), "x4600", 8);
+        let rec = session.run(&s).unwrap();
+
+        let mut w = bots::create("fft", Size::Small, 7).unwrap();
+        let legacy = rt.run(w.as_mut(), policy, BindPolicy::NumaAware, 8, 7, None).unwrap();
+        assert_eq!(rec.stats.makespan, legacy.makespan, "{}", policy.name());
+        assert_eq!(rec.stats.steals, legacy.steals, "{}", policy.name());
+        assert_eq!(rec.stats.sim_events, legacy.sim_events, "{}", policy.name());
+        assert_eq!(rec.stats.work_time, legacy.work_time, "{}", policy.name());
+        assert_eq!(rec.stats.overhead_time, legacy.overhead_time, "{}", policy.name());
+        // the placement counters stay zero on non-placing schedulers
+        assert_eq!(rec.stats.pushed_home, 0, "{}", policy.name());
+        assert_eq!(rec.stats.affinity_hits, 0, "{}", policy.name());
+        assert_eq!(rec.stats.mem.migrated_pages, 0, "{}", policy.name());
+
+        // explicit first-touch is the same run, CSV row and all
+        let explicit = spec("fft", SchedSpec::stock(policy), MemSpec::new("first-touch"),
+            "x4600", 8);
+        let rec2 = session.run(&explicit).unwrap();
+        assert_eq!(rec.to_csv_row(), rec2.to_csv_row(), "{}", policy.name());
+    }
+}
+
+/// Acceptance criterion (gain half): `numa-home` + first-touch achieves a
+/// lower remote-access ratio than breadth-first on a BOTS workload over a
+/// multi-node fabric — the paper's point that placement, not just steal
+/// order, cuts remote traffic.
+#[test]
+fn numa_home_beats_bf_remote_ratio_on_sparselu() {
+    let session = Session::new();
+    let bf = session
+        .run(&spec("sparselu_for", SchedSpec::stock(Policy::BreadthFirst),
+            MemSpec::default(), "x4600", 16))
+        .unwrap();
+    let home = session
+        .run(&spec("sparselu_for", SchedSpec::new("numa-home"), MemSpec::default(),
+            "x4600", 16))
+        .unwrap();
+    assert!(home.stats.pushed_home > 0, "placement must actually engage");
+    assert!(
+        home.stats.mem.remote_ratio() < bf.stats.mem.remote_ratio(),
+        "numa-home {:.3} must beat bf {:.3}",
+        home.stats.mem.remote_ratio(),
+        bf.stats.mem.remote_ratio()
+    );
+}
+
+/// Per-scheduler determinism regression, extended to `numa-home` across
+/// the multi-node presets (the satellite requirement): same spec, fresh
+/// sessions, identical records.
+#[test]
+fn numa_home_is_deterministic_across_topologies() {
+    for topo in ["x4600", "tile16", "altix16"] {
+        let s = spec("sort", SchedSpec::new("numa-home"), MemSpec::default(), topo, 8);
+        let a = Session::new().run(&s).unwrap_or_else(|e| panic!("{topo}: {e:#}"));
+        let b = Session::new().run(&s).unwrap_or_else(|e| panic!("{topo}: {e:#}"));
+        assert_eq!(a.stats.makespan, b.stats.makespan, "{topo}");
+        assert_eq!(a.stats.steals, b.stats.steals, "{topo}");
+        assert_eq!(a.stats.pushed_home, b.stats.pushed_home, "{topo}");
+        assert_eq!(a.stats.sim_events, b.stats.sim_events, "{topo}");
+        assert_eq!(a.to_csv_row(), b.to_csv_row(), "{topo}");
+        assert_eq!(a.to_json().to_compact(), b.to_json().to_compact(), "{topo}");
+        assert!(a.stats.makespan > 0, "{topo}");
+    }
+}
+
+/// Every page policy completes every-scheduler-agnostic workloads and the
+/// policy choice is visible in the record surface (CSV axis column + the
+/// counter tail).
+#[test]
+fn every_page_policy_runs_and_reports() {
+    let session = Session::new();
+    for (mem, expect_migrations) in [
+        (MemSpec::default(), false),
+        (MemSpec::new("interleave"), false),
+        (MemSpec::new("bind").with_param("node", 2.0), false),
+        (MemSpec::new("next-touch").with_param("max_moves", 1.0), true),
+    ] {
+        let s = spec("sort", SchedSpec::stock(Policy::WorkFirst), mem.clone(), "x4600", 8);
+        let rec = session.run(&s).unwrap_or_else(|e| panic!("{}: {e:#}", mem.name_sig()));
+        assert!(rec.stats.makespan > 0, "{}", mem.name_sig());
+        let row = rec.to_csv_row();
+        assert!(row.contains(&mem.name_sig()), "{}: {row}", mem.name_sig());
+        if expect_migrations {
+            assert!(
+                rec.stats.mem.migrated_pages > 0,
+                "next-touch must migrate on sort's cross-node re-touches"
+            );
+        } else {
+            assert_eq!(rec.stats.mem.migrated_pages, 0, "{}", mem.name_sig());
+        }
+    }
+}
+
+/// The serial-baseline memo distinguishes page policies: speedups inside
+/// a placement sweep normalize against a baseline that paid the same
+/// allocation behaviour.
+#[test]
+fn baselines_are_keyed_by_page_policy() {
+    let session = Session::new();
+    let ft = spec("fib", SchedSpec::stock(Policy::WorkFirst), MemSpec::default(), "x4600", 4);
+    let il = spec("fib", SchedSpec::stock(Policy::WorkFirst), MemSpec::new("interleave"),
+        "x4600", 4);
+    let a = session.baseline(&ft).unwrap();
+    let b = session.baseline(&il).unwrap();
+    assert!(!std::sync::Arc::ptr_eq(&a, &b), "distinct memo entries per policy");
+}
+
+/// Acceptance criterion: placement is a full sweep axis — a JSON manifest
+/// sweeping page policy × scheduler × topology expands, runs end-to-end,
+/// and the CSV carries the new axis + counter columns.
+#[test]
+fn placement_sweep_manifest_end_to_end() {
+    let manifest = ExperimentManifest::from_json_str(
+        r#"{
+          "title": "placement grid",
+          "defaults": {"size": "small", "seeds": [3]},
+          "sweeps": [
+            {"id": "grid", "bench": "sparselu_for",
+             "sched": ["bf", "dfwsrpt", "numa-home"],
+             "mem": ["first-touch", "interleave"],
+             "bind": ["numa"], "threads": [8],
+             "topos": ["x4600", "altix16"]}
+          ]
+        }"#,
+    )
+    .unwrap();
+    assert_eq!(manifest.sweeps.len(), 2, "one sweep per topology");
+    assert_eq!(manifest.all_cells().unwrap().len(), 2 * 3 * 2);
+
+    let session = Session::new();
+    for sweep in &manifest.sweeps {
+        let result = session.run_sweep_with(sweep, 2).unwrap();
+        assert_eq!(result.records.len(), 6);
+        let csv = result.to_csv();
+        let header = csv.lines().next().unwrap();
+        for col in ["mem", "pushed_home", "affinity_hits", "migrated_pages"] {
+            assert!(header.contains(col), "missing {col} in: {header}");
+        }
+        assert!(csv.contains("interleave"), "{csv}");
+        assert!(csv.contains("numa-home"), "{csv}");
+        // sequential re-run is byte-identical (determinism across the axis)
+        let seq = session.run_sweep_with(sweep, 1).unwrap();
+        assert_eq!(csv, seq.to_csv());
+        // multi-mem sweeps disambiguate table rows by policy
+        let table = result.table().to_markdown();
+        assert!(table.contains("+interleave"), "{table}");
+    }
+}
+
+/// The tunable-grid helper: `param_grid` expands declared scheduler
+/// parameters into sweepable configs without hand-written manifests.
+#[test]
+fn param_grid_sweeps_end_to_end() {
+    let grid = sched::param_grid("hops-threshold", &[("max_hops", &[0.0, 1.0])]).unwrap();
+    let sweep = numanos::Sweep::new("hops-grid", "max_hops 0..1")
+        .with_bench("fib")
+        .with_configs(grid.into_iter().map(|s| (s, BindPolicy::NumaAware)))
+        .with_threads(vec![4])
+        .with_seeds(vec![2])
+        .with_size(Size::Small);
+    let result = Session::new().run_sweep(&sweep).unwrap();
+    assert_eq!(result.records.len(), 2);
+    let csv = result.to_csv();
+    assert!(csv.contains("hops-threshold(max_hops=0)"), "{csv}");
+    assert!(csv.contains("hops-threshold(max_hops=1)"), "{csv}");
+}
+
+/// `numa-home` on a single-node (UMA) machine degenerates gracefully:
+/// there is nowhere else to push, so placement never fires.
+#[test]
+fn numa_home_on_uma_never_pushes() {
+    let s = RunSpec::builder()
+        .bench("sort")
+        .size(Size::Small)
+        .sched(SchedSpec::new("numa-home"))
+        .threads(8)
+        .topo("uma")
+        .seed(5)
+        .build()
+        .unwrap();
+    let rec = Session::new().run(&s).unwrap();
+    assert_eq!(rec.stats.pushed_home, 0);
+    assert!(rec.stats.affinity_hits > 0, "all data is trivially home");
+    assert!(rec.stats.makespan > 0);
+}

@@ -200,7 +200,7 @@ fn manifest_files_run_end_to_end() {
     assert_eq!(table.rows[1].0, "dfwspt-Scheduler-NUMA");
     let csv = result.to_csv();
     assert!(csv.lines().count() == 1 + 4, "{csv}");
-    assert!(csv.starts_with("sweep,bench,size,policy,bind,threads"), "{csv}");
+    assert!(csv.starts_with("sweep,bench,size,policy,bind,mem,threads"), "{csv}");
 
     std::fs::remove_dir_all(&dir).ok();
 }
