@@ -13,16 +13,24 @@
 //! order, and reports spawns, steals and failed sweeps back through
 //! [`Scheduler::observe`] so adaptive strategies can react.  For
 //! schedulers that opt into placement ([`SchedDescriptor::places`]),
-//! every spawn is additionally routed through [`Scheduler::place`]: a
-//! [`Placement::HomeNode`] answer pushes the child onto a worker bound to
-//! its data's home node (the parent keeps running) instead of the local
-//! child-first switch.
+//! three locality hooks additionally engage: every spawn is routed
+//! through [`Scheduler::place`] (a [`Placement::HomeNode`] answer pushes
+//! the child onto a worker bound to its data's home node while the
+//! parent keeps running), every steal sweep through
+//! [`Scheduler::steal_bias`] (victims' per-node resident-home summaries
+//! let the strategy probe work homed near the thief first), and every
+//! tied-continuation release through [`Scheduler::resume`] (the
+//! continuation may be released to a home-node worker instead of the
+//! first owner).  The home node of each affinity-hinted spawn is
+//! resolved once and cached on the task, so the hooks never re-sample
+//! the page table.
 //!
 //! ## Semantics (mirroring NANOS)
 //!
 //! * **Tied tasks**: a task suspended at its `taskwait` resumes on the
 //!   worker that started it (the continuation is pushed to that worker's
-//!   pool when the last child completes).
+//!   pool when the last child completes).  Placing schedulers may relax
+//!   this through [`Scheduler::resume`]; the new runner then owns it.
 //! * **Depth-first policies** (`serial/cilk/wf/dfwspt/dfwsrpt`): `Spawn`
 //!   suspends the parent (pushed to the worker's own pool front) and the
 //!   worker continues with the child immediately.
@@ -48,10 +56,11 @@ use anyhow::Result;
 
 use crate::coordinator::pool::Pool;
 use crate::coordinator::sched::{
-    dfwspt, Placement, SchedDescriptor, SchedEvent, Scheduler, SpawnCtx, StealEnd, VictimList,
+    dfwspt, Placement, ResumeCtx, SchedDescriptor, SchedEvent, Scheduler, SpawnCtx, StealCand,
+    StealEnd, VictimList,
 };
 use crate::coordinator::task::{
-    Action, BodyCtx, TaskArena, TaskId, TaskState, Workload,
+    Action, BodyCtx, TaskArena, TaskId, TaskState, Workload, NO_HOME,
 };
 use crate::metrics::RunStats;
 use crate::runtime::ExecEngine;
@@ -114,7 +123,14 @@ pub struct Engine<'a> {
     sim_events: u64,
     pushed_home: u64,
     affinity_hits: u64,
+    /// Successful steals whose stolen task was homed on the thief's node.
+    affine_steals: u64,
+    /// Tied continuations released to a home-node worker instead of the
+    /// first owner (the `resume` hook redirected).
+    homed_resumes: u64,
     victim_buf: Vec<usize>,
+    /// Scratch for steal-bias candidate snapshots (allocation reuse).
+    cand_buf: Vec<StealCand>,
     wake_rr: usize,
 }
 
@@ -189,7 +205,10 @@ impl<'a> Engine<'a> {
             sim_events: 0,
             pushed_home: 0,
             affinity_hits: 0,
+            affine_steals: 0,
+            homed_resumes: 0,
             victim_buf: Vec::new(),
+            cand_buf: Vec::new(),
             wake_rr: 0,
         }
     }
@@ -223,6 +242,19 @@ impl<'a> Engine<'a> {
             }
         }
         self.wake_rr = (self.wake_rr + 1) % n;
+    }
+
+    /// Targeted wake: rouse exactly `target` (who must be sleeping) at
+    /// `now` plus the futex-wake latency.  Unlike [`Engine::wake_sleepers`]
+    /// this neither scans nor advances the round-robin cursor — it is the
+    /// "I know who this work is for" wake that `push_home` and homed /
+    /// bounded-sweep continuation releases use.
+    fn wake_worker(&mut self, target: usize, now: Time) {
+        debug_assert!(self.workers[target].sleeping);
+        self.workers[target].sleeping = false;
+        let t = (now + 120).max(self.workers[target].clock);
+        self.workers[target].clock = t;
+        self.schedule(target, t);
     }
 
     /// Start or resume `tid` on worker `w`.  A pool can hold three flavours:
@@ -338,6 +370,28 @@ impl<'a> Engine<'a> {
             sched.victim_order(&wk.victims, &mut rng, &mut buf);
             wk.rng = rng;
         }
+        // Steal-bias hook (places opt-in only): snapshot each victim's
+        // per-node resident-home summary and let the strategy reorder or
+        // filter the sweep toward work homed near this thief.  The
+        // summary is a word read per victim — no deque scan, no
+        // simulated cost (like victim_order itself).
+        if self.desc.places && !buf.is_empty() {
+            let thief_node = self.topo.node_of(self.workers[w].core);
+            let mut cands = std::mem::take(&mut self.cand_buf);
+            cands.clear();
+            cands.extend(buf.iter().map(|&v| StealCand {
+                victim: v,
+                hops: self.thops[w][v],
+                affine: self.pools[v].homed_count(thief_node),
+                queued: self.pools[v].len() as u32,
+            }));
+            self.sched.steal_bias(thief_node, &mut cands);
+            buf.clear();
+            // a misbehaving custom hook cannot inject bogus victims
+            let n = self.workers.len();
+            buf.extend(cands.iter().map(|c| c.victim).filter(|&v| v < n && v != w));
+            self.cand_buf = cands;
+        }
         let mut got = self.steal_sweep(w, &buf);
         if got.is_none() {
             self.sched.observe(&SchedEvent::StealMiss { worker: w });
@@ -400,6 +454,14 @@ impl<'a> Engine<'a> {
             if let Some(tid) = taken {
                 self.workers[w].steals += 1;
                 self.workers[w].steal_hops += hops;
+                // a steal that lands work on its data's home node (tags
+                // exist only under placing schedulers; stock stays 0)
+                let home = self.arena.get(tid).home;
+                if home != NO_HOME
+                    && home as usize == self.topo.node_of(self.workers[w].core)
+                {
+                    self.affine_steals += 1;
+                }
                 self.sched.observe(&SchedEvent::Steal { thief: w, victim: v, hops: vhops });
                 return Some(tid);
             }
@@ -473,6 +535,13 @@ impl<'a> Engine<'a> {
                         if home == Some(worker_node) {
                             self.affinity_hits += 1;
                         }
+                        // cache the resolved home on the task: pool
+                        // summaries, steal-bias and continuation homing
+                        // all read this tag instead of re-sampling the
+                        // page table
+                        if let Some(h) = home.filter(|&h| h < NO_HOME as usize) {
+                            self.arena.get_mut(child).home = h as u8;
+                        }
                         let sctx = SpawnCtx { worker: w, worker_node, affinity, home };
                         if let Placement::HomeNode(node) = self.sched.place(&sctx) {
                             if let Some(target) = self.home_worker(node) {
@@ -491,7 +560,7 @@ impl<'a> Engine<'a> {
                         let cost = self.shared.lock(now, op);
                         self.workers[w].clock += cost;
                         self.workers[w].overhead_time += cost;
-                        self.shared.push_back(child);
+                        self.shared.push_back(child, NO_HOME);
                         let now = self.workers[w].clock;
                         self.wake_sleepers(now, 1);
                         // parent keeps running: loop continues
@@ -505,7 +574,8 @@ impl<'a> Engine<'a> {
                             self.workers[w].clock += cost;
                             self.workers[w].overhead_time += cost;
                         }
-                        self.pools[w].push_front(tid);
+                        let parent_home = self.arena.get(tid).home;
+                        self.pools[w].push_front(tid, parent_home);
                         let now = self.workers[w].clock;
                         if !free {
                             self.wake_sleepers(now, 1);
@@ -586,13 +656,12 @@ impl<'a> Engine<'a> {
         let cost = self.pools[target].lock(now, op);
         self.workers[w].clock += cost;
         self.workers[w].overhead_time += cost;
-        self.pools[target].push_back(child);
+        let home = self.arena.get(child).home;
+        self.pools[target].push_back(child, home);
         self.pushed_home += 1;
         if self.workers[target].sleeping {
-            self.workers[target].sleeping = false;
-            let t = (self.workers[w].clock + 120).max(self.workers[target].clock);
-            self.workers[target].clock = t;
-            self.schedule(target, t);
+            let now = self.workers[w].clock;
+            self.wake_worker(target, now);
         }
     }
 
@@ -625,12 +694,14 @@ impl<'a> Engine<'a> {
             }
             match pstate {
                 TaskState::Waiting => {
-                    // release the continuation to the owner's pool (tied)
-                    let owner = {
+                    // release the continuation: tied (owner's pool), or —
+                    // for placing schedulers — wherever the resume hook
+                    // sends it
+                    let (owner, home) = {
                         let pi = self.arena.get_mut(p);
                         pi.state = TaskState::Post;
                         pi.cursor = 0;
-                        pi.owner as usize
+                        (pi.owner as usize, pi.home)
                     };
                     if self.desc.shared_queue() {
                         let op = self.mem.cost_model().shared_queue_op;
@@ -638,20 +709,65 @@ impl<'a> Engine<'a> {
                         let cost = self.shared.lock(now, op);
                         self.workers[w].clock += cost;
                         self.workers[w].overhead_time += cost;
-                        self.shared.push_back(p);
-                    } else {
-                        if !free {
-                            let op =
-                                self.mem.cost_model().queue_op + self.workers[w].rt_penalty;
-                            let now = self.workers[w].clock;
-                            let cost = self.pools[owner].lock(now, op);
-                            self.workers[w].clock += cost;
-                            self.workers[w].overhead_time += cost;
-                        }
-                        self.pools[owner].push_front(p);
+                        self.shared.push_back(p, NO_HOME);
+                        let now = self.workers[w].clock;
+                        self.wake_sleepers(now, 1);
+                        return;
                     }
+                    // Resume hook (places opt-in): the continuation may
+                    // be released to a worker on the data's home node
+                    // instead of the first owner — the post phase
+                    // combines the very pages the affinity hint named.
+                    let mut target = owner;
+                    if self.desc.places {
+                        let rctx = ResumeCtx {
+                            releaser: w,
+                            owner,
+                            owner_node: self.topo.node_of(self.workers[owner].core),
+                            home: (home != NO_HOME).then_some(home as usize),
+                        };
+                        if let Placement::HomeNode(node) = self.sched.resume(&rctx) {
+                            if let Some(t) = self.home_worker(node) {
+                                if t != owner {
+                                    target = t;
+                                    self.homed_resumes += 1;
+                                }
+                            }
+                        }
+                    }
+                    if !free {
+                        // a redirected release pays the same per-hop
+                        // transfer push_home does; the tied release
+                        // keeps its flat queue-op cost
+                        let cm = self.mem.cost_model();
+                        let mut op = cm.queue_op + self.workers[w].rt_penalty;
+                        if target != owner {
+                            op += self.thops[w][target] as Time * cm.steal_per_hop;
+                        }
+                        let now = self.workers[w].clock;
+                        let cost = self.pools[target].lock(now, op);
+                        self.workers[w].clock += cost;
+                        self.workers[w].overhead_time += cost;
+                    }
+                    self.pools[target].push_front(p, home);
                     let now = self.workers[w].clock;
-                    self.wake_sleepers(now, 1);
+                    // Wake-targeting: when the engine knows who should
+                    // run the continuation — a homed release, a placing
+                    // scheduler, or one whose bounded sweeps might never
+                    // probe the owner's pool (full_sweep = false) — the
+                    // release wakes that worker directly.  The old
+                    // unconditional round-robin signal could rouse a
+                    // worker that never finds the task, stranding it on
+                    // the liveness net and charging phantom steal
+                    // overhead.  Stock full-sweep schedulers keep the
+                    // round-robin futex-style signal, byte-identically.
+                    if (target != owner || self.desc.places || !self.desc.full_sweep)
+                        && self.workers[target].sleeping
+                    {
+                        self.wake_worker(target, now);
+                    } else {
+                        self.wake_sleepers(now, 1);
+                    }
                     return;
                 }
                 TaskState::WaitingFinal => {
@@ -687,6 +803,8 @@ impl<'a> Engine<'a> {
             mean_steal_hops: if steals == 0 { 0.0 } else { steal_hops as f64 / steals as f64 },
             pushed_home: self.pushed_home,
             affinity_hits: self.affinity_hits,
+            affine_steals: self.affine_steals,
+            homed_resumes: self.homed_resumes,
             lock_wait_total,
             shared_lock_wait: self.shared.lock_wait,
             shared_ops: self.shared.ops,

@@ -4,7 +4,8 @@
 //! * [`pool`]     — lockable task pools (contention via busy horizons);
 //! * [`priority`] — §IV core-priority allocation (Figs 2–4);
 //! * [`binding`]  — thread→core binding policies (baseline vs NUMA-aware);
-//! * [`sched`]    — the five schedulers (bf/cilk/wf + DFWSPT/DFWSRPT);
+//! * [`sched`]    — the pluggable scheduler trait + registry (stock NANOS
+//!   strategies, DFWSPT/DFWSRPT, and the locality strategies);
 //! * [`engine`]   — deterministic discrete-event execution engine;
 //! * [`runtime`]  — the assembled [`runtime::Runtime`] façade.
 

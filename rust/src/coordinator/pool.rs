@@ -16,7 +16,7 @@
 
 use std::collections::VecDeque;
 
-use crate::coordinator::task::TaskId;
+use crate::coordinator::task::{TaskId, NO_HOME};
 use crate::util::{Time, US};
 
 /// Utilization-averaging window.
@@ -29,9 +29,19 @@ const MAX_CONTENDERS: f64 = 16.0;
 const MAX_RHO: f64 = 0.95;
 
 /// A lockable task container (deque or FIFO discipline chosen by caller).
+///
+/// Every entry carries its task's cached home-node tag
+/// ([`crate::coordinator::task::TaskInst::home`]), and the pool keeps a
+/// per-node count of resident tags — the O(1) "does this victim hold
+/// work homed near me?" summary steal-bias hooks read without scanning
+/// the deque.  Under stock schedulers every tag is [`NO_HOME`] and the
+/// summary stays all-zero.
 #[derive(Debug, Default)]
 pub struct Pool {
-    items: VecDeque<TaskId>,
+    items: VecDeque<(TaskId, u8)>,
+    /// Per-node count of resident tasks' home tags (grown on demand;
+    /// [`NO_HOME`] entries are not counted).
+    homed: Vec<u32>,
     /// Lock demand (inflated op durations) within the current epoch.
     epoch: u64,
     used: Time,
@@ -53,8 +63,14 @@ impl Pool {
             self.ops += 1;
             return 0; // overhead-free serial baseline
         }
+        // Workers' clocks legitimately skew within a quantum, so ops can
+        // arrive from an *older* epoch than the newest one seen.  Only a
+        // genuinely newer epoch opens a fresh window; a stale-epoch op is
+        // charged against the current window instead of zeroing it (the
+        // old `!=` reset erased the epoch's accumulated demand and
+        // undercounted convoy costs for every later op).
         let epoch = now / EPOCH;
-        if epoch != self.epoch {
+        if epoch > self.epoch {
             self.epoch = epoch;
             self.used = 0;
         }
@@ -70,23 +86,54 @@ impl Pool {
     }
 
     #[inline]
-    pub fn push_front(&mut self, t: TaskId) {
-        self.items.push_front(t);
+    fn note_push(&mut self, home: u8) {
+        if home != NO_HOME {
+            let node = home as usize;
+            if self.homed.len() <= node {
+                self.homed.resize(node + 1, 0);
+            }
+            self.homed[node] += 1;
+        }
     }
 
     #[inline]
-    pub fn push_back(&mut self, t: TaskId) {
-        self.items.push_back(t);
+    fn note_pop(&mut self, home: u8) {
+        if home != NO_HOME {
+            self.homed[home as usize] -= 1;
+        }
+    }
+
+    #[inline]
+    pub fn push_front(&mut self, t: TaskId, home: u8) {
+        self.note_push(home);
+        self.items.push_front((t, home));
+    }
+
+    #[inline]
+    pub fn push_back(&mut self, t: TaskId, home: u8) {
+        self.note_push(home);
+        self.items.push_back((t, home));
     }
 
     #[inline]
     pub fn pop_front(&mut self) -> Option<TaskId> {
-        self.items.pop_front()
+        let (t, home) = self.items.pop_front()?;
+        self.note_pop(home);
+        Some(t)
     }
 
     #[inline]
     pub fn pop_back(&mut self) -> Option<TaskId> {
-        self.items.pop_back()
+        let (t, home) = self.items.pop_back()?;
+        self.note_pop(home);
+        Some(t)
+    }
+
+    /// Resident tasks homed on `node` — the per-node summary steal-bias
+    /// hooks consult (a word read, no deque scan).
+    #[inline]
+    pub fn homed_count(&self, node: usize) -> u32 {
+        self.homed.get(node).copied().unwrap_or(0)
     }
 
     #[inline]
@@ -107,14 +154,34 @@ mod tests {
     #[test]
     fn deque_discipline() {
         let mut p = Pool::new();
-        p.push_front(1);
-        p.push_front(2);
-        p.push_back(3);
+        p.push_front(1, NO_HOME);
+        p.push_front(2, NO_HOME);
+        p.push_back(3, NO_HOME);
         // order: [2, 1, 3]
         assert_eq!(p.pop_front(), Some(2));
         assert_eq!(p.pop_back(), Some(3));
         assert_eq!(p.pop_front(), Some(1));
         assert_eq!(p.pop_front(), None);
+    }
+
+    #[test]
+    fn home_summary_tracks_resident_tags() {
+        let mut p = Pool::new();
+        p.push_front(1, 2);
+        p.push_back(2, 2);
+        p.push_back(3, 0);
+        p.push_back(4, NO_HOME); // untagged tasks are never counted
+        assert_eq!(p.homed_count(2), 2);
+        assert_eq!(p.homed_count(0), 1);
+        assert_eq!(p.homed_count(1), 0);
+        assert_eq!(p.homed_count(99), 0, "unseen nodes read as empty");
+        assert_eq!(p.pop_front(), Some(1));
+        assert_eq!(p.homed_count(2), 1);
+        assert_eq!(p.pop_back(), Some(4));
+        assert_eq!(p.pop_back(), Some(3));
+        assert_eq!(p.homed_count(0), 0);
+        assert_eq!(p.pop_back(), Some(2));
+        assert_eq!(p.homed_count(2), 0, "summary drains with the deque");
     }
 
     #[test]
@@ -162,5 +229,27 @@ mod tests {
         let mut p = Pool::new();
         assert_eq!(p.lock(0, 0), 0);
         assert_eq!(p.lock_wait, 0);
+    }
+
+    /// Regression: an op arriving from an *older* epoch (worker clocks
+    /// skew within a quantum) must charge into the current window, not
+    /// reset it — the old `epoch != self.epoch` test zeroed `used` and
+    /// erased the epoch's accumulated demand.
+    #[test]
+    fn stale_epoch_op_keeps_demand_monotone() {
+        let ns = crate::util::NS;
+        let d = 4000 * ns; // a fifth of the 20 us window per op
+        let mut p = Pool::new();
+        let c1 = p.lock(5 * EPOCH, d); // opens epoch 5, uncontended
+        let c2 = p.lock(4 * EPOCH, d); // stale op: sees c1's demand
+        let c3 = p.lock(5 * EPOCH + 1, d); // back in epoch 5: sees both
+        assert!(c2 > c1, "stale op must pay for current demand: {c1} vs {c2}");
+        assert!(c3 > c2, "demand must stay monotone within the window: {c2} vs {c3}");
+        // with the old reset bug c3 re-opened the window and priced like
+        // the very first op — pin the repaired behaviour explicitly
+        assert!(c3 > c1, "window must survive a stale-epoch op: {c1} vs {c3}");
+        // a genuinely newer epoch still starts fresh
+        let fresh = p.lock(9 * EPOCH, d);
+        assert_eq!(fresh, c1, "newer epochs reset the window");
     }
 }

@@ -35,9 +35,7 @@ impl Scheduler for BreadthFirst {
             queue: QueueKind::SharedFifo,
             steal_end: StealEnd::Back,
             child_first: false,
-            overhead_free: false,
-            places: false,
-            min_hint_bytes: 0,
+            ..SchedDescriptor::WORK_STEALING
         }
     }
 

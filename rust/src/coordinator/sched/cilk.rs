@@ -16,7 +16,7 @@
 //! gaps visible across the paper's figures.
 
 use super::wf::random_order;
-use super::{QueueKind, SchedDescriptor, Scheduler, StealEnd, VictimList};
+use super::{SchedDescriptor, Scheduler, StealEnd, VictimList};
 use crate::util::SplitMix64;
 
 /// The Cilk-style scheduler.
@@ -29,12 +29,8 @@ impl Scheduler for CilkBased {
 
     fn descriptor(&self) -> SchedDescriptor {
         SchedDescriptor {
-            queue: QueueKind::PerWorker,
             steal_end: StealEnd::Front,
-            child_first: true,
-            overhead_free: false,
-            places: false,
-            min_hint_bytes: 0,
+            ..SchedDescriptor::WORK_STEALING
         }
     }
 

@@ -33,7 +33,13 @@ impl Scheduler for Hierarchical {
     }
 
     fn descriptor(&self) -> SchedDescriptor {
-        SchedDescriptor::WORK_STEALING
+        SchedDescriptor {
+            // non-delegate sweeps stop at the node boundary, so the
+            // engine must wake a sleeping tied-continuation owner
+            // directly (a round-robin-woken worker might never probe it)
+            full_sweep: false,
+            ..SchedDescriptor::WORK_STEALING
+        }
     }
 
     fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {

@@ -22,11 +22,20 @@
 //!   is resident yet), the spawn stays on today's child-first path, so
 //!   well-placed graphs schedule exactly like `dfwsrpt`.
 //!
-//! Stealing stays NUMA-aware (§VI.B random priority list): pushed-home
-//! queues drain locally first, and any imbalance is corrected by
-//! closest-first steals.
+//! Stealing is NUMA-aware twice over: the base sweep is the §VI.B random
+//! priority list, and on top of it the [`Scheduler::steal_bias`] hook
+//! moves victims whose pools hold tasks homed on the thief's node to the
+//! front of the sweep (`steal_bias=0` turns the reorder off).  Tied
+//! continuations follow the data too: the [`Scheduler::resume`] hook
+//! releases a waiting task's continuation to a worker on its home node
+//! when the first owner sits elsewhere (`homed_resume=0` restores the
+//! strict resume-on-first-owner behaviour) — the post phase typically
+//! combines the very pages the hint named.
 
-use super::{dfwsrpt, Placement, SchedDescriptor, Scheduler, SpawnCtx, VictimList};
+use super::{
+    bias_affine_first, dfwsrpt, Placement, ResumeCtx, SchedDescriptor, Scheduler, SpawnCtx,
+    StealCand, VictimList,
+};
 use crate::util::SplitMix64;
 
 /// Default hint-size floor in KiB (4 pages).
@@ -36,11 +45,21 @@ pub const DEFAULT_MIN_KB: f64 = 16.0;
 pub struct NumaHome {
     /// Minimum affinity-hint size (bytes) that may trigger a push.
     min_bytes: u64,
+    /// Reorder steal sweeps affine-victims-first?
+    steal_bias: bool,
+    /// Release tied continuations toward their data's home node?
+    homed_resume: bool,
 }
 
 impl NumaHome {
+    /// Placement with both locality extensions on (the registry default).
     pub fn new(min_kb: f64) -> Self {
-        Self { min_bytes: (min_kb * 1024.0) as u64 }
+        Self::configured(min_kb, true, true)
+    }
+
+    /// Placement with explicit steal-bias / homed-resume switches.
+    pub fn configured(min_kb: f64, steal_bias: bool, homed_resume: bool) -> Self {
+        Self { min_bytes: (min_kb * 1024.0) as u64, steal_bias, homed_resume }
     }
 }
 
@@ -50,7 +69,12 @@ impl Scheduler for NumaHome {
     }
 
     fn signature(&self) -> String {
-        format!("numa-home(min_kb={})", crate::util::fmt_f64(self.min_bytes as f64 / 1024.0))
+        format!(
+            "numa-home(homed_resume={};min_kb={};steal_bias={})",
+            self.homed_resume as u8,
+            crate::util::fmt_f64(self.min_bytes as f64 / 1024.0),
+            self.steal_bias as u8,
+        )
     }
 
     fn descriptor(&self) -> SchedDescriptor {
@@ -75,6 +99,22 @@ impl Scheduler for NumaHome {
         }
         match ctx.home {
             Some(node) if node != ctx.worker_node => Placement::HomeNode(node),
+            _ => Placement::LocalQueue,
+        }
+    }
+
+    fn steal_bias(&self, _thief_node: usize, cands: &mut Vec<StealCand>) {
+        if self.steal_bias {
+            bias_affine_first(cands);
+        }
+    }
+
+    fn resume(&self, ctx: &ResumeCtx) -> Placement {
+        if !self.homed_resume {
+            return Placement::LocalQueue;
+        }
+        match ctx.home {
+            Some(node) if node != ctx.owner_node => Placement::HomeNode(node),
             _ => Placement::LocalQueue,
         }
     }
@@ -153,11 +193,48 @@ mod tests {
     fn registry_builds_with_defaults_and_overrides() {
         let s = build(&SchedSpec::new("numa-home")).unwrap();
         assert_eq!(s.name(), "numa-home");
-        assert_eq!(s.signature(), "numa-home(min_kb=16)");
+        assert_eq!(s.signature(), "numa-home(homed_resume=1;min_kb=16;steal_bias=1)");
         let s = build(&SchedSpec::new("numa-home").with_param("min_kb", 4.0)).unwrap();
-        assert_eq!(s.signature(), "numa-home(min_kb=4)");
+        assert_eq!(s.signature(), "numa-home(homed_resume=1;min_kb=4;steal_bias=1)");
+        let s = build(
+            &SchedSpec::new("numa-home")
+                .with_param("steal_bias", 0.0)
+                .with_param("homed_resume", 0.0),
+        )
+        .unwrap();
+        assert_eq!(s.signature(), "numa-home(homed_resume=0;min_kb=16;steal_bias=0)");
         assert!(build(&SchedSpec::new("numa-home").with_param("min_kb", -1.0)).is_err());
         assert!(build(&SchedSpec::new("numa-home").with_param("bogus", 1.0)).is_err());
+        assert!(
+            build(&SchedSpec::new("numa-home").with_param("steal_bias", 0.5)).is_err(),
+            "flags are 0/1"
+        );
+    }
+
+    #[test]
+    fn steal_bias_prefers_affine_victims_and_respects_its_switch() {
+        let cand = |victim, affine| StealCand { victim, hops: 1, affine, queued: 2 };
+        let mut cands = vec![cand(3, 0), cand(5, 2), cand(1, 0)];
+        NumaHome::new(16.0).steal_bias(0, &mut cands);
+        assert_eq!(cands.iter().map(|c| c.victim).collect::<Vec<_>>(), vec![5, 3, 1]);
+        let mut cands = vec![cand(3, 0), cand(5, 2), cand(1, 0)];
+        NumaHome::configured(16.0, false, true).steal_bias(0, &mut cands);
+        assert_eq!(
+            cands.iter().map(|c| c.victim).collect::<Vec<_>>(),
+            vec![3, 5, 1],
+            "steal_bias=0 leaves the sweep untouched"
+        );
+    }
+
+    #[test]
+    fn resume_homes_continuations_unless_disabled() {
+        let rctx = |home, owner_node| ResumeCtx { releaser: 0, owner: 1, owner_node, home };
+        let s = NumaHome::new(16.0);
+        assert_eq!(s.resume(&rctx(Some(5), 0)), Placement::HomeNode(5));
+        assert_eq!(s.resume(&rctx(Some(3), 3)), Placement::LocalQueue, "owner already home");
+        assert_eq!(s.resume(&rctx(None, 0)), Placement::LocalQueue, "unhinted task");
+        let off = NumaHome::configured(16.0, true, false);
+        assert_eq!(off.resume(&rctx(Some(5), 0)), Placement::LocalQueue, "homed_resume=0");
     }
 
     #[test]

@@ -52,7 +52,13 @@ impl Scheduler for HopsThreshold {
     }
 
     fn descriptor(&self) -> SchedDescriptor {
-        SchedDescriptor::WORK_STEALING
+        SchedDescriptor {
+            // sweeps skip victims beyond the cap, so a round-robin-woken
+            // worker may never probe a tied continuation owner's pool:
+            // tell the engine to wake the owner directly instead
+            full_sweep: false,
+            ..SchedDescriptor::WORK_STEALING
+        }
     }
 
     fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {

@@ -24,6 +24,18 @@
 //!   a worker on its data's node; the parent keeps running).  Non-placing
 //!   schedulers never see the hook and stay byte-identical to the
 //!   pre-placement engine.
+//! * [`Scheduler::steal_bias`] — an optional *steal-side* locality hook
+//!   (also gated on [`SchedDescriptor::places`]): before a sweep, the
+//!   engine snapshots each victim's per-node resident-home summary into
+//!   [`StealCand`]s and lets the strategy reorder or filter them —
+//!   "steal from the victim holding work homed near me first", without
+//!   scanning any deque.  The default keeps the sweep untouched.
+//! * [`Scheduler::resume`] — an optional *tied-continuation* hook (gated
+//!   the same way): when a task's last child completes, the engine
+//!   offers the [`ResumeCtx`] (first owner + the task's cached home
+//!   node) and the strategy may answer [`Placement::HomeNode`] to
+//!   release the continuation to a worker on the data's node instead of
+//!   unconditionally to the first owner.
 //!
 //! | scheduler | queueing | steal end | victim selection |
 //! |---|---|---|---|
@@ -35,7 +47,8 @@
 //! | [`dfwsrpt`] §VI.B | per-worker deque, child-first | back | hop-ordered priority list, random within a distance group |
 //! | [`hops`]  `hops-threshold` | per-worker deque, child-first | back | near groups only (≤ `max_hops`), spill beyond on starvation |
 //! | [`hier`]  two-level | per-worker deque, child-first | back | node-local random first, ~one delegate per node (in expectation) probes remote nodes |
-//! | [`home`]  `numa-home` | per-worker deque, child-first, **push-to-home placement** | back | hop-ordered priority list, random within a distance group |
+//! | [`home`]  `numa-home` | per-worker deque, child-first, **push-to-home placement + homed resumes** | back | hop-ordered priority list, random within a distance group, **affine victims first** |
+//! | [`steal`] `numa-steal` | per-worker deque, child-first | back | hop-ordered priority list, random within a distance group, **affine victims first** (steal-side only: no pushes, no homed resumes) |
 //! | [`adaptive`] | per-worker deque, child-first | back | starts uniform random, switches to the priority list when the remote-steal ratio crosses `remote_ratio` |
 //!
 //! ## Adding a scheduler (~30 lines)
@@ -96,6 +109,7 @@ pub mod hier;
 pub mod home;
 pub mod hops;
 pub mod serial;
+pub mod steal;
 pub mod wf;
 
 use std::sync::{Arc, Mutex, OnceLock};
@@ -137,10 +151,19 @@ pub struct SchedDescriptor {
     /// Charge no runtime overheads (the serial measurement baseline).
     pub overhead_free: bool,
     /// Consult [`Scheduler::place`] on every spawn?  When false (the
-    /// stock default) the engine skips placement entirely — no home-node
-    /// query, no hook call — which is what keeps non-placing schedulers
-    /// byte-identical to the pre-placement engine.
+    /// stock default) the engine skips the locality hooks entirely — no
+    /// home-node query, no `place`/`steal_bias`/`resume` call — which is
+    /// what keeps non-placing schedulers byte-identical to the
+    /// pre-placement engine.
     pub places: bool,
+    /// Does [`Scheduler::victim_order`] always emit *every* victim?
+    /// Stock strategies guarantee it (true); bounded / hierarchical
+    /// strategies that may skip victims set false, which tells the
+    /// engine a round-robin-woken worker might never probe a tied
+    /// continuation owner's pool — so the owner is woken directly when
+    /// it sleeps, instead of leaving the continuation to the liveness
+    /// net and charging phantom steal overhead.
+    pub full_sweep: bool,
     /// Smallest affinity hint (bytes) worth resolving: below this the
     /// engine skips the home-node page-table sample *and* the hook call
     /// (the spawn stays on the local path).  Placement strategies with a
@@ -159,6 +182,7 @@ impl SchedDescriptor {
         child_first: true,
         overhead_free: false,
         places: false,
+        full_sweep: true,
         min_hint_bytes: 0,
     };
 
@@ -195,6 +219,48 @@ pub struct SpawnCtx {
     /// Majority owner of the hint's resident pages
     /// ([`crate::simnuma::MemSim::home_node`]); `None` when unhinted or
     /// nothing is resident yet.
+    pub home: Option<usize>,
+}
+
+/// One victim's locality snapshot, offered to [`Scheduler::steal_bias`]
+/// before a sweep.  `affine` comes from the victim pool's per-node
+/// resident-home summary ([`crate::coordinator::pool::Pool::homed_count`])
+/// — a word read, not a deque scan — so consulting it per victim keeps
+/// the sweep O(victims).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StealCand {
+    /// Victim thread id (as emitted by [`Scheduler::victim_order`]).
+    pub victim: usize,
+    /// Interconnect hops from the thief to this victim.
+    pub hops: u8,
+    /// Tasks in the victim's pool homed on the *thief's* node.
+    pub affine: u32,
+    /// Victim pool length (affine + everything else).
+    pub queued: u32,
+}
+
+/// Stable affine-first reorder: victims whose pools hold tasks homed on
+/// the thief's node move to the front, preserving the sweep's relative
+/// order within both classes — the shared locality bias behind
+/// [`home`]/[`steal`].  A stable partition (not a sort by count): the
+/// underlying strategy's distance/randomization structure is preserved,
+/// only the affine/non-affine interleaving changes.
+pub fn bias_affine_first(cands: &mut [StealCand]) {
+    cands.sort_by_key(|c| c.affine == 0);
+}
+
+/// Everything a [`Scheduler::resume`] decision can see about one tied
+/// continuation release (the task's last child just completed).
+#[derive(Clone, Copy, Debug)]
+pub struct ResumeCtx {
+    /// Worker that completed the last child (pays the release queue op).
+    pub releaser: usize,
+    /// Worker that last ran the task — the tied resume target today.
+    pub owner: usize,
+    /// NUMA node of the owner's core.
+    pub owner_node: usize,
+    /// The task's home node, cached at spawn time from its affinity
+    /// hint; `None` when the task was unhinted or nothing was resident.
     pub home: Option<usize>,
 }
 
@@ -256,6 +322,27 @@ pub trait Scheduler {
     fn place(&self, _ctx: &SpawnCtx) -> Placement {
         Placement::LocalQueue
     }
+
+    /// Reorder or filter a steal sweep by the victims' locality
+    /// snapshots.  Only called when the descriptor sets
+    /// [`SchedDescriptor::places`] and the sweep is non-empty; `cands`
+    /// arrives in the [`Scheduler::victim_order`] order and the engine
+    /// probes whatever order (and subset) is left in it.  Dropping
+    /// victims makes the sweep partial — the engine's liveness net still
+    /// guarantees progress.  The default leaves the sweep untouched, so
+    /// non-placing schedulers never pay for (or observe) the snapshot.
+    fn steal_bias(&self, _thief_node: usize, _cands: &mut Vec<StealCand>) {}
+
+    /// Decide where a tied task's continuation is released when its last
+    /// child completes.  Only called when the descriptor sets
+    /// [`SchedDescriptor::places`]; the default preserves the tied-task
+    /// contract (resume on the first owner).  Returning
+    /// [`Placement::HomeNode`] releases the continuation to a worker on
+    /// that node — the post phase runs where the data lives — and that
+    /// worker becomes the new owner when it starts the task.
+    fn resume(&self, _ctx: &ResumeCtx) -> Placement {
+        Placement::LocalQueue
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -300,6 +387,15 @@ impl SchedParams {
             bail!("scheduler parameter '{key}' must be a non-negative integer, got {v}");
         }
         Ok(v as usize)
+    }
+
+    /// A declared on/off parameter: exactly 0 or 1.
+    pub fn req_flag(&self, key: &str) -> Result<bool> {
+        let v = self.req(key)?;
+        if v != 0.0 && v != 1.0 {
+            bail!("scheduler parameter '{key}' must be 0 or 1, got {v}");
+        }
+        Ok(v == 1.0)
     }
 }
 
@@ -413,13 +509,42 @@ fn builtin_entries() -> Vec<Arc<Entry>> {
                     "min_kb",
                     home::DEFAULT_MIN_KB,
                     "ignore affinity hints smaller than this many KiB",
+                )
+                .param(
+                    "steal_bias",
+                    1.0,
+                    "probe victims holding tasks homed on the thief's node first (0 disables)",
+                )
+                .param(
+                    "homed_resume",
+                    1.0,
+                    "release tied continuations to their data's home node (0 disables)",
                 ),
             |p| {
                 let min_kb = p.req("min_kb")?;
                 if min_kb < 0.0 {
                     bail!("min_kb={min_kb} must be non-negative");
                 }
-                Ok(Box::new(home::NumaHome::new(min_kb)))
+                Ok(Box::new(home::NumaHome::configured(
+                    min_kb,
+                    p.req_flag("steal_bias")?,
+                    p.req_flag("homed_resume")?,
+                )))
+            },
+        ),
+        entry(
+            SchedulerInfo::new("numa-steal", "steal-side-only locality: affine victims first")
+                .param(
+                    "min_kb",
+                    home::DEFAULT_MIN_KB,
+                    "ignore affinity hints smaller than this many KiB",
+                ),
+            |p| {
+                let min_kb = p.req("min_kb")?;
+                if min_kb < 0.0 {
+                    bail!("min_kb={min_kb} must be non-negative");
+                }
+                Ok(Box::new(steal::NumaSteal::new(min_kb)))
             },
         ),
         entry(
@@ -507,6 +632,18 @@ pub fn build(spec: &SchedSpec) -> Result<Box<dyn Scheduler>> {
             );
         };
         slot.1 = *value;
+    }
+    // Factories range-check their own parameters but f64 casts swallow
+    // NaN/inf silently (`NaN as u64 == 0` would turn numa-home's hint
+    // floor off); reject non-finite values for every scheduler here,
+    // before any factory sees them.
+    for (key, value) in &params.pairs {
+        if !value.is_finite() {
+            bail!(
+                "scheduler '{}' parameter '{key}' must be finite, got {value}",
+                entry.info.name
+            );
+        }
     }
     (entry.factory)(&params)
         .with_context(|| format!("building scheduler '{}'", entry.info.name))
@@ -890,7 +1027,7 @@ mod tests {
 
     /// Builtin names, fixed (not `scheduler_names()`: other tests may
     /// register extra schedulers concurrently).
-    const BUILTINS: [&str; 10] = [
+    const BUILTINS: [&str; 11] = [
         "serial",
         "bf",
         "cilk",
@@ -900,6 +1037,7 @@ mod tests {
         "hops-threshold",
         "hier",
         "numa-home",
+        "numa-steal",
         "adaptive",
     ];
 
@@ -1003,9 +1141,45 @@ mod tests {
         for stock_name in ["serial", "bf", "cilk", "wf", "dfwspt", "dfwsrpt"] {
             assert!(names.contains(&stock_name.to_string()), "{names:?}");
         }
-        for new_name in ["hops-threshold", "hier", "numa-home", "adaptive"] {
+        for new_name in ["hops-threshold", "hier", "numa-home", "numa-steal", "adaptive"] {
             assert!(names.contains(&new_name.to_string()), "{names:?}");
         }
+    }
+
+    /// Satellite regression: NaN/inf parameter values are rejected at
+    /// `build()` for every scheduler (a NaN `min_kb` used to cast to 0
+    /// and silently disable numa-home's hint floor; the factories only
+    /// range-checked negatives).
+    #[test]
+    fn non_finite_params_rejected_for_every_scheduler() {
+        for (name, param) in [
+            ("numa-home", "min_kb"),
+            ("numa-steal", "min_kb"),
+            ("hops-threshold", "max_hops"),
+            ("adaptive", "remote_ratio"),
+        ] {
+            for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+                let spec = SchedSpec::new(name).with_param(param, bad);
+                let err = format!("{:#}", build(&spec).unwrap_err());
+                assert!(err.contains("finite"), "{name}.{param}={bad}: {err}");
+            }
+        }
+        // finite values still build
+        assert!(build(&SchedSpec::new("numa-home").with_param("min_kb", 4.0)).is_ok());
+    }
+
+    #[test]
+    fn bias_affine_first_is_a_stable_partition() {
+        let cand = |victim, affine| StealCand { victim, hops: 1, affine, queued: affine + 1 };
+        let mut cands = vec![cand(4, 0), cand(2, 1), cand(7, 0), cand(1, 3), cand(5, 0)];
+        bias_affine_first(&mut cands);
+        let order: Vec<usize> = cands.iter().map(|c| c.victim).collect();
+        // affine victims lead, both classes keep their relative order
+        assert_eq!(order, vec![2, 1, 4, 7, 5]);
+        // all-zero summaries leave the sweep untouched
+        let mut plain = vec![cand(3, 0), cand(9, 0), cand(0, 0)];
+        bias_affine_first(&mut plain);
+        assert_eq!(plain.iter().map(|c| c.victim).collect::<Vec<_>>(), vec![3, 9, 0]);
     }
 
     #[test]

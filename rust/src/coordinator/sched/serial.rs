@@ -5,7 +5,7 @@
 //! calls "serial execution time".  It never steals (there is nobody to
 //! steal from — `RunSpec` validation pins it to one thread).
 
-use super::{QueueKind, SchedDescriptor, Scheduler, StealEnd, VictimList};
+use super::{SchedDescriptor, Scheduler, VictimList};
 use crate::util::SplitMix64;
 
 /// The overhead-free single-thread baseline.
@@ -18,12 +18,8 @@ impl Scheduler for Serial {
 
     fn descriptor(&self) -> SchedDescriptor {
         SchedDescriptor {
-            queue: QueueKind::PerWorker,
-            steal_end: StealEnd::Back,
-            child_first: true,
             overhead_free: true,
-            places: false,
-            min_hint_bytes: 0,
+            ..SchedDescriptor::WORK_STEALING
         }
     }
 

@@ -1,0 +1,128 @@
+//! `numa-steal` — steal-side-only locality: affine victims first.
+//!
+//! The paper's placement strategy ([`super::home`]) moves *work toward
+//! its data* with push-to-home spawns; this strategy isolates the other
+//! lever the same infrastructure enables: leave every spawn on the stock
+//! child-first path (no pushes, no homed resumes) and only *bias the
+//! steal sweep* — when a worker goes idle, probe the victims whose pools
+//! hold tasks homed on the thief's own node before anyone else (Wittmann
+//! & Hager's task-to-data affinity, arXiv:1101.0093, applied at steal
+//! time).  A biased thief tends to pull work whose pages already live
+//! next to it, so the steal itself repairs locality instead of eroding
+//! it — without ever paying the cross-node push traffic `numa-home`
+//! risks on badly-hinted graphs.
+//!
+//! The base sweep is the §VI.B random priority list, so with a cold page
+//! table (no hints resolved yet, all summaries zero) `numa-steal`
+//! degenerates to exactly [`super::dfwsrpt`]'s behaviour.  The strategy
+//! opts into [`SchedDescriptor::places`] purely so the engine resolves
+//! and caches spawn-time home tags (that is what feeds the pool
+//! summaries); its [`Scheduler::place`] hook keeps the default
+//! `LocalQueue` answer, so no task is ever pushed anywhere.
+//!
+//! Ablation triangle: `dfwsrpt` (no locality) vs `numa-steal` (steal
+//! side only) vs `numa-home` (both sides) separates how much of the
+//! remote-ratio drop comes from biased steals alone.
+
+use super::{
+    bias_affine_first, dfwsrpt, SchedDescriptor, Scheduler, StealCand, VictimList,
+};
+use crate::util::SplitMix64;
+
+/// Locality-biased stealing over §VI.B victim selection.
+pub struct NumaSteal {
+    /// Minimum affinity-hint size (bytes) worth resolving a home for.
+    min_bytes: u64,
+}
+
+impl NumaSteal {
+    pub fn new(min_kb: f64) -> Self {
+        Self { min_bytes: (min_kb * 1024.0) as u64 }
+    }
+}
+
+impl Scheduler for NumaSteal {
+    fn name(&self) -> &str {
+        "numa-steal"
+    }
+
+    fn signature(&self) -> String {
+        format!("numa-steal(min_kb={})", crate::util::fmt_f64(self.min_bytes as f64 / 1024.0))
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor {
+            // opt into the locality hooks: the engine resolves + caches
+            // home tags (feeding the pool summaries steal_bias reads)
+            // and routes sweeps through the hook.  place() stays the
+            // default LocalQueue, so spawns are untouched.
+            places: true,
+            min_hint_bytes: self.min_bytes,
+            ..SchedDescriptor::WORK_STEALING
+        }
+    }
+
+    fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        dfwsrpt::order(vl, rng, out);
+    }
+
+    fn steal_bias(&self, _thief_node: usize, cands: &mut Vec<StealCand>) {
+        bias_affine_first(cands);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+    use super::*;
+    use crate::simnuma::Region;
+
+    #[test]
+    fn descriptor_opts_into_hooks_but_never_pushes() {
+        let s = NumaSteal::new(16.0);
+        let d = s.descriptor();
+        assert!(d.places, "hooks require the opt-in");
+        assert!(d.full_sweep, "the base sweep visits every victim");
+        assert_eq!(d.min_hint_bytes, 16 * 1024);
+        // the place hook keeps the stock answer: no push-to-home
+        let ctx = SpawnCtx {
+            worker: 0,
+            worker_node: 0,
+            affinity: Region { addr: 1 << 20, bytes: 1 << 20 },
+            home: Some(5),
+        };
+        assert_eq!(s.place(&ctx), Placement::LocalQueue);
+        // and continuations stay tied to their first owner
+        let rctx = ResumeCtx { releaser: 0, owner: 1, owner_node: 0, home: Some(5) };
+        assert_eq!(s.resume(&rctx), Placement::LocalQueue);
+    }
+
+    #[test]
+    fn sweeps_like_dfwsrpt_then_biases_affine_first() {
+        let vl = VictimList { groups: vec![(0, vec![1]), (2, vec![2, 3])] };
+        for seed in 0..8 {
+            let mut rng_a = SplitMix64::new(seed);
+            let mut rng_b = SplitMix64::new(seed);
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            NumaSteal::new(16.0).victim_order(&vl, &mut rng_a, &mut a);
+            dfwsrpt::order(&vl, &mut rng_b, &mut b);
+            assert_eq!(a, b, "base order is §VI.B");
+        }
+        let cand = |victim, affine| StealCand { victim, hops: 0, affine, queued: 3 };
+        let mut cands = vec![cand(1, 0), cand(2, 0), cand(3, 4)];
+        NumaSteal::new(16.0).steal_bias(0, &mut cands);
+        assert_eq!(cands.iter().map(|c| c.victim).collect::<Vec<_>>(), vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn registry_builds_with_defaults_and_overrides() {
+        let s = build(&SchedSpec::new("numa-steal")).unwrap();
+        assert_eq!(s.name(), "numa-steal");
+        assert_eq!(s.signature(), "numa-steal(min_kb=16)");
+        let s = build(&SchedSpec::new("numa-steal").with_param("min_kb", 0.0)).unwrap();
+        assert_eq!(s.signature(), "numa-steal(min_kb=0)");
+        assert!(build(&SchedSpec::new("numa-steal").with_param("min_kb", -1.0)).is_err());
+        assert!(build(&SchedSpec::new("numa-steal").with_param("bogus", 1.0)).is_err());
+    }
+}

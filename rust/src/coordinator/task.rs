@@ -18,6 +18,13 @@ use crate::util::Time;
 /// Index into the [`TaskArena`].
 pub type TaskId = u32;
 
+/// Sentinel for [`TaskInst::home`]: no resolved home node.  Tasks get a
+/// real tag only when a placement-aware scheduler is active (the engine
+/// resolves the spawn's affinity hint once, at spawn time); under stock
+/// schedulers every task keeps the sentinel, so home-keyed bookkeeping
+/// (pool summaries, affine-steal counting) is provably inert for them.
+pub const NO_HOME: u8 = u8::MAX;
+
 /// Plain-old-data task descriptor; `kind`/`args` are interpreted by the
 /// owning [`Workload`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -198,6 +205,11 @@ pub struct TaskInst {
     pub parent: Option<TaskId>,
     /// Worker that first ran the task (tied-task resume target).
     pub owner: u16,
+    /// Home NUMA node of the task's affinity region, resolved once at
+    /// spawn time by the engine ([`NO_HOME`] when unhinted, unresolved,
+    /// or the scheduler does not place).  Cached so steal-bias summaries
+    /// and continuation homing never re-sample the page table.
+    pub home: u8,
     pub state: TaskState,
     pub pending_children: u32,
     pub body: Body,
@@ -235,6 +247,7 @@ impl TaskArena {
                 desc,
                 parent,
                 owner: u16::MAX,
+                home: NO_HOME,
                 state: TaskState::Fresh,
                 pending_children: 0,
                 body,
@@ -248,6 +261,7 @@ impl TaskArena {
                 desc,
                 parent,
                 owner: u16::MAX,
+                home: NO_HOME,
                 state: TaskState::Fresh,
                 pending_children: 0,
                 body: Body::default(),
@@ -355,11 +369,13 @@ mod tests {
     fn arena_reuses_slots() {
         let mut a = TaskArena::new();
         let t0 = a.create(TaskDesc::leaf(0), None, 0);
+        a.get_mut(t0).home = 3;
         a.get_mut(t0).state = TaskState::Done;
         a.release(t0);
         let t1 = a.create(TaskDesc::leaf(1), None, 0);
         assert_eq!(t0, t1, "slot reused");
         assert_eq!(a.get(t1).gen, 1, "generation bumped");
+        assert_eq!(a.get(t1).home, NO_HOME, "home tag must not leak across slot reuse");
         assert_eq!(a.total_created(), 2);
         assert_eq!(a.live(), 1);
     }

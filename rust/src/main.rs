@@ -173,7 +173,9 @@ commands:
                              --mem takes a page policy: first-touch,
                              interleave, bind:node=N, next-touch
                              [:max_moves=N] — pair --mem with
-                             --sched numa-home for push-to-home placement)
+                             --sched numa-home for push-to-home placement,
+                             or --sched numa-steal for steal-side-only
+                             locality bias)
   figure --id figN | --all  regenerate paper figures (speedup tables)
          [--out dir] [--size s|m|l] [--seed S] [--topo T] [--cost k=v,...]
          [--json]
@@ -192,7 +194,25 @@ flags accept both `--key value` and `--key=value`.
 /// their defaults.
 fn cmd_list() -> Result<()> {
     println!("benchmarks : {}", bots::NAMES.join(" "));
-    println!("schedulers : {}", sched::scheduler_names().join(" "));
+    // schedulers carry their declared tunables with defaults, like the
+    // page-policy line: `numa-home(min_kb=16;steal_bias=1;…)` reads as
+    // "parameters and what you get without overrides"
+    let scheds: Vec<String> = sched::scheduler_infos()
+        .iter()
+        .map(|info| {
+            if info.params.is_empty() {
+                info.name.clone()
+            } else {
+                let params: Vec<String> = info
+                    .params
+                    .iter()
+                    .map(|p| format!("{}={}", p.name, numanos::util::fmt_f64(p.default)))
+                    .collect();
+                format!("{}({})", info.name, params.join(";"))
+            }
+        })
+        .collect();
+    println!("schedulers : {}", scheds.join(" "));
     // page policies carry their declared parameters, like `topo` shows
     // the fabric: `bind(node=0)` reads as "parameter node, default 0"
     let mems: Vec<String> = numanos::simnuma::page_policy_infos()

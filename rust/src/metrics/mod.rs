@@ -37,6 +37,14 @@ pub struct RunStats {
     /// floor) whose data was already home on the spawner's node — the
     /// locality fast path (0 for stock schedulers).
     pub affinity_hits: u64,
+    /// Successful steals whose stolen task was homed on the thief's node
+    /// — what steal-bias aims to maximize (0 for stock schedulers, whose
+    /// tasks carry no home tags).
+    pub affine_steals: u64,
+    /// Tied continuations a placing scheduler's resume hook released to
+    /// a home-node worker instead of the first owner (0 for stock
+    /// schedulers).
+    pub homed_resumes: u64,
     /// Total simulated time spent waiting on pool locks (contention).
     pub lock_wait_total: Time,
     pub shared_lock_wait: Time,
@@ -115,6 +123,8 @@ mod tests {
             mean_steal_hops: 1.0,
             pushed_home: 0,
             affinity_hits: 0,
+            affine_steals: 0,
+            homed_resumes: 0,
             lock_wait_total: 0,
             shared_lock_wait: 0,
             shared_ops: 0,

@@ -64,17 +64,19 @@ impl RunRecord {
 
     /// Long-form CSV header matching [`RunRecord::to_csv_row`].  The
     /// placement refactor added the `mem` axis column (after `bind`) and
-    /// the three placement counters at the tail; every pre-existing
-    /// column keeps its name, order and formatting.
+    /// the placement counters at the tail; the steal-bias/homed-resume
+    /// refactor appended `affine_steals` and `homed_resumes`.  Every
+    /// pre-existing column keeps its name, order and formatting.
     pub const CSV_HEADER: &'static str = "bench,size,policy,bind,mem,threads,topo,seed,\
          makespan,serial_makespan,speedup,tasks,steals,steal_hops,remote_pct,\
-         lock_wait,work,overhead,sim_events,pushed_home,affinity_hits,migrated_pages";
+         lock_wait,work,overhead,sim_events,pushed_home,affinity_hits,migrated_pages,\
+         affine_steals,homed_resumes";
 
     /// Deterministic CSV row (no host wall-clock — parallel and sequential
     /// sweep output must be byte-identical).
     pub fn to_csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{:.4},{},{},{:.3},{:.4},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{:.4},{},{},{:.3},{:.4},{},{},{},{},{},{},{},{},{}",
             self.spec.bench,
             self.spec.size.name(),
             self.spec.sched.name_sig(),
@@ -97,6 +99,8 @@ impl RunRecord {
             self.stats.pushed_home,
             self.stats.affinity_hits,
             self.stats.mem.migrated_pages,
+            self.stats.affine_steals,
+            self.stats.homed_resumes,
         )
     }
 
@@ -121,6 +125,8 @@ impl RunRecord {
             ("pushed_home", Json::from(self.stats.pushed_home)),
             ("affinity_hits", Json::from(self.stats.affinity_hits)),
             ("migrated_pages", Json::from(self.stats.mem.migrated_pages)),
+            ("affine_steals", Json::from(self.stats.affine_steals)),
+            ("homed_resumes", Json::from(self.stats.homed_resumes)),
         ])
     }
 }

@@ -60,9 +60,14 @@ fn list_prints_page_policies_with_parameters() {
     for needle in ["first-touch", "interleave", "bind(node=0)", "next-touch(max_moves=1)"] {
         assert!(mems.contains(needle), "missing {needle} in: {mems}");
     }
-    // the scheduler line picked up the placement strategy
+    // the scheduler line picked up the placement strategies, with their
+    // declared tunables and defaults (registry-derived, like mem)
     let scheds = text.lines().find(|l| l.starts_with("schedulers")).unwrap();
-    assert!(scheds.contains("numa-home"), "{scheds}");
+    assert!(scheds.contains("numa-home("), "{scheds}");
+    assert!(scheds.contains("steal_bias=1"), "{scheds}");
+    assert!(scheds.contains("homed_resume=1"), "{scheds}");
+    assert!(scheds.contains("numa-steal(min_kb=16)"), "{scheds}");
+    assert!(scheds.contains("hops-threshold(max_hops=1;spill_after=2)"), "{scheds}");
 }
 
 #[test]
@@ -349,7 +354,14 @@ fn sweep_manifest_with_placement_axis() {
         let csv = std::fs::read_to_string(out.join(format!("{id}.csv")))
             .unwrap_or_else(|e| panic!("{id}: {e}"));
         let header = csv.lines().next().unwrap();
-        for col in ["mem", "pushed_home", "affinity_hits", "migrated_pages"] {
+        for col in [
+            "mem",
+            "pushed_home",
+            "affinity_hits",
+            "migrated_pages",
+            "affine_steals",
+            "homed_resumes",
+        ] {
             assert!(header.contains(col), "{id}: missing {col} in {header}");
         }
         assert!(csv.contains("interleave"), "{id}: {csv}");

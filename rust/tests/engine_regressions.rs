@@ -1,0 +1,280 @@
+//! Engine-level regressions for the locality refactor: the
+//! tied-continuation wake-targeting fix (a release used to signal an
+//! arbitrary round-robin sleeper, which under bounded-sweep schedulers
+//! strands the continuation and charges phantom steal overhead), and
+//! deterministic engagement of the `resume` / `steal_bias` hooks with
+//! their `homed_resumes` / `affine_steals` counters.
+//!
+//! The workloads are hand-built task graphs over hand-built topologies:
+//! every cross-worker ordering below is separated by tens of
+//! microseconds of simulated compute, far above the sub-microsecond
+//! queue-op costs, so the traces (and the asserted counters) are stable
+//! under any reasonable cost model.
+
+use numanos::coordinator::runtime::Runtime;
+use numanos::coordinator::sched::{self, SchedSpec};
+use numanos::coordinator::task::{BodyCtx, TaskDesc, Workload};
+use numanos::simnuma::{CostModel, MemSim, MemSpec, Region};
+use numanos::spec::Session;
+use numanos::topology::Topology;
+use numanos::util::Time;
+
+/// Root spawns A (which parks its worker until late via a 5 us
+/// grandchild) and B (a 50 us leaf); the root continuation ends up
+/// `Waiting` on a worker two hops from A's worker.  Kinds: 0 root, 1 A,
+/// 2 B, 3 A2.
+struct TiedOwner;
+
+impl Workload for TiedOwner {
+    fn name(&self) -> &'static str {
+        "tied-owner"
+    }
+
+    fn init(&mut self, _mem: &mut MemSim, _master_core: usize) -> Time {
+        0
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::leaf(0)
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        match desc.kind {
+            0 => {
+                ctx.spawn(TaskDesc::leaf(1)); // A
+                ctx.spawn(TaskDesc::leaf(2)); // B
+                ctx.taskwait();
+                ctx.compute(500);
+            }
+            1 => {
+                // A suspends on a grandchild so its owner's final acquire
+                // (and with it A's completion — the root release) lands
+                // late in event order, after every other worker parked
+                ctx.compute(1_000);
+                ctx.spawn(TaskDesc::leaf(3)); // A2
+                ctx.taskwait();
+                ctx.compute(100);
+            }
+            2 => ctx.compute(50_000), // B: keeps its runner's clock far out
+            3 => ctx.compute(5_000),  // A2
+            _ => unreachable!("unknown task kind"),
+        }
+    }
+}
+
+/// Satellite regression (wake targeting): when a tied continuation is
+/// released while its owner sleeps, the owner must be woken directly.
+///
+/// Topology: a chain n0—n1—n2 plus a tail n0—n3—n4; threads bound to
+/// cores on n0/n1/n2/n4.  Under `hops-threshold:max_hops=1`,
+/// W0(n0)↔W1(n1) and W1(n1)↔W2(n2) can steal from each other but
+/// W0↔W2 (2 hops) and W3(n4, ≥2 hops from everyone) cannot.
+///
+/// Trace: W1 steals the root from W0 and re-exposes it spawning B; W2
+/// steals it, hits the taskwait (owner = W2) and sleeps.  A completes on
+/// W0 — two hops from W2, so W0's own sweep cannot reach the
+/// continuation.  The old code signalled the round-robin sleeper (W3,
+/// whose sweep is empty), stranding the continuation until W1's acquire
+/// 40+ us later re-stole it: a third steal, inflated attempts, and the
+/// post phase running off-owner.  With the targeted wake W2 resumes its
+/// own continuation and no third steal exists.
+#[test]
+fn tied_continuation_release_wakes_its_sleeping_owner() {
+    let topo = Topology::from_edges(
+        "chain-tail",
+        vec![1, 1, 1, 1, 1],
+        &[(0, 1), (1, 2), (0, 3), (3, 4)],
+        2048,
+    )
+    .unwrap();
+    let rt = Runtime::new(topo, CostModel::default());
+    let sched = sched::build(
+        &SchedSpec::new("hops-threshold")
+            .with_param("max_hops", 1.0)
+            .with_param("spill_after", 1000.0),
+    )
+    .unwrap();
+    let mut w = TiedOwner;
+    let stats = Session::execute_bound_placed(
+        &rt,
+        &mut w,
+        sched.as_ref(),
+        &[0, 1, 2, 4],
+        false,
+        &MemSpec::default(),
+        7,
+        None,
+    )
+    .unwrap();
+
+    assert_eq!(stats.tasks, 4, "root + A + B + A2");
+    // root stolen twice on its way to W2; never a third time
+    assert_eq!(stats.steals, 2, "the continuation must not be re-stolen");
+    // W0 ran A2 and A, W1 ran B, W2 — the owner — ran the continuation
+    assert_eq!(stats.per_worker_tasks, vec![2, 1, 1, 0]);
+    // the woken-wrong-worker path charged its probes to steal_attempts;
+    // the targeted wake keeps the sweep count at the structural minimum
+    assert!(
+        stats.steal_attempts <= 5,
+        "phantom sweeps inflate steal_attempts: {}",
+        stats.steal_attempts
+    );
+    // no placement machinery involved for a non-placing scheduler
+    assert_eq!(stats.pushed_home, 0);
+    assert_eq!(stats.homed_resumes, 0);
+    assert_eq!(stats.affine_steals, 0);
+}
+
+/// Placement workload for the resume hook: root pushes P to its data's
+/// node, keeps itself busy with Q, then steals P back — so P waits on
+/// the *wrong* node and its release must be redirected home.  Kinds:
+/// 0 root, 1 P, 2 Q, 3 C, 4 C2.
+struct HomedResume {
+    data: Region,
+}
+
+impl Workload for HomedResume {
+    fn name(&self) -> &'static str {
+        "homed-resume"
+    }
+
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        self.data = mem.alloc(64 * 1024);
+        mem.first_touch(master_core, self.data, 0)
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::leaf(0)
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        match desc.kind {
+            0 => {
+                ctx.spawn_on(TaskDesc::leaf(1), self.data); // P -> pushed home
+                ctx.spawn(TaskDesc::leaf(2)); // Q keeps the master busy
+                ctx.taskwait();
+                ctx.compute(100);
+            }
+            1 => {
+                ctx.spawn_on(TaskDesc::leaf(3), self.data); // C (affinity hit)
+                ctx.taskwait();
+                ctx.read(self.data); // the continuation combines the data
+            }
+            2 => ctx.compute(10_000), // Q
+            3 => {
+                ctx.compute(100);
+                ctx.spawn(TaskDesc::leaf(4)); // C2 delays C's completion
+                ctx.taskwait();
+                ctx.compute(50);
+            }
+            4 => ctx.compute(15_000), // C2
+            _ => unreachable!("unknown task kind"),
+        }
+    }
+}
+
+/// Tentpole regression (resume hook): a tied continuation whose cached
+/// home differs from its owner's node is released to a home-node worker
+/// and counted in `homed_resumes`.  Two nodes, one core each; all pages
+/// bound to node 1, so P (hinted on the data) is homed on n1 while its
+/// taskwait owner ends up being W0 on n0.
+#[test]
+fn numa_home_redirects_waiting_continuations_to_their_data() {
+    let topo = Topology::from_edges("pair", vec![1, 1], &[(0, 1)], 4096).unwrap();
+    let rt = Runtime::new(topo, CostModel::default());
+    let sched = sched::build(&SchedSpec::new("numa-home")).unwrap();
+    let run = || {
+        let mut w = HomedResume { data: Region::EMPTY };
+        Session::execute_bound_placed(
+            &rt,
+            &mut w,
+            sched.as_ref(),
+            &[0, 1],
+            false,
+            &MemSpec::new("bind").with_param("node", 1.0),
+            3,
+            None,
+        )
+        .unwrap()
+    };
+    let stats = run();
+    assert_eq!(stats.tasks, 5);
+    assert_eq!(stats.pushed_home, 1, "P's spawn must be pushed to its home node");
+    assert_eq!(stats.affinity_hits, 1, "C spawned on the node its data lives on");
+    assert_eq!(
+        stats.homed_resumes, 1,
+        "P's continuation must be released toward node 1, not its owner on node 0"
+    );
+    // deterministic: same spec, same counters
+    let again = run();
+    assert_eq!(stats.makespan, again.makespan);
+    assert_eq!(stats.steals, again.steals);
+    assert_eq!(stats.homed_resumes, again.homed_resumes);
+}
+
+/// Steal-bias workload: M is spawned with a node-1 affinity hint and
+/// suspends in W0's pool behind the root; W1 (on node 1) drains the pool
+/// and its second steal takes M — an affine steal.  Kinds: 0 root, 1 M,
+/// 2 L.
+struct AffineSteal {
+    data: Region,
+}
+
+impl Workload for AffineSteal {
+    fn name(&self) -> &'static str {
+        "affine-steal"
+    }
+
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        self.data = mem.alloc(64 * 1024);
+        mem.first_touch(master_core, self.data, 0)
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::leaf(0)
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        match desc.kind {
+            0 => {
+                ctx.spawn_on(TaskDesc::leaf(1), self.data); // M, homed on n1
+                ctx.taskwait();
+                ctx.compute(200);
+            }
+            1 => {
+                ctx.spawn(TaskDesc::leaf(2)); // L parks W0 far out
+                ctx.taskwait();
+                ctx.read(self.data);
+            }
+            2 => ctx.compute(30_000), // L
+            _ => unreachable!("unknown task kind"),
+        }
+    }
+}
+
+/// Tentpole regression (steal bias + home tags): `numa-steal` never
+/// pushes or redirects, but a steal that lands a task on its data's home
+/// node is counted in `affine_steals` via the spawn-time home tag.
+#[test]
+fn numa_steal_counts_affine_steals_without_placing() {
+    let topo = Topology::from_edges("pair", vec![1, 1], &[(0, 1)], 4096).unwrap();
+    let rt = Runtime::new(topo, CostModel::default());
+    let sched = sched::build(&SchedSpec::new("numa-steal")).unwrap();
+    let mut w = AffineSteal { data: Region::EMPTY };
+    let stats = Session::execute_bound_placed(
+        &rt,
+        &mut w,
+        sched.as_ref(),
+        &[0, 1],
+        false,
+        &MemSpec::new("bind").with_param("node", 1.0),
+        3,
+        None,
+    )
+    .unwrap();
+    assert_eq!(stats.tasks, 3);
+    assert_eq!(stats.steals, 2, "W1 steals the root, then M");
+    assert_eq!(stats.affine_steals, 1, "M (homed on n1) stolen by the n1 worker");
+    assert_eq!(stats.pushed_home, 0, "steal-side-only: no push-to-home");
+    assert_eq!(stats.homed_resumes, 0, "steal-side-only: continuations stay tied");
+}

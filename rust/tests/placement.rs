@@ -49,6 +49,10 @@ fn stock_schedulers_with_default_mem_match_the_legacy_path() {
         assert_eq!(rec.stats.pushed_home, 0, "{}", policy.name());
         assert_eq!(rec.stats.affinity_hits, 0, "{}", policy.name());
         assert_eq!(rec.stats.mem.migrated_pages, 0, "{}", policy.name());
+        assert_eq!(rec.stats.affine_steals, 0, "{}", policy.name());
+        assert_eq!(rec.stats.homed_resumes, 0, "{}", policy.name());
+        let row = rec.to_csv_row();
+        assert!(row.ends_with(",0,0"), "stock CSV tail must stay zero: {row}");
 
         // explicit first-touch is the same run, CSV row and all
         let explicit = spec("fft", SchedSpec::stock(policy), MemSpec::new("first-touch"),
@@ -61,7 +65,10 @@ fn stock_schedulers_with_default_mem_match_the_legacy_path() {
 /// Acceptance criterion (gain half): `numa-home` + first-touch achieves a
 /// lower remote-access ratio than breadth-first on a BOTS workload over a
 /// multi-node fabric — the paper's point that placement, not just steal
-/// order, cuts remote traffic.
+/// order, cuts remote traffic.  The steal-bias + homed-resume extensions
+/// must not give back what the push-to-home half won: the full strategy
+/// stays at or below the placement-only configuration (`steal_bias=0`,
+/// `homed_resume=0` — the pre-extension behaviour as a spec).
 #[test]
 fn numa_home_beats_bf_remote_ratio_on_sparselu() {
     let session = Session::new();
@@ -73,6 +80,17 @@ fn numa_home_beats_bf_remote_ratio_on_sparselu() {
         .run(&spec("sparselu_for", SchedSpec::new("numa-home"), MemSpec::default(),
             "x4600", 16))
         .unwrap();
+    let place_only = session
+        .run(&spec(
+            "sparselu_for",
+            SchedSpec::new("numa-home")
+                .with_param("steal_bias", 0.0)
+                .with_param("homed_resume", 0.0),
+            MemSpec::default(),
+            "x4600",
+            16,
+        ))
+        .unwrap();
     assert!(home.stats.pushed_home > 0, "placement must actually engage");
     assert!(
         home.stats.mem.remote_ratio() < bf.stats.mem.remote_ratio(),
@@ -80,24 +98,66 @@ fn numa_home_beats_bf_remote_ratio_on_sparselu() {
         home.stats.mem.remote_ratio(),
         bf.stats.mem.remote_ratio()
     );
+    assert!(
+        home.stats.mem.remote_ratio() <= place_only.stats.mem.remote_ratio(),
+        "steal-bias + homed resumes {:.4} must not regress placement-only {:.4}",
+        home.stats.mem.remote_ratio(),
+        place_only.stats.mem.remote_ratio()
+    );
+    // the disabled configuration really disabled the new machinery
+    assert_eq!(place_only.stats.homed_resumes, 0);
 }
 
-/// Per-scheduler determinism regression, extended to `numa-home` across
-/// the multi-node presets (the satellite requirement): same spec, fresh
-/// sessions, identical records.
+/// `numa-steal` (steal-side only) engages on a real workload: sweeps are
+/// biased by home tags, nothing is ever pushed or redirected, and the
+/// remote ratio lands at or below plain `dfwsrpt` (same base sweep, no
+/// locality) on the steal-heavy sort benchmark.
+#[test]
+fn numa_steal_biases_sweeps_without_pushing() {
+    let session = Session::new();
+    let plain = session
+        .run(&spec("sort", SchedSpec::stock(Policy::Dfwsrpt), MemSpec::default(), "x4600", 16))
+        .unwrap();
+    let biased = session
+        .run(&spec("sort", SchedSpec::new("numa-steal"), MemSpec::default(), "x4600", 16))
+        .unwrap();
+    assert_eq!(biased.stats.pushed_home, 0, "steal-side-only never pushes");
+    assert_eq!(biased.stats.homed_resumes, 0, "steal-side-only never redirects");
+    assert!(biased.stats.steals > 0, "sort at 16 threads must steal");
+    assert!(
+        biased.stats.mem.remote_ratio() <= plain.stats.mem.remote_ratio() * 1.05,
+        "steal bias {:.4} should not materially regress dfwsrpt {:.4}",
+        biased.stats.mem.remote_ratio(),
+        plain.stats.mem.remote_ratio()
+    );
+}
+
+/// Per-scheduler determinism regression, extended to `numa-home` and the
+/// steal-biased `numa-steal` across the multi-node presets (the
+/// satellite requirement): same spec, fresh sessions, identical records.
 #[test]
 fn numa_home_is_deterministic_across_topologies() {
-    for topo in ["x4600", "tile16", "altix16"] {
-        let s = spec("sort", SchedSpec::new("numa-home"), MemSpec::default(), topo, 8);
-        let a = Session::new().run(&s).unwrap_or_else(|e| panic!("{topo}: {e:#}"));
-        let b = Session::new().run(&s).unwrap_or_else(|e| panic!("{topo}: {e:#}"));
-        assert_eq!(a.stats.makespan, b.stats.makespan, "{topo}");
-        assert_eq!(a.stats.steals, b.stats.steals, "{topo}");
-        assert_eq!(a.stats.pushed_home, b.stats.pushed_home, "{topo}");
-        assert_eq!(a.stats.sim_events, b.stats.sim_events, "{topo}");
-        assert_eq!(a.to_csv_row(), b.to_csv_row(), "{topo}");
-        assert_eq!(a.to_json().to_compact(), b.to_json().to_compact(), "{topo}");
-        assert!(a.stats.makespan > 0, "{topo}");
+    for sched_name in ["numa-home", "numa-steal"] {
+        for topo in ["x4600", "tile16", "altix16"] {
+            let s = spec("sort", SchedSpec::new(sched_name), MemSpec::default(), topo, 8);
+            let a =
+                Session::new().run(&s).unwrap_or_else(|e| panic!("{sched_name}/{topo}: {e:#}"));
+            let b =
+                Session::new().run(&s).unwrap_or_else(|e| panic!("{sched_name}/{topo}: {e:#}"));
+            assert_eq!(a.stats.makespan, b.stats.makespan, "{sched_name}/{topo}");
+            assert_eq!(a.stats.steals, b.stats.steals, "{sched_name}/{topo}");
+            assert_eq!(a.stats.pushed_home, b.stats.pushed_home, "{sched_name}/{topo}");
+            assert_eq!(a.stats.affine_steals, b.stats.affine_steals, "{sched_name}/{topo}");
+            assert_eq!(a.stats.homed_resumes, b.stats.homed_resumes, "{sched_name}/{topo}");
+            assert_eq!(a.stats.sim_events, b.stats.sim_events, "{sched_name}/{topo}");
+            assert_eq!(a.to_csv_row(), b.to_csv_row(), "{sched_name}/{topo}");
+            assert_eq!(
+                a.to_json().to_compact(),
+                b.to_json().to_compact(),
+                "{sched_name}/{topo}"
+            );
+            assert!(a.stats.makespan > 0, "{sched_name}/{topo}");
+        }
     }
 }
 
@@ -171,7 +231,14 @@ fn placement_sweep_manifest_end_to_end() {
         assert_eq!(result.records.len(), 6);
         let csv = result.to_csv();
         let header = csv.lines().next().unwrap();
-        for col in ["mem", "pushed_home", "affinity_hits", "migrated_pages"] {
+        for col in [
+            "mem",
+            "pushed_home",
+            "affinity_hits",
+            "migrated_pages",
+            "affine_steals",
+            "homed_resumes",
+        ] {
             assert!(header.contains(col), "missing {col} in: {header}");
         }
         assert!(csv.contains("interleave"), "{csv}");
