@@ -18,12 +18,15 @@
 //! the child onto a worker bound to its data's home node while the
 //! parent keeps running), every steal sweep through
 //! [`Scheduler::steal_bias`] (victims' per-node resident-home summaries
-//! let the strategy probe work homed near the thief first), and every
-//! tied-continuation release through [`Scheduler::resume`] (the
-//! continuation may be released to a home-node worker instead of the
-//! first owner).  The home node of each affinity-hinted spawn is
-//! resolved once and cached on the task, so the hooks never re-sample
-//! the page table.
+//! let the strategy probe work homed near the thief first, and a
+//! [`StealCand::take`] above 1 drains a *batch* from the victim's back
+//! end under one lock — the thief runs the first task and requeues the
+//! rest locally), and every tied-continuation release through
+//! [`Scheduler::resume`] (a redirected continuation lands in the home
+//! node's *mailbox*, drained by whichever team member idles first: own
+//! stack → node mailbox → steal sweep).  The home node of each
+//! affinity-hinted spawn is resolved once and cached on the task, so the
+//! hooks never re-sample the page table.
 //!
 //! ## Semantics (mirroring NANOS)
 //!
@@ -108,6 +111,15 @@ pub struct Engine<'a> {
     workers: Vec<Worker>,
     pools: Vec<Pool>,
     shared: Pool,
+    /// Per-node continuation mailboxes (placing schedulers only): a
+    /// redirected tied-continuation release lands here instead of in one
+    /// pre-picked worker's deque, and every worker drains its own node's
+    /// mailbox after its own pool, before sweeping victims — so
+    /// whichever same-node team member idles first picks the homed
+    /// continuation up.  Indexed by node; only nodes with bound workers
+    /// ever receive mail (releases route through [`Engine::place_node`]).
+    /// Stock schedulers never probe nor fill these.
+    mailboxes: Vec<Pool>,
     /// thread-to-thread hop distances (precomputed from the binding).
     thops: Vec<Vec<u8>>,
     /// node -> worker ids bound there (placement targets).
@@ -128,9 +140,20 @@ pub struct Engine<'a> {
     /// Tied continuations released to a home-node worker instead of the
     /// first owner (the `resume` hook redirected).
     homed_resumes: u64,
+    /// Steals that transferred more than one task (steal-half batching).
+    batch_steals: u64,
+    /// Extra tasks moved by batched steals (beyond the one the thief
+    /// runs; each was requeued on the thief's own pool).
+    tasks_migrated: u64,
+    /// Continuations picked up from a per-node mailbox.
+    mailbox_hits: u64,
     victim_buf: Vec<usize>,
     /// Scratch for steal-bias candidate snapshots (allocation reuse).
     cand_buf: Vec<StealCand>,
+    /// Per-victim batch sizes aligned with `victim_buf` (empty = all 1).
+    take_buf: Vec<u32>,
+    /// Scratch for multi-pop steal batches (allocation reuse).
+    drain_buf: Vec<TaskId>,
     wake_rr: usize,
 }
 
@@ -183,6 +206,7 @@ impl<'a> Engine<'a> {
                     .expect("a team has at least one bound worker")
             })
             .collect();
+        let mailboxes = (0..topo.num_nodes()).map(|_| Pool::new()).collect();
         Self {
             sched,
             desc: sched.descriptor(),
@@ -194,6 +218,7 @@ impl<'a> Engine<'a> {
             workers,
             pools,
             shared: Pool::new(),
+            mailboxes,
             thops,
             node_workers,
             place_node,
@@ -207,8 +232,13 @@ impl<'a> Engine<'a> {
             affinity_hits: 0,
             affine_steals: 0,
             homed_resumes: 0,
+            batch_steals: 0,
+            tasks_migrated: 0,
+            mailbox_hits: 0,
             victim_buf: Vec::new(),
             cand_buf: Vec::new(),
+            take_buf: Vec::new(),
+            drain_buf: Vec::new(),
             wake_rr: 0,
         }
     }
@@ -360,9 +390,36 @@ impl<'a> Engine<'a> {
             return;
         }
 
+        // Node mailbox second (places opt-in only): homed continuations
+        // released toward this node wait here for *any* team member, and
+        // draining them beats stealing remotely — the continuation's
+        // pages live on this node by construction.  The emptiness check
+        // is free (a shared counter read, like the sweep's probe target
+        // selection); only an actual drain pays a queue op.  Stock
+        // schedulers never reach this branch, keeping them byte-identical.
+        if self.desc.places {
+            let node = self.topo.node_of(self.workers[w].core);
+            if !self.mailboxes[node].is_empty() {
+                let op = self.mem.cost_model().queue_op + self.workers[w].rt_penalty;
+                let now = self.workers[w].clock;
+                let cost = self.mailboxes[node].lock(now, op);
+                self.workers[w].clock += cost;
+                self.workers[w].overhead_time += cost;
+                if let Some(tid) = self.mailboxes[node].pop_front() {
+                    self.mailbox_hits += 1;
+                    self.start_task(tid, w);
+                    let t = self.workers[w].clock;
+                    self.schedule(w, t);
+                    return;
+                }
+            }
+        }
+
         // steal sweep: the scheduler names the victims, in order
         let mut buf = std::mem::take(&mut self.victim_buf);
+        let mut takes = std::mem::take(&mut self.take_buf);
         buf.clear();
+        takes.clear();
         {
             let sched = self.sched;
             let wk = &mut self.workers[w];
@@ -372,7 +429,8 @@ impl<'a> Engine<'a> {
         }
         // Steal-bias hook (places opt-in only): snapshot each victim's
         // per-node resident-home summary and let the strategy reorder or
-        // filter the sweep toward work homed near this thief.  The
+        // filter the sweep toward work homed near this thief — and set
+        // per-victim batch sizes (`StealCand::take`, default 1).  The
         // summary is a word read per victim — no deque scan, no
         // simulated cost (like victim_order itself).
         if self.desc.places && !buf.is_empty() {
@@ -384,15 +442,24 @@ impl<'a> Engine<'a> {
                 hops: self.thops[w][v],
                 affine: self.pools[v].homed_count(thief_node),
                 queued: self.pools[v].len() as u32,
+                take: 1,
             }));
             self.sched.steal_bias(thief_node, &mut cands);
             buf.clear();
-            // a misbehaving custom hook cannot inject bogus victims
+            // a misbehaving custom hook cannot inject bogus victims, and
+            // a victim returned twice is probed (and its lock charged)
+            // once — first occurrence wins, so the hook's preferred
+            // position is kept
             let n = self.workers.len();
-            buf.extend(cands.iter().map(|c| c.victim).filter(|&v| v < n && v != w));
+            for c in &cands {
+                if c.victim < n && c.victim != w && !buf.contains(&c.victim) {
+                    buf.push(c.victim);
+                    takes.push(c.take.max(1));
+                }
+            }
             self.cand_buf = cands;
         }
-        let mut got = self.steal_sweep(w, &buf);
+        let mut got = self.steal_sweep(w, &buf, &takes);
         if got.is_none() {
             self.sched.observe(&SchedEvent::StealMiss { worker: w });
             // Liveness net for *partial* sweeps (bounded / hierarchical
@@ -406,15 +473,25 @@ impl<'a> Engine<'a> {
             // making the non-empty-pool test below exactly "work remains
             // that this sweep skipped" — for the stock schedulers it is
             // always false and the legacy path stays byte-identical.
+            // Mailboxes get the same net: a remote node's mailbox is
+            // normally drained by that node's team, but the last awake
+            // worker grabs from any non-empty one rather than park on
+            // live work (always empty under stock schedulers).
             let others_parked =
                 (0..self.workers.len()).all(|i| i == w || self.workers[i].sleeping);
-            if others_parked && self.pools.iter().any(|p| !p.is_empty()) {
-                buf.clear();
-                dfwspt::order(&self.workers[w].victims, &mut buf);
-                got = self.steal_sweep(w, &buf);
+            if others_parked {
+                if self.desc.places {
+                    got = self.drain_any_mailbox(w);
+                }
+                if got.is_none() && self.pools.iter().any(|p| !p.is_empty()) {
+                    buf.clear();
+                    dfwspt::order(&self.workers[w].victims, &mut buf);
+                    got = self.steal_sweep(w, &buf, &[]);
+                }
             }
         }
         self.victim_buf = buf;
+        self.take_buf = takes;
         match got {
             Some(tid) => {
                 self.start_task(tid, w);
@@ -429,26 +506,68 @@ impl<'a> Engine<'a> {
 
     /// Probe `order`'s victims in turn, charging probe/lock costs, and
     /// steal from the first non-empty pool (the scheduler's descriptor
-    /// picks the deque end).  Reports successful steals to the
-    /// scheduler's observe hook.
-    fn steal_sweep(&mut self, w: usize, order: &[usize]) -> Option<TaskId> {
+    /// picks the deque end).  `takes` holds per-victim batch sizes
+    /// aligned with `order` (empty = all 1, the stock single steal): a
+    /// take of `k` drains up to `k` tasks from the victim's *back* end
+    /// under one lock — the thief runs the first and requeues the rest
+    /// on its own pool, paying `steal_base` plus a per-task distance
+    /// transfer on the victim's lock and one local queue op for the
+    /// requeue.  Front-end (Cilk THE) steals ignore the batch: taking a
+    /// victim's hottest suspended parents in bulk would steal its
+    /// working set, not balance load.  Reports the successful steal (the
+    /// task the thief runs) to the scheduler's observe hook.
+    fn steal_sweep(&mut self, w: usize, order: &[usize], takes: &[u32]) -> Option<TaskId> {
         let cm = self.mem.cost_model().clone();
-        for &v in order {
+        for (i, &v) in order.iter().enumerate() {
             let vhops = self.thops[w][v];
             let hops = vhops as Time;
             self.workers[w].steal_attempts += 1;
             let probe = cm.probe_base + hops * cm.probe_per_hop;
             self.workers[w].clock += probe;
             self.workers[w].overhead_time += probe;
-            if self.pools[v].is_empty() {
+            let avail = self.pools[v].len();
+            if avail == 0 {
                 continue;
             }
+            let k = match self.desc.steal_end {
+                StealEnd::Front => 1,
+                StealEnd::Back => (takes.get(i).copied().unwrap_or(1).max(1) as usize).min(avail),
+            };
             let now = self.workers[w].clock;
-            let cost = self.pools[v].lock(now, cm.steal_base + hops * cm.steal_per_hop);
+            let cost =
+                self.pools[v].lock(now, cm.steal_base + (k as Time) * hops * cm.steal_per_hop);
             self.workers[w].clock += cost;
             self.workers[w].overhead_time += cost;
             let taken = match self.desc.steal_end {
                 StealEnd::Front => self.pools[v].pop_front(),
+                StealEnd::Back if k > 1 => {
+                    let mut batch = std::mem::take(&mut self.drain_buf);
+                    batch.clear();
+                    self.pools[v].drain_back(k, &mut batch);
+                    // pop order: the first drained task is exactly what a
+                    // single pop_back would have returned — the thief
+                    // runs it and requeues the remainder locally under
+                    // one queue op, oldest nearest its own back end
+                    let first = batch.first().copied();
+                    if batch.len() > 1 {
+                        let op = cm.queue_op + self.workers[w].rt_penalty;
+                        let now = self.workers[w].clock;
+                        let cost = self.pools[w].lock(now, op);
+                        self.workers[w].clock += cost;
+                        self.workers[w].overhead_time += cost;
+                        for &t in batch.iter().skip(1).rev() {
+                            // retag on push: re-read the arena's *current*
+                            // home — a tag cached at the original queuing
+                            // may have been re-resolved since
+                            let home = self.arena.get(t).home;
+                            self.pools[w].push_back(t, home);
+                        }
+                        self.batch_steals += 1;
+                        self.tasks_migrated += (batch.len() - 1) as u64;
+                    }
+                    self.drain_buf = batch;
+                    first
+                }
                 StealEnd::Back => self.pools[v].pop_back(),
             };
             if let Some(tid) = taken {
@@ -457,16 +576,47 @@ impl<'a> Engine<'a> {
                 // a steal that lands work on its data's home node (tags
                 // exist only under placing schedulers; stock stays 0)
                 let home = self.arena.get(tid).home;
-                if home != NO_HOME
-                    && home as usize == self.topo.node_of(self.workers[w].core)
-                {
+                let affine = home != NO_HOME
+                    && home as usize == self.topo.node_of(self.workers[w].core);
+                if affine {
                     self.affine_steals += 1;
                 }
-                self.sched.observe(&SchedEvent::Steal { thief: w, victim: v, hops: vhops });
+                self.sched.observe(&SchedEvent::Steal {
+                    thief: w,
+                    victim: v,
+                    hops: vhops,
+                    affine,
+                });
                 return Some(tid);
             }
         }
         None
+    }
+
+    /// Liveness fallback: the last awake worker drains the first
+    /// non-empty mailbox (nearest node first), paying the same
+    /// distance-scaled queue op a remote release does.  Normally inert —
+    /// a mailbox push wakes a home-node sleeper, and busy home-node
+    /// workers drain their mailbox on their next acquire — but a custom
+    /// scheduler could strand mail on a node whose team never idles
+    /// last.  Always empty (and never probed) under stock schedulers.
+    fn drain_any_mailbox(&mut self, w: usize) -> Option<TaskId> {
+        let my_node = self.topo.node_of(self.workers[w].core);
+        let node = self
+            .topo
+            .nodes_by_distance(my_node)
+            .into_iter()
+            .find(|&n| !self.mailboxes[n].is_empty())?;
+        let cm = self.mem.cost_model();
+        let hops = self.topo.node_hops(my_node, node) as Time;
+        let op = cm.queue_op + hops * cm.steal_per_hop + self.workers[w].rt_penalty;
+        let now = self.workers[w].clock;
+        let cost = self.mailboxes[node].lock(now, op);
+        self.workers[w].clock += cost;
+        self.workers[w].overhead_time += cost;
+        let tid = self.mailboxes[node].pop_front()?;
+        self.mailbox_hits += 1;
+        Some(tid)
     }
 
     /// Execute the current task until a boundary: spawn-switch (depth-
@@ -715,10 +865,16 @@ impl<'a> Engine<'a> {
                         return;
                     }
                     // Resume hook (places opt-in): the continuation may
-                    // be released to a worker on the data's home node
-                    // instead of the first owner — the post phase
-                    // combines the very pages the affinity hint named.
+                    // be released toward the data's home node instead of
+                    // the first owner — the post phase combines the very
+                    // pages the affinity hint named.  A redirected
+                    // release lands in the node's *mailbox*, not one
+                    // worker's deque: any same-node team member drains
+                    // it (own stack → node mailbox → steal sweep), so
+                    // the continuation is not hostage to one pre-picked
+                    // worker staying least-loaded.
                     let mut target = owner;
+                    let mut mail_node = None;
                     if self.desc.places {
                         let rctx = ResumeCtx {
                             releaser: w,
@@ -730,6 +886,10 @@ impl<'a> Engine<'a> {
                             if let Some(t) = self.home_worker(node) {
                                 if t != owner {
                                     target = t;
+                                    // nodes without bound workers resolve
+                                    // to the nearest node that has some,
+                                    // exactly as the wake target does
+                                    mail_node = Some(self.place_node[node]);
                                     self.homed_resumes += 1;
                                 }
                             }
@@ -745,23 +905,46 @@ impl<'a> Engine<'a> {
                             op += self.thops[w][target] as Time * cm.steal_per_hop;
                         }
                         let now = self.workers[w].clock;
-                        let cost = self.pools[target].lock(now, op);
+                        let cost = match mail_node {
+                            Some(nd) => self.mailboxes[nd].lock(now, op),
+                            None => self.pools[target].lock(now, op),
+                        };
                         self.workers[w].clock += cost;
                         self.workers[w].overhead_time += cost;
                     }
-                    self.pools[target].push_front(p, home);
                     let now = self.workers[w].clock;
+                    if let Some(nd) = mail_node {
+                        // FIFO entry: homed continuations are drained
+                        // oldest-first by whoever on the node idles next
+                        self.mailboxes[nd].push_back(p, home);
+                        // wake the least-loaded pick if it sleeps, else
+                        // any sleeping team member — a busy team drains
+                        // the mailbox on its next acquire anyway
+                        let sleeper = if self.workers[target].sleeping {
+                            Some(target)
+                        } else {
+                            self.node_workers[nd]
+                                .iter()
+                                .copied()
+                                .find(|&i| self.workers[i].sleeping)
+                        };
+                        if let Some(s) = sleeper {
+                            self.wake_worker(s, now);
+                        }
+                        return;
+                    }
+                    self.pools[target].push_front(p, home);
                     // Wake-targeting: when the engine knows who should
-                    // run the continuation — a homed release, a placing
-                    // scheduler, or one whose bounded sweeps might never
-                    // probe the owner's pool (full_sweep = false) — the
-                    // release wakes that worker directly.  The old
-                    // unconditional round-robin signal could rouse a
-                    // worker that never finds the task, stranding it on
-                    // the liveness net and charging phantom steal
-                    // overhead.  Stock full-sweep schedulers keep the
-                    // round-robin futex-style signal, byte-identically.
-                    if (target != owner || self.desc.places || !self.desc.full_sweep)
+                    // run the continuation — a placing scheduler, or one
+                    // whose bounded sweeps might never probe the owner's
+                    // pool (full_sweep = false) — the release wakes that
+                    // worker directly.  The old unconditional
+                    // round-robin signal could rouse a worker that never
+                    // finds the task, stranding it on the liveness net
+                    // and charging phantom steal overhead.  Stock
+                    // full-sweep schedulers keep the round-robin
+                    // futex-style signal, byte-identically.
+                    if (self.desc.places || !self.desc.full_sweep)
                         && self.workers[target].sleeping
                     {
                         self.wake_worker(target, now);
@@ -782,8 +965,9 @@ impl<'a> Engine<'a> {
     }
 
     fn into_stats(self) -> RunStats {
-        let lock_wait_total: Time =
-            self.pools.iter().map(|p| p.lock_wait).sum::<Time>() + self.shared.lock_wait;
+        let lock_wait_total: Time = self.pools.iter().map(|p| p.lock_wait).sum::<Time>()
+            + self.shared.lock_wait
+            + self.mailboxes.iter().map(|m| m.lock_wait).sum::<Time>();
         let steals: u64 = self.workers.iter().map(|w| w.steals).sum();
         let steal_attempts: u64 = self.workers.iter().map(|w| w.steal_attempts).sum();
         let steal_hops: u64 = self.workers.iter().map(|w| w.steal_hops).sum();
@@ -805,6 +989,9 @@ impl<'a> Engine<'a> {
             affinity_hits: self.affinity_hits,
             affine_steals: self.affine_steals,
             homed_resumes: self.homed_resumes,
+            batch_steals: self.batch_steals,
+            tasks_migrated: self.tasks_migrated,
+            mailbox_hits: self.mailbox_hits,
             lock_wait_total,
             shared_lock_wait: self.shared.lock_wait,
             shared_ops: self.shared.ops,

@@ -99,7 +99,22 @@ impl Pool {
     #[inline]
     fn note_pop(&mut self, home: u8) {
         if home != NO_HOME {
-            self.homed[home as usize] -= 1;
+            // The per-entry tag is recorded at push time, so pushes and
+            // pops pair up — but a task whose home is re-resolved between
+            // queuing and re-queuing (homed resumes make the new runner
+            // the owner) used to be able to decrement a count its push
+            // never incremented, underflowing the summary and poisoning
+            // every later `homed_count` bias decision.  Callers now retag
+            // on push (the engine re-reads the arena's current home at
+            // every push site); this guard keeps the summary sane even if
+            // a future caller slips a stale tag through.
+            match self.homed.get_mut(home as usize) {
+                Some(count) => {
+                    debug_assert!(*count > 0, "home summary underflow for node {home}");
+                    *count = count.saturating_sub(1);
+                }
+                None => debug_assert!(false, "home tag {home} was never pushed"),
+            }
         }
     }
 
@@ -127,6 +142,20 @@ impl Pool {
         let (t, home) = self.items.pop_back()?;
         self.note_pop(home);
         Some(t)
+    }
+
+    /// Pop up to `n` entries from the back — the multi-pop behind
+    /// steal-half batching.  Entries are appended to `out` in pop order
+    /// (so `out`'s first new element is exactly what [`Pool::pop_back`]
+    /// would have returned), and the per-node home summary is maintained
+    /// entry by entry, same as `n` individual pops.
+    pub fn drain_back(&mut self, n: usize, out: &mut Vec<TaskId>) {
+        for _ in 0..n {
+            match self.pop_back() {
+                Some(t) => out.push(t),
+                None => break,
+            }
+        }
     }
 
     /// Resident tasks homed on `node` — the per-node summary steal-bias
@@ -182,6 +211,54 @@ mod tests {
         assert_eq!(p.homed_count(0), 0);
         assert_eq!(p.pop_back(), Some(2));
         assert_eq!(p.homed_count(2), 0, "summary drains with the deque");
+    }
+
+    /// `drain_back(n)` is exactly `n` individual `pop_back`s: same task
+    /// order, same home-summary maintenance, short pools stop early.
+    #[test]
+    fn drain_back_preserves_order_and_home_accounting() {
+        let mut p = Pool::new();
+        p.push_front(1, 2);
+        p.push_front(2, NO_HOME);
+        p.push_front(3, 2);
+        p.push_front(4, 0);
+        // front-to-back: [4, 3, 2, 1]
+        let mut out = Vec::new();
+        p.drain_back(3, &mut out);
+        assert_eq!(out, vec![1, 2, 3], "pop order: first element == pop_back()");
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.homed_count(2), 0, "both node-2 tags drained");
+        assert_eq!(p.homed_count(0), 1, "task 4 still resident");
+        // over-asking stops at empty without touching the summary again
+        p.drain_back(10, &mut out);
+        assert_eq!(out, vec![1, 2, 3, 4]);
+        assert!(p.is_empty());
+        assert_eq!(p.homed_count(0), 0);
+        // draining an empty pool is a no-op
+        p.drain_back(2, &mut out);
+        assert_eq!(out.len(), 4);
+    }
+
+    /// Satellite regression: a continuation re-queued under a *changed*
+    /// home tag (homed resumes re-resolve ownership between queuings)
+    /// must keep the per-node summary consistent — the old unchecked
+    /// `homed[home] -= 1` relied on push/pop tags never drifting.
+    #[test]
+    fn requeue_under_changed_home_keeps_summary_consistent() {
+        let mut p = Pool::new();
+        p.push_front(7, 1);
+        assert_eq!(p.pop_front(), Some(7));
+        // the task's home was re-resolved to node 2 before the requeue
+        p.push_front(7, 2);
+        assert_eq!(p.homed_count(1), 0);
+        assert_eq!(p.homed_count(2), 1);
+        assert_eq!(p.pop_back(), Some(7));
+        assert_eq!(p.homed_count(1), 0, "no underflow on the old node");
+        assert_eq!(p.homed_count(2), 0);
+        // and again toward a node the pool never saw before
+        p.push_back(7, 5);
+        assert_eq!(p.pop_front(), Some(7));
+        assert_eq!(p.homed_count(5), 0);
     }
 
     #[test]

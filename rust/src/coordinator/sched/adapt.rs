@@ -1,0 +1,307 @@
+//! `numa-adapt` — steal-side locality that *watches itself work*.
+//!
+//! [`super::steal`] applies a fixed affine-first bias; this strategy
+//! makes the bias (and the batch size) a function of the observed
+//! **affine-steal ratio** — the fraction of its own successful steals
+//! that landed work on the thief's home node, reported through
+//! [`SchedEvent::Steal`]'s `affine` flag.  The adaptive counterpart that
+//! completes the dfwsrpt → numa-steal → numa-home → numa-adapt ablation:
+//! how much of the locality win needs feedback rather than a static
+//! policy?
+//!
+//! The ratio is measured over an *aged* sample — once the observation
+//! count reaches four times the trust threshold, both counters are
+//! halved (ratio-preserving), so a long cold start cannot pin the
+//! verdict for the rest of the run and a genuine regime change shows up
+//! within tens of steals.  Two regimes, re-evaluated on every observed
+//! steal once `min_steals` have accumulated:
+//!
+//! * **Relaxed** (ratio ≥ `target`, and the starting state): the shared
+//!   affine-first reorder plus steal-half batching
+//!   ([`super::steal_half_takes`], capped at `batch`) — affine victims
+//!   are probed first and drained in bulk, everyone else keeps the
+//!   stock single steal.
+//! * **Tight** (ratio < `target`): the bias has not been enough — too
+//!   many steals still pull remote-homed work.  Sweeps are additionally
+//!   *filtered* to affine victims only (whenever at least one exists),
+//!   so every steal that can be affine is.  The sweep turns partial,
+//!   which the descriptor declares (`full_sweep = false`) and the
+//!   engine's liveness net covers; the moment the ratio recovers above
+//!   `target` the filter relaxes again (unlike [`super::adaptive`]'s
+//!   one-way switch, drift is tracked in both directions).
+//!
+//! The base sweep is the §VI.B random priority list, so with a cold page
+//! table (all summaries zero, no steals observed) `numa-adapt`
+//! degenerates to exactly [`super::dfwsrpt`].  Like `numa-steal` it
+//! never pushes or redirects: `place`/`resume` keep their `LocalQueue`
+//! defaults, and the [`SchedDescriptor::places`] opt-in exists purely so
+//! the engine resolves and caches the home tags the summaries and the
+//! `affine` feedback are built from.
+
+use std::cell::Cell;
+
+use super::{
+    bias_affine_first, dfwsrpt, steal_half_takes, SchedDescriptor, SchedEvent, Scheduler,
+    StealCand, VictimList,
+};
+use crate::util::SplitMix64;
+
+/// Default affine-steal ratio the strategy tries to hold.
+pub const DEFAULT_TARGET: f64 = 0.5;
+/// Default steal-half cap (tasks per steal).
+pub const DEFAULT_BATCH: f64 = 4.0;
+
+/// Affine-first + steal-half stealing whose aggressiveness follows the
+/// observed affine-steal ratio.
+pub struct NumaAdapt {
+    /// Minimum affinity-hint size (bytes) worth resolving a home for.
+    min_bytes: u64,
+    /// Affine-steal ratio below which sweeps tighten to affine-only.
+    target: f64,
+    /// Steals observed before the ratio is trusted.
+    min_steals: u64,
+    /// Steal-half cap (max tasks drained per steal).
+    batch: u32,
+    /// Sample cap: reaching it halves both counters (estimator aging).
+    window: u64,
+    steals: Cell<u64>,
+    affine_steals: Cell<u64>,
+    tight: Cell<bool>,
+}
+
+impl NumaAdapt {
+    pub fn new(min_kb: f64, target: f64, min_steals: u64, batch: u32) -> Self {
+        Self {
+            min_bytes: (min_kb * 1024.0) as u64,
+            target,
+            min_steals,
+            batch,
+            // the estimator remembers at most ~4x the trust threshold:
+            // enough samples to be stable, few enough that a regime
+            // change shows up within tens of steals
+            window: min_steals.max(16) * 4,
+            steals: Cell::new(0),
+            affine_steals: Cell::new(0),
+            tight: Cell::new(false),
+        }
+    }
+
+    /// Currently filtering sweeps to affine victims only?
+    pub fn tight(&self) -> bool {
+        self.tight.get()
+    }
+
+    /// Observed affine-steal ratio so far (0 before any steal).
+    pub fn affine_ratio(&self) -> f64 {
+        let steals = self.steals.get();
+        if steals == 0 {
+            return 0.0;
+        }
+        self.affine_steals.get() as f64 / steals as f64
+    }
+}
+
+impl Scheduler for NumaAdapt {
+    fn name(&self) -> &str {
+        "numa-adapt"
+    }
+
+    fn signature(&self) -> String {
+        format!(
+            "numa-adapt(batch={};min_kb={};min_steals={};target={})",
+            self.batch,
+            crate::util::fmt_f64(self.min_bytes as f64 / 1024.0),
+            self.min_steals,
+            crate::util::fmt_f64(self.target),
+        )
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor {
+            // home tags + hooks, but no pushes (place/resume keep their
+            // LocalQueue defaults)
+            places: true,
+            min_hint_bytes: self.min_bytes,
+            // tight mode drops non-affine victims, making sweeps partial:
+            // the engine must wake tied-continuation owners directly and
+            // keep its liveness net armed
+            full_sweep: false,
+            ..SchedDescriptor::WORK_STEALING
+        }
+    }
+
+    fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        dfwsrpt::order(vl, rng, out);
+    }
+
+    fn observe(&self, event: &SchedEvent) {
+        let SchedEvent::Steal { affine, .. } = event else { return };
+        let mut steals = self.steals.get() + 1;
+        let mut affine_steals = self.affine_steals.get() + u64::from(*affine);
+        // Age the estimator: at the window cap, halve both counts.  The
+        // ratio is preserved but old samples stop dominating — a
+        // whole-run cumulative average would keep a long cold start's
+        // verdict alive for thousands of steals after locality actually
+        // recovered, pinning the strategy in tight mode.
+        if steals >= self.window {
+            steals /= 2;
+            affine_steals /= 2;
+        }
+        self.steals.set(steals);
+        self.affine_steals.set(affine_steals);
+        if steals >= self.min_steals {
+            // re-evaluated every steal, in both directions: drift below
+            // the target tightens, recovery relaxes
+            self.tight.set(self.affine_ratio() < self.target);
+        }
+    }
+
+    fn steal_bias(&self, _thief_node: usize, cands: &mut Vec<StealCand>) {
+        bias_affine_first(cands);
+        steal_half_takes(cands, self.batch);
+        if self.tight.get() && cands.iter().any(|c| c.affine > 0) {
+            cands.retain(|c| c.affine > 0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+    use super::*;
+
+    fn steal(affine: bool) -> SchedEvent {
+        SchedEvent::Steal { thief: 0, victim: 1, hops: 1, affine }
+    }
+
+    fn cands() -> Vec<StealCand> {
+        vec![
+            StealCand::single(1, 0, 0, 6),
+            StealCand::single(2, 1, 3, 6),
+            StealCand::single(3, 2, 0, 2),
+        ]
+    }
+
+    #[test]
+    fn relaxed_mode_biases_and_batches_without_filtering() {
+        let s = NumaAdapt::new(16.0, 0.5, 4, 4);
+        let mut c = cands();
+        s.steal_bias(0, &mut c);
+        let order: Vec<usize> = c.iter().map(|x| x.victim).collect();
+        assert_eq!(order, vec![2, 1, 3], "affine victim leads, nobody dropped");
+        let takes: Vec<u32> = c.iter().map(|x| x.take).collect();
+        assert_eq!(takes, vec![3, 1, 1], "steal-half (6/2=3) on the affine victim only");
+        assert!(!s.tight());
+    }
+
+    #[test]
+    fn ratio_below_target_tightens_to_affine_only() {
+        let s = NumaAdapt::new(16.0, 0.5, 4, 4);
+        // 1 affine out of 4: ratio 0.25 < 0.5 once min_steals is met
+        s.observe(&steal(true));
+        for _ in 0..3 {
+            s.observe(&steal(false));
+        }
+        assert!(s.tight(), "ratio {} must tighten", s.affine_ratio());
+        let mut c = cands();
+        s.steal_bias(0, &mut c);
+        assert_eq!(c.len(), 1, "non-affine victims filtered");
+        assert_eq!(c[0].victim, 2);
+        assert_eq!(c[0].take, 3, "batching stays on while tight");
+        // an all-cold sweep (no affine anywhere) is never emptied
+        let mut cold = vec![StealCand::single(1, 0, 0, 4), StealCand::single(2, 1, 0, 4)];
+        s.steal_bias(0, &mut cold);
+        assert_eq!(cold.len(), 2, "tight mode must not starve a cold sweep");
+    }
+
+    #[test]
+    fn recovery_above_target_relaxes_again() {
+        let s = NumaAdapt::new(16.0, 0.5, 2, 4);
+        s.observe(&steal(false));
+        s.observe(&steal(false));
+        assert!(s.tight());
+        // six affine steals pull the ratio back over 0.5
+        for _ in 0..6 {
+            s.observe(&steal(true));
+        }
+        assert!(!s.tight(), "drift is tracked in both directions: {}", s.affine_ratio());
+    }
+
+    /// The estimator ages: a long bad phase must not pin tight mode for
+    /// the rest of the run once locality genuinely recovers.  A
+    /// cumulative whole-run average after 1000 misses would need ~1000
+    /// affine steals to cross 0.5 again; the halving window recovers in
+    /// well under 100.
+    #[test]
+    fn aged_estimator_recovers_from_a_long_cold_start() {
+        let s = NumaAdapt::new(16.0, 0.5, 4, 4);
+        for _ in 0..1000 {
+            s.observe(&steal(false));
+        }
+        assert!(s.tight(), "a long all-remote phase tightens");
+        for _ in 0..100 {
+            s.observe(&steal(true));
+        }
+        assert!(
+            !s.tight(),
+            "100 affine steals must outweigh the aged history (ratio {})",
+            s.affine_ratio()
+        );
+    }
+
+    #[test]
+    fn ratio_untrusted_below_min_steals() {
+        let s = NumaAdapt::new(16.0, 0.9, 64, 4);
+        for _ in 0..10 {
+            s.observe(&steal(false));
+        }
+        assert!(!s.tight(), "10 < min_steals=64: stay relaxed");
+        // non-steal events never move the estimator
+        s.observe(&SchedEvent::StealMiss { worker: 0 });
+        s.observe(&SchedEvent::Spawn { worker: 0 });
+        assert_eq!(s.affine_ratio(), 0.0);
+    }
+
+    #[test]
+    fn sweeps_like_dfwsrpt_and_declares_partial_sweeps() {
+        let s = NumaAdapt::new(16.0, 0.5, 16, 4);
+        let d = s.descriptor();
+        assert!(d.places, "home tags require the opt-in");
+        assert!(!d.full_sweep, "tight mode drops victims");
+        assert_eq!(d.min_hint_bytes, 16 * 1024);
+        let vl = VictimList { groups: vec![(0, vec![1]), (2, vec![2, 3])] };
+        for seed in 0..8 {
+            let mut rng_a = SplitMix64::new(seed);
+            let mut rng_b = SplitMix64::new(seed);
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            s.victim_order(&vl, &mut rng_a, &mut a);
+            dfwsrpt::order(&vl, &mut rng_b, &mut b);
+            assert_eq!(a, b, "base order is §VI.B");
+        }
+        // no pushes, no redirects: the stock hook defaults
+        let ctx = SpawnCtx {
+            worker: 0,
+            worker_node: 0,
+            affinity: crate::simnuma::Region { addr: 1 << 20, bytes: 1 << 20 },
+            home: Some(5),
+        };
+        assert_eq!(s.place(&ctx), Placement::LocalQueue);
+        let rctx = ResumeCtx { releaser: 0, owner: 1, owner_node: 0, home: Some(5) };
+        assert_eq!(s.resume(&rctx), Placement::LocalQueue);
+    }
+
+    #[test]
+    fn registry_builds_with_defaults_and_overrides() {
+        let s = build(&SchedSpec::new("numa-adapt")).unwrap();
+        assert_eq!(s.name(), "numa-adapt");
+        assert_eq!(s.signature(), "numa-adapt(batch=4;min_kb=16;min_steals=16;target=0.5)");
+        let s = build(
+            &SchedSpec::new("numa-adapt").with_param("target", 0.75).with_param("batch", 8.0),
+        )
+        .unwrap();
+        assert_eq!(s.signature(), "numa-adapt(batch=8;min_kb=16;min_steals=16;target=0.75)");
+        assert!(build(&SchedSpec::new("numa-adapt").with_param("target", -0.5)).is_err());
+        assert!(build(&SchedSpec::new("numa-adapt").with_param("batch", 0.0)).is_err());
+        assert!(build(&SchedSpec::new("numa-adapt").with_param("bogus", 1.0)).is_err());
+    }
+}

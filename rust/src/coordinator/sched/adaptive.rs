@@ -116,12 +116,12 @@ mod tests {
         let s = Adaptive::new(0.5, 4);
         // 3 local steals: below min_steals, no switch
         for _ in 0..3 {
-            s.observe(&SchedEvent::Steal { thief: 0, victim: 3, hops: 0 });
+            s.observe(&SchedEvent::Steal { thief: 0, victim: 3, hops: 0, affine: false });
         }
         assert!(!s.switched());
         // remote steals push the ratio over 0.5 once min_steals is met
         for _ in 0..5 {
-            s.observe(&SchedEvent::Steal { thief: 0, victim: 1, hops: 2 });
+            s.observe(&SchedEvent::Steal { thief: 0, victim: 1, hops: 2, affine: false });
         }
         assert!(s.switched(), "5/8 remote > 0.5");
         let mut rng = SplitMix64::new(2);
@@ -133,12 +133,12 @@ mod tests {
     #[test]
     fn switch_is_sticky() {
         let s = Adaptive::new(0.5, 2);
-        s.observe(&SchedEvent::Steal { thief: 0, victim: 1, hops: 1 });
-        s.observe(&SchedEvent::Steal { thief: 0, victim: 1, hops: 1 });
+        s.observe(&SchedEvent::Steal { thief: 0, victim: 1, hops: 1, affine: false });
+        s.observe(&SchedEvent::Steal { thief: 0, victim: 1, hops: 1, affine: false });
         assert!(s.switched());
         // a flood of local steals later must not flip it back
         for _ in 0..32 {
-            s.observe(&SchedEvent::Steal { thief: 0, victim: 3, hops: 0 });
+            s.observe(&SchedEvent::Steal { thief: 0, victim: 3, hops: 0, affine: false });
         }
         assert!(s.switched());
     }
@@ -147,7 +147,7 @@ mod tests {
     fn local_steals_never_trigger_a_switch() {
         let s = Adaptive::new(0.5, 2);
         for _ in 0..64 {
-            s.observe(&SchedEvent::Steal { thief: 0, victim: 3, hops: 0 });
+            s.observe(&SchedEvent::Steal { thief: 0, victim: 3, hops: 0, affine: false });
         }
         assert!(!s.switched());
         // misses and spawns are not steals and change nothing

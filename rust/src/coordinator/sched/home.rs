@@ -25,7 +25,10 @@
 //! Stealing is NUMA-aware twice over: the base sweep is the §VI.B random
 //! priority list, and on top of it the [`Scheduler::steal_bias`] hook
 //! moves victims whose pools hold tasks homed on the thief's node to the
-//! front of the sweep (`steal_bias=0` turns the reorder off).  Tied
+//! front of the sweep (`steal_bias=0` turns the reorder off), and a
+//! `batch` above 1 additionally drains up to half of an affine victim's
+//! queue per steal ([`super::steal_half_takes`]; the default of 1 keeps
+//! the stock single steal).  Tied
 //! continuations follow the data too: the [`Scheduler::resume`] hook
 //! releases a waiting task's continuation to a worker on its home node
 //! when the first owner sits elsewhere (`homed_resume=0` restores the
@@ -33,8 +36,8 @@
 //! combines the very pages the hint named.
 
 use super::{
-    bias_affine_first, dfwsrpt, Placement, ResumeCtx, SchedDescriptor, Scheduler, SpawnCtx,
-    StealCand, VictimList,
+    bias_affine_first, dfwsrpt, steal_half_takes, Placement, ResumeCtx, SchedDescriptor,
+    Scheduler, SpawnCtx, StealCand, VictimList,
 };
 use crate::util::SplitMix64;
 
@@ -49,17 +52,20 @@ pub struct NumaHome {
     steal_bias: bool,
     /// Release tied continuations toward their data's home node?
     homed_resume: bool,
+    /// Steal-half cap: max tasks drained per steal from an affine victim
+    /// (1 = the stock single steal).
+    batch: u32,
 }
 
 impl NumaHome {
     /// Placement with both locality extensions on (the registry default).
     pub fn new(min_kb: f64) -> Self {
-        Self::configured(min_kb, true, true)
+        Self::configured(min_kb, true, true, 1)
     }
 
-    /// Placement with explicit steal-bias / homed-resume switches.
-    pub fn configured(min_kb: f64, steal_bias: bool, homed_resume: bool) -> Self {
-        Self { min_bytes: (min_kb * 1024.0) as u64, steal_bias, homed_resume }
+    /// Placement with explicit steal-bias / homed-resume / batch knobs.
+    pub fn configured(min_kb: f64, steal_bias: bool, homed_resume: bool, batch: u32) -> Self {
+        Self { min_bytes: (min_kb * 1024.0) as u64, steal_bias, homed_resume, batch }
     }
 }
 
@@ -70,7 +76,8 @@ impl Scheduler for NumaHome {
 
     fn signature(&self) -> String {
         format!(
-            "numa-home(homed_resume={};min_kb={};steal_bias={})",
+            "numa-home(batch={};homed_resume={};min_kb={};steal_bias={})",
+            self.batch,
             self.homed_resume as u8,
             crate::util::fmt_f64(self.min_bytes as f64 / 1024.0),
             self.steal_bias as u8,
@@ -106,6 +113,7 @@ impl Scheduler for NumaHome {
     fn steal_bias(&self, _thief_node: usize, cands: &mut Vec<StealCand>) {
         if self.steal_bias {
             bias_affine_first(cands);
+            steal_half_takes(cands, self.batch);
         }
     }
 
@@ -193,17 +201,19 @@ mod tests {
     fn registry_builds_with_defaults_and_overrides() {
         let s = build(&SchedSpec::new("numa-home")).unwrap();
         assert_eq!(s.name(), "numa-home");
-        assert_eq!(s.signature(), "numa-home(homed_resume=1;min_kb=16;steal_bias=1)");
+        assert_eq!(s.signature(), "numa-home(batch=1;homed_resume=1;min_kb=16;steal_bias=1)");
         let s = build(&SchedSpec::new("numa-home").with_param("min_kb", 4.0)).unwrap();
-        assert_eq!(s.signature(), "numa-home(homed_resume=1;min_kb=4;steal_bias=1)");
+        assert_eq!(s.signature(), "numa-home(batch=1;homed_resume=1;min_kb=4;steal_bias=1)");
         let s = build(
             &SchedSpec::new("numa-home")
                 .with_param("steal_bias", 0.0)
-                .with_param("homed_resume", 0.0),
+                .with_param("homed_resume", 0.0)
+                .with_param("batch", 4.0),
         )
         .unwrap();
-        assert_eq!(s.signature(), "numa-home(homed_resume=0;min_kb=16;steal_bias=0)");
+        assert_eq!(s.signature(), "numa-home(batch=4;homed_resume=0;min_kb=16;steal_bias=0)");
         assert!(build(&SchedSpec::new("numa-home").with_param("min_kb", -1.0)).is_err());
+        assert!(build(&SchedSpec::new("numa-home").with_param("batch", 0.0)).is_err());
         assert!(build(&SchedSpec::new("numa-home").with_param("bogus", 1.0)).is_err());
         assert!(
             build(&SchedSpec::new("numa-home").with_param("steal_bias", 0.5)).is_err(),
@@ -213,17 +223,33 @@ mod tests {
 
     #[test]
     fn steal_bias_prefers_affine_victims_and_respects_its_switch() {
-        let cand = |victim, affine| StealCand { victim, hops: 1, affine, queued: 2 };
+        let cand = |victim, affine| StealCand::single(victim, 1, affine, 2);
         let mut cands = vec![cand(3, 0), cand(5, 2), cand(1, 0)];
         NumaHome::new(16.0).steal_bias(0, &mut cands);
         assert_eq!(cands.iter().map(|c| c.victim).collect::<Vec<_>>(), vec![5, 3, 1]);
+        assert!(cands.iter().all(|c| c.take == 1), "batch=1 keeps single steals");
         let mut cands = vec![cand(3, 0), cand(5, 2), cand(1, 0)];
-        NumaHome::configured(16.0, false, true).steal_bias(0, &mut cands);
+        NumaHome::configured(16.0, false, true, 1).steal_bias(0, &mut cands);
         assert_eq!(
             cands.iter().map(|c| c.victim).collect::<Vec<_>>(),
             vec![3, 5, 1],
             "steal_bias=0 leaves the sweep untouched"
         );
+    }
+
+    #[test]
+    fn batch_above_one_steals_half_from_affine_victims() {
+        let cand = |victim, affine, queued| StealCand::single(victim, 1, affine, queued);
+        let mut cands = vec![cand(3, 0, 8), cand(5, 2, 8), cand(1, 1, 3)];
+        NumaHome::configured(16.0, true, true, 4).steal_bias(0, &mut cands);
+        let got: Vec<(usize, u32)> = cands.iter().map(|c| (c.victim, c.take)).collect();
+        // affine victims lead and batch steal-half (8/2=4, 3/2=1); the
+        // non-affine victim keeps the stock single steal
+        assert_eq!(got, vec![(5, 4), (1, 1), (3, 1)]);
+        // steal_bias=0 disables batching along with the reorder
+        let mut cands = vec![cand(3, 0, 8), cand(5, 2, 8)];
+        NumaHome::configured(16.0, false, true, 4).steal_bias(0, &mut cands);
+        assert!(cands.iter().all(|c| c.take == 1));
     }
 
     #[test]
@@ -233,7 +259,7 @@ mod tests {
         assert_eq!(s.resume(&rctx(Some(5), 0)), Placement::HomeNode(5));
         assert_eq!(s.resume(&rctx(Some(3), 3)), Placement::LocalQueue, "owner already home");
         assert_eq!(s.resume(&rctx(None, 0)), Placement::LocalQueue, "unhinted task");
-        let off = NumaHome::configured(16.0, true, false);
+        let off = NumaHome::configured(16.0, true, false, 1);
         assert_eq!(off.resume(&rctx(Some(5), 0)), Placement::LocalQueue, "homed_resume=0");
     }
 

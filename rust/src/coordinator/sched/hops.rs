@@ -130,7 +130,7 @@ mod tests {
         let near: Vec<usize> = out[..3].to_vec();
         assert!(near.contains(&1) && near.contains(&2) && near.contains(&3));
 
-        s.observe(&SchedEvent::Steal { thief: 0, victim: 1, hops: 0 });
+        s.observe(&SchedEvent::Steal { thief: 0, victim: 1, hops: 0, affine: false });
         assert!(!s.spilling(), "a successful steal resets the counter");
         out.clear();
         s.victim_order(&vl(), &mut rng, &mut out);

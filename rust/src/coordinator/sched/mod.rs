@@ -29,13 +29,23 @@
 //!   engine snapshots each victim's per-node resident-home summary into
 //!   [`StealCand`]s and lets the strategy reorder or filter them —
 //!   "steal from the victim holding work homed near me first", without
-//!   scanning any deque.  The default keeps the sweep untouched.
+//!   scanning any deque.  The hook also sets each candidate's *batch
+//!   size* ([`StealCand::take`], default 1): a take of `k` makes the
+//!   engine drain up to `k` tasks from that victim's back end under one
+//!   lock (the thief runs the first and requeues the rest locally) —
+//!   steal-half from deep affine pools instead of one-task-at-a-time
+//!   transfers.  The default keeps the sweep untouched and every take
+//!   at 1, which is byte-identical to the stock single steal.
 //! * [`Scheduler::resume`] — an optional *tied-continuation* hook (gated
 //!   the same way): when a task's last child completes, the engine
 //!   offers the [`ResumeCtx`] (first owner + the task's cached home
 //!   node) and the strategy may answer [`Placement::HomeNode`] to
 //!   release the continuation to a worker on the data's node instead of
-//!   unconditionally to the first owner.
+//!   unconditionally to the first owner.  Redirected releases land in a
+//!   **per-node mailbox** (not one worker's deque): every worker drains
+//!   its own stack, then its node's mailbox, then sweeps victims — so
+//!   whichever same-node team member idles first picks the continuation
+//!   up instead of it waiting on one pre-picked worker.
 //!
 //! | scheduler | queueing | steal end | victim selection |
 //! |---|---|---|---|
@@ -49,6 +59,7 @@
 //! | [`hier`]  two-level | per-worker deque, child-first | back | node-local random first, ~one delegate per node (in expectation) probes remote nodes |
 //! | [`home`]  `numa-home` | per-worker deque, child-first, **push-to-home placement + homed resumes** | back | hop-ordered priority list, random within a distance group, **affine victims first** |
 //! | [`steal`] `numa-steal` | per-worker deque, child-first | back | hop-ordered priority list, random within a distance group, **affine victims first** (steal-side only: no pushes, no homed resumes) |
+//! | [`adapt`] `numa-adapt` | per-worker deque, child-first | back | affine-first + steal-half batching; tightens to affine-only sweeps while the observed affine-steal ratio sits below `target` |
 //! | [`adaptive`] | per-worker deque, child-first | back | starts uniform random, switches to the priority list when the remote-steal ratio crosses `remote_ratio` |
 //!
 //! ## Adding a scheduler (~30 lines)
@@ -100,6 +111,7 @@
 //! [`victim_sequence`] keeps the pre-trait victim-order logic verbatim so
 //! parity tests can pin the two paths together.
 
+pub mod adapt;
 pub mod adaptive;
 pub mod bf;
 pub mod cilk;
@@ -237,6 +249,22 @@ pub struct StealCand {
     pub affine: u32,
     /// Victim pool length (affine + everything else).
     pub queued: u32,
+    /// Batch size for this victim: how many tasks a successful steal may
+    /// drain from its back end (clamped to the pool length).  The engine
+    /// initializes it to 1 — the stock single steal — and only
+    /// [`Scheduler::steal_bias`] can raise it, so non-batching strategies
+    /// stay byte-identical.  The thief runs the first drained task and
+    /// requeues the rest on its own pool, paying one victim lock plus a
+    /// per-task transfer charge (see `Engine::steal_sweep`).  Ignored for
+    /// front-end ([`StealEnd::Front`]) steals.
+    pub take: u32,
+}
+
+impl StealCand {
+    /// A stock single-steal candidate (`take` = 1).
+    pub fn single(victim: usize, hops: u8, affine: u32, queued: u32) -> Self {
+        Self { victim, hops, affine, queued, take: 1 }
+    }
 }
 
 /// Stable affine-first reorder: victims whose pools hold tasks homed on
@@ -247,6 +275,24 @@ pub struct StealCand {
 /// only the affine/non-affine interleaving changes.
 pub fn bias_affine_first(cands: &mut [StealCand]) {
     cands.sort_by_key(|c| c.affine == 0);
+}
+
+/// Steal-half batch sizing (Wang et al., arXiv:2502.05293: batched
+/// transfers are what keep fine-grained task systems scaling): every
+/// *affine* candidate's [`StealCand::take`] is set to half its queue
+/// depth, capped at `max_take` — a thief pulling work homed on its own
+/// node takes it in bulk instead of re-paying a sweep per task.
+/// Non-affine candidates keep the stock single steal, and `max_take <= 1`
+/// leaves the whole sweep untouched (the byte-identical default).
+pub fn steal_half_takes(cands: &mut [StealCand], max_take: u32) {
+    if max_take <= 1 {
+        return;
+    }
+    for c in cands.iter_mut() {
+        if c.affine > 0 {
+            c.take = (c.queued / 2).clamp(1, max_take);
+        }
+    }
 }
 
 /// Everything a [`Scheduler::resume`] decision can see about one tied
@@ -271,8 +317,11 @@ pub struct ResumeCtx {
 pub enum SchedEvent {
     /// Worker `worker` spawned a task.
     Spawn { worker: usize },
-    /// `thief` took a task from `victim`'s pool, `hops` apart.
-    Steal { thief: usize, victim: usize, hops: u8 },
+    /// `thief` took a task from `victim`'s pool, `hops` apart.  `affine`
+    /// is true when the stolen task's cached home node is the thief's
+    /// node (always false under non-placing schedulers, whose tasks
+    /// carry no home tags) — the feedback `numa-adapt` steers on.
+    Steal { thief: usize, victim: usize, hops: u8, affine: bool },
     /// `worker` swept its whole victim order and found nothing.
     StealMiss { worker: usize },
 }
@@ -327,7 +376,13 @@ pub trait Scheduler {
     /// snapshots.  Only called when the descriptor sets
     /// [`SchedDescriptor::places`] and the sweep is non-empty; `cands`
     /// arrives in the [`Scheduler::victim_order`] order and the engine
-    /// probes whatever order (and subset) is left in it.  Dropping
+    /// probes whatever order (and subset) is left in it.  Duplicated
+    /// victims are probed once (first occurrence wins) and out-of-range
+    /// ids are dropped.  Raising a candidate's [`StealCand::take`] above
+    /// 1 requests a *batch*: a successful steal from that victim drains
+    /// up to `take` tasks from its back end under one lock — the thief
+    /// runs the first and requeues the rest locally (see
+    /// [`steal_half_takes`] for the canonical sizing rule).  Dropping
     /// victims makes the sweep partial — the engine's liveness net still
     /// guarantees progress.  The default leaves the sweep untouched, so
     /// non-placing schedulers never pay for (or observe) the snapshot.
@@ -337,9 +392,11 @@ pub trait Scheduler {
     /// child completes.  Only called when the descriptor sets
     /// [`SchedDescriptor::places`]; the default preserves the tied-task
     /// contract (resume on the first owner).  Returning
-    /// [`Placement::HomeNode`] releases the continuation to a worker on
-    /// that node — the post phase runs where the data lives — and that
-    /// worker becomes the new owner when it starts the task.
+    /// [`Placement::HomeNode`] releases the continuation into that
+    /// node's *mailbox* — a per-node FIFO every worker drains after its
+    /// own pool and before sweeping victims — so whichever team member
+    /// of the home node idles first runs the post phase where the data
+    /// lives, and becomes the new owner when it starts the task.
     fn resume(&self, _ctx: &ResumeCtx) -> Placement {
         Placement::LocalQueue
     }
@@ -349,17 +406,33 @@ pub trait Scheduler {
 // Parameters
 // ---------------------------------------------------------------------
 
-/// One declared scheduler parameter (name, default, one-line doc).
+/// One declared scheduler parameter (name, default, accepted range,
+/// one-line doc).  [`build`] rejects out-of-range overrides for every
+/// registered scheduler *before* any factory runs — factories used to
+/// each hand-roll their negative checks, and a parameter nobody thought
+/// to check (a negative `min_kb` or `target`) would silently invert the
+/// comparison it feeds.
 #[derive(Clone, Debug)]
 pub struct ParamInfo {
     pub name: String,
     pub default: f64,
+    /// Smallest accepted value (inclusive; `f64::NEG_INFINITY` = unbounded).
+    pub min: f64,
+    /// Largest accepted value (inclusive; `f64::INFINITY` = unbounded).
+    pub max: f64,
     pub doc: String,
 }
 
 impl ParamInfo {
+    /// An unbounded parameter (any finite value accepted).
     pub fn new(name: &str, default: f64, doc: &str) -> Self {
-        Self { name: name.to_string(), default, doc: doc.to_string() }
+        Self::bounded(name, default, f64::NEG_INFINITY, f64::INFINITY, doc)
+    }
+
+    /// A parameter accepting only `min..=max` (checked at [`build`]).
+    pub fn bounded(name: &str, default: f64, min: f64, max: f64, doc: &str) -> Self {
+        debug_assert!(min <= default && default <= max, "default outside declared range");
+        Self { name: name.to_string(), default, min, max, doc: doc.to_string() }
     }
 }
 
@@ -432,6 +505,12 @@ impl SchedulerInfo {
         self.params.push(ParamInfo::new(name, default, doc));
         self
     }
+
+    /// Declare a range-checked parameter (`min..=max`, inclusive).
+    pub fn param_in(mut self, name: &str, default: f64, min: f64, max: f64, doc: &str) -> Self {
+        self.params.push(ParamInfo::bounded(name, default, min, max, doc));
+        self
+    }
 }
 
 type Factory = Box<dyn Fn(&SchedParams) -> Result<Box<dyn Scheduler>> + Send + Sync>;
@@ -484,17 +563,23 @@ fn builtin_entries() -> Vec<Arc<Entry>> {
         ),
         entry(
             SchedulerInfo::new("hops-threshold", "steal within max_hops, spill on starvation")
-                .param("max_hops", 1.0, "steal only from victims at most this many hops away")
-                .param("spill_after", 2.0, "consecutive empty sweeps before probing beyond"),
+                .param_in(
+                    "max_hops",
+                    1.0,
+                    0.0,
+                    u8::MAX as f64,
+                    "steal only from victims at most this many hops away",
+                )
+                .param_in(
+                    "spill_after",
+                    2.0,
+                    0.0,
+                    u32::MAX as f64,
+                    "consecutive empty sweeps before probing beyond",
+                ),
             |p| {
                 let max_hops = p.req_usize("max_hops")?;
-                if max_hops > u8::MAX as usize {
-                    bail!("max_hops={max_hops} out of range (0..=255)");
-                }
                 let spill_after = p.req_usize("spill_after")?;
-                if spill_after > u32::MAX as usize {
-                    bail!("spill_after={spill_after} out of range (0..=4294967295)");
-                }
                 Ok(Box::new(hops::HopsThreshold::new(max_hops as u8, spill_after as u32)))
             },
         ),
@@ -505,63 +590,136 @@ fn builtin_entries() -> Vec<Arc<Entry>> {
         ),
         entry(
             SchedulerInfo::new("numa-home", "push affinity-tagged tasks to their data's home node")
-                .param(
+                .param_in(
                     "min_kb",
                     home::DEFAULT_MIN_KB,
+                    0.0,
+                    f64::INFINITY,
                     "ignore affinity hints smaller than this many KiB",
                 )
-                .param(
+                .param_in(
                     "steal_bias",
+                    1.0,
+                    0.0,
                     1.0,
                     "probe victims holding tasks homed on the thief's node first (0 disables)",
                 )
-                .param(
+                .param_in(
                     "homed_resume",
                     1.0,
+                    0.0,
+                    1.0,
                     "release tied continuations to their data's home node (0 disables)",
+                )
+                .param_in(
+                    "batch",
+                    1.0,
+                    1.0,
+                    MAX_BATCH,
+                    "max tasks per steal (steal-half from deep affine pools; 1 = single steal)",
                 ),
             |p| {
-                let min_kb = p.req("min_kb")?;
-                if min_kb < 0.0 {
-                    bail!("min_kb={min_kb} must be non-negative");
-                }
                 Ok(Box::new(home::NumaHome::configured(
-                    min_kb,
+                    p.req("min_kb")?,
                     p.req_flag("steal_bias")?,
                     p.req_flag("homed_resume")?,
+                    p.req_usize("batch")? as u32,
                 )))
             },
         ),
         entry(
             SchedulerInfo::new("numa-steal", "steal-side-only locality: affine victims first")
-                .param(
+                .param_in(
                     "min_kb",
                     home::DEFAULT_MIN_KB,
+                    0.0,
+                    f64::INFINITY,
                     "ignore affinity hints smaller than this many KiB",
+                )
+                .param_in(
+                    "batch",
+                    1.0,
+                    1.0,
+                    MAX_BATCH,
+                    "max tasks per steal (steal-half from deep affine pools; 1 = single steal)",
                 ),
             |p| {
-                let min_kb = p.req("min_kb")?;
-                if min_kb < 0.0 {
-                    bail!("min_kb={min_kb} must be non-negative");
-                }
-                Ok(Box::new(steal::NumaSteal::new(min_kb)))
+                Ok(Box::new(steal::NumaSteal::configured(
+                    p.req("min_kb")?,
+                    p.req_usize("batch")? as u32,
+                )))
+            },
+        ),
+        entry(
+            SchedulerInfo::new(
+                "numa-adapt",
+                "steal-half affine bias that tightens while the affine-steal ratio lags target",
+            )
+            .param_in(
+                "min_kb",
+                home::DEFAULT_MIN_KB,
+                0.0,
+                f64::INFINITY,
+                "ignore affinity hints smaller than this many KiB",
+            )
+            .param_in(
+                "target",
+                adapt::DEFAULT_TARGET,
+                0.0,
+                1.0,
+                "affine-steal ratio below which the bias tightens to affine-only sweeps",
+            )
+            .param_in(
+                "min_steals",
+                16.0,
+                0.0,
+                9.0e15,
+                "steals observed before the ratio is trusted",
+            )
+            .param_in(
+                "batch",
+                adapt::DEFAULT_BATCH,
+                1.0,
+                MAX_BATCH,
+                "max tasks per steal (steal-half from deep affine pools)",
+            ),
+            |p| {
+                Ok(Box::new(adapt::NumaAdapt::new(
+                    p.req("min_kb")?,
+                    p.req("target")?,
+                    p.req_usize("min_steals")? as u64,
+                    p.req_usize("batch")? as u32,
+                )))
             },
         ),
         entry(
             SchedulerInfo::new("adaptive", "work-first until the remote-steal ratio crosses")
-                .param("remote_ratio", 0.5, "remote-steal ratio that triggers the switch")
-                .param("min_steals", 16.0, "steals observed before the ratio is trusted"),
+                .param_in(
+                    "remote_ratio",
+                    0.5,
+                    0.0,
+                    1.0,
+                    "remote-steal ratio that triggers the switch",
+                )
+                .param_in(
+                    "min_steals",
+                    16.0,
+                    0.0,
+                    9.0e15,
+                    "steals observed before the ratio is trusted",
+                ),
             |p| {
                 let ratio = p.req("remote_ratio")?;
-                if !(0.0..=1.0).contains(&ratio) {
-                    bail!("remote_ratio={ratio} out of range (0..=1)");
-                }
                 let min_steals = p.req_usize("min_steals")? as u64;
                 Ok(Box::new(adaptive::Adaptive::new(ratio, min_steals)))
             },
         ),
     ]
 }
+
+/// Upper bound for declared `batch` parameters (far above any real pool
+/// depth; keeps the u32 cast trivially safe).
+const MAX_BATCH: f64 = 65536.0;
 
 /// Register a scheduler.  Fails on a name/alias collision.  The factory
 /// must not call back into the registry.
@@ -636,12 +794,27 @@ pub fn build(spec: &SchedSpec) -> Result<Box<dyn Scheduler>> {
     // Factories range-check their own parameters but f64 casts swallow
     // NaN/inf silently (`NaN as u64 == 0` would turn numa-home's hint
     // floor off); reject non-finite values for every scheduler here,
-    // before any factory sees them.
+    // before any factory sees them.  Declared [`ParamInfo`] ranges are
+    // enforced in the same place: a negative `min_kb` or `target` used
+    // to reach the factory, and any factory without its own check would
+    // silently invert the comparison the parameter feeds.
     for (key, value) in &params.pairs {
         if !value.is_finite() {
             bail!(
                 "scheduler '{}' parameter '{key}' must be finite, got {value}",
                 entry.info.name
+            );
+        }
+        let info = declared
+            .iter()
+            .find(|p| &p.name == key)
+            .expect("params are built from the declarations");
+        if *value < info.min || *value > info.max {
+            bail!(
+                "scheduler '{}' parameter '{key}' must be in {}..={}, got {value}",
+                entry.info.name,
+                info.min,
+                info.max
             );
         }
     }
@@ -1027,7 +1200,7 @@ mod tests {
 
     /// Builtin names, fixed (not `scheduler_names()`: other tests may
     /// register extra schedulers concurrently).
-    const BUILTINS: [&str; 11] = [
+    const BUILTINS: [&str; 12] = [
         "serial",
         "bf",
         "cilk",
@@ -1038,6 +1211,7 @@ mod tests {
         "hier",
         "numa-home",
         "numa-steal",
+        "numa-adapt",
         "adaptive",
     ];
 
@@ -1141,7 +1315,9 @@ mod tests {
         for stock_name in ["serial", "bf", "cilk", "wf", "dfwspt", "dfwsrpt"] {
             assert!(names.contains(&stock_name.to_string()), "{names:?}");
         }
-        for new_name in ["hops-threshold", "hier", "numa-home", "numa-steal", "adaptive"] {
+        for new_name in
+            ["hops-threshold", "hier", "numa-home", "numa-steal", "numa-adapt", "adaptive"]
+        {
             assert!(names.contains(&new_name.to_string()), "{names:?}");
         }
     }
@@ -1168,9 +1344,64 @@ mod tests {
         assert!(build(&SchedSpec::new("numa-home").with_param("min_kb", 4.0)).is_ok());
     }
 
+    /// Satellite regression: negative (and otherwise out-of-range)
+    /// parameter values are rejected at `build()` from the declared
+    /// [`ParamInfo`] ranges, for every registered scheduler — a negative
+    /// `min_kb` or `target` used to reach the factory and silently invert
+    /// the comparison it feeds when the factory forgot its own check.
+    #[test]
+    fn out_of_range_params_rejected_for_every_scheduler() {
+        for (name, param, bad) in [
+            ("numa-home", "min_kb", -1.0),
+            ("numa-home", "steal_bias", -1.0),
+            ("numa-home", "batch", 0.0),
+            ("numa-steal", "min_kb", -0.5),
+            ("numa-steal", "batch", -2.0),
+            ("numa-adapt", "target", -0.1),
+            ("numa-adapt", "target", 1.5),
+            ("numa-adapt", "min_kb", -4.0),
+            ("numa-adapt", "batch", 0.0),
+            ("hops-threshold", "max_hops", -1.0),
+            ("hops-threshold", "max_hops", 300.0),
+            ("hops-threshold", "spill_after", -1.0),
+            ("adaptive", "remote_ratio", -0.25),
+            ("adaptive", "remote_ratio", 1.5),
+            ("adaptive", "min_steals", -8.0),
+        ] {
+            let spec = SchedSpec::new(name).with_param(param, bad);
+            let err = format!("{:#}", build(&spec).unwrap_err());
+            assert!(
+                err.contains("must be in"),
+                "{name}.{param}={bad} must fail the range check: {err}"
+            );
+        }
+        // boundary values still build
+        assert!(build(&SchedSpec::new("numa-home").with_param("min_kb", 0.0)).is_ok());
+        assert!(build(&SchedSpec::new("numa-adapt").with_param("target", 1.0)).is_ok());
+        assert!(build(&SchedSpec::new("hops-threshold").with_param("max_hops", 255.0)).is_ok());
+    }
+
+    #[test]
+    fn steal_half_takes_batches_affine_candidates_only() {
+        let cand = |victim, affine, queued| StealCand { victim, hops: 1, affine, queued, take: 1 };
+        let mut cands =
+            vec![cand(1, 0, 9), cand(2, 3, 9), cand(3, 1, 1), cand(4, 2, 100), cand(5, 1, 3)];
+        steal_half_takes(&mut cands, 8);
+        let takes: Vec<u32> = cands.iter().map(|c| c.take).collect();
+        // non-affine keeps 1; half of 9 is 4; half of 1 clamps up to 1;
+        // half of 100 clamps down to the cap; half of 3 is 1
+        assert_eq!(takes, vec![1, 4, 1, 8, 1]);
+        // max_take <= 1 leaves everything at the stock single steal
+        let mut cands = vec![cand(1, 5, 40)];
+        steal_half_takes(&mut cands, 1);
+        assert_eq!(cands[0].take, 1);
+        // the constructor shorthand defaults to a single steal
+        assert_eq!(StealCand::single(3, 2, 1, 4).take, 1);
+    }
+
     #[test]
     fn bias_affine_first_is_a_stable_partition() {
-        let cand = |victim, affine| StealCand { victim, hops: 1, affine, queued: affine + 1 };
+        let cand = |victim, affine| StealCand::single(victim, 1, affine, affine + 1);
         let mut cands = vec![cand(4, 0), cand(2, 1), cand(7, 0), cand(1, 3), cand(5, 0)];
         bias_affine_first(&mut cands);
         let order: Vec<usize> = cands.iter().map(|c| c.victim).collect();

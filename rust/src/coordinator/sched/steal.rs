@@ -12,6 +12,12 @@
 //! it — without ever paying the cross-node push traffic `numa-home`
 //! risks on badly-hinted graphs.
 //!
+//! A `batch` above 1 turns the bias into *steal-half*
+//! ([`super::steal_half_takes`]): a thief probing a deep affine pool
+//! drains up to half of it under one lock instead of re-sweeping per
+//! task (Wang et al., arXiv:2502.05293).  The default of 1 keeps the
+//! stock single steal.
+//!
 //! The base sweep is the §VI.B random priority list, so with a cold page
 //! table (no hints resolved yet, all summaries zero) `numa-steal`
 //! degenerates to exactly [`super::dfwsrpt`]'s behaviour.  The strategy
@@ -25,7 +31,8 @@
 //! remote-ratio drop comes from biased steals alone.
 
 use super::{
-    bias_affine_first, dfwsrpt, SchedDescriptor, Scheduler, StealCand, VictimList,
+    bias_affine_first, dfwsrpt, steal_half_takes, SchedDescriptor, Scheduler, StealCand,
+    VictimList,
 };
 use crate::util::SplitMix64;
 
@@ -33,11 +40,19 @@ use crate::util::SplitMix64;
 pub struct NumaSteal {
     /// Minimum affinity-hint size (bytes) worth resolving a home for.
     min_bytes: u64,
+    /// Steal-half cap: max tasks drained per steal from an affine victim
+    /// (1 = the stock single steal).
+    batch: u32,
 }
 
 impl NumaSteal {
     pub fn new(min_kb: f64) -> Self {
-        Self { min_bytes: (min_kb * 1024.0) as u64 }
+        Self::configured(min_kb, 1)
+    }
+
+    /// Biased stealing with an explicit steal-half cap.
+    pub fn configured(min_kb: f64, batch: u32) -> Self {
+        Self { min_bytes: (min_kb * 1024.0) as u64, batch }
     }
 }
 
@@ -47,7 +62,11 @@ impl Scheduler for NumaSteal {
     }
 
     fn signature(&self) -> String {
-        format!("numa-steal(min_kb={})", crate::util::fmt_f64(self.min_bytes as f64 / 1024.0))
+        format!(
+            "numa-steal(batch={};min_kb={})",
+            self.batch,
+            crate::util::fmt_f64(self.min_bytes as f64 / 1024.0)
+        )
     }
 
     fn descriptor(&self) -> SchedDescriptor {
@@ -68,6 +87,7 @@ impl Scheduler for NumaSteal {
 
     fn steal_bias(&self, _thief_node: usize, cands: &mut Vec<StealCand>) {
         bias_affine_first(cands);
+        steal_half_takes(cands, self.batch);
     }
 }
 
@@ -109,20 +129,33 @@ mod tests {
             dfwsrpt::order(&vl, &mut rng_b, &mut b);
             assert_eq!(a, b, "base order is §VI.B");
         }
-        let cand = |victim, affine| StealCand { victim, hops: 0, affine, queued: 3 };
+        let cand = |victim, affine| StealCand::single(victim, 0, affine, 3);
         let mut cands = vec![cand(1, 0), cand(2, 0), cand(3, 4)];
         NumaSteal::new(16.0).steal_bias(0, &mut cands);
         assert_eq!(cands.iter().map(|c| c.victim).collect::<Vec<_>>(), vec![3, 1, 2]);
+        assert!(cands.iter().all(|c| c.take == 1), "default batch keeps single steals");
+    }
+
+    #[test]
+    fn batch_above_one_enables_steal_half() {
+        let cand = |victim, affine, queued| StealCand::single(victim, 0, affine, queued);
+        let mut cands = vec![cand(1, 0, 10), cand(2, 3, 10), cand(3, 1, 5)];
+        NumaSteal::configured(16.0, 4).steal_bias(0, &mut cands);
+        let got: Vec<(usize, u32)> = cands.iter().map(|c| (c.victim, c.take)).collect();
+        assert_eq!(got, vec![(2, 4), (3, 2), (1, 1)], "steal-half on affine victims only");
     }
 
     #[test]
     fn registry_builds_with_defaults_and_overrides() {
         let s = build(&SchedSpec::new("numa-steal")).unwrap();
         assert_eq!(s.name(), "numa-steal");
-        assert_eq!(s.signature(), "numa-steal(min_kb=16)");
+        assert_eq!(s.signature(), "numa-steal(batch=1;min_kb=16)");
         let s = build(&SchedSpec::new("numa-steal").with_param("min_kb", 0.0)).unwrap();
-        assert_eq!(s.signature(), "numa-steal(min_kb=0)");
+        assert_eq!(s.signature(), "numa-steal(batch=1;min_kb=0)");
+        let s = build(&SchedSpec::new("numa-steal").with_param("batch", 4.0)).unwrap();
+        assert_eq!(s.signature(), "numa-steal(batch=4;min_kb=16)");
         assert!(build(&SchedSpec::new("numa-steal").with_param("min_kb", -1.0)).is_err());
+        assert!(build(&SchedSpec::new("numa-steal").with_param("batch", 0.0)).is_err());
         assert!(build(&SchedSpec::new("numa-steal").with_param("bogus", 1.0)).is_err());
     }
 }

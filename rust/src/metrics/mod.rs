@@ -45,6 +45,16 @@ pub struct RunStats {
     /// a home-node worker instead of the first owner (0 for stock
     /// schedulers).
     pub homed_resumes: u64,
+    /// Steals that transferred more than one task — the steal-half
+    /// batching a `StealCand::take` above 1 requests (0 for stock
+    /// schedulers and default-batch locality strategies).
+    pub batch_steals: u64,
+    /// Extra tasks moved by batched steals, beyond the one the thief ran
+    /// (each was requeued on the thief's own pool under the same sweep).
+    pub tasks_migrated: u64,
+    /// Homed continuations picked up from a per-node mailbox by a
+    /// same-node team member (0 for stock schedulers).
+    pub mailbox_hits: u64,
     /// Total simulated time spent waiting on pool locks (contention).
     pub lock_wait_total: Time,
     pub shared_lock_wait: Time,
@@ -125,6 +135,9 @@ mod tests {
             affinity_hits: 0,
             affine_steals: 0,
             homed_resumes: 0,
+            batch_steals: 0,
+            tasks_migrated: 0,
+            mailbox_hits: 0,
             lock_wait_total: 0,
             shared_lock_wait: 0,
             shared_ops: 0,

@@ -65,18 +65,20 @@ impl RunRecord {
     /// Long-form CSV header matching [`RunRecord::to_csv_row`].  The
     /// placement refactor added the `mem` axis column (after `bind`) and
     /// the placement counters at the tail; the steal-bias/homed-resume
-    /// refactor appended `affine_steals` and `homed_resumes`.  Every
-    /// pre-existing column keeps its name, order and formatting.
+    /// refactor appended `affine_steals` and `homed_resumes`; the
+    /// steal-half/mailbox refactor appended `batch_steals`,
+    /// `tasks_migrated` and `mailbox_hits`.  Every pre-existing column
+    /// keeps its name, order and formatting.
     pub const CSV_HEADER: &'static str = "bench,size,policy,bind,mem,threads,topo,seed,\
          makespan,serial_makespan,speedup,tasks,steals,steal_hops,remote_pct,\
          lock_wait,work,overhead,sim_events,pushed_home,affinity_hits,migrated_pages,\
-         affine_steals,homed_resumes";
+         affine_steals,homed_resumes,batch_steals,tasks_migrated,mailbox_hits";
 
     /// Deterministic CSV row (no host wall-clock — parallel and sequential
     /// sweep output must be byte-identical).
     pub fn to_csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{},{},{},{},{:.4},{},{},{:.3},{:.4},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{:.4},{},{},{:.3},{:.4},{},{},{},{},{},{},{},{},{},{},{},{}",
             self.spec.bench,
             self.spec.size.name(),
             self.spec.sched.name_sig(),
@@ -101,6 +103,9 @@ impl RunRecord {
             self.stats.mem.migrated_pages,
             self.stats.affine_steals,
             self.stats.homed_resumes,
+            self.stats.batch_steals,
+            self.stats.tasks_migrated,
+            self.stats.mailbox_hits,
         )
     }
 
@@ -127,6 +132,9 @@ impl RunRecord {
             ("migrated_pages", Json::from(self.stats.mem.migrated_pages)),
             ("affine_steals", Json::from(self.stats.affine_steals)),
             ("homed_resumes", Json::from(self.stats.homed_resumes)),
+            ("batch_steals", Json::from(self.stats.batch_steals)),
+            ("tasks_migrated", Json::from(self.stats.tasks_migrated)),
+            ("mailbox_hits", Json::from(self.stats.mailbox_hits)),
         ])
     }
 }

@@ -66,7 +66,9 @@ fn list_prints_page_policies_with_parameters() {
     assert!(scheds.contains("numa-home("), "{scheds}");
     assert!(scheds.contains("steal_bias=1"), "{scheds}");
     assert!(scheds.contains("homed_resume=1"), "{scheds}");
-    assert!(scheds.contains("numa-steal(min_kb=16)"), "{scheds}");
+    assert!(scheds.contains("numa-steal(min_kb=16;batch=1)"), "{scheds}");
+    assert!(scheds.contains("numa-adapt("), "{scheds}");
+    assert!(scheds.contains("target=0.5"), "{scheds}");
     assert!(scheds.contains("hops-threshold(max_hops=1;spill_after=2)"), "{scheds}");
 }
 

@@ -1,23 +1,31 @@
 //! Engine-level regressions for the locality refactor: the
 //! tied-continuation wake-targeting fix (a release used to signal an
 //! arbitrary round-robin sleeper, which under bounded-sweep schedulers
-//! strands the continuation and charges phantom steal overhead), and
+//! strands the continuation and charges phantom steal overhead),
 //! deterministic engagement of the `resume` / `steal_bias` hooks with
-//! their `homed_resumes` / `affine_steals` counters.
+//! their `homed_resumes` / `affine_steals` counters, steal-half
+//! batching, per-node continuation mailboxes, and the duplicate-victim
+//! dedup after the `steal_bias` hook.
 //!
 //! The workloads are hand-built task graphs over hand-built topologies:
 //! every cross-worker ordering below is separated by tens of
 //! microseconds of simulated compute, far above the sub-microsecond
 //! queue-op costs, so the traces (and the asserted counters) are stable
-//! under any reasonable cost model.
+//! under any reasonable cost model.  Two traces additionally rely on an
+//! engine invariant worth naming: a worker executes a whole scheduling
+//! quantum per *event*, so a leaf's long compute finishes (and its
+//! completion cascade runs) at the quantum's start event — pool contents
+//! observed by later events are exact, not racy.
 
 use numanos::coordinator::runtime::Runtime;
-use numanos::coordinator::sched::{self, SchedSpec};
+use numanos::coordinator::sched::{
+    self, dfwspt, SchedDescriptor, SchedSpec, Scheduler, SchedulerInfo, StealCand, VictimList,
+};
 use numanos::coordinator::task::{BodyCtx, TaskDesc, Workload};
 use numanos::simnuma::{CostModel, MemSim, MemSpec, Region};
 use numanos::spec::Session;
 use numanos::topology::Topology;
-use numanos::util::Time;
+use numanos::util::{SplitMix64, Time, NS};
 
 /// Root spawns A (which parks its worker until late via a 5 us
 /// grandchild) and B (a 50 us leaf); the root continuation ends up
@@ -277,4 +285,346 @@ fn numa_steal_counts_affine_steals_without_placing() {
     assert_eq!(stats.affine_steals, 1, "M (homed on n1) stolen by the n1 worker");
     assert_eq!(stats.pushed_home, 0, "steal-side-only: no push-to-home");
     assert_eq!(stats.homed_resumes, 0, "steal-side-only: continuations stay tied");
+}
+
+/// Near-free queue/spawn costs: the master's whole spawn chain finishes
+/// inside the 120 ns futex wake latency, so the woken thief's first
+/// sweep observes the fully built pool — the deterministic window the
+/// steal-half and mailbox traces below are built on.
+fn fast_queue_cost() -> CostModel {
+    CostModel {
+        queue_op: 5 * NS,
+        spawn_cost: 5 * NS,
+        steal_per_hop: 5 * NS,
+        ..CostModel::default()
+    }
+}
+
+/// Steal-half workload: a spawn chain root→A→B→C (each hinted on the
+/// node-1 data) ending in a long plain leaf D, so W0's pool holds the
+/// four suspended ancestors `[C, B, A, root]` (three of them homed on
+/// node 1) when the node-1 thief arrives.  Kinds: 0 root, 1 A, 2 B,
+/// 3 C, 4 D.
+struct StealHalfChain {
+    data: Region,
+}
+
+impl Workload for StealHalfChain {
+    fn name(&self) -> &'static str {
+        "steal-half-chain"
+    }
+
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        self.data = mem.alloc(64 * 1024);
+        mem.first_touch(master_core, self.data, 0)
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::leaf(0)
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        match desc.kind {
+            k @ 0..=2 => {
+                ctx.spawn_on(TaskDesc::leaf(k + 1), self.data);
+                ctx.taskwait();
+                ctx.compute(100);
+            }
+            3 => {
+                ctx.spawn(TaskDesc::leaf(4)); // D: unhinted
+                ctx.taskwait();
+                ctx.compute(100);
+            }
+            4 => ctx.compute(50_000), // D parks W0's clock far out
+            _ => unreachable!("unknown task kind"),
+        }
+    }
+}
+
+/// Tentpole regression (steal-half batching), hand-traced: with all
+/// pages bound to node 1, the pool tags read `[C:1, B:1, A:1, root:—]`,
+/// so the thief's bias sees `affine=3, queued=4` and `numa-steal:batch=4`
+/// sets `take = 4/2 = 2`.  The sweep drains `[root, A]` under one lock:
+/// the thief runs root (exactly what a single back-steal would have
+/// taken) and requeues A locally — one `batch_steals`, one task
+/// migrated.  A then comes off the thief's *own* pool (no second sweep),
+/// and B and C are stolen singly (their queues are too shallow to
+/// batch), both affine.  D completes at its start event, long before the
+/// thief's sweeps, so every count below is exact.
+#[test]
+fn steal_half_batches_affine_work_to_the_thief() {
+    let topo = Topology::from_edges("pair", vec![1, 1], &[(0, 1)], 4096).unwrap();
+    let rt = Runtime::new(topo, fast_queue_cost());
+    let sched =
+        sched::build(&SchedSpec::new("numa-steal").with_param("batch", 4.0)).unwrap();
+    let run = || {
+        let mut w = StealHalfChain { data: Region::EMPTY };
+        Session::execute_bound_placed(
+            &rt,
+            &mut w,
+            sched.as_ref(),
+            &[0, 1],
+            false,
+            &MemSpec::new("bind").with_param("node", 1.0),
+            3,
+            None,
+        )
+        .unwrap()
+    };
+    let stats = run();
+    assert_eq!(stats.tasks, 5, "root + A + B + C + D");
+    assert_eq!(stats.batch_steals, 1, "exactly the first sweep batches");
+    assert_eq!(stats.tasks_migrated, 1, "the batch moved root plus one extra (A)");
+    assert_eq!(stats.steals, 3, "batch counts once; B and C are single steals");
+    assert_eq!(stats.steal_attempts, 3, "A comes off the thief's own pool, not a sweep");
+    assert_eq!(stats.affine_steals, 2, "B and C land on their data's node; root is untagged");
+    assert_eq!(stats.per_worker_tasks, vec![1, 4], "W0 ran only D; W1 ran the whole chain");
+    assert_eq!(stats.pushed_home, 0, "steal-side-only: no pushes");
+    assert_eq!(stats.homed_resumes, 0);
+    assert_eq!(stats.mailbox_hits, 0, "no redirects, so the mailboxes stay empty");
+    let again = run();
+    assert_eq!(stats.makespan, again.makespan);
+    assert_eq!(stats.sim_events, again.sim_events);
+    assert_eq!(stats.tasks_migrated, again.tasks_migrated);
+}
+
+/// Mailbox workload: P and R are pushed home to the two node-1 workers;
+/// W0 (node 0) steals P, C and C2 back while the node-1 team is busy, so
+/// their continuations wait under a node-0 owner and must be released
+/// *toward node 1*.  Kinds: 0 root, 1 P, 2 R, 3 Q, 4 C, 5 C2, 6 C3.
+struct MailboxGraph {
+    data: Region,
+    data2: Region,
+}
+
+impl Workload for MailboxGraph {
+    fn name(&self) -> &'static str {
+        "mailbox-graph"
+    }
+
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        self.data = mem.alloc(64 * 1024);
+        self.data2 = mem.alloc(64 * 1024);
+        let mut t = mem.first_touch(master_core, self.data, 0);
+        t += mem.first_touch(master_core, self.data2, 0);
+        t
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::leaf(0)
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        match desc.kind {
+            0 => {
+                ctx.spawn_on(TaskDesc::leaf(1), self.data); // P -> pushed to W1
+                ctx.spawn_on(TaskDesc::leaf(2), self.data2); // R -> pushed to W2
+                ctx.spawn(TaskDesc::leaf(3)); // Q keeps the master busy
+                ctx.taskwait();
+                ctx.compute(100);
+            }
+            1 => {
+                ctx.spawn_on(TaskDesc::leaf(4), self.data); // C (affinity hit)
+                ctx.taskwait();
+                ctx.compute(50);
+            }
+            2 => ctx.compute(30_000), // R
+            3 => ctx.compute(10_000), // Q
+            4 => {
+                ctx.compute(100);
+                ctx.spawn(TaskDesc::leaf(5)); // C2
+                ctx.taskwait();
+                ctx.compute(50);
+            }
+            5 => {
+                ctx.spawn(TaskDesc::leaf(6)); // C3 keeps W1 busy until late
+                ctx.taskwait();
+                ctx.compute(50);
+            }
+            6 => ctx.compute(20_000), // C3
+            _ => unreachable!("unknown task kind"),
+        }
+    }
+}
+
+/// Tentpole regression (per-node mailboxes), hand-traced: W0 finishes Q
+/// at ~10 µs and steals P, C and C2 out of W1's pool (the node-1 team is
+/// busy with C3 until ~20 µs).  C2's completion on W0 releases C — owner
+/// W0, home node 1 — into node 1's *mailbox*; nobody on node 1 sleeps,
+/// so no wake is issued and W0 parks.  When C3's quantum ends, W1 drains
+/// its node mailbox (own stack first, mailbox second, stealing last) and
+/// runs C's continuation on the data's node; completing C releases P the
+/// same way.  Root's tied release then wakes W0, but W1's next sweep
+/// legitimately steals it first.  Every counter below is exact.
+#[test]
+fn homed_continuations_flow_through_the_node_mailbox() {
+    let topo = Topology::from_edges("one-two", vec![1, 2], &[(0, 1)], 4096).unwrap();
+    let rt = Runtime::new(topo, fast_queue_cost());
+    let sched = sched::build(&SchedSpec::new("numa-home")).unwrap();
+    let run = || {
+        let mut w = MailboxGraph { data: Region::EMPTY, data2: Region::EMPTY };
+        Session::execute_bound_placed(
+            &rt,
+            &mut w,
+            sched.as_ref(),
+            &[0, 1, 2],
+            false,
+            &MemSpec::new("bind").with_param("node", 1.0),
+            9,
+            None,
+        )
+        .unwrap()
+    };
+    let stats = run();
+    assert_eq!(stats.tasks, 7);
+    assert_eq!(stats.pushed_home, 2, "P and R are pushed to their data's node");
+    assert_eq!(stats.affinity_hits, 1, "C is spawned on the node its data lives on");
+    assert_eq!(
+        stats.homed_resumes, 2,
+        "C's and P's continuations redirect home (their owner sat on node 0)"
+    );
+    assert_eq!(
+        stats.mailbox_hits, 2,
+        "a same-node peer drains both homed continuations from the node mailbox"
+    );
+    assert_eq!(
+        stats.steals, 4,
+        "W0's three steal-backs plus W1 taking root's tied continuation — \
+         the mailbox pickups are not steals"
+    );
+    assert_eq!(stats.affine_steals, 0, "every steal moved work away from its data");
+    assert_eq!(stats.batch_steals, 0, "numa-home's default batch is the single steal");
+    assert_eq!(
+        stats.per_worker_tasks,
+        vec![2, 4, 1],
+        "the homed post phases (C, P) ran on node-1 workers, not on owner W0"
+    );
+    let again = run();
+    assert_eq!(stats.makespan, again.makespan);
+    assert_eq!(stats.sim_events, again.sim_events);
+    assert_eq!(stats.mailbox_hits, again.mailbox_hits);
+}
+
+/// A steal-bias hook that returns every victim twice, plus two bogus
+/// ids — the misbehaving registered scheduler of the dedup satellite.
+/// `clean: true` leaves the sweep untouched; everything else (descriptor,
+/// victim order, RNG consumption) is identical between the two modes.
+struct DupBias {
+    clean: bool,
+}
+
+impl Scheduler for DupBias {
+    fn name(&self) -> &str {
+        if self.clean {
+            "test-dup-bias-clean"
+        } else {
+            "test-dup-bias"
+        }
+    }
+
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor { places: true, ..SchedDescriptor::WORK_STEALING }
+    }
+
+    fn victim_order(&self, vl: &VictimList, _rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        dfwspt::order(vl, out);
+    }
+
+    fn steal_bias(&self, _thief_node: usize, cands: &mut Vec<StealCand>) {
+        if self.clean {
+            return;
+        }
+        // duplicate the whole sweep (first occurrences keep their
+        // positions) and append victims that do not exist
+        let copy = cands.clone();
+        cands.extend(copy);
+        cands.push(StealCand::single(usize::MAX, 0, 0, 0));
+        cands.push(StealCand::single(1usize << 20, 0, 0, 0));
+    }
+}
+
+/// Fan-out workload for the dedup regression: three long leaves force
+/// idle workers into repeated biased sweeps.  Kinds: 0 root, 1 leaf.
+struct FanOut;
+
+impl Workload for FanOut {
+    fn name(&self) -> &'static str {
+        "fan-out"
+    }
+
+    fn init(&mut self, _mem: &mut MemSim, _master_core: usize) -> Time {
+        0
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::leaf(0)
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        match desc.kind {
+            0 => {
+                for _ in 0..3 {
+                    ctx.spawn(TaskDesc::leaf(1));
+                }
+                ctx.taskwait();
+                ctx.compute(100);
+            }
+            1 => ctx.compute(8_000),
+            _ => unreachable!("unknown task kind"),
+        }
+    }
+}
+
+/// Satellite regression (duplicate-victim dedup): a registered scheduler
+/// whose `steal_bias` hook emits each victim twice must not make the
+/// engine probe and lock the same pool twice per sweep — duplicates are
+/// dropped keeping the first occurrence, so its run is byte-identical to
+/// the same scheduler without the duplication (the old code only
+/// filtered out-of-range ids and double-charged contention for dupes).
+#[test]
+fn duplicate_bias_victims_are_probed_once() {
+    sched::register(
+        SchedulerInfo::new("test-dup-bias", "dedup regression: duplicating bias hook"),
+        |_| Ok(Box::new(DupBias { clean: false })),
+    )
+    .unwrap();
+    sched::register(
+        SchedulerInfo::new("test-dup-bias-clean", "dedup regression: well-behaved twin"),
+        |_| Ok(Box::new(DupBias { clean: true })),
+    )
+    .unwrap();
+
+    let run = |name: &str| {
+        let topo = Topology::from_edges("dual", vec![2, 2], &[(0, 1)], 4096).unwrap();
+        let rt = Runtime::new(topo, CostModel::default());
+        let sched = sched::build(&SchedSpec::new(name)).unwrap();
+        let mut w = FanOut;
+        Session::execute_bound_placed(
+            &rt,
+            &mut w,
+            sched.as_ref(),
+            &[0, 1, 2, 3],
+            false,
+            &MemSpec::default(),
+            11,
+            None,
+        )
+        .unwrap()
+    };
+    let dup = run("test-dup-bias");
+    let clean = run("test-dup-bias-clean");
+    assert!(clean.steals > 0, "the fan-out must actually be stolen");
+    assert_eq!(dup.steals, clean.steals);
+    assert_eq!(
+        dup.steal_attempts, clean.steal_attempts,
+        "a duplicated victim must be probed once, not twice"
+    );
+    assert_eq!(
+        dup.overhead_time, clean.overhead_time,
+        "double-locking a victim would double-charge contention"
+    );
+    assert_eq!(dup.lock_wait_total, clean.lock_wait_total);
+    assert_eq!(dup.makespan, clean.makespan);
+    assert_eq!(dup.sim_events, clean.sim_events);
+    assert_eq!(dup.per_worker_tasks, clean.per_worker_tasks);
 }

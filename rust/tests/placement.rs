@@ -25,16 +25,23 @@ fn spec(bench: &str, sched: SchedSpec, mem: MemSpec, topo: &str, threads: usize)
         .unwrap()
 }
 
-/// Acceptance criterion (parity half): stock schedulers with the default
-/// `MemSpec` produce byte-identical stats/CSV through the new
-/// placement-aware path vs. the legacy `Runtime::run` verbs, and an
-/// *explicit* `first-touch` selection is indistinguishable from the
-/// default.
+/// Acceptance criterion (parity half): every stock parallel scheduler
+/// with the default `MemSpec` produces byte-identical stats/CSV through
+/// the new placement-aware path (with steal-half batching, per-node
+/// mailboxes and the dedup/underflow fixes in place) vs. the legacy
+/// `Runtime::run` verbs, and an *explicit* `first-touch` selection is
+/// indistinguishable from the default.
 #[test]
 fn stock_schedulers_with_default_mem_match_the_legacy_path() {
     let session = Session::new();
     let rt = Runtime::paper_testbed();
-    for policy in [Policy::BreadthFirst, Policy::WorkFirst, Policy::Dfwsrpt] {
+    for policy in [
+        Policy::BreadthFirst,
+        Policy::CilkBased,
+        Policy::WorkFirst,
+        Policy::Dfwspt,
+        Policy::Dfwsrpt,
+    ] {
         let s = spec("fft", SchedSpec::stock(policy), MemSpec::default(), "x4600", 8);
         let rec = session.run(&s).unwrap();
 
@@ -45,14 +52,18 @@ fn stock_schedulers_with_default_mem_match_the_legacy_path() {
         assert_eq!(rec.stats.sim_events, legacy.sim_events, "{}", policy.name());
         assert_eq!(rec.stats.work_time, legacy.work_time, "{}", policy.name());
         assert_eq!(rec.stats.overhead_time, legacy.overhead_time, "{}", policy.name());
-        // the placement counters stay zero on non-placing schedulers
+        // the locality counters stay zero on non-placing schedulers —
+        // including the appended batch/migration/mailbox columns
         assert_eq!(rec.stats.pushed_home, 0, "{}", policy.name());
         assert_eq!(rec.stats.affinity_hits, 0, "{}", policy.name());
         assert_eq!(rec.stats.mem.migrated_pages, 0, "{}", policy.name());
         assert_eq!(rec.stats.affine_steals, 0, "{}", policy.name());
         assert_eq!(rec.stats.homed_resumes, 0, "{}", policy.name());
+        assert_eq!(rec.stats.batch_steals, 0, "{}", policy.name());
+        assert_eq!(rec.stats.tasks_migrated, 0, "{}", policy.name());
+        assert_eq!(rec.stats.mailbox_hits, 0, "{}", policy.name());
         let row = rec.to_csv_row();
-        assert!(row.ends_with(",0,0"), "stock CSV tail must stay zero: {row}");
+        assert!(row.ends_with(",0,0,0,0,0"), "stock CSV tail must stay zero: {row}");
 
         // explicit first-touch is the same run, CSV row and all
         let explicit = spec("fft", SchedSpec::stock(policy), MemSpec::new("first-touch"),
@@ -60,6 +71,25 @@ fn stock_schedulers_with_default_mem_match_the_legacy_path() {
         let rec2 = session.run(&explicit).unwrap();
         assert_eq!(rec.to_csv_row(), rec2.to_csv_row(), "{}", policy.name());
     }
+
+    // the serial baseline stays on the legacy bytes too (run_serial
+    // binds linearly, so the spec must as well)
+    let serial = RunSpec::builder()
+        .bench("fft")
+        .size(Size::Small)
+        .sched(SchedSpec::stock(Policy::Serial))
+        .linear()
+        .threads(1)
+        .topo("x4600")
+        .seed(7)
+        .build()
+        .unwrap();
+    let rec = session.run(&serial).unwrap();
+    let mut w = bots::create("fft", Size::Small, 7).unwrap();
+    let legacy = rt.run_serial(w.as_mut(), 7).unwrap();
+    assert_eq!(rec.stats.makespan, legacy.makespan, "serial");
+    assert_eq!(rec.stats.sim_events, legacy.sim_events, "serial");
+    assert!(rec.to_csv_row().ends_with(",0,0,0,0,0"), "serial CSV tail must stay zero");
 }
 
 /// Acceptance criterion (gain half): `numa-home` + first-touch achieves a
@@ -132,13 +162,51 @@ fn numa_steal_biases_sweeps_without_pushing() {
     );
 }
 
-/// Per-scheduler determinism regression, extended to `numa-home` and the
-/// steal-biased `numa-steal` across the multi-node presets (the
+/// Steal-half batching engages on a real workload: with every page bound
+/// to node 1, all hinted tasks are homed there, so node-1 thieves see
+/// fully affine victim pools and a `batch` above 1 drains them in bulk.
+/// The batch counters move together (each batched steal migrates at
+/// least one extra task) and the default batch stays byte-inert.
+#[test]
+fn numa_steal_batches_on_deep_affine_pools() {
+    let session = Session::new();
+    let bound = MemSpec::new("bind").with_param("node", 1.0);
+    let batched = session
+        .run(&spec(
+            "sort",
+            SchedSpec::new("numa-steal").with_param("batch", 8.0),
+            bound.clone(),
+            "x4600",
+            16,
+        ))
+        .unwrap();
+    assert!(batched.stats.steals > 0, "sort at 16 threads must steal");
+    assert!(
+        batched.stats.batch_steals > 0,
+        "bound pages + batch=8 must produce at least one multi-task steal"
+    );
+    assert!(
+        batched.stats.tasks_migrated >= batched.stats.batch_steals,
+        "every batched steal moves at least one extra task: {} vs {}",
+        batched.stats.tasks_migrated,
+        batched.stats.batch_steals
+    );
+    // batch=1 (the default) keeps the single-steal path: zero batches
+    let single = session
+        .run(&spec("sort", SchedSpec::new("numa-steal"), bound, "x4600", 16))
+        .unwrap();
+    assert_eq!(single.stats.batch_steals, 0);
+    assert_eq!(single.stats.tasks_migrated, 0);
+}
+
+/// Per-scheduler determinism regression, extended to `numa-home`, the
+/// steal-biased `numa-steal` and the adaptive `numa-adapt` across the
+/// multi-node presets — including the heterogeneous x4600 variant (the
 /// satellite requirement): same spec, fresh sessions, identical records.
 #[test]
 fn numa_home_is_deterministic_across_topologies() {
-    for sched_name in ["numa-home", "numa-steal"] {
-        for topo in ["x4600", "tile16", "altix16"] {
+    for sched_name in ["numa-home", "numa-steal", "numa-adapt"] {
+        for topo in ["x4600", "x4600_hetero", "tile16", "altix16"] {
             let s = spec("sort", SchedSpec::new(sched_name), MemSpec::default(), topo, 8);
             let a =
                 Session::new().run(&s).unwrap_or_else(|e| panic!("{sched_name}/{topo}: {e:#}"));
@@ -149,6 +217,9 @@ fn numa_home_is_deterministic_across_topologies() {
             assert_eq!(a.stats.pushed_home, b.stats.pushed_home, "{sched_name}/{topo}");
             assert_eq!(a.stats.affine_steals, b.stats.affine_steals, "{sched_name}/{topo}");
             assert_eq!(a.stats.homed_resumes, b.stats.homed_resumes, "{sched_name}/{topo}");
+            assert_eq!(a.stats.batch_steals, b.stats.batch_steals, "{sched_name}/{topo}");
+            assert_eq!(a.stats.tasks_migrated, b.stats.tasks_migrated, "{sched_name}/{topo}");
+            assert_eq!(a.stats.mailbox_hits, b.stats.mailbox_hits, "{sched_name}/{topo}");
             assert_eq!(a.stats.sim_events, b.stats.sim_events, "{sched_name}/{topo}");
             assert_eq!(a.to_csv_row(), b.to_csv_row(), "{sched_name}/{topo}");
             assert_eq!(
@@ -238,6 +309,9 @@ fn placement_sweep_manifest_end_to_end() {
             "migrated_pages",
             "affine_steals",
             "homed_resumes",
+            "batch_steals",
+            "tasks_migrated",
+            "mailbox_hits",
         ] {
             assert!(header.contains(col), "missing {col} in: {header}");
         }
