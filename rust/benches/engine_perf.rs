@@ -4,53 +4,41 @@
 //! figure harness runs ~400 simulations, so engine throughput bounds the
 //! whole reproduction loop.  Targets (DESIGN.md §8): ≥ 1M events/s on the
 //! task-heavy workloads, full fig sweep << 2 min.
+//!
+//! The workload table is `numanos::bench::perf_entries()` — the same six
+//! Medium-size cells `numanos bench` records under the `perf` group — so
+//! a throughput number printed here lines up one-to-one with a `wall_ms`
+//! entry in `BENCH_*.json` and the `--compare` trajectory over commits.
 
-use std::time::Instant;
-
-use numanos::bots;
-use numanos::config::Size;
-use numanos::coordinator::binding::BindPolicy;
-use numanos::coordinator::runtime::Runtime;
-use numanos::coordinator::sched::Policy;
+use numanos::bench;
+use numanos::spec::Session;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::paper_testbed();
+    let session = Session::new();
     println!(
-        "{:<18} {:>9} {:>10} {:>11} {:>12} {:>10}",
-        "workload", "tasks", "events", "wall-ms", "events/s", "tasks/s"
+        "{:<22} {:>9} {:>10} {:>11} {:>12} {:>10}",
+        "cell", "tasks", "events", "wall-ms", "events/s", "tasks/s"
     );
     let mut worst_eps = f64::INFINITY;
-    for (bench, size, policy) in [
-        ("fft", Size::Medium, Policy::WorkFirst),
-        ("fft", Size::Medium, Policy::BreadthFirst),
-        ("sort", Size::Medium, Policy::Dfwsrpt),
-        ("uts", Size::Medium, Policy::Dfwsrpt),
-        ("sparselu_for", Size::Medium, Policy::Dfwspt),
-        ("nqueens", Size::Medium, Policy::BreadthFirst),
-    ] {
-        // best-of-3 wall clock (host noise)
-        let mut best: Option<(f64, u64, u64)> = None;
-        for rep in 0..3 {
-            let mut w = bots::create(bench, size, 42 + rep)?;
-            let t0 = Instant::now();
-            let s = rt.run(w.as_mut(), policy, BindPolicy::NumaAware, 16, 42, None)?;
-            let wall = t0.elapsed().as_secs_f64();
-            if best.map_or(true, |(b, _, _)| wall < b) {
-                best = Some((wall, s.sim_events, s.tasks));
-            }
+    for entry in bench::perf_entries() {
+        // median-of-3 wall clock (host noise), same aggregation as the
+        // bench suite's --reps
+        let cells = bench::run_entry(&session, &entry, 3)?;
+        for cell in cells {
+            let stats = &cell.record.stats;
+            let wall_s = cell.wall_ms / 1e3;
+            let eps = stats.sim_events as f64 / wall_s;
+            worst_eps = worst_eps.min(eps);
+            println!(
+                "{:<22} {:>9} {:>10} {:>11.1} {:>12.0} {:>10.0}",
+                format!("{}/{}", stats.bench, stats.sched),
+                stats.tasks,
+                stats.sim_events,
+                cell.wall_ms,
+                eps,
+                stats.tasks as f64 / wall_s,
+            );
         }
-        let (wall, events, tasks) = best.unwrap();
-        let eps = events as f64 / wall;
-        worst_eps = worst_eps.min(eps);
-        println!(
-            "{:<18} {:>9} {:>10} {:>11.1} {:>12.0} {:>10.0}",
-            format!("{bench}/{}", policy.name()),
-            tasks,
-            events,
-            wall * 1e3,
-            eps,
-            tasks as f64 / wall,
-        );
     }
     println!("\nworst-case engine throughput: {:.2}M events/s", worst_eps / 1e6);
     Ok(())

@@ -1,0 +1,408 @@
+//! Delta reports between two `BENCH_*.json` files.
+//!
+//! The comparison is asymmetric by design: the **simulated** metrics are
+//! deterministic, so any difference is real drift (and a makespan
+//! increase beyond the threshold is a regression that fails the run);
+//! the **wall-time** metrics measure the host, so they only ever warn.
+//! Baseline cells whose `sim` is `null` (the committed placeholder
+//! before any toolchain run) classify as *unmeasured* instead of
+//! drifted, and baseline cells missing from a `--filter`ed run are
+//! reported but never fail.
+
+use anyhow::{bail, Result};
+
+use crate::bench::{CellReport, SuiteReport};
+use crate::serde::Json;
+
+/// Thresholds and failure policy for one comparison.
+#[derive(Clone, Debug)]
+pub struct CompareOptions {
+    /// Makespan increase (percent) beyond which a cell is a regression.
+    pub max_regress_pct: f64,
+    /// Absolute wall-time delta (percent) beyond which a cell warns.
+    pub wall_warn_pct: f64,
+    /// Fail on *any* simulated-metric difference, not just regressions
+    /// (the CI determinism check: two runs of a deterministic suite).
+    pub fail_on_drift: bool,
+    /// Report only — never fail, whatever the deltas say.
+    pub warn_only: bool,
+}
+
+impl Default for CompareOptions {
+    fn default() -> Self {
+        Self { max_regress_pct: 0.0, wall_warn_pct: 20.0, fail_on_drift: false, warn_only: false }
+    }
+}
+
+/// Per-cell classification, in rendering order of severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Simulated metrics byte-identical.
+    Same,
+    /// Drifted with a strictly smaller makespan.
+    Improved,
+    /// Drifted within the regression threshold.
+    Drift,
+    /// Makespan grew past `max_regress_pct`.
+    Regress,
+    /// Cell absent from the baseline file.
+    New,
+    /// Baseline (or candidate) has `sim: null` — nothing to compare.
+    Unmeasured,
+}
+
+impl Status {
+    pub fn label(self) -> &'static str {
+        match self {
+            Status::Same => "=",
+            Status::Improved => "improved",
+            Status::Drift => "drift",
+            Status::Regress => "REGRESS",
+            Status::New => "new",
+            Status::Unmeasured => "unmeasured",
+        }
+    }
+}
+
+/// One cell's delta row.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    pub id: String,
+    pub status: Status,
+    pub old_makespan: Option<f64>,
+    pub new_makespan: Option<f64>,
+    pub makespan_delta_pct: Option<f64>,
+    pub wall_delta_pct: Option<f64>,
+    /// Names of the simulated metrics that changed.
+    pub drifted_metrics: Vec<String>,
+}
+
+/// A rendered-and-classified comparison.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub deltas: Vec<Delta>,
+    /// Baseline cells the candidate run did not execute (filtered runs).
+    pub absent: usize,
+    /// Geometric-mean makespan ratio (new/old) over measured pairs.
+    pub geomean_ratio: Option<f64>,
+    pub old_wall: Option<f64>,
+    pub new_wall: Option<f64>,
+    pub regressions: usize,
+    pub drifted: usize,
+    pub unmeasured: usize,
+    pub wall_warnings: usize,
+    wall_warn_pct: f64,
+}
+
+/// Compare `new` against the `old` baseline.  Iterates the candidate's
+/// cells in file order; refuses to compare across suite identities.
+pub fn compare(old: &SuiteReport, new: &SuiteReport, opts: &CompareOptions) -> Result<Comparison> {
+    if old.suite != new.suite {
+        bail!("suite mismatch: baseline is '{}', candidate is '{}'", old.suite, new.suite);
+    }
+    let mut deltas = Vec::with_capacity(new.cells.len());
+    let mut regressions = 0;
+    let mut drifted = 0;
+    let mut unmeasured = 0;
+    let mut wall_warnings = 0;
+    let mut log_ratio_sum = 0.0;
+    let mut log_ratio_n = 0usize;
+    for cell in &new.cells {
+        let old_cell = old.cells.iter().find(|c| c.id == cell.id);
+        let mut d = classify(old_cell, cell, opts);
+        match d.status {
+            Status::Regress => {
+                regressions += 1;
+                drifted += 1;
+            }
+            Status::Improved | Status::Drift => drifted += 1,
+            Status::New => drifted += 1,
+            Status::Unmeasured => unmeasured += 1,
+            Status::Same => {}
+        }
+        if let (Some(a), Some(b)) = (d.old_makespan, d.new_makespan) {
+            if a > 0.0 && b > 0.0 {
+                log_ratio_sum += (b / a).ln();
+                log_ratio_n += 1;
+            }
+        }
+        if d.wall_delta_pct.map(|w| w.abs() > opts.wall_warn_pct).unwrap_or(false) {
+            wall_warnings += 1;
+        }
+        d.drifted_metrics.sort();
+        deltas.push(d);
+    }
+    let absent = old.cells.iter().filter(|c| !new.cells.iter().any(|n| n.id == c.id)).count();
+    Ok(Comparison {
+        deltas,
+        absent,
+        geomean_ratio: (log_ratio_n > 0).then(|| (log_ratio_sum / log_ratio_n as f64).exp()),
+        old_wall: old.total_wall_ms,
+        new_wall: new.total_wall_ms,
+        regressions,
+        drifted,
+        unmeasured,
+        wall_warnings,
+        wall_warn_pct: opts.wall_warn_pct,
+    })
+}
+
+fn classify(old: Option<&CellReport>, new: &CellReport, opts: &CompareOptions) -> Delta {
+    let mut d = Delta {
+        id: new.id.clone(),
+        status: Status::Same,
+        old_makespan: None,
+        new_makespan: new.sim.as_ref().and_then(|s| s.get("makespan").copied()),
+        makespan_delta_pct: None,
+        wall_delta_pct: None,
+        drifted_metrics: Vec::new(),
+    };
+    let Some(old) = old else {
+        d.status = Status::New;
+        return d;
+    };
+    d.old_makespan = old.sim.as_ref().and_then(|s| s.get("makespan").copied());
+    if let (Some(a), Some(b)) = (old.wall_ms, new.wall_ms) {
+        if a > 0.0 {
+            d.wall_delta_pct = Some(100.0 * (b - a) / a);
+        }
+    }
+    let (Some(old_sim), Some(new_sim)) = (&old.sim, &new.sim) else {
+        d.status = Status::Unmeasured;
+        return d;
+    };
+    for key in old_sim.keys().chain(new_sim.keys()) {
+        if old_sim.get(key) != new_sim.get(key) && !d.drifted_metrics.iter().any(|k| k == key) {
+            d.drifted_metrics.push(key.clone());
+        }
+    }
+    if let (Some(a), Some(b)) = (d.old_makespan, d.new_makespan) {
+        if a > 0.0 {
+            d.makespan_delta_pct = Some(100.0 * (b - a) / a);
+        }
+    }
+    d.status = if d.drifted_metrics.is_empty() {
+        Status::Same
+    } else if d.makespan_delta_pct.map(|p| p > opts.max_regress_pct).unwrap_or(false) {
+        Status::Regress
+    } else if d.makespan_delta_pct.map(|p| p < 0.0).unwrap_or(false) {
+        Status::Improved
+    } else {
+        Status::Drift
+    };
+    d
+}
+
+impl Comparison {
+    /// Does this comparison fail under `opts`?  Regressions always fail;
+    /// with `--fail-on-drift`, any simulated difference (including cells
+    /// absent from the baseline) fails; `--warn-only` never fails.
+    pub fn failed(&self, opts: &CompareOptions) -> bool {
+        if opts.warn_only {
+            return false;
+        }
+        self.regressions > 0 || (opts.fail_on_drift && self.drifted > 0)
+    }
+
+    /// The human-readable per-benchmark delta table plus aggregate line.
+    pub fn render(&self) -> String {
+        let id_w = self.deltas.iter().map(|d| d.id.len()).max().unwrap_or(4).max(4);
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<id_w$}  {:>12}  {:>12}  {:>8}  {:>9}  status\n",
+            "cell", "old mkspan", "new mkspan", "sim d%", "wall d%"
+        ));
+        for d in &self.deltas {
+            let fmt_m = |m: Option<f64>| m.map(|v| format!("{v:.0}")).unwrap_or_else(|| "-".into());
+            let fmt_p = |p: Option<f64>| {
+                p.map(|v| format!("{v:+.2}%")).unwrap_or_else(|| "-".into())
+            };
+            let mut status = d.status.label().to_string();
+            if matches!(d.status, Status::Drift | Status::Regress | Status::Improved) {
+                status.push_str(&format!(" [{}]", d.drifted_metrics.join(",")));
+            }
+            if d.wall_delta_pct.map(|w| w.abs() > self.wall_warn_pct).unwrap_or(false) {
+                status.push_str(" wall!");
+            }
+            out.push_str(&format!(
+                "{:<id_w$}  {:>12}  {:>12}  {:>8}  {:>9}  {status}\n",
+                d.id,
+                fmt_m(d.old_makespan),
+                fmt_m(d.new_makespan),
+                fmt_p(d.makespan_delta_pct),
+                fmt_p(d.wall_delta_pct),
+            ));
+        }
+        if self.absent > 0 {
+            out.push_str(&format!(
+                "({} baseline cell(s) not in this run — filtered?)\n",
+                self.absent
+            ));
+        }
+        let agg = match self.geomean_ratio {
+            Some(r) => format!("geomean makespan ratio {:.4} ({:+.2}%)", r, 100.0 * (r - 1.0)),
+            None => "geomean makespan ratio - (no measured pairs)".into(),
+        };
+        let wall = match (self.old_wall, self.new_wall) {
+            (Some(a), Some(b)) if a > 0.0 => {
+                format!("suite wall {a:.1} ms -> {b:.1} ms ({:+.1}%)", 100.0 * (b - a) / a)
+            }
+            _ => "suite wall - (unmeasured)".into(),
+        };
+        out.push_str(&format!("aggregate: {agg}, {wall}\n"));
+        out.push_str(&format!(
+            "result: {} regression(s), {} drifted, {} unmeasured, {} wall warning(s)\n",
+            self.regressions, self.drifted, self.unmeasured, self.wall_warnings
+        ));
+        out
+    }
+
+    /// Machine-readable delta document (for `--compare --json`).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .deltas
+            .iter()
+            .map(|d| {
+                let opt = |v: Option<f64>| v.map(Json::from).unwrap_or(Json::Null);
+                Json::obj([
+                    ("id", Json::from(d.id.as_str())),
+                    ("status", Json::from(d.status.label())),
+                    ("old_makespan", opt(d.old_makespan)),
+                    ("new_makespan", opt(d.new_makespan)),
+                    ("sim_delta_pct", opt(d.makespan_delta_pct)),
+                    ("wall_delta_pct", opt(d.wall_delta_pct)),
+                    (
+                        "drifted_metrics",
+                        Json::Arr(d.drifted_metrics.iter().map(|m| Json::from(m.as_str())).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj([
+            ("cells", Json::Arr(rows)),
+            ("absent", Json::from(self.absent)),
+            (
+                "geomean_ratio",
+                self.geomean_ratio.map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("regressions", Json::from(self.regressions)),
+            ("drifted", Json::from(self.drifted)),
+            ("unmeasured", Json::from(self.unmeasured)),
+            ("wall_warnings", Json::from(self.wall_warnings)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(cells: &[(&str, Option<&[(&str, f64)]>, Option<f64>)]) -> SuiteReport {
+        SuiteReport {
+            suite: crate::bench::SUITE_NAME.to_string(),
+            reps: 1,
+            filter: String::new(),
+            cells: cells
+                .iter()
+                .map(|(id, sim, wall)| CellReport {
+                    id: id.to_string(),
+                    group: id.split('/').next().unwrap().to_string(),
+                    sim: sim.map(|kv| {
+                        kv.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+                    }),
+                    wall_ms: *wall,
+                })
+                .collect(),
+            total_wall_ms: None,
+        }
+    }
+
+    const SIM_A: &[(&str, f64)] = &[("makespan", 1000.0), ("steals", 4.0)];
+    const SIM_SLOWER: &[(&str, f64)] = &[("makespan", 1100.0), ("steals", 4.0)];
+    const SIM_FASTER: &[(&str, f64)] = &[("makespan", 900.0), ("steals", 7.0)];
+
+    #[test]
+    fn statuses_cover_the_matrix() {
+        let old = report(&[
+            ("g/same", Some(SIM_A), Some(10.0)),
+            ("g/slower", Some(SIM_A), Some(10.0)),
+            ("g/faster", Some(SIM_A), None),
+            ("g/null", None, None),
+            ("g/gone", Some(SIM_A), None),
+        ]);
+        let new = report(&[
+            ("g/same", Some(SIM_A), Some(100.0)),
+            ("g/slower", Some(SIM_SLOWER), Some(10.0)),
+            ("g/faster", Some(SIM_FASTER), None),
+            ("g/null", Some(SIM_A), Some(5.0)),
+            ("g/fresh", Some(SIM_A), None),
+        ]);
+        let cmp = compare(&old, &new, &CompareOptions::default()).unwrap();
+        let by_id = |id: &str| cmp.deltas.iter().find(|d| d.id == id).unwrap();
+        assert_eq!(by_id("g/same").status, Status::Same);
+        assert_eq!(by_id("g/slower").status, Status::Regress);
+        assert_eq!(by_id("g/slower").drifted_metrics, vec!["makespan".to_string()]);
+        assert_eq!(by_id("g/faster").status, Status::Improved);
+        assert_eq!(by_id("g/null").status, Status::Unmeasured);
+        assert_eq!(by_id("g/fresh").status, Status::New);
+        assert_eq!(cmp.absent, 1, "g/gone");
+        assert_eq!((cmp.regressions, cmp.unmeasured), (1, 1));
+        // +900% wall on g/same warns; nothing else has both walls
+        assert_eq!(cmp.wall_warnings, 1);
+        let table = cmp.render();
+        assert!(table.contains("REGRESS") && table.contains("wall!"), "{table}");
+    }
+
+    #[test]
+    fn failure_policy_matches_the_flags() {
+        let old = report(&[("g/a", Some(SIM_A), None)]);
+        let slower = report(&[("g/a", Some(SIM_SLOWER), None)]);
+        let faster = report(&[("g/a", Some(SIM_FASTER), None)]);
+        let opts = CompareOptions::default();
+        // any makespan increase regresses at the default 0% threshold
+        assert!(compare(&old, &slower, &opts).unwrap().failed(&opts));
+        // a 10% increase passes a 15% threshold…
+        let loose = CompareOptions { max_regress_pct: 15.0, ..opts.clone() };
+        assert!(!compare(&old, &slower, &loose).unwrap().failed(&loose));
+        // …but still counts as drift under --fail-on-drift
+        let strict = CompareOptions { max_regress_pct: 15.0, fail_on_drift: true, ..opts.clone() };
+        assert!(compare(&old, &slower, &strict).unwrap().failed(&strict));
+        // improvements pass by default, fail the drift check
+        assert!(!compare(&old, &faster, &opts).unwrap().failed(&opts));
+        let drift = CompareOptions { fail_on_drift: true, ..opts.clone() };
+        assert!(compare(&old, &faster, &drift).unwrap().failed(&drift));
+        // --warn-only silences everything
+        let warn = CompareOptions { warn_only: true, fail_on_drift: true, ..opts };
+        assert!(!compare(&old, &slower, &warn).unwrap().failed(&warn));
+    }
+
+    #[test]
+    fn identical_reports_are_clean() {
+        let r = report(&[("g/a", Some(SIM_A), Some(5.0)), ("g/b", Some(SIM_FASTER), Some(9.0))]);
+        let opts = CompareOptions { fail_on_drift: true, ..CompareOptions::default() };
+        let cmp = compare(&r, &r, &opts).unwrap();
+        assert!(cmp.deltas.iter().all(|d| d.status == Status::Same));
+        assert!(!cmp.failed(&opts));
+        assert_eq!(cmp.geomean_ratio, Some(1.0));
+    }
+
+    #[test]
+    fn unmeasured_placeholder_baseline_never_fails() {
+        // the committed pre-toolchain BENCH_6.json: sim null everywhere
+        let old = report(&[("g/a", None, None), ("g/b", None, None)]);
+        let new = report(&[("g/a", Some(SIM_A), Some(4.0)), ("g/b", Some(SIM_FASTER), None)]);
+        let opts = CompareOptions { fail_on_drift: true, ..CompareOptions::default() };
+        let cmp = compare(&old, &new, &opts).unwrap();
+        assert_eq!(cmp.unmeasured, 2);
+        assert_eq!(cmp.drifted, 0);
+        assert!(!cmp.failed(&opts));
+    }
+
+    #[test]
+    fn suite_identity_mismatch_is_refused() {
+        let a = report(&[]);
+        let mut b = report(&[]);
+        b.suite = "other-suite".into();
+        assert!(compare(&a, &b, &CompareOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,519 @@
+//! The pinned perf-trajectory suite behind `numanos bench`.
+//!
+//! The paper's argument is comparative measurement, so the repo tracks
+//! its own trajectory the same way: a **pinned suite** — the nine paper
+//! figures plus the dfwsrpt → numa-steal → numa-home → numa-adapt
+//! ablation across four topologies, at fixed sizes/threads/seeds — runs
+//! through the ordinary [`Sweep`]/[`Session`] machinery (cells stay
+//! byte-identical to `numanos sweep`) and lands in one machine-readable
+//! `BENCH_<n>.json`:
+//!
+//! * per cell, the **simulated** metrics (makespan cycles, remote-access
+//!   ratio, the locality counters: `affine_steals`, `batch_steals`,
+//!   `homed_resumes`, `mailbox_hits`, `tasks_migrated`, `pushed_home`) —
+//!   deterministic, diffable, and the thing CI fails on when it drifts;
+//! * per cell and suite-total, the **host wall-time** of the simulator
+//!   itself (median of `--reps` repetitions) — the engine-perf signal,
+//!   noisy by nature, so comparisons only ever warn on it.
+//!
+//! [`compare`] renders the delta report between two such files and
+//! decides the exit code; `benches/engine_perf.rs` consumes the same
+//! `perf` group so the bench binary and the suite can never disagree
+//! about which cells constitute "the hot loop".
+
+pub mod compare;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Size;
+use crate::coordinator::binding::BindPolicy;
+use crate::coordinator::sched::{Policy, SchedSpec};
+use crate::harness;
+use crate::metrics::median_ms;
+use crate::serde::Json;
+use crate::simnuma::MemSpec;
+use crate::spec::session::RunRecord;
+use crate::spec::{Session, Sweep};
+
+/// Schema version stamped into every report this module emits.
+pub const SCHEMA_VERSION: u64 = 1;
+/// Suite identity — bump when the pinned cell set changes incompatibly
+/// (comparisons across different suites are refused).
+pub const SUITE_NAME: &str = "numanos-pinned-v1";
+
+/// Thread count every pinned cell runs with: the paper's 16-core X4600
+/// axis end-point, kept constant across the ablation topologies so the
+/// strategy columns stay comparable.
+const SUITE_THREADS: usize = 16;
+/// Seed every pinned cell runs with.
+const SUITE_SEED: u64 = 42;
+/// Ablation topologies: paper testbed, its heterogeneous variant, the
+/// mesh, and the fat tree.
+const ABLATION_TOPOS: &[&str] = &["x4600", "x4600_hetero", "tile16", "altix16"];
+/// Hot-loop cells (bench, scheduler): the engine-perf working set,
+/// shared with `benches/engine_perf.rs` through [`perf_entries`] so the
+/// bench binary and the suite measure the same cells.
+const PERF_CELLS: &[(&str, Policy)] = &[
+    ("fft", Policy::WorkFirst),
+    ("fft", Policy::BreadthFirst),
+    ("sort", Policy::Dfwsrpt),
+    ("uts", Policy::Dfwsrpt),
+    ("sparselu_for", Policy::Dfwspt),
+    ("nqueens", Policy::BreadthFirst),
+];
+
+/// One pinned suite member: a group label over a concrete sweep.  The
+/// sweep is ordinary [`Sweep`] data, so a suite cell executes exactly
+/// like the equivalent `numanos sweep` cell.
+#[derive(Clone, Debug)]
+pub struct SuiteEntry {
+    /// Filter/reporting group (`smoke`, `fig5`…`fig15`, `ablation`,
+    /// `perf`); also the first segment of every cell id.
+    pub group: String,
+    pub sweep: Sweep,
+}
+
+/// The full pinned suite, in emission order: `smoke`, the nine paper
+/// figures, the four-strategy × four-topology ablation, then the
+/// engine-perf hot-loop cells.
+pub fn suite() -> Vec<SuiteEntry> {
+    let mut entries = Vec::new();
+
+    // smoke: two tiny cells CI can run on every push.
+    entries.push(SuiteEntry {
+        group: "smoke".into(),
+        sweep: Sweep::new("smoke", "Smoke: tiny sanity cells")
+            .with_bench("fib")
+            .with_config(Policy::WorkFirst, BindPolicy::NumaAware)
+            .with_config(SchedSpec::new("numa-home"), BindPolicy::NumaAware)
+            .with_threads(vec![4])
+            .with_seed(SUITE_SEED)
+            .with_size(Size::Small),
+    });
+
+    // the nine paper figures, pinned to one thread count and the small
+    // size (trajectory tracking wants fast, stable cells; the full
+    // figure grids stay with `numanos figure`).
+    for f in harness::figures() {
+        entries.push(SuiteEntry {
+            group: f.id.to_string(),
+            sweep: Sweep::new(f.id, f.title)
+                .with_bench(f.bench)
+                .with_configs(f.configs.clone())
+                .with_threads(vec![SUITE_THREADS])
+                .with_seed(SUITE_SEED)
+                .with_size(Size::Small),
+        });
+    }
+
+    // the scheduler ablation across topologies, under interleaved pages
+    // so the placing strategies have remote traffic to win back.
+    for topo in ABLATION_TOPOS {
+        entries.push(SuiteEntry {
+            group: "ablation".into(),
+            sweep: Sweep::new(
+                &format!("ablation-{topo}"),
+                &format!("Strategy ablation on {topo}"),
+            )
+            .with_bench("sparselu_for")
+            .with_configs(harness::ablation_configs())
+            .with_threads(vec![SUITE_THREADS])
+            .with_seed(SUITE_SEED)
+            .with_size(Size::Small)
+            .with_topo(topo)
+            .with_mem(MemSpec::new("interleave")),
+        });
+    }
+
+    entries.extend(perf_entries());
+    entries
+}
+
+/// The `perf` group alone: the medium-size hot-loop cells
+/// `benches/engine_perf.rs` drives for events/s measurement.
+pub fn perf_entries() -> Vec<SuiteEntry> {
+    PERF_CELLS
+        .iter()
+        .map(|(bench, policy)| {
+            let sig = SchedSpec::stock(*policy).name_sig();
+            SuiteEntry {
+                group: "perf".into(),
+                sweep: Sweep::new(
+                    &format!("perf-{bench}-{sig}"),
+                    &format!("Engine perf: {bench} under {sig}"),
+                )
+                .with_bench(bench)
+                .with_config(*policy, BindPolicy::NumaAware)
+                .with_threads(vec![SUITE_THREADS])
+                .with_seed(SUITE_SEED)
+                .with_size(Size::Medium),
+            }
+        })
+        .collect()
+}
+
+/// Suite entries whose group or sweep id contains `filter` (empty filter
+/// keeps everything).  Errors when nothing matches, listing the groups.
+pub fn filtered(filter: &str) -> Result<Vec<SuiteEntry>> {
+    let entries: Vec<SuiteEntry> = suite()
+        .into_iter()
+        .filter(|e| filter.is_empty() || e.group.contains(filter) || e.sweep.id.contains(filter))
+        .collect();
+    if entries.is_empty() {
+        let mut groups: Vec<String> = suite().into_iter().map(|e| e.group).collect();
+        groups.dedup();
+        bail!("--filter '{filter}' matches no suite entries (groups: {})", groups.join(" "));
+    }
+    Ok(entries)
+}
+
+/// One executed suite cell: the rep-0 record (simulated metrics are
+/// identical across reps — the engine is deterministic) plus the median
+/// host wall-time across reps.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub id: String,
+    pub group: String,
+    pub record: RunRecord,
+    pub wall_ms: f64,
+}
+
+/// An executed (possibly filtered) suite.
+#[derive(Clone, Debug)]
+pub struct SuiteRun {
+    pub reps: usize,
+    pub filter: String,
+    pub cells: Vec<CellResult>,
+    /// Sum of the per-cell median wall times.
+    pub total_wall_ms: f64,
+}
+
+/// Stable cell identity: every pinned axis, so any change to the suite
+/// definition shows up as added/removed ids rather than silently
+/// comparing different experiments under one name.
+pub fn cell_id(group: &str, spec: &crate::spec::RunSpec) -> String {
+    format!(
+        "{group}/{}/{}/{}/{}/t{}/{}/s{}",
+        spec.bench,
+        spec.sched.name_sig(),
+        spec.bind.name(),
+        spec.mem.name_sig(),
+        spec.threads,
+        spec.topo,
+        spec.seed
+    )
+}
+
+/// Run one suite entry `reps` times (sequentially — wall-time medians
+/// want an unloaded machine, not sweep-level parallelism) and fold the
+/// repetitions into per-cell results.
+pub fn run_entry(session: &Session, entry: &SuiteEntry, reps: usize) -> Result<Vec<CellResult>> {
+    let reps = reps.max(1);
+    let mut rep_runs = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        rep_runs.push(session.run_sweep_with(&entry.sweep, 1)?);
+    }
+    let n = rep_runs[0].records.len();
+    let mut cells = Vec::with_capacity(n);
+    for i in 0..n {
+        let record = rep_runs[0].records[i].clone();
+        let mut walls: Vec<f64> = rep_runs.iter().map(|r| r.records[i].stats.wall_ms).collect();
+        cells.push(CellResult {
+            id: cell_id(&entry.group, &record.spec),
+            group: entry.group.clone(),
+            wall_ms: median_ms(&mut walls),
+            record,
+        });
+    }
+    Ok(cells)
+}
+
+/// Run the (filtered) pinned suite.
+pub fn run_suite(session: &Session, filter: &str, reps: usize) -> Result<SuiteRun> {
+    let mut run = SuiteRun {
+        reps: reps.max(1),
+        filter: filter.to_string(),
+        cells: Vec::new(),
+        total_wall_ms: 0.0,
+    };
+    for entry in filtered(filter)? {
+        run.cells.extend(run_entry(session, &entry, reps)?);
+    }
+    run.total_wall_ms = run.cells.iter().map(|c| c.wall_ms).sum();
+    Ok(run)
+}
+
+/// The simulated-metric object for one cell — every field deterministic,
+/// so two runs of the same suite must produce byte-identical `sim`
+/// objects (the CI drift check).
+fn sim_json(record: &RunRecord) -> Json {
+    let st = &record.stats;
+    Json::obj([
+        ("makespan", Json::from(st.makespan)),
+        ("serial_makespan", Json::from(record.serial_makespan)),
+        ("speedup", Json::from(record.speedup)),
+        ("tasks", Json::from(st.tasks)),
+        ("steals", Json::from(st.steals)),
+        ("steal_hops", Json::from(st.mean_steal_hops)),
+        ("remote_pct", Json::from(100.0 * st.mem.remote_ratio())),
+        ("sim_events", Json::from(st.sim_events)),
+        ("lock_wait", Json::from(st.lock_wait_total)),
+        ("pushed_home", Json::from(st.pushed_home)),
+        ("affinity_hits", Json::from(st.affinity_hits)),
+        ("affine_steals", Json::from(st.affine_steals)),
+        ("homed_resumes", Json::from(st.homed_resumes)),
+        ("batch_steals", Json::from(st.batch_steals)),
+        ("tasks_migrated", Json::from(st.tasks_migrated)),
+        ("mailbox_hits", Json::from(st.mailbox_hits)),
+    ])
+}
+
+fn cell_json(c: &CellResult) -> Json {
+    let spec = &c.record.spec;
+    Json::obj([
+        ("id", Json::from(c.id.as_str())),
+        ("group", Json::from(c.group.as_str())),
+        ("bench", Json::from(spec.bench.as_str())),
+        ("size", Json::from(spec.size.name())),
+        ("sched", Json::from(spec.sched.name_sig())),
+        ("bind", Json::from(spec.bind.name())),
+        ("mem", Json::from(spec.mem.name_sig())),
+        ("threads", Json::from(spec.threads)),
+        ("topo", Json::from(spec.topo.as_str())),
+        ("seed", Json::from_u64_lossless(spec.seed)),
+        ("sim", sim_json(&c.record)),
+        ("wall_ms", Json::from(c.wall_ms)),
+    ])
+}
+
+impl SuiteRun {
+    /// The `BENCH_<n>.json` document.  Object keys emit in sorted order
+    /// (the [`Json`] emitter guarantee), so the file is diffable and two
+    /// identical runs serialize byte-identically except `wall_ms`.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("schema", Json::from(SCHEMA_VERSION)),
+            ("suite", Json::from(SUITE_NAME)),
+            ("provenance", Json::from(format!("numanos {}", env!("CARGO_PKG_VERSION")))),
+            ("reps", Json::from(self.reps)),
+            ("filter", Json::from(self.filter.as_str())),
+            ("cells", Json::Arr(self.cells.iter().map(cell_json).collect())),
+            (
+                "harness",
+                Json::obj([
+                    ("cells", Json::from(self.cells.len())),
+                    ("total_wall_ms", Json::from(self.total_wall_ms)),
+                ]),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Report parsing: the read side of the schema, used by `--compare` and
+// by CI's schema validation.
+// ---------------------------------------------------------------------
+
+/// A parsed cell.  `sim`/`wall_ms` are `None` when the file records
+/// `null` — the committed-placeholder state before any toolchain has
+/// filled in measurements; comparisons treat such cells as *unmeasured*
+/// rather than drifted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellReport {
+    pub id: String,
+    pub group: String,
+    pub sim: Option<BTreeMap<String, f64>>,
+    pub wall_ms: Option<f64>,
+}
+
+/// A parsed `BENCH_*.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SuiteReport {
+    pub suite: String,
+    pub reps: u64,
+    pub filter: String,
+    pub cells: Vec<CellReport>,
+    pub total_wall_ms: Option<f64>,
+}
+
+impl SuiteReport {
+    /// Parse and validate one report.  Every schema rule the emitter
+    /// relies on is enforced here, so CI can validate an emitted file by
+    /// round-tripping it through this function.
+    pub fn from_json(j: &Json) -> Result<SuiteReport> {
+        let schema = j.get("schema").and_then(Json::as_u64).context("report needs 'schema'")?;
+        if schema != SCHEMA_VERSION {
+            bail!("unsupported bench schema {schema} (this build reads {SCHEMA_VERSION})");
+        }
+        let suite = j
+            .get("suite")
+            .and_then(Json::as_str)
+            .context("report needs a string 'suite'")?
+            .to_string();
+        let reps = j.get("reps").and_then(Json::as_u64).context("report needs 'reps'")?;
+        let filter = j
+            .get("filter")
+            .and_then(Json::as_str)
+            .context("report needs a string 'filter'")?
+            .to_string();
+        let raw_cells = j.get("cells").and_then(Json::as_arr).context("report needs 'cells'")?;
+        let mut cells = Vec::with_capacity(raw_cells.len());
+        for (i, c) in raw_cells.iter().enumerate() {
+            cells.push(cell_from_json(c).with_context(|| format!("cell {i}"))?);
+        }
+        let total_wall_ms = match j.get("harness").and_then(|h| h.get("total_wall_ms")) {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v.as_num().context("harness.total_wall_ms must be a number")?),
+        };
+        Ok(SuiteReport { suite, reps, filter, cells, total_wall_ms })
+    }
+
+    pub fn parse(text: &str) -> Result<SuiteReport> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<SuiteReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+fn cell_from_json(c: &Json) -> Result<CellReport> {
+    let id = c.get("id").and_then(Json::as_str).context("cell needs a string 'id'")?.to_string();
+    let group = c
+        .get("group")
+        .and_then(Json::as_str)
+        .context("cell needs a string 'group'")?
+        .to_string();
+    let sim = match c.get("sim").context("cell needs 'sim' (object or null)")? {
+        Json::Null => None,
+        Json::Obj(map) => {
+            let mut metrics = BTreeMap::new();
+            for (k, v) in map {
+                let n = v
+                    .as_num()
+                    .with_context(|| format!("sim metric '{k}' must be a number"))?;
+                metrics.insert(k.clone(), n);
+            }
+            Some(metrics)
+        }
+        other => bail!("cell 'sim' must be an object or null, got {other:?}"),
+    };
+    let wall_ms = match c.get("wall_ms").context("cell needs 'wall_ms' (number or null)")? {
+        Json::Null => None,
+        v => Some(v.as_num().context("cell 'wall_ms' must be a number")?),
+    };
+    Ok(CellReport { id, group, sim, wall_ms })
+}
+
+/// A committed-placeholder report: every suite cell present with `sim`
+/// and `wall_ms` null, so the file's *shape* (ids, groups, coverage) is
+/// pinned in-repo even before a toolchain records measurements.  The
+/// compare side reads null cells as unmeasured baselines.
+pub fn placeholder_json() -> Result<Json> {
+    let mut cells = Vec::new();
+    for entry in suite() {
+        for spec in entry.sweep.cells()? {
+            let id = cell_id(&entry.group, &spec);
+            cells.push(Json::obj([
+                ("id", Json::from(id)),
+                ("group", Json::from(entry.group.as_str())),
+                ("bench", Json::from(spec.bench.as_str())),
+                ("size", Json::from(spec.size.name())),
+                ("sched", Json::from(spec.sched.name_sig())),
+                ("bind", Json::from(spec.bind.name())),
+                ("mem", Json::from(spec.mem.name_sig())),
+                ("threads", Json::from(spec.threads)),
+                ("topo", Json::from(spec.topo.as_str())),
+                ("seed", Json::from_u64_lossless(spec.seed)),
+                ("sim", Json::Null),
+                ("wall_ms", Json::Null),
+            ]));
+        }
+    }
+    let n = cells.len();
+    Ok(Json::obj([
+        ("schema", Json::from(SCHEMA_VERSION)),
+        ("suite", Json::from(SUITE_NAME)),
+        ("provenance", Json::from("placeholder: no toolchain run recorded yet")),
+        ("reps", Json::from(0u64)),
+        ("filter", Json::from("")),
+        ("cells", Json::Arr(cells)),
+        (
+            "harness",
+            Json::obj([("cells", Json::from(n)), ("total_wall_ms", Json::Null)]),
+        ),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_is_pinned_and_complete() {
+        let entries = suite();
+        // smoke + 9 figures + 4 ablation topologies + 6 perf cells
+        assert_eq!(entries.len(), 1 + 9 + 4 + 6);
+        let total: usize = entries.iter().map(|e| e.sweep.cell_count()).sum();
+        // 2 smoke + 6×6 stock-figure + 3×3 numa-figure + 4×4 ablation + 6 perf
+        assert_eq!(total, 2 + 36 + 9 + 16 + 6);
+        for e in &entries {
+            for cell in e.sweep.cells().unwrap() {
+                cell.validate().unwrap();
+                assert_eq!(cell.seed, SUITE_SEED);
+            }
+        }
+        let groups: Vec<&str> = entries.iter().map(|e| e.group.as_str()).collect();
+        assert!(groups.contains(&"smoke"));
+        assert!(groups.contains(&"fig5") && groups.contains(&"fig15"));
+        assert_eq!(groups.iter().filter(|g| **g == "ablation").count(), 4);
+        assert_eq!(groups.iter().filter(|g| **g == "perf").count(), 6);
+    }
+
+    #[test]
+    fn filter_selects_by_group_and_id() {
+        assert_eq!(filtered("smoke").unwrap().len(), 1);
+        assert_eq!(filtered("ablation").unwrap().len(), 4);
+        assert_eq!(filtered("ablation-tile16").unwrap().len(), 1);
+        assert_eq!(filtered("fig1").unwrap().len(), 4, "fig10 + fig13..fig15");
+        assert_eq!(filtered("").unwrap().len(), suite().len());
+        let err = format!("{:#}", filtered("bogus").unwrap_err());
+        assert!(err.contains("matches no suite entries"), "{err}");
+    }
+
+    #[test]
+    fn placeholder_covers_the_full_suite_and_parses() {
+        let j = placeholder_json().unwrap();
+        let report = SuiteReport::from_json(&j).unwrap();
+        assert_eq!(report.suite, SUITE_NAME);
+        assert_eq!(report.cells.len(), 69);
+        assert!(report.cells.iter().all(|c| c.sim.is_none() && c.wall_ms.is_none()));
+        assert!(report.total_wall_ms.is_none());
+        // ids are unique — a duplicated id would silently merge cells
+        let mut ids: Vec<&str> = report.cells.iter().map(|c| c.id.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 69);
+    }
+
+    #[test]
+    fn report_parser_rejects_malformed_documents() {
+        for bad in [
+            r#"{"suite": "numanos-pinned-v1"}"#,
+            r#"{"schema": 99, "suite": "s", "reps": 1, "filter": "", "cells": []}"#,
+            r#"{"schema": 1, "reps": 1, "filter": "", "cells": []}"#,
+            r#"{"schema": 1, "suite": "s", "reps": 1, "filter": "", "cells": [{"id": "a"}]}"#,
+            r#"{"schema": 1, "suite": "s", "reps": 1, "filter": "",
+                "cells": [{"id": "a", "group": "g", "sim": 7, "wall_ms": null}]}"#,
+            r#"{"schema": 1, "suite": "s", "reps": 1, "filter": "",
+                "cells": [{"id": "a", "group": "g", "sim": {"x": "y"}, "wall_ms": null}]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(SuiteReport::from_json(&j).is_err(), "{bad}");
+        }
+    }
+}

@@ -71,6 +71,40 @@ use crate::simnuma::MemSim;
 use crate::topology::Topology;
 use crate::util::{SplitMix64, Time};
 
+/// The engine-visible slice of the cost model, copied once at
+/// construction.  `MemSim::cost_model()` hands out a borrow of the
+/// memory simulator, so every scheduling charge used to re-borrow it —
+/// and `steal_sweep` cloned the *whole* model (line sizes, latency
+/// tables and all) per sweep to appease the borrow checker.  The eight
+/// plain `Time` fields here cover every charge the engine makes;
+/// memory-access costs stay inside [`MemSim::access`].
+#[derive(Clone, Copy)]
+struct EngineCosts {
+    compute_per_unit: Time,
+    queue_op: Time,
+    shared_queue_op: Time,
+    spawn_cost: Time,
+    probe_base: Time,
+    probe_per_hop: Time,
+    steal_base: Time,
+    steal_per_hop: Time,
+}
+
+impl EngineCosts {
+    fn from_model(cm: &crate::simnuma::CostModel) -> Self {
+        Self {
+            compute_per_unit: cm.compute_per_unit,
+            queue_op: cm.queue_op,
+            shared_queue_op: cm.shared_queue_op,
+            spawn_cost: cm.spawn_cost,
+            probe_base: cm.probe_base,
+            probe_per_hop: cm.probe_per_hop,
+            steal_base: cm.steal_base,
+            steal_per_hop: cm.steal_per_hop,
+        }
+    }
+}
+
 /// Engine knobs (assembled by [`crate::spec::Session`]).
 pub struct EngineConfig {
     /// Per-thread bound core ids (index = thread id, 0 = master).
@@ -117,16 +151,23 @@ pub struct Engine<'a> {
     /// mailbox after its own pool, before sweeping victims — so
     /// whichever same-node team member idles first picks the homed
     /// continuation up.  Indexed by node; only nodes with bound workers
-    /// ever receive mail (releases route through [`Engine::place_node`]).
+    /// ever receive mail (releases route through [`Engine::home_worker`]).
     /// Stock schedulers never probe nor fill these.
     mailboxes: Vec<Pool>,
     /// thread-to-thread hop distances (precomputed from the binding).
     thops: Vec<Vec<u8>>,
     /// node -> worker ids bound there (placement targets).
     node_workers: Vec<Vec<usize>>,
-    /// node -> nearest node that actually has bound workers (identity
-    /// when the node itself has some).
-    place_node: Vec<usize>,
+    /// node -> candidate home nodes: every node with bound workers at the
+    /// minimal hop distance (identity when the node itself has some), in
+    /// ascending node-id order.  Usually one entry; a worker-less node
+    /// equidistant from several teams lists them all, so
+    /// [`Engine::home_worker`] can pick the least-loaded team instead of
+    /// always funnelling pushes to the lowest-numbered one.
+    place_cands: Vec<Vec<usize>>,
+    /// Scheduling charges, copied out of the cost model once (hot path —
+    /// see [`EngineCosts`]).
+    costs: EngineCosts,
     events: BinaryHeap<Reverse<(Time, u64, usize)>>,
     seq: u64,
     live: u64,
@@ -154,6 +195,13 @@ pub struct Engine<'a> {
     take_buf: Vec<u32>,
     /// Scratch for multi-pop steal batches (allocation reuse).
     drain_buf: Vec<TaskId>,
+    /// Coalesced same-target home pushes awaiting one batched transfer
+    /// ([`SchedDescriptor::spawn_batch`] > 1 only; always empty between
+    /// events — every quantum exit path flushes).
+    pending_home: Vec<TaskId>,
+    /// Target worker of the buffered pushes (meaningless while
+    /// `pending_home` is empty).
+    pending_target: usize,
     wake_rr: usize,
 }
 
@@ -198,15 +246,26 @@ impl<'a> Engine<'a> {
         for (i, wk) in workers.iter().enumerate() {
             node_workers[topo.node_of(wk.core)].push(i);
         }
-        let place_node = (0..topo.num_nodes())
+        // every worker-bearing node at the minimal distance (not just the
+        // first): nodes_by_distance sorts by (hops, id), so scanning the
+        // leading distance group keeps the old single pick as cands[0]
+        let place_cands: Vec<Vec<usize>> = (0..topo.num_nodes())
             .map(|node| {
-                topo.nodes_by_distance(node)
-                    .into_iter()
+                let by_dist = topo.nodes_by_distance(node);
+                let nearest = by_dist
+                    .iter()
+                    .copied()
                     .find(|&m| !node_workers[m].is_empty())
-                    .expect("a team has at least one bound worker")
+                    .expect("a team has at least one bound worker");
+                let d = topo.node_hops(node, nearest);
+                by_dist
+                    .into_iter()
+                    .filter(|&m| !node_workers[m].is_empty() && topo.node_hops(node, m) == d)
+                    .collect()
             })
             .collect();
         let mailboxes = (0..topo.num_nodes()).map(|_| Pool::new()).collect();
+        let costs = EngineCosts::from_model(mem.cost_model());
         Self {
             sched,
             desc: sched.descriptor(),
@@ -221,7 +280,8 @@ impl<'a> Engine<'a> {
             mailboxes,
             thops,
             node_workers,
-            place_node,
+            place_cands,
+            costs,
             events: BinaryHeap::new(),
             seq: 0,
             live: 0,
@@ -239,6 +299,8 @@ impl<'a> Engine<'a> {
             cand_buf: Vec::new(),
             take_buf: Vec::new(),
             drain_buf: Vec::new(),
+            pending_home: Vec::new(),
+            pending_target: 0,
             wake_rr: 0,
         }
     }
@@ -358,7 +420,7 @@ impl<'a> Engine<'a> {
     fn acquire(&mut self, w: usize) {
         let free = self.desc.overhead_free;
         if self.desc.shared_queue() {
-            let op = if free { 0 } else { self.mem.cost_model().shared_queue_op };
+            let op = if free { 0 } else { self.costs.shared_queue_op };
             let now = self.workers[w].clock;
             let cost = self.shared.lock(now, op);
             self.workers[w].clock += cost;
@@ -374,11 +436,7 @@ impl<'a> Engine<'a> {
         }
 
         // own pool first (LIFO)
-        let op = if free {
-            0
-        } else {
-            self.mem.cost_model().queue_op + self.workers[w].rt_penalty
-        };
+        let op = if free { 0 } else { self.costs.queue_op + self.workers[w].rt_penalty };
         let now = self.workers[w].clock;
         let cost = self.pools[w].lock(now, op);
         self.workers[w].clock += cost;
@@ -400,7 +458,7 @@ impl<'a> Engine<'a> {
         if self.desc.places {
             let node = self.topo.node_of(self.workers[w].core);
             if !self.mailboxes[node].is_empty() {
-                let op = self.mem.cost_model().queue_op + self.workers[w].rt_penalty;
+                let op = self.costs.queue_op + self.workers[w].rt_penalty;
                 let now = self.workers[w].clock;
                 let cost = self.mailboxes[node].lock(now, op);
                 self.workers[w].clock += cost;
@@ -517,7 +575,7 @@ impl<'a> Engine<'a> {
     /// working set, not balance load.  Reports the successful steal (the
     /// task the thief runs) to the scheduler's observe hook.
     fn steal_sweep(&mut self, w: usize, order: &[usize], takes: &[u32]) -> Option<TaskId> {
-        let cm = self.mem.cost_model().clone();
+        let cm = self.costs;
         for (i, &v) in order.iter().enumerate() {
             let vhops = self.thops[w][v];
             let hops = vhops as Time;
@@ -607,7 +665,7 @@ impl<'a> Engine<'a> {
             .nodes_by_distance(my_node)
             .into_iter()
             .find(|&n| !self.mailboxes[n].is_empty())?;
-        let cm = self.mem.cost_model();
+        let cm = self.costs;
         let hops = self.topo.node_hops(my_node, node) as Time;
         let op = cm.queue_op + hops * cm.steal_per_hop + self.workers[w].rt_penalty;
         let now = self.workers[w].clock;
@@ -624,6 +682,7 @@ impl<'a> Engine<'a> {
     fn run_quantum(&mut self, w: usize) -> Result<()> {
         let free = self.desc.overhead_free;
         let tid = self.workers[w].current.expect("run_quantum without task");
+        debug_assert!(self.pending_home.is_empty(), "push batch leaked across events");
         loop {
             // single arena access per step: copy the small Copy action out
             // so the arena can be mutated freely below (hot path — see
@@ -639,12 +698,14 @@ impl<'a> Engine<'a> {
             };
             match action {
                 Some(Action::Compute(units)) => {
-                    let dt = units * self.mem.cost_model().compute_per_unit;
+                    self.flush_pending(w);
+                    let dt = units * self.costs.compute_per_unit;
                     self.workers[w].clock += dt;
                     self.workers[w].work_time += dt;
                     self.arena.get_mut(tid).cursor += 1;
                 }
                 Some(Action::Touch { region, write }) => {
+                    self.flush_pending(w);
                     let core = self.workers[w].core;
                     let now = self.workers[w].clock;
                     let dt = self.mem.access(core, region, write, now);
@@ -653,6 +714,7 @@ impl<'a> Engine<'a> {
                     self.arena.get_mut(tid).cursor += 1;
                 }
                 Some(Action::Kernel(tag)) => {
+                    self.flush_pending(w);
                     self.kernel_calls += 1;
                     if let Some(exec) = self.exec.as_deref_mut() {
                         self.workload.run_kernel(tag, exec)?;
@@ -662,8 +724,7 @@ impl<'a> Engine<'a> {
                 Some(Action::Spawn { desc, affinity }) => {
                     self.arena.get_mut(tid).cursor += 1;
                     self.sched.observe(&SchedEvent::Spawn { worker: w });
-                    let cm = self.mem.cost_model();
-                    let spawn_cost = if free { 0 } else { cm.spawn_cost };
+                    let spawn_cost = if free { 0 } else { self.costs.spawn_cost };
                     self.workers[w].clock += spawn_cost;
                     self.workers[w].overhead_time += spawn_cost;
                     let depth = self.arena.get(tid).depth + 1;
@@ -696,7 +757,13 @@ impl<'a> Engine<'a> {
                         if let Placement::HomeNode(node) = self.sched.place(&sctx) {
                             if let Some(target) = self.home_worker(node) {
                                 if target != w {
-                                    self.push_home(child, w, target);
+                                    if self.desc.spawn_batch > 1 {
+                                        // coalesce: sibling pushes to one
+                                        // target share a single transfer
+                                        self.queue_push_home(child, w, target);
+                                    } else {
+                                        self.push_home(child, w, target);
+                                    }
                                     // parent keeps running: loop continues
                                     continue;
                                 }
@@ -704,8 +771,12 @@ impl<'a> Engine<'a> {
                         }
                     }
 
+                    // the spawn takes the local path, so any coalesced
+                    // pushes must land first (their simulated transfer
+                    // precedes this spawn's queue op)
+                    self.flush_pending(w);
                     if self.desc.shared_queue() {
-                        let op = self.mem.cost_model().shared_queue_op;
+                        let op = self.costs.shared_queue_op;
                         let now = self.workers[w].clock;
                         let cost = self.shared.lock(now, op);
                         self.workers[w].clock += cost;
@@ -717,8 +788,7 @@ impl<'a> Engine<'a> {
                     } else {
                         // depth-first: suspend parent, run child now
                         if !free {
-                            let op = self.mem.cost_model().queue_op
-                                + self.workers[w].rt_penalty;
+                            let op = self.costs.queue_op + self.workers[w].rt_penalty;
                             let now = self.workers[w].clock;
                             let cost = self.pools[w].lock(now, op);
                             self.workers[w].clock += cost;
@@ -737,7 +807,9 @@ impl<'a> Engine<'a> {
                     }
                 }
                 None => {
-                    // phase boundary
+                    // phase boundary: the quantum may end here, so any
+                    // coalesced pushes must land now
+                    self.flush_pending(w);
                     match state {
                         TaskState::Pre => {
                             let inst = self.arena.get_mut(tid);
@@ -775,20 +847,33 @@ impl<'a> Engine<'a> {
     }
 
     /// The worker a [`Placement::HomeNode`] push targets: on the node
-    /// itself when workers are bound there (else the nearest node that
-    /// has some), the member with the shortest pool, ties to the lowest
-    /// thread id — deterministic.  `None` for an out-of-range node (a
-    /// misbehaving custom scheduler falls back to the local path).
+    /// itself when workers are bound there (else across the *nearest
+    /// worker-bearing nodes* — all of them when several tie on distance),
+    /// the member with the least load, ties to the candidate-order /
+    /// lowest-thread-id pick — deterministic.  Load counts the worker's
+    /// pool *plus its node's pending mailbox continuations*: a homed
+    /// continuation parked in the mailbox is work the team must absorb
+    /// just like a queued task, and ignoring it used to pile pushes onto
+    /// a node whose deques merely *looked* empty.  Within one team the
+    /// mailbox term is a shared constant (same argmin as before), so the
+    /// accounting only changes picks across distinct candidate nodes.
+    /// `None` for an out-of-range node (a misbehaving custom scheduler
+    /// falls back to the local path).
     fn home_worker(&self, node: usize) -> Option<usize> {
-        let node = *self.place_node.get(node)?;
-        let team = &self.node_workers[node];
-        let mut best = team[0];
-        for &cand in &team[1..] {
-            if self.pools[cand].len() < self.pools[best].len() {
-                best = cand;
+        let cands = self.place_cands.get(node)?;
+        let mut best = None;
+        let mut best_load = usize::MAX;
+        for &nd in cands {
+            let mail = self.mailboxes[nd].len();
+            for &cand in &self.node_workers[nd] {
+                let load = self.pools[cand].len() + mail;
+                if load < best_load {
+                    best_load = load;
+                    best = Some(cand);
+                }
             }
         }
-        Some(best)
+        best
     }
 
     /// Push freshly spawned `child` onto `target`'s pool (a cross-node
@@ -799,7 +884,7 @@ impl<'a> Engine<'a> {
     /// worker drains its own child-first stack before mailbox arrivals,
     /// and back-end thieves re-balance the oldest pushes first.
     fn push_home(&mut self, child: TaskId, w: usize, target: usize) {
-        let cm = self.mem.cost_model();
+        let cm = self.costs;
         let hops = self.thops[w][target] as Time;
         let op = cm.queue_op + hops * cm.steal_per_hop + self.workers[w].rt_penalty;
         let now = self.workers[w].clock;
@@ -813,6 +898,57 @@ impl<'a> Engine<'a> {
             let now = self.workers[w].clock;
             self.wake_worker(target, now);
         }
+    }
+
+    /// Buffer a home push for batched transfer
+    /// ([`SchedDescriptor::spawn_batch`] > 1).  A target change flushes
+    /// the open batch first (buffered pushes stay in spawn order), and a
+    /// full batch flushes immediately — the buffer never outlives the
+    /// spawning worker's quantum (every quantum exit path calls
+    /// [`Engine::flush_pending`]).
+    fn queue_push_home(&mut self, child: TaskId, w: usize, target: usize) {
+        if !self.pending_home.is_empty() && self.pending_target != target {
+            self.flush_pending(w);
+        }
+        self.pending_target = target;
+        self.pending_home.push(child);
+        if self.pending_home.len() >= self.desc.spawn_batch.max(1) as usize {
+            self.flush_pending(w);
+        }
+    }
+
+    /// Transfer the buffered sibling pushes to their shared target under
+    /// one pool lock: one queue op plus the same per-task per-hop
+    /// transfer a batched steal charges (`k * hops * steal_per_hop`), so
+    /// a batch of `k` saves `k-1` queue ops and lock acquisitions over
+    /// `k` singleton [`Engine::push_home`] calls.  FIFO entry in spawn
+    /// order; the target is woken once if parked.  No-op on an empty
+    /// buffer (the common, unbatched case).
+    fn flush_pending(&mut self, w: usize) {
+        if self.pending_home.is_empty() {
+            return;
+        }
+        let batch = std::mem::take(&mut self.pending_home);
+        let target = self.pending_target;
+        let hops = self.thops[w][target] as Time;
+        let op = self.costs.queue_op
+            + (batch.len() as Time) * hops * self.costs.steal_per_hop
+            + self.workers[w].rt_penalty;
+        let now = self.workers[w].clock;
+        let cost = self.pools[target].lock(now, op);
+        self.workers[w].clock += cost;
+        self.workers[w].overhead_time += cost;
+        for &child in &batch {
+            let home = self.arena.get(child).home;
+            self.pools[target].push_back(child, home);
+        }
+        self.pushed_home += batch.len() as u64;
+        if self.workers[target].sleeping {
+            let now = self.workers[w].clock;
+            self.wake_worker(target, now);
+        }
+        self.pending_home = batch;
+        self.pending_home.clear();
     }
 
     /// Finish `tid`: notify the parent, release its continuation when the
@@ -854,7 +990,7 @@ impl<'a> Engine<'a> {
                         (pi.owner as usize, pi.home)
                     };
                     if self.desc.shared_queue() {
-                        let op = self.mem.cost_model().shared_queue_op;
+                        let op = self.costs.shared_queue_op;
                         let now = self.workers[w].clock;
                         let cost = self.shared.lock(now, op);
                         self.workers[w].clock += cost;
@@ -886,10 +1022,14 @@ impl<'a> Engine<'a> {
                             if let Some(t) = self.home_worker(node) {
                                 if t != owner {
                                     target = t;
-                                    // nodes without bound workers resolve
-                                    // to the nearest node that has some,
-                                    // exactly as the wake target does
-                                    mail_node = Some(self.place_node[node]);
+                                    // the mailbox is the chosen worker's
+                                    // own node's: home_worker may resolve
+                                    // a worker-less node to any of the
+                                    // equidistant worker-bearing teams,
+                                    // and the mail must land where the
+                                    // pick (and its wake) actually lives
+                                    mail_node =
+                                        Some(self.topo.node_of(self.workers[t].core));
                                     self.homed_resumes += 1;
                                 }
                             }
@@ -899,7 +1039,7 @@ impl<'a> Engine<'a> {
                         // a redirected release pays the same per-hop
                         // transfer push_home does; the tied release
                         // keeps its flat queue-op cost
-                        let cm = self.mem.cost_model();
+                        let cm = self.costs;
                         let mut op = cm.queue_op + self.workers[w].rt_penalty;
                         if target != owner {
                             op += self.thops[w][target] as Time * cm.steal_per_hop;

@@ -55,17 +55,32 @@ pub struct NumaHome {
     /// Steal-half cap: max tasks drained per steal from an affine victim
     /// (1 = the stock single steal).
     batch: u32,
+    /// Push-side coalescing width: max same-target home pushes the engine
+    /// may transfer under one pool lock (1 = push each spawn immediately).
+    spawn_batch: u32,
 }
 
 impl NumaHome {
     /// Placement with both locality extensions on (the registry default).
     pub fn new(min_kb: f64) -> Self {
-        Self::configured(min_kb, true, true, 1)
+        Self::configured(min_kb, true, true, 1, 1)
     }
 
     /// Placement with explicit steal-bias / homed-resume / batch knobs.
-    pub fn configured(min_kb: f64, steal_bias: bool, homed_resume: bool, batch: u32) -> Self {
-        Self { min_bytes: (min_kb * 1024.0) as u64, steal_bias, homed_resume, batch }
+    pub fn configured(
+        min_kb: f64,
+        steal_bias: bool,
+        homed_resume: bool,
+        batch: u32,
+        spawn_batch: u32,
+    ) -> Self {
+        Self {
+            min_bytes: (min_kb * 1024.0) as u64,
+            steal_bias,
+            homed_resume,
+            batch,
+            spawn_batch,
+        }
     }
 }
 
@@ -76,10 +91,11 @@ impl Scheduler for NumaHome {
 
     fn signature(&self) -> String {
         format!(
-            "numa-home(batch={};homed_resume={};min_kb={};steal_bias={})",
+            "numa-home(batch={};homed_resume={};min_kb={};spawn_batch={};steal_bias={})",
             self.batch,
             self.homed_resume as u8,
             crate::util::fmt_f64(self.min_bytes as f64 / 1024.0),
+            self.spawn_batch,
             self.steal_bias as u8,
         )
     }
@@ -90,6 +106,7 @@ impl Scheduler for NumaHome {
             // surfaces the floor so the engine never resolves homes for
             // hints place() would discard anyway
             min_hint_bytes: self.min_bytes,
+            spawn_batch: self.spawn_batch,
             ..SchedDescriptor::WORK_STEALING
         }
     }
@@ -201,17 +218,35 @@ mod tests {
     fn registry_builds_with_defaults_and_overrides() {
         let s = build(&SchedSpec::new("numa-home")).unwrap();
         assert_eq!(s.name(), "numa-home");
-        assert_eq!(s.signature(), "numa-home(batch=1;homed_resume=1;min_kb=16;steal_bias=1)");
+        assert_eq!(
+            s.signature(),
+            "numa-home(batch=1;homed_resume=1;min_kb=16;spawn_batch=1;steal_bias=1)"
+        );
         let s = build(&SchedSpec::new("numa-home").with_param("min_kb", 4.0)).unwrap();
-        assert_eq!(s.signature(), "numa-home(batch=1;homed_resume=1;min_kb=4;steal_bias=1)");
+        assert_eq!(
+            s.signature(),
+            "numa-home(batch=1;homed_resume=1;min_kb=4;spawn_batch=1;steal_bias=1)"
+        );
         let s = build(
             &SchedSpec::new("numa-home")
                 .with_param("steal_bias", 0.0)
                 .with_param("homed_resume", 0.0)
-                .with_param("batch", 4.0),
+                .with_param("batch", 4.0)
+                .with_param("spawn_batch", 8.0),
         )
         .unwrap();
-        assert_eq!(s.signature(), "numa-home(batch=4;homed_resume=0;min_kb=16;steal_bias=0)");
+        assert_eq!(
+            s.signature(),
+            "numa-home(batch=4;homed_resume=0;min_kb=16;spawn_batch=8;steal_bias=0)"
+        );
+        assert_eq!(
+            build(&SchedSpec::new("numa-home").with_param("spawn_batch", 8.0))
+                .unwrap()
+                .descriptor()
+                .spawn_batch,
+            8,
+            "the coalescing width reaches the engine through the descriptor"
+        );
         assert!(build(&SchedSpec::new("numa-home").with_param("min_kb", -1.0)).is_err());
         assert!(build(&SchedSpec::new("numa-home").with_param("batch", 0.0)).is_err());
         assert!(build(&SchedSpec::new("numa-home").with_param("bogus", 1.0)).is_err());
@@ -229,7 +264,7 @@ mod tests {
         assert_eq!(cands.iter().map(|c| c.victim).collect::<Vec<_>>(), vec![5, 3, 1]);
         assert!(cands.iter().all(|c| c.take == 1), "batch=1 keeps single steals");
         let mut cands = vec![cand(3, 0), cand(5, 2), cand(1, 0)];
-        NumaHome::configured(16.0, false, true, 1).steal_bias(0, &mut cands);
+        NumaHome::configured(16.0, false, true, 1, 1).steal_bias(0, &mut cands);
         assert_eq!(
             cands.iter().map(|c| c.victim).collect::<Vec<_>>(),
             vec![3, 5, 1],
@@ -241,14 +276,14 @@ mod tests {
     fn batch_above_one_steals_half_from_affine_victims() {
         let cand = |victim, affine, queued| StealCand::single(victim, 1, affine, queued);
         let mut cands = vec![cand(3, 0, 8), cand(5, 2, 8), cand(1, 1, 3)];
-        NumaHome::configured(16.0, true, true, 4).steal_bias(0, &mut cands);
+        NumaHome::configured(16.0, true, true, 4, 1).steal_bias(0, &mut cands);
         let got: Vec<(usize, u32)> = cands.iter().map(|c| (c.victim, c.take)).collect();
         // affine victims lead and batch steal-half (8/2=4, 3/2=1); the
         // non-affine victim keeps the stock single steal
         assert_eq!(got, vec![(5, 4), (1, 1), (3, 1)]);
         // steal_bias=0 disables batching along with the reorder
         let mut cands = vec![cand(3, 0, 8), cand(5, 2, 8)];
-        NumaHome::configured(16.0, false, true, 4).steal_bias(0, &mut cands);
+        NumaHome::configured(16.0, false, true, 4, 1).steal_bias(0, &mut cands);
         assert!(cands.iter().all(|c| c.take == 1));
     }
 
@@ -259,7 +294,7 @@ mod tests {
         assert_eq!(s.resume(&rctx(Some(5), 0)), Placement::HomeNode(5));
         assert_eq!(s.resume(&rctx(Some(3), 3)), Placement::LocalQueue, "owner already home");
         assert_eq!(s.resume(&rctx(None, 0)), Placement::LocalQueue, "unhinted task");
-        let off = NumaHome::configured(16.0, true, false, 1);
+        let off = NumaHome::configured(16.0, true, false, 1, 1);
         assert_eq!(off.resume(&rctx(Some(5), 0)), Placement::LocalQueue, "homed_resume=0");
     }
 

@@ -183,6 +183,15 @@ pub struct SchedDescriptor {
     /// loops over tiny shared regions — nqueens' board — never pay the
     /// query they are guaranteed to discard.
     pub min_hint_bytes: u64,
+    /// Remote-push coalescing width for [`Scheduler::place`] decisions:
+    /// the engine buffers up to this many consecutive same-target
+    /// [`Placement::HomeNode`] spawns from one worker's quantum and
+    /// transfers them under a single pool lock, charging one queue op
+    /// plus a per-task hop transfer — sibling spawns over one bound
+    /// region stop paying a full remote push each (the push-side twin of
+    /// [`StealCand::take`] batching).  1 (the default) flushes every
+    /// spawn immediately, which is byte-identical to the unbatched path.
+    pub spawn_batch: u32,
 }
 
 impl SchedDescriptor {
@@ -196,6 +205,7 @@ impl SchedDescriptor {
         places: false,
         full_sweep: true,
         min_hint_bytes: 0,
+        spawn_batch: 1,
     };
 
     pub fn shared_queue(&self) -> bool {
@@ -617,6 +627,13 @@ fn builtin_entries() -> Vec<Arc<Entry>> {
                     1.0,
                     MAX_BATCH,
                     "max tasks per steal (steal-half from deep affine pools; 1 = single steal)",
+                )
+                .param_in(
+                    "spawn_batch",
+                    1.0,
+                    1.0,
+                    MAX_BATCH,
+                    "coalesce this many same-target home pushes per lock (1 = push each spawn)",
                 ),
             |p| {
                 Ok(Box::new(home::NumaHome::configured(
@@ -624,6 +641,7 @@ fn builtin_entries() -> Vec<Arc<Entry>> {
                     p.req_flag("steal_bias")?,
                     p.req_flag("homed_resume")?,
                     p.req_usize("batch")? as u32,
+                    p.req_usize("spawn_batch")? as u32,
                 )))
             },
         ),
@@ -1355,6 +1373,7 @@ mod tests {
             ("numa-home", "min_kb", -1.0),
             ("numa-home", "steal_bias", -1.0),
             ("numa-home", "batch", 0.0),
+            ("numa-home", "spawn_batch", 0.0),
             ("numa-steal", "min_kb", -0.5),
             ("numa-steal", "batch", -2.0),
             ("numa-adapt", "target", -0.1),

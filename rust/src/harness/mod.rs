@@ -13,7 +13,7 @@ use anyhow::Result;
 use crate::config::Size;
 use crate::coordinator::binding::BindPolicy;
 use crate::coordinator::runtime::Runtime;
-use crate::coordinator::sched::Policy;
+use crate::coordinator::sched::{Policy, SchedSpec};
 use crate::metrics::paper;
 use crate::metrics::table::SpeedupTable;
 use crate::spec::{Session, Sweep};
@@ -49,6 +49,20 @@ pub fn numa_sched_configs() -> Vec<(Policy, BindPolicy)> {
         (Policy::WorkFirst, BindPolicy::NumaAware),
         (Policy::Dfwspt, BindPolicy::NumaAware),
         (Policy::Dfwsrpt, BindPolicy::NumaAware),
+    ]
+}
+
+/// The locality-strategy ablation the bench suite pins across
+/// topologies: the paper's best stock NUMA scheduler (dfwsrpt), then the
+/// three placement strategies layered on it — steal-side bias only
+/// (numa-steal), push-to-home placement (numa-home), and the adaptive
+/// hybrid (numa-adapt) — all under the §IV NUMA binding.
+pub fn ablation_configs() -> Vec<(SchedSpec, BindPolicy)> {
+    vec![
+        (SchedSpec::stock(Policy::Dfwsrpt), BindPolicy::NumaAware),
+        (SchedSpec::new("numa-steal"), BindPolicy::NumaAware),
+        (SchedSpec::new("numa-home"), BindPolicy::NumaAware),
+        (SchedSpec::new("numa-adapt"), BindPolicy::NumaAware),
     ]
 }
 
@@ -240,6 +254,17 @@ mod tests {
             assert!(!f.configs.is_empty());
             assert_eq!(f.threads, PAPER_THREADS);
             assert!(bots::NAMES.contains(&f.bench), "{}", f.bench);
+        }
+    }
+
+    #[test]
+    fn ablation_configs_name_registered_strategies() {
+        let configs = ablation_configs();
+        assert_eq!(configs.len(), 4);
+        assert_eq!(configs[0].0.name_sig(), "dfwsrpt");
+        for (spec, bind) in &configs {
+            assert_eq!(*bind, BindPolicy::NumaAware);
+            crate::coordinator::sched::build(spec).unwrap();
         }
     }
 

@@ -31,6 +31,7 @@
 //! | [`runtime`]  | PJRT artifact loading + execution (the AOT bridge) |
 //! | [`metrics`]  | run statistics, speedup tables, paper reference data |
 //! | [`harness`]  | figure regeneration: the paper figures as sweep data |
+//! | [`bench`]    | pinned perf-trajectory suite (`numanos bench`, `BENCH_*.json`) |
 //! | [`spec`]     | the experiment API: `RunSpec`, `Session`, `Sweep`, manifests |
 //! | [`serde`]    | self-contained JSON/TOML (de)serialization |
 //! | [`config`]   | legacy run configuration + tiny key=value config file parser |
@@ -55,6 +56,7 @@
 //! assert!(record.speedup > 0.0 && record.stats.makespan > 0);
 //! ```
 
+pub mod bench;
 pub mod bots;
 pub mod config;
 pub mod coordinator;

@@ -9,6 +9,8 @@
 //! numanos figure --all --out results/  # regenerate all nine figures
 //! numanos gains                        # §V.A NUMA-allocation gain summary
 //! numanos sweep  --manifest exp.toml   # run a user-authored experiment file
+//! numanos bench  --out BENCH_7.json    # run the pinned perf-trajectory suite
+//! numanos bench  --compare BENCH_6.json BENCH_7.json   # delta report
 //! ```
 //!
 //! Everything execution-shaped goes through the [`spec`](numanos::spec)
@@ -21,6 +23,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use numanos::bench;
 use numanos::bots;
 use numanos::config::Size;
 use numanos::coordinator::priority::core_priorities;
@@ -40,10 +43,13 @@ fn main() {
     }
 }
 
-/// Per-command flag inventory: (command, flags taking a value, boolean flags).
-const COMMANDS: &[(&str, &[&str], &[&str])] = &[
-    ("list", &[], &[]),
-    ("topo", &["name"], &[]),
+/// Per-command flag inventory: (command, flags taking a value, boolean
+/// flags, positional arguments accepted).  Only `bench --compare` takes
+/// positionals (the two report files); everywhere else a bare token
+/// stays a clear error.
+const COMMANDS: &[(&str, &[&str], &[&str], usize)] = &[
+    ("list", &[], &[], 0),
+    ("topo", &["name"], &[], 0),
     (
         "run",
         &[
@@ -51,33 +57,45 @@ const COMMANDS: &[(&str, &[&str], &[&str])] = &[
             "seed", "compute", "artifacts", "cost", "rtdata",
         ],
         &["json"],
+        0,
     ),
-    ("figure", &["id", "out", "size", "seed", "topo", "cost"], &["all", "json"]),
-    ("gains", &["size", "seed", "cost"], &["json"]),
-    ("sweep", &["manifest", "out", "workers", "seed"], &["json", "seq"]),
-    ("help", &[], &[]),
+    ("figure", &["id", "out", "size", "seed", "topo", "cost"], &["all", "json"], 0),
+    ("gains", &["size", "seed", "cost"], &["json"], 0),
+    ("sweep", &["manifest", "out", "workers", "seed"], &["json", "seq"], 0),
+    (
+        "bench",
+        &["out", "reps", "filter", "max-regress-pct", "wall-warn-pct"],
+        &["compare", "json", "warn-only", "fail-on-drift"],
+        2,
+    ),
+    ("help", &[], &[], 0),
 ];
 
 /// Parse `--key value` / `--key=value` / boolean `--flag` arguments,
 /// validated against the command's flag inventory.  Unknown flags are
 /// collected and reported together; a value-less flag that needs a value
 /// is a clear error instead of a silently-misparsed `"true"`.
-fn parse_args() -> Result<(String, HashMap<String, String>)> {
+fn parse_args() -> Result<(String, HashMap<String, String>, Vec<String>)> {
     let mut args = std::env::args().skip(1).peekable();
     let cmd = args.next().unwrap_or_else(|| "help".into());
     let cmd = match cmd.as_str() {
         "--help" | "-h" => "help".to_string(),
         _ => cmd,
     };
-    let (_, value_flags, bool_flags) = COMMANDS
+    let (_, value_flags, bool_flags, max_positionals) = COMMANDS
         .iter()
-        .find(|(name, _, _)| *name == cmd)
+        .find(|(name, _, _, _)| *name == cmd)
         .ok_or_else(|| anyhow::anyhow!("unknown command '{cmd}' (try `numanos help`)"))?;
 
     let mut flags = HashMap::new();
+    let mut positionals: Vec<String> = Vec::new();
     let mut unknown: Vec<String> = Vec::new();
     while let Some(a) = args.next() {
         let Some(stripped) = a.strip_prefix("--") else {
+            if positionals.len() < *max_positionals {
+                positionals.push(a);
+                continue;
+            }
             bail!("unexpected positional argument '{a}' (flags are --key value or --key=value)");
         };
         let (key, explicit_value) = match stripped.split_once('=') {
@@ -131,7 +149,7 @@ fn parse_args() -> Result<(String, HashMap<String, String>)> {
             if allowed.is_empty() { "none".to_string() } else { allowed.join(" ") }
         );
     }
-    Ok((cmd, flags))
+    Ok((cmd, flags, positionals))
 }
 
 /// A boolean flag is set only when its value is literally "true"
@@ -141,7 +159,7 @@ fn bool_flag(flags: &HashMap<String, String>, key: &str) -> bool {
 }
 
 fn run() -> Result<()> {
-    let (cmd, flags) = parse_args()?;
+    let (cmd, flags, positionals) = parse_args()?;
     match cmd.as_str() {
         "list" => cmd_list(),
         "topo" => cmd_topo(&flags),
@@ -149,6 +167,7 @@ fn run() -> Result<()> {
         "figure" => cmd_figure(&flags),
         "gains" => cmd_gains(&flags),
         "sweep" => cmd_sweep(&flags),
+        "bench" => cmd_bench(&flags, &positionals),
         "help" => {
             print!("{}", HELP);
             Ok(())
@@ -183,6 +202,16 @@ commands:
                             SS V.A NUMA-allocation gain summary
   sweep  --manifest <file>  run a JSON/TOML experiment manifest
          [--out dir] [--json] [--seq] [--workers N] [--seed S]
+  bench  [--filter G] [--reps N] [--out file.json] [--json]
+                            run the pinned perf-trajectory suite (paper
+                            figures + strategy ablation + hot-loop
+                            cells) and write a BENCH_*.json report
+                            (simulated metrics + host wall-time medians)
+  bench  --compare <old.json> <new.json> [--max-regress-pct P]
+         [--wall-warn-pct P] [--warn-only] [--fail-on-drift] [--json]
+                            per-benchmark delta table; exits non-zero
+                            when simulated makespan regresses past the
+                            threshold (wall-time drift only warns)
 
 flags accept both `--key value` and `--key=value`.
 ";
@@ -439,6 +468,106 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             ("sweeps", Json::Arr(json_sweeps)),
         ]);
         print!("{}", doc.to_pretty());
+    }
+    Ok(())
+}
+
+/// `numanos bench`: run the pinned suite (default), or `--compare` two
+/// emitted reports.
+fn cmd_bench(flags: &HashMap<String, String>, positionals: &[String]) -> Result<()> {
+    if bool_flag(flags, "compare") {
+        return cmd_bench_compare(flags, positionals);
+    }
+    if !positionals.is_empty() {
+        bail!(
+            "bench: positional arguments are only used with --compare <old.json> <new.json> \
+             (got '{}')",
+            positionals.join(" ")
+        );
+    }
+    let reps: usize =
+        flags.get("reps").map(|s| s.parse()).transpose().context("reps")?.unwrap_or(3);
+    if reps == 0 {
+        bail!("bench: --reps must be at least 1");
+    }
+    let filter = flags.get("filter").map(String::as_str).unwrap_or("");
+    let out = flags.get("out").map(String::as_str).unwrap_or("BENCH.json");
+    let entries = bench::filtered(filter)?;
+    let session = Session::new();
+    let t0 = std::time::Instant::now();
+    let mut cells = Vec::new();
+    for entry in &entries {
+        let t1 = std::time::Instant::now();
+        let entry_cells = bench::run_entry(&session, entry, reps)?;
+        eprintln!(
+            "[bench {}: {} cell(s) x {reps} rep(s) in {:.1}s]",
+            entry.sweep.id,
+            entry_cells.len(),
+            t1.elapsed().as_secs_f64()
+        );
+        cells.extend(entry_cells);
+    }
+    let total_wall_ms: f64 = cells.iter().map(|c| c.wall_ms).sum();
+    let run =
+        bench::SuiteRun { reps, filter: filter.to_string(), cells, total_wall_ms };
+    let doc = run.to_json();
+    std::fs::write(out, doc.to_pretty()).with_context(|| format!("writing {out}"))?;
+    eprintln!(
+        "[bench: {} cell(s) -> {out} in {:.1}s]",
+        run.cells.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    if bool_flag(flags, "json") {
+        print!("{}", doc.to_pretty());
+    } else {
+        println!(
+            "wrote {out}: {} cell(s), suite wall {:.1} ms (per-cell median of {reps} rep(s))",
+            run.cells.len(),
+            run.total_wall_ms
+        );
+    }
+    Ok(())
+}
+
+/// `numanos bench --compare old.json new.json`: render the delta report
+/// and exit non-zero on threshold breach.
+fn cmd_bench_compare(flags: &HashMap<String, String>, positionals: &[String]) -> Result<()> {
+    let [old_path, new_path] = positionals else {
+        bail!("bench --compare needs exactly two files: <old.json> <new.json>");
+    };
+    let old = bench::SuiteReport::load(Path::new(old_path))?;
+    let new = bench::SuiteReport::load(Path::new(new_path))?;
+    let defaults = bench::compare::CompareOptions::default();
+    let opts = bench::compare::CompareOptions {
+        max_regress_pct: flags
+            .get("max-regress-pct")
+            .map(|s| s.parse())
+            .transpose()
+            .context("max-regress-pct")?
+            .unwrap_or(defaults.max_regress_pct),
+        wall_warn_pct: flags
+            .get("wall-warn-pct")
+            .map(|s| s.parse())
+            .transpose()
+            .context("wall-warn-pct")?
+            .unwrap_or(defaults.wall_warn_pct),
+        fail_on_drift: bool_flag(flags, "fail-on-drift"),
+        warn_only: bool_flag(flags, "warn-only"),
+    };
+    let cmp = bench::compare::compare(&old, &new, &opts)?;
+    if bool_flag(flags, "json") {
+        print!("{}", cmp.to_json().to_pretty());
+    } else {
+        print!("{}", cmp.render());
+    }
+    if cmp.failed(&opts) {
+        bail!(
+            "bench compare failed: {} regression(s) past {}%, {} drifted cell(s){}",
+            cmp.regressions,
+            opts.max_regress_pct,
+            cmp.drifted,
+            if opts.fail_on_drift { " (--fail-on-drift)" } else { "" }
+        );
     }
     Ok(())
 }

@@ -112,6 +112,23 @@ pub fn speedup(serial: &RunStats, run: &RunStats) -> f64 {
     serial.makespan as f64 / run.makespan as f64
 }
 
+/// Median of a wall-clock sample (sorts in place; even-length samples
+/// average the middle pair).  The bench suite reports the median of
+/// `--reps` repetitions so one scheduling hiccup on the host doesn't
+/// read as an engine regression.  NaN for an empty sample.
+pub fn median_ms(xs: &mut [f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("wall-clock samples are finite"));
+    let mid = xs.len() / 2;
+    if xs.len() % 2 == 1 {
+        xs[mid]
+    } else {
+        (xs[mid - 1] + xs[mid]) / 2.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,5 +194,15 @@ mod tests {
     fn efficiency_bounded() {
         let s = stats("wf", None, 100);
         assert!(s.efficiency() > 0.0 && s.efficiency() <= 1.0);
+    }
+
+    #[test]
+    fn median_of_samples() {
+        assert!(median_ms(&mut []).is_nan());
+        assert_eq!(median_ms(&mut [3.0]), 3.0);
+        assert_eq!(median_ms(&mut [9.0, 1.0, 4.0]), 4.0);
+        assert_eq!(median_ms(&mut [8.0, 2.0, 4.0, 6.0]), 5.0);
+        // an outlier rep doesn't move the median
+        assert_eq!(median_ms(&mut [10.0, 11.0, 500.0]), 11.0);
     }
 }

@@ -1,0 +1,150 @@
+//! Integration tests for the pinned bench suite (`numanos bench`): suite
+//! coverage, `BENCH_*.json` schema round-tripping, run-to-run determinism
+//! of the simulated metrics, and the compare policy on real reports.
+
+use numanos::bench::{self, compare::CompareOptions, compare::Status, SuiteReport};
+use numanos::spec::Session;
+
+/// The committed BENCH_6.json shape: all nine figures, the four-strategy
+/// ablation on four topologies, smoke, and the engine-perf cells — with
+/// globally unique ids.
+#[test]
+fn suite_covers_figures_ablation_and_perf() {
+    let entries = bench::suite();
+    let figure_groups: Vec<&str> = entries
+        .iter()
+        .map(|e| e.group.as_str())
+        .filter(|g| g.starts_with("fig"))
+        .collect();
+    assert_eq!(
+        figure_groups,
+        vec!["fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig13", "fig14", "fig15"],
+        "all nine paper figures, in figure order"
+    );
+    let ablation_cells: usize = entries
+        .iter()
+        .filter(|e| e.group == "ablation")
+        .map(|e| e.sweep.cell_count())
+        .sum();
+    assert_eq!(ablation_cells, 16, "4 strategies x 4 topologies");
+    let mut ids = Vec::new();
+    for e in &entries {
+        for spec in e.sweep.cells().unwrap() {
+            ids.push(bench::cell_id(&e.group, &spec));
+        }
+    }
+    let n = ids.len();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "cell ids are globally unique");
+}
+
+/// An executed suite serializes to a document the report parser accepts,
+/// with measured sim/wall values and ids matching the committed
+/// placeholder's shape for the same cells.
+#[test]
+fn emitted_document_round_trips_through_the_schema() {
+    let session = Session::new();
+    let run = bench::run_suite(&session, "smoke", 1).unwrap();
+    let doc = run.to_json();
+    let report = SuiteReport::parse(&doc.to_pretty()).unwrap();
+    assert_eq!(report.suite, bench::SUITE_NAME);
+    assert_eq!(report.reps, 1);
+    assert_eq!(report.filter, "smoke");
+    assert_eq!(report.cells.len(), 2);
+    for cell in &report.cells {
+        let sim = cell.sim.as_ref().expect("executed cells record sim metrics");
+        for key in [
+            "makespan",
+            "remote_pct",
+            "affine_steals",
+            "batch_steals",
+            "homed_resumes",
+            "mailbox_hits",
+            "tasks_migrated",
+            "pushed_home",
+        ] {
+            assert!(sim.contains_key(key), "sim must record '{key}'");
+        }
+        assert!(sim["makespan"] > 0.0);
+        assert!(cell.wall_ms.is_some(), "executed cells record wall time");
+    }
+    assert!(report.total_wall_ms.is_some());
+
+    // the emitted ids are exactly the placeholder's smoke ids: the
+    // committed BENCH_6.json and a real run can never disagree on shape
+    let placeholder = SuiteReport::from_json(&bench::placeholder_json().unwrap()).unwrap();
+    let expect: Vec<&str> = placeholder
+        .cells
+        .iter()
+        .filter(|c| c.group == "smoke")
+        .map(|c| c.id.as_str())
+        .collect();
+    let got: Vec<&str> = report.cells.iter().map(|c| c.id.as_str()).collect();
+    assert_eq!(got, expect);
+}
+
+/// Two independent runs of the same suite entries produce byte-identical
+/// simulated-metric objects (wall time excluded) — the property CI's
+/// determinism job leans on.
+#[test]
+fn suite_runs_are_deterministic_in_their_simulated_metrics() {
+    let runs: Vec<_> = (0..2)
+        .map(|_| bench::run_suite(&Session::new(), "smoke", 1).unwrap())
+        .collect();
+    let sims: Vec<Vec<String>> = runs
+        .iter()
+        .map(|run| {
+            run.to_json()
+                .get("cells")
+                .and_then(|c| c.as_arr().map(<[_]>::to_vec))
+                .unwrap()
+                .iter()
+                .map(|cell| cell.get("sim").unwrap().to_compact())
+                .collect()
+        })
+        .collect();
+    assert_eq!(sims[0], sims[1], "simulated metrics must not vary across runs");
+
+    // ...and the library-level compare agrees: no drift, even under the
+    // strict determinism policy
+    let a = SuiteReport::parse(&runs[0].to_json().to_pretty()).unwrap();
+    let b = SuiteReport::parse(&runs[1].to_json().to_pretty()).unwrap();
+    let opts = CompareOptions { fail_on_drift: true, ..CompareOptions::default() };
+    let cmp = bench::compare::compare(&a, &b, &opts).unwrap();
+    assert!(cmp.deltas.iter().all(|d| d.status == Status::Same), "{}", cmp.render());
+    assert!(!cmp.failed(&opts));
+    assert_eq!(cmp.geomean_ratio, Some(1.0));
+}
+
+/// Threshold policy on real executed reports: an injected makespan
+/// regression fails at the default 0% threshold, passes a loose one, and
+/// the unmeasured committed placeholder never fails as a baseline.
+#[test]
+fn compare_policy_on_executed_reports() {
+    let session = Session::new();
+    let run = bench::run_suite(&session, "smoke", 1).unwrap();
+    let base = SuiteReport::parse(&run.to_json().to_pretty()).unwrap();
+
+    let mut worse = base.clone();
+    let sim = worse.cells[0].sim.as_mut().unwrap();
+    *sim.get_mut("makespan").unwrap() *= 1.10;
+    let opts = CompareOptions::default();
+    let cmp = bench::compare::compare(&base, &worse, &opts).unwrap();
+    assert_eq!(cmp.regressions, 1);
+    assert!(cmp.failed(&opts), "a 10% makespan increase fails the default threshold");
+    let table = cmp.render();
+    assert!(table.contains("REGRESS") && table.contains("+10.00%"), "{table}");
+
+    let loose = CompareOptions { max_regress_pct: 15.0, ..CompareOptions::default() };
+    let cmp = bench::compare::compare(&base, &worse, &loose).unwrap();
+    assert!(!cmp.failed(&loose), "a 10% increase passes a 15% threshold");
+
+    // warn-only mode (CI's committed-baseline step) never fails, and the
+    // placeholder baseline classifies everything as unmeasured
+    let placeholder = SuiteReport::from_json(&bench::placeholder_json().unwrap()).unwrap();
+    let strict = CompareOptions { fail_on_drift: true, ..CompareOptions::default() };
+    let cmp = bench::compare::compare(&placeholder, &base, &strict).unwrap();
+    assert_eq!(cmp.unmeasured, base.cells.len());
+    assert!(!cmp.failed(&strict), "null-sim baseline cells are unmeasured, not drift");
+}

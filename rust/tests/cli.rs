@@ -176,7 +176,7 @@ fn errors_are_actionable() {
 fn help_lists_commands() {
     let (ok, text) = numanos(&["help"]);
     assert!(ok);
-    for cmd in ["run", "figure", "gains", "topo", "list"] {
+    for cmd in ["run", "figure", "gains", "topo", "list", "bench"] {
         assert!(text.contains(cmd), "missing {cmd}");
     }
 }
@@ -388,4 +388,120 @@ fn help_mentions_sweep_and_equals_syntax() {
     assert!(ok);
     assert!(text.contains("sweep"), "{text}");
     assert!(text.contains("--key=value"), "{text}");
+}
+
+/// Multiply the first `"makespan"` value in an emitted BENCH_*.json by
+/// `factor` — the cheapest way to fake a perf trajectory in a CLI test.
+fn bump_makespan(path: &std::path::Path, factor: f64) {
+    let text = std::fs::read_to_string(path).unwrap();
+    let mut bumped = false;
+    let doctored: Vec<String> = text
+        .lines()
+        .map(|l| {
+            if bumped || !l.trim_start().starts_with("\"makespan\":") {
+                return l.to_string();
+            }
+            bumped = true;
+            let indent = &l[..l.len() - l.trim_start().len()];
+            let val = l.trim_start().trim_start_matches("\"makespan\":").trim().trim_end_matches(',');
+            let v: f64 = val.parse().unwrap_or_else(|e| panic!("{val}: {e}"));
+            format!("{indent}\"makespan\": {},", v * factor)
+        })
+        .collect();
+    assert!(bumped, "no makespan line in {}", path.display());
+    std::fs::write(path, doctored.join("\n")).unwrap();
+}
+
+#[test]
+fn bench_smoke_emits_report_and_self_compares_clean() {
+    let dir = std::env::temp_dir().join(format!("numanos_cli_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let a = dir.join("a.json");
+    let b = dir.join("b.json");
+
+    let (ok, text) = numanos(&[
+        "bench", "--filter", "smoke", "--reps", "1", "--out", a.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("wrote"), "{text}");
+    let emitted = std::fs::read_to_string(&a).unwrap();
+    assert!(emitted.contains("\"suite\": \"numanos-pinned-v1\""), "{emitted}");
+    assert!(emitted.contains("\"schema\": 1"), "{emitted}");
+    assert!(emitted.contains("\"remote_pct\""), "{emitted}");
+
+    // a second run is simulation-identical: strict compare passes
+    let (ok, text) = numanos(&[
+        "bench", "--filter", "smoke", "--reps", "1", "--out", b.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    let (ok, text) = numanos(&[
+        "bench", "--compare", a.to_str().unwrap(), b.to_str().unwrap(), "--fail-on-drift",
+    ]);
+    assert!(ok, "determinism: {text}");
+    assert!(text.contains("geomean makespan ratio 1.0000"), "{text}");
+    assert!(text.contains("0 regression(s), 0 drifted"), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_compare_threshold_exit_codes() {
+    let dir = std::env::temp_dir().join(format!("numanos_cli_bcmp_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("base.json");
+    let worse = dir.join("worse.json");
+
+    let (ok, text) = numanos(&[
+        "bench", "--filter", "smoke", "--reps", "1", "--out", base.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    std::fs::copy(&base, &worse).unwrap();
+    bump_makespan(&worse, 1.5);
+
+    // regression past the default 0% threshold: non-zero exit + table row
+    let (ok, text) =
+        numanos(&["bench", "--compare", base.to_str().unwrap(), worse.to_str().unwrap()]);
+    assert!(!ok, "{text}");
+    assert!(text.contains("REGRESS"), "{text}");
+    assert!(text.contains("bench compare failed"), "{text}");
+
+    // a loose threshold or warn-only mode turns the same delta into success
+    let (ok, text) = numanos(&[
+        "bench", "--compare", base.to_str().unwrap(), worse.to_str().unwrap(),
+        "--max-regress-pct", "75",
+    ]);
+    assert!(ok, "{text}");
+    let (ok, text) = numanos(&[
+        "bench", "--compare", base.to_str().unwrap(), worse.to_str().unwrap(), "--warn-only",
+    ]);
+    assert!(ok, "{text}");
+
+    // the improvement direction never fails, and --json emits the counters
+    let (ok, text) = numanos(&[
+        "bench", "--compare", worse.to_str().unwrap(), base.to_str().unwrap(), "--json",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("\"regressions\": 0"), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_arg_errors_are_actionable() {
+    let (ok, text) = numanos(&["bench", "--filter", "nonesuch", "--out", "/dev/null"]);
+    assert!(!ok);
+    assert!(text.contains("matches no suite entries"), "{text}");
+    assert!(text.contains("ablation"), "the error lists the groups: {text}");
+
+    let (ok, text) = numanos(&["bench", "--compare", "only-one.json"]);
+    assert!(!ok);
+    assert!(text.contains("exactly two files"), "{text}");
+
+    let (ok, text) = numanos(&["bench", "stray.json"]);
+    assert!(!ok);
+    assert!(text.contains("--compare"), "{text}");
+
+    let (ok, text) = numanos(&["bench", "--reps", "0", "--out", "/dev/null"]);
+    assert!(!ok);
+    assert!(text.contains("at least 1"), "{text}");
 }

@@ -628,3 +628,252 @@ fn duplicate_bias_victims_are_probed_once() {
     assert_eq!(dup.sim_events, clean.sim_events);
     assert_eq!(dup.per_worker_tasks, clean.per_worker_tasks);
 }
+
+/// Spawn-batch workload: root fires four sibling spawns all hinted on
+/// the same node-1 data, then a long plain leaf L that keeps the master
+/// busy while the node-1 worker drains the pushes.  Kinds: 0 root,
+/// 1 sibling, 2 L.
+struct BatchSiblings {
+    data: Region,
+}
+
+impl Workload for BatchSiblings {
+    fn name(&self) -> &'static str {
+        "batch-siblings"
+    }
+
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        self.data = mem.alloc(64 * 1024);
+        mem.first_touch(master_core, self.data, 0)
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::leaf(0)
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        match desc.kind {
+            0 => {
+                for _ in 0..4 {
+                    ctx.spawn_on(TaskDesc::leaf(1), self.data);
+                }
+                ctx.spawn(TaskDesc::leaf(2)); // L: W0 stays busy for 100 us
+                ctx.taskwait();
+                ctx.compute(100);
+            }
+            1 => ctx.compute(10_000),
+            2 => ctx.compute(100_000),
+            _ => unreachable!("unknown task kind"),
+        }
+    }
+}
+
+/// Satellite regression (batch-aware place), hand-traced: all pages
+/// bound to node 1, so every sibling push targets the lone node-1
+/// worker.  `spawn_batch=1` pays four singleton transfers of
+/// `queue_op + hops*steal_per_hop` each; `spawn_batch=4` coalesces them
+/// into one flush charging `queue_op + 4*hops*steal_per_hop` — same
+/// four `pushed_home`, same FIFO arrival order, and exactly
+/// `3 * queue_op` less spawn-path overhead (every other charge in the
+/// trace is identical: W1 drains the four siblings and steals the root
+/// continuation at ~40 us, W0 re-steals it after L at ~100 us, in both
+/// configurations).
+#[test]
+fn sibling_pushes_coalesce_under_one_transfer() {
+    let topo = Topology::from_edges("pair", vec![1, 1], &[(0, 1)], 4096).unwrap();
+    let rt = Runtime::new(topo, fast_queue_cost());
+    let run = |spawn_batch: f64| {
+        let sched = sched::build(
+            &SchedSpec::new("numa-home").with_param("spawn_batch", spawn_batch),
+        )
+        .unwrap();
+        let mut w = BatchSiblings { data: Region::EMPTY };
+        Session::execute_bound_placed(
+            &rt,
+            &mut w,
+            sched.as_ref(),
+            &[0, 1],
+            false,
+            &MemSpec::new("bind").with_param("node", 1.0),
+            5,
+            None,
+        )
+        .unwrap()
+    };
+    let single = run(1.0);
+    let batched = run(4.0);
+
+    // the batch changes transfer accounting, never placement or order
+    for stats in [&single, &batched] {
+        assert_eq!(stats.tasks, 6, "root + 4 siblings + L");
+        assert_eq!(stats.pushed_home, 4, "every sibling still counts as pushed");
+        assert_eq!(stats.steals, 2, "W1 takes the root continuation; W0 re-steals it");
+        assert_eq!(stats.per_worker_tasks, vec![2, 4]);
+        assert_eq!(stats.batch_steals, 0, "spawn batching is not steal batching");
+        assert_eq!(stats.homed_resumes, 0);
+        assert_eq!(stats.mailbox_hits, 0);
+    }
+    // one lock + one queue op per batch instead of four: the saved cost
+    // is exactly the three coalesced queue ops
+    assert_eq!(
+        single.overhead_time - batched.overhead_time,
+        3 * 5 * NS,
+        "a batch of 4 must save 3 queue ops over singleton pushes"
+    );
+    assert!(batched.makespan < single.makespan, "the spawn path got shorter");
+    let again = run(4.0);
+    assert_eq!(batched.makespan, again.makespan);
+    assert_eq!(batched.sim_events, again.sim_events);
+    assert_eq!(batched.overhead_time, again.overhead_time);
+}
+
+/// Mailbox-accounting workload for the trident topology (worker nodes
+/// n0/n1 both one hop from worker-less n2; the master alone on n3).
+/// The root load-shapes the two teams, P runs on the n1 team and waits
+/// homed on the n2 data, the master's long filler H probes
+/// `home_worker(2)` with a fresh hinted spawn while P's continuation
+/// sits in n0's mailbox.  Kinds: 0 root, 1 GA, 2 GB, 3 P, 4 C, 5 Q,
+/// 6 H, 7 S.
+struct MailboxLoad {
+    d2: Region,
+    d0: Region,
+    d3: Region,
+}
+
+impl Workload for MailboxLoad {
+    fn name(&self) -> &'static str {
+        "mailbox-load"
+    }
+
+    fn init(&mut self, mem: &mut MemSim, _master_core: usize) -> Time {
+        self.d2 = mem.alloc(64 * 1024);
+        self.d0 = mem.alloc(64 * 1024);
+        self.d3 = mem.alloc(64 * 1024);
+        // first-touch from core 2 (worker-less node 2), core 0 (node 0)
+        // and core 3 (the master's node 3)
+        let mut t = mem.first_touch(2, self.d2, 0);
+        t += mem.first_touch(0, self.d0, 0);
+        t += mem.first_touch(3, self.d3, 0);
+        t
+    }
+
+    fn root(&self) -> TaskDesc {
+        TaskDesc::leaf(0)
+    }
+
+    fn body(&self, desc: TaskDesc, ctx: &mut BodyCtx) {
+        match desc.kind {
+            0 => {
+                ctx.spawn_on(TaskDesc::leaf(1), self.d0); // GA -> W1 (n0)
+                ctx.spawn_on(TaskDesc::leaf(3), self.d2); // P  -> W2 (n1 lighter)
+                ctx.spawn_on(TaskDesc::leaf(5), self.d0); // Q  -> W1 (n0)
+                ctx.spawn_on(TaskDesc::leaf(2), self.d2); // GB -> W2 (n1 lighter)
+                // H is homed on the master's own node: the depth-first
+                // switch keeps the master busy to ~65 us with no pool
+                // acquire, parking the root continuation for thieves
+                ctx.spawn_on(TaskDesc::leaf(6), self.d3);
+                ctx.taskwait();
+                ctx.compute(100);
+            }
+            1 => ctx.compute(40_000), // GA: node-0 team busy until ~40 us
+            2 => ctx.compute(40_000), // GB: node-1 team busy until ~41 us
+            3 => {
+                // P: the early compute lets both fillers start before
+                // C's placement reads the pools
+                ctx.compute(1_000);
+                // C is homed on n3 and lands behind the parked root in
+                // the busy master's pool: the only stealable work when
+                // W2 idles at ~41 us
+                ctx.spawn_on(TaskDesc::leaf(4), self.d3);
+                ctx.taskwait();
+                ctx.read(self.d2);
+                ctx.compute(500);
+            }
+            4 => ctx.compute(20_000), // C: releases P from W2 at ~61 us
+            5 => ctx.compute(25_000), // Q: n0 can't drain its mail before ~65 us
+            6 => {
+                ctx.compute(62_000); // H probes at ~62 us: release < probe < drain
+                ctx.spawn_on(TaskDesc::leaf(7), self.d2);
+                ctx.compute(3_000);
+                ctx.taskwait();
+                ctx.compute(100);
+            }
+            7 => {
+                // the discriminator: served at 2 hops iff placed on n1
+                ctx.read(self.d0);
+                ctx.compute(100);
+            }
+            _ => unreachable!("unknown task kind"),
+        }
+    }
+}
+
+/// Satellite regression (mailbox-aware load accounting), hand-traced:
+/// node 2 holds the data but no workers, so `home_worker(2)` arbitrates
+/// between the n0 and n1 teams.  W2 (n1) runs P to its taskwait, steals
+/// C from the busy master's pool at ~41 us (the only non-empty victim)
+/// and completes it at ~61 us: P's release reads a 0/0 tie and homes
+/// the continuation into n0's mailbox — W1 is mid-Q until ~65 us, so
+/// when the master's filler H spawns its d2-hinted probe S at ~62 us
+/// the loads read n0 = 0 pool + 1 mail vs n1 = 0, and S is pushed to
+/// the n1 team, whose d0 read is then served across two hops.  Ignoring
+/// pending mail (the old accounting) reads the same 0/0 tie and pushes
+/// S onto the very team that already owes a homed continuation, and the
+/// read stays local.  Every steal sweep in the trace sees exactly one
+/// non-empty victim pool, so the randomized victim order can't change
+/// any of the asserted counters; the post-65 us mop-up (who re-steals
+/// the root and H continuations) is wake-vs-probe sensitive and is
+/// deliberately left unpinned.
+#[test]
+fn pending_mailbox_continuations_count_as_team_load() {
+    let topo = Topology::from_edges(
+        "trident",
+        vec![1, 1, 1, 1],
+        &[(0, 2), (1, 2), (0, 3)],
+        4096,
+    )
+    .unwrap();
+    let rt = Runtime::new(topo, fast_queue_cost());
+    let run = || {
+        let sched = sched::build(&SchedSpec::new("numa-home")).unwrap();
+        let mut w = MailboxLoad { d2: Region::EMPTY, d0: Region::EMPTY, d3: Region::EMPTY };
+        Session::execute_bound_placed(
+            &rt,
+            &mut w,
+            sched.as_ref(),
+            // master on n3 (never a home_worker(2) pick), teams on n0 and n1
+            &[3, 0, 1],
+            false,
+            &MemSpec::default(),
+            13,
+            None,
+        )
+        .unwrap()
+    };
+    let stats = run();
+    assert_eq!(stats.tasks, 8, "root + GA + GB + Q + H + P + C + probe");
+    assert_eq!(
+        stats.pushed_home, 6,
+        "GA, P, Q, GB, C, S — H alone takes the local depth-first path"
+    );
+    assert_eq!(stats.homed_resumes, 1, "P's continuation redirects toward its data");
+    assert_eq!(stats.mailbox_hits, 1, "W1 drains P from n0's mailbox after Q");
+    assert!(
+        stats.mem.miss_lines_by_hop[2] > 0,
+        "S read its n0 operand from the n1 team: the mailbox entry counted as load"
+    );
+    assert_eq!(
+        stats.mem.miss_lines_by_hop[1], stats.mem.miss_lines_by_hop[2],
+        "P's 1-hop d2 read and S's 2-hop d0 read are the same cold 64 KiB stream"
+    );
+    assert_eq!(stats.affinity_hits, 1, "only H is spawned on its data's node");
+    assert!(stats.steals >= 2, "W2 must at least take C and the root continuation");
+    assert_eq!(stats.affine_steals, 0, "nothing stolen was homed on its thief's node");
+    assert_eq!(stats.batch_steals, 0);
+    assert_eq!(stats.tasks_migrated, 0);
+    let again = run();
+    assert_eq!(stats.makespan, again.makespan);
+    assert_eq!(stats.sim_events, again.sim_events);
+    assert_eq!(stats.mailbox_hits, again.mailbox_hits);
+    assert_eq!(stats.per_worker_tasks, again.per_worker_tasks);
+}
