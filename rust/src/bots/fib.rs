@@ -7,7 +7,7 @@
 
 use crate::config::Size;
 use crate::coordinator::task::{BodyCtx, TaskDesc, Workload};
-use crate::simnuma::MemSim;
+use crate::simnuma::{MemSim, Region};
 use crate::util::Time;
 
 /// Compute units charged per visited fib node (call+add).
@@ -16,6 +16,9 @@ const UNITS_PER_NODE: u64 = 4;
 pub struct Fib {
     n: u32,
     cutoff: u32,
+    /// Shared config page (n, cutoff): the affinity region every spawn is
+    /// hinted with, like the other annotated BOTS workloads.
+    config: Region,
 }
 
 impl Fib {
@@ -27,11 +30,11 @@ impl Fib {
             Size::Medium => (28, 14),
             Size::Large => (32, 16),
         };
-        Self { n, cutoff }
+        Self { n, cutoff, config: Region::EMPTY }
     }
 
     pub fn with_params(n: u32, cutoff: u32) -> Self {
-        Self { n, cutoff }
+        Self { n, cutoff, config: Region::EMPTY }
     }
 }
 
@@ -65,8 +68,14 @@ impl Workload for Fib {
         "fib"
     }
 
-    fn init(&mut self, _mem: &mut MemSim, _master_core: usize) -> Time {
-        0 // no data
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        // a single shared config page (n, cutoff).  Deliberately tiny:
+        // below every placement scheduler's default min-hint floor, so
+        // the hints exist without changing default-parameter behaviour.
+        // No ctx.read in the body — fib stays the pure overhead probe
+        // (work conservation is pinned by an exact-equality test).
+        self.config = mem.alloc(256);
+        mem.first_touch(master_core, self.config, 0)
     }
 
     fn root(&self) -> TaskDesc {
@@ -80,8 +89,8 @@ impl Workload for Fib {
             ctx.compute(call_tree_nodes(n) * UNITS_PER_NODE);
             return;
         }
-        ctx.spawn(TaskDesc::new(0, [n as i64 - 1, 0, 0, 0]));
-        ctx.spawn(TaskDesc::new(0, [n as i64 - 2, 0, 0, 0]));
+        ctx.spawn_on(TaskDesc::new(0, [n as i64 - 1, 0, 0, 0]), self.config);
+        ctx.spawn_on(TaskDesc::new(0, [n as i64 - 2, 0, 0, 0]), self.config);
         ctx.taskwait();
         ctx.compute(UNITS_PER_NODE); // the add
     }

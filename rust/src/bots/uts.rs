@@ -15,7 +15,7 @@
 use crate::bots::mix;
 use crate::config::Size;
 use crate::coordinator::task::{BodyCtx, TaskDesc, Workload};
-use crate::simnuma::MemSim;
+use crate::simnuma::{MemSim, Region};
 use crate::util::Time;
 
 /// SHA-1-ish per-node compute charge.
@@ -28,6 +28,9 @@ pub struct Uts {
     /// q in permille (q = q_pm / 1000)
     q_pm: u32,
     seed: u64,
+    /// Shared tree-parameter page (b0, m, q, seed): the affinity region
+    /// every spawn is hinted with, like the other annotated workloads.
+    config: Region,
 }
 
 impl Uts {
@@ -37,12 +40,12 @@ impl Uts {
             Size::Medium => 500,
             Size::Large => 2000,
         };
-        Self { b0, m: 8, q_pm: 124, seed } // qm = 0.992
+        Self { b0, m: 8, q_pm: 124, seed, config: Region::EMPTY } // qm = 0.992
     }
 
     pub fn with_params(b0: u32, m: u32, q_pm: u32, seed: u64) -> Self {
         assert!(m as u64 * q_pm as u64 <= 1000, "qm must be < 1 for a finite tree");
-        Self { b0, m, q_pm, seed }
+        Self { b0, m, q_pm, seed, config: Region::EMPTY }
     }
 
     fn children(&self, node: u64, depth: u32) -> u32 {
@@ -65,8 +68,13 @@ impl Workload for Uts {
         "uts"
     }
 
-    fn init(&mut self, _mem: &mut MemSim, _master_core: usize) -> Time {
-        0
+    fn init(&mut self, mem: &mut MemSim, master_core: usize) -> Time {
+        // a single shared tree-parameter page.  Deliberately tiny: below
+        // every placement scheduler's default min-hint floor, so the
+        // hints exist without changing default-parameter behaviour (and
+        // no ctx.read — uts stays essentially data-free).
+        self.config = mem.alloc(256);
+        mem.first_touch(master_core, self.config, 0)
     }
 
     fn root(&self) -> TaskDesc {
@@ -81,7 +89,7 @@ impl Workload for Uts {
         for c in 0..kids {
             // child ids: hash-derived, collision-free enough for shaping
             let child = mix(node.wrapping_add(1), c as u64 + 1) | 1;
-            ctx.spawn(TaskDesc::new(0, [child as i64, depth as i64 + 1, 0, 0]));
+            ctx.spawn_on(TaskDesc::new(0, [child as i64, depth as i64 + 1, 0, 0]), self.config);
         }
         if kids > 0 {
             ctx.taskwait();

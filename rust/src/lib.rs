@@ -33,6 +33,7 @@
 //! | [`harness`]  | figure regeneration: the paper figures as sweep data |
 //! | [`bench`]    | pinned perf-trajectory suite (`numanos bench`, `BENCH_*.json`) |
 //! | [`spec`]     | the experiment API: `RunSpec`, `Session`, `Sweep`, manifests |
+//! | [`store`]    | content-addressed result store: persistent cell cache, `numanos serve` spool service |
 //! | [`serde`]    | self-contained JSON/TOML (de)serialization |
 //! | [`config`]   | legacy run configuration + tiny key=value config file parser |
 //! | [`util`]     | deterministic PRNG and misc helpers |
@@ -66,6 +67,7 @@ pub mod runtime;
 pub mod serde;
 pub mod simnuma;
 pub mod spec;
+pub mod store;
 pub mod topology;
 pub mod util;
 
@@ -75,4 +77,5 @@ pub use coordinator::runtime::Runtime;
 pub use coordinator::sched::{Policy, SchedSpec, Scheduler};
 pub use simnuma::MemSpec;
 pub use spec::{ExperimentManifest, RunRecord, RunSpec, Session, Sweep};
+pub use store::ResultStore;
 pub use topology::Topology;

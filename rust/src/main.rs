@@ -9,6 +9,8 @@
 //! numanos figure --all --out results/  # regenerate all nine figures
 //! numanos gains                        # §V.A NUMA-allocation gain summary
 //! numanos sweep  --manifest exp.toml   # run a user-authored experiment file
+//! numanos sweep  --manifest exp.toml --store store/   # cached cells skip execution
+//! numanos serve  --store store/ --spool spool/ --once # manifest spool service
 //! numanos bench  --out BENCH_7.json    # run the pinned perf-trajectory suite
 //! numanos bench  --compare BENCH_6.json BENCH_7.json   # delta report
 //! ```
@@ -33,6 +35,7 @@ use numanos::serde::Json;
 use numanos::simnuma::CostModel;
 use numanos::spec::session::default_workers;
 use numanos::spec::{parse_cost_pairs, ExperimentManifest, RunSpec, Session};
+use numanos::store::{serve, ResultStore};
 use numanos::topology::Topology;
 use numanos::util::fmt_time;
 
@@ -61,7 +64,13 @@ const COMMANDS: &[(&str, &[&str], &[&str], usize)] = &[
     ),
     ("figure", &["id", "out", "size", "seed", "topo", "cost"], &["all", "json"], 0),
     ("gains", &["size", "seed", "cost"], &["json"], 0),
-    ("sweep", &["manifest", "out", "workers", "seed"], &["json", "seq"], 0),
+    (
+        "sweep",
+        &["manifest", "out", "workers", "seed", "store"],
+        &["json", "seq", "resume", "no-cache"],
+        0,
+    ),
+    ("serve", &["store", "spool", "poll-ms", "workers"], &["once"], 0),
     (
         "bench",
         &["out", "reps", "filter", "max-regress-pct", "wall-warn-pct"],
@@ -167,6 +176,7 @@ fn run() -> Result<()> {
         "figure" => cmd_figure(&flags),
         "gains" => cmd_gains(&flags),
         "sweep" => cmd_sweep(&flags),
+        "serve" => cmd_serve(&flags),
         "bench" => cmd_bench(&flags, &positionals),
         "help" => {
             print!("{}", HELP);
@@ -202,6 +212,22 @@ commands:
                             SS V.A NUMA-allocation gain summary
   sweep  --manifest <file>  run a JSON/TOML experiment manifest
          [--out dir] [--json] [--seq] [--workers N] [--seed S]
+         [--store dir]       persistent content-addressed result store:
+                             cached cells skip execution (read-through),
+                             executed cells are written through; the
+                             per-sweep summary reports hit/miss/written
+         [--resume]          require an existing --store (continue an
+                             interrupted sweep from its records)
+         [--no-cache]        with --store: re-execute every cell but
+                             refresh the store's records
+  serve  --store <dir> --spool <dir> [--poll-ms N] [--workers N] [--once]
+                            watch the spool for dropped manifest files,
+                            execute each through the shared store, write
+                            <job>.result.json + <job>.receipt.json
+                            (manifest FNV hash, per-sweep hit/miss
+                            counts, wall time), then move the job to
+                            done/ or failed/; --once processes the
+                            current backlog and exits
   bench  [--filter G] [--reps N] [--out file.json] [--json]
                             run the pinned perf-trajectory suite (paper
                             figures + strategy ablation + hot-loop
@@ -440,14 +466,54 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(d) = &out_dir {
         std::fs::create_dir_all(d)?;
     }
-    let session = Session::new();
+    let resume = bool_flag(flags, "resume");
+    let no_cache = bool_flag(flags, "no-cache");
+    let mut session = Session::new();
+    let store = match flags.get("store") {
+        Some(dir) => {
+            if resume && no_cache {
+                bail!("sweep: --resume re-uses cached cells, --no-cache forbids that; pick one");
+            }
+            if resume && !Path::new(dir).join("index.json").exists() {
+                bail!(
+                    "sweep: --resume expects an existing store at '{dir}' (no index.json \
+                     found — nothing to resume)"
+                );
+            }
+            let store = std::sync::Arc::new(ResultStore::open(Path::new(dir))?);
+            session.set_store(store.clone(), !no_cache);
+            Some(store)
+        }
+        None => {
+            if resume {
+                bail!("sweep: --resume needs --store <dir> (the store to resume from)");
+            }
+            if no_cache {
+                bail!("sweep: --no-cache only makes sense with --store <dir>");
+            }
+            None
+        }
+    };
     let json = bool_flag(flags, "json");
     let mut json_sweeps = Vec::new();
     for sweep in &manifest.sweeps {
         let t0 = std::time::Instant::now();
+        let before = store.as_ref().map(|s| s.counters());
         let result = session.run_sweep_with(sweep, workers)?;
+        let cache_note = match (&store, before) {
+            (Some(s), Some(b)) => {
+                let a = s.counters();
+                format!(
+                    ", cache: {} hit / {} miss / {} written",
+                    a.hits - b.hits,
+                    a.misses - b.misses,
+                    a.writes - b.writes
+                )
+            }
+            _ => String::new(),
+        };
         eprintln!(
-            "[sweep '{}': {} cells in {:.1}s on {workers} worker(s)]",
+            "[sweep '{}': {} cells in {:.1}s on {workers} worker(s){cache_note}]",
             sweep.id,
             result.records.len(),
             t0.elapsed().as_secs_f64()
@@ -462,6 +528,17 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             std::fs::write(format!("{d}/{}.md", sweep.id), result.table().to_markdown())?;
         }
     }
+    if let Some(s) = &store {
+        let c = s.counters();
+        if c.quarantined > 0 {
+            eprintln!(
+                "[sweep: {} corrupt store record(s) quarantined under '{}/quarantine' and \
+                 re-executed]",
+                c.quarantined,
+                s.root().display()
+            );
+        }
+    }
     if json {
         let doc = Json::obj([
             ("title", Json::from(manifest.title.as_str())),
@@ -470,6 +547,23 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
         print!("{}", doc.to_pretty());
     }
     Ok(())
+}
+
+/// `numanos serve`: the filesystem-spool manifest service (see
+/// [`numanos::store::serve`]).
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let store = flags.get("store").context("serve: need --store <dir> (the shared store)")?;
+    let spool = flags
+        .get("spool")
+        .context("serve: need --spool <dir> (where clients drop manifests)")?;
+    let poll_ms: u64 =
+        flags.get("poll-ms").map(|s| s.parse()).transpose().context("poll-ms")?.unwrap_or(500);
+    let workers = match flags.get("workers") {
+        Some(w) => w.parse::<usize>().context("workers")?.max(1),
+        None => default_workers(),
+    };
+    let opts = serve::ServeOptions { poll_ms, once: bool_flag(flags, "once"), workers };
+    serve::serve(Path::new(store), Path::new(spool), &opts)
 }
 
 /// `numanos bench`: run the pinned suite (default), or `--compare` two

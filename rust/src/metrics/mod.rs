@@ -3,7 +3,10 @@
 pub mod paper;
 pub mod table;
 
+use anyhow::Context;
+
 use crate::coordinator::binding::BindPolicy;
+use crate::serde::Json;
 use crate::simnuma::MemStats;
 use crate::util::{fmt_time, Time};
 
@@ -105,6 +108,123 @@ impl RunStats {
         }
         self.work_time as f64 / (self.threads as f64 * self.makespan as f64)
     }
+
+    /// Lossless JSON image of every field — the result store's record
+    /// format.  Distinct from [`RunRecord::to_json`](crate::spec::RunRecord)
+    /// (a curated report view): this one must round-trip exactly, so
+    /// counters above 2^53 go through the lossless u64 encoding and
+    /// `bind: None` survives as `null`.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("bench", Json::from(self.bench.as_str())),
+            ("sched", Json::from(self.sched.as_str())),
+            (
+                "bind",
+                self.bind.map(|b| Json::from(b.name())).unwrap_or(Json::Null),
+            ),
+            ("threads", Json::from(self.threads)),
+            ("topo", Json::from(self.topo.as_str())),
+            ("seed", Json::from_u64_lossless(self.seed)),
+            ("makespan", Json::from_u64_lossless(self.makespan)),
+            ("init_time", Json::from_u64_lossless(self.init_time)),
+            ("tasks", Json::from_u64_lossless(self.tasks)),
+            ("peak_live", Json::from(self.peak_live)),
+            ("steals", Json::from_u64_lossless(self.steals)),
+            ("steal_attempts", Json::from_u64_lossless(self.steal_attempts)),
+            ("mean_steal_hops", Json::from(self.mean_steal_hops)),
+            ("pushed_home", Json::from_u64_lossless(self.pushed_home)),
+            ("affinity_hits", Json::from_u64_lossless(self.affinity_hits)),
+            ("affine_steals", Json::from_u64_lossless(self.affine_steals)),
+            ("homed_resumes", Json::from_u64_lossless(self.homed_resumes)),
+            ("batch_steals", Json::from_u64_lossless(self.batch_steals)),
+            ("tasks_migrated", Json::from_u64_lossless(self.tasks_migrated)),
+            ("mailbox_hits", Json::from_u64_lossless(self.mailbox_hits)),
+            ("lock_wait_total", Json::from_u64_lossless(self.lock_wait_total)),
+            ("shared_lock_wait", Json::from_u64_lossless(self.shared_lock_wait)),
+            ("shared_ops", Json::from_u64_lossless(self.shared_ops)),
+            ("work_time", Json::from_u64_lossless(self.work_time)),
+            ("overhead_time", Json::from_u64_lossless(self.overhead_time)),
+            (
+                "per_worker_tasks",
+                Json::Arr(self.per_worker_tasks.iter().map(|&t| Json::from_u64_lossless(t)).collect()),
+            ),
+            ("mem", self.mem.to_json()),
+            ("kernel_calls", Json::from_u64_lossless(self.kernel_calls)),
+            ("sim_events", Json::from_u64_lossless(self.sim_events)),
+            ("wall_ms", Json::from(self.wall_ms)),
+        ])
+    }
+
+    /// Inverse of [`RunStats::to_json`]; strict — any missing or
+    /// malformed field is an error (the store quarantines the record).
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let u = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64_lossless)
+                .with_context(|| format!("RunStats field '{k}'"))
+        };
+        let s = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("RunStats field '{k}'"))
+        };
+        let f = |k: &str| {
+            j.get(k).and_then(Json::as_num).with_context(|| format!("RunStats field '{k}'"))
+        };
+        let bind = match j.get("bind") {
+            None => anyhow::bail!("RunStats field 'bind'"),
+            Some(Json::Null) => None,
+            Some(v) => Some(BindPolicy::from_name(
+                v.as_str().context("RunStats field 'bind'")?,
+            )?),
+        };
+        let per_worker_tasks = j
+            .get("per_worker_tasks")
+            .and_then(Json::as_arr)
+            .context("RunStats field 'per_worker_tasks'")?
+            .iter()
+            .map(|v| v.as_u64_lossless().context("RunStats 'per_worker_tasks' entry"))
+            .collect::<anyhow::Result<Vec<u64>>>()?;
+        Ok(Self {
+            bench: s("bench")?,
+            sched: s("sched")?,
+            bind,
+            threads: j
+                .get("threads")
+                .and_then(Json::as_usize)
+                .context("RunStats field 'threads'")?,
+            topo: s("topo")?,
+            seed: u("seed")?,
+            makespan: u("makespan")?,
+            init_time: u("init_time")?,
+            tasks: u("tasks")?,
+            peak_live: j
+                .get("peak_live")
+                .and_then(Json::as_usize)
+                .context("RunStats field 'peak_live'")?,
+            steals: u("steals")?,
+            steal_attempts: u("steal_attempts")?,
+            mean_steal_hops: f("mean_steal_hops")?,
+            pushed_home: u("pushed_home")?,
+            affinity_hits: u("affinity_hits")?,
+            affine_steals: u("affine_steals")?,
+            homed_resumes: u("homed_resumes")?,
+            batch_steals: u("batch_steals")?,
+            tasks_migrated: u("tasks_migrated")?,
+            mailbox_hits: u("mailbox_hits")?,
+            lock_wait_total: u("lock_wait_total")?,
+            shared_lock_wait: u("shared_lock_wait")?,
+            shared_ops: u("shared_ops")?,
+            work_time: u("work_time")?,
+            overhead_time: u("overhead_time")?,
+            per_worker_tasks,
+            mem: MemStats::from_json(j.get("mem").context("RunStats field 'mem'")?)?,
+            kernel_calls: u("kernel_calls")?,
+            sim_events: u("sim_events")?,
+            wall_ms: f("wall_ms")?,
+        })
+    }
 }
 
 /// speedup = serial makespan / this makespan.
@@ -194,6 +314,37 @@ mod tests {
     fn efficiency_bounded() {
         let s = stats("wf", None, 100);
         assert!(s.efficiency() > 0.0 && s.efficiency() <= 1.0);
+    }
+
+    #[test]
+    fn run_stats_json_round_trips() {
+        let mut s = stats("numa-steal", Some(BindPolicy::NumaAware), 1234);
+        // exercise the lossless path (> 2^53) and the mem sub-object
+        s.sim_events = (1u64 << 60) + 7;
+        s.mem.miss_lines_by_hop[3] = 42;
+        s.mem.bytes_touched = 9999;
+        for probe in [s.clone(), stats("serial", None, 8)] {
+            let j = probe.to_json();
+            let back = RunStats::from_json(&j).unwrap();
+            assert_eq!(back.to_json().to_compact(), j.to_compact());
+            assert_eq!(back.sim_events, probe.sim_events);
+            assert_eq!(back.bind, probe.bind);
+            assert_eq!(back.mem.miss_lines_by_hop, probe.mem.miss_lines_by_hop);
+        }
+    }
+
+    #[test]
+    fn run_stats_from_json_is_strict() {
+        let full = stats("wf", None, 10).to_json();
+        // dropping any required field must fail loudly
+        for missing in ["makespan", "bind", "mem", "per_worker_tasks"] {
+            let mut obj = full.as_obj().unwrap().clone();
+            obj.remove(missing);
+            assert!(
+                RunStats::from_json(&Json::Obj(obj)).is_err(),
+                "missing '{missing}' must be an error"
+            );
+        }
     }
 
     #[test]

@@ -85,6 +85,58 @@ impl MemStats {
             .sum();
         weighted as f64 / m as f64
     }
+
+    /// Lossless JSON image (every field; counters above 2^53 survive as
+    /// decimal strings) — the result store's record format.
+    pub fn to_json(&self) -> crate::serde::Json {
+        use crate::serde::Json;
+        Json::obj([
+            ("l1_hit_lines", Json::from_u64_lossless(self.l1_hit_lines)),
+            ("l2_hit_lines", Json::from_u64_lossless(self.l2_hit_lines)),
+            (
+                "miss_lines_by_hop",
+                Json::Arr(self.miss_lines_by_hop.iter().map(|&c| Json::from_u64_lossless(c)).collect()),
+            ),
+            ("first_touch_pages", Json::from_u64_lossless(self.first_touch_pages)),
+            ("migrated_pages", Json::from_u64_lossless(self.migrated_pages)),
+            ("migration_stall", Json::from_u64_lossless(self.migration_stall)),
+            ("contention_stall", Json::from_u64_lossless(self.contention_stall)),
+            ("bytes_touched", Json::from_u64_lossless(self.bytes_touched)),
+        ])
+    }
+
+    /// Inverse of [`MemStats::to_json`]; strict — a missing or malformed
+    /// field is an error (the store treats it as record corruption).
+    pub fn from_json(j: &crate::serde::Json) -> anyhow::Result<Self> {
+        use crate::serde::Json;
+        use anyhow::Context;
+        let u = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64_lossless)
+                .with_context(|| format!("MemStats field '{k}'"))
+        };
+        let hops = j
+            .get("miss_lines_by_hop")
+            .and_then(Json::as_arr)
+            .context("MemStats field 'miss_lines_by_hop'")?;
+        if hops.len() != 9 {
+            anyhow::bail!("MemStats 'miss_lines_by_hop' has {} entries, want 9", hops.len());
+        }
+        let mut miss_lines_by_hop = [0u64; 9];
+        for (slot, v) in miss_lines_by_hop.iter_mut().zip(hops) {
+            *slot = v.as_u64_lossless().context("MemStats 'miss_lines_by_hop' entry")?;
+        }
+        Ok(Self {
+            l1_hit_lines: u("l1_hit_lines")?,
+            l2_hit_lines: u("l2_hit_lines")?,
+            miss_lines_by_hop,
+            first_touch_pages: u("first_touch_pages")?,
+            migrated_pages: u("migrated_pages")?,
+            migration_stall: u("migration_stall")?,
+            contention_stall: u("contention_stall")?,
+            bytes_touched: u("bytes_touched")?,
+        })
+    }
 }
 
 /// Epoch width for the per-node bandwidth-utilization estimate.

@@ -38,6 +38,7 @@ use crate::serde::Json;
 use crate::simnuma::{CostModel, MemSim, MemSpec, PAGE_BYTES};
 use crate::spec::sweep::{Sweep, SweepResult};
 use crate::spec::{BindSpec, RunSpec};
+use crate::store::ResultStore;
 use crate::topology::Topology;
 use crate::util::{SplitMix64, Time};
 
@@ -144,13 +145,21 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// Stateful executor: runtime cache + serial-baseline memo.
+/// Stateful executor: runtime cache + serial-baseline memo + optional
+/// persistent result store.
 pub struct Session {
     base_cost: CostModel,
     /// "{topo}|{cost_sig}" → configured runtime.
     runtimes: Mutex<HashMap<String, Arc<Runtime>>>,
-    /// "{bench}|{size}|{seed}|{topo}|{cost_sig}" → serial baseline stats.
+    /// [`crate::store::baseline_identity`] → serial baseline stats.  The
+    /// key is the canonical six-component baseline identity (bench, size,
+    /// seed, topo, mem signature, cost signature) shared with the on-disk
+    /// store, so the memo and the store can never drift apart.
     baselines: Mutex<HashMap<String, Arc<RunStats>>>,
+    /// Persistent content-addressed result store (write-through always;
+    /// read-through unless `store_read` is off, the `--no-cache` mode).
+    store: Option<Arc<ResultStore>>,
+    store_read: bool,
 }
 
 impl Default for Session {
@@ -171,7 +180,34 @@ impl Session {
             base_cost: cost,
             runtimes: Mutex::new(HashMap::new()),
             baselines: Mutex::new(HashMap::new()),
+            store: None,
+            store_read: true,
         }
+    }
+
+    /// Attach a persistent result store.  Executed cells and baselines
+    /// are always written through; `read_through = false` is the
+    /// `--no-cache` mode — every cell re-executes, but the store is still
+    /// refreshed.
+    pub fn set_store(&mut self, store: Arc<ResultStore>, read_through: bool) {
+        self.store = Some(store);
+        self.store_read = read_through;
+    }
+
+    /// The attached result store, if any (its counters are the sweep
+    /// summaries' cache_hits/misses/writes source).
+    pub fn store(&self) -> Option<&Arc<ResultStore>> {
+        self.store.as_ref()
+    }
+
+    /// Whether the store will answer this spec without execution: read
+    /// through is on, the spec is cacheable, and a record exists.  A
+    /// cheap existence probe — the record may still fail validation on
+    /// load, in which case [`Session::run`] falls back to executing.
+    fn store_answers(&self, spec: &RunSpec) -> bool {
+        self.store_read
+            && crate::store::cacheable(spec)
+            && self.store.as_ref().is_some_and(|s| s.contains_cell(spec))
     }
 
     /// Adopt an existing configured runtime (its cost model becomes the
@@ -220,17 +256,17 @@ impl Session {
     /// sweep compares schedulers against a serial denominator that paid
     /// the same allocation behaviour.
     pub fn baseline(&self, spec: &RunSpec) -> Result<Arc<RunStats>> {
-        let key = format!(
-            "{}|{}|{}|{}|{}|{}",
-            spec.bench,
-            spec.size.name(),
-            spec.seed,
-            spec.topo,
-            spec.mem.name_sig(),
-            spec.cost_sig()
-        );
+        let key = crate::store::baseline_identity(spec);
         if let Some(b) = self.baselines.lock().unwrap().get(&key) {
             return Ok(b.clone());
+        }
+        // Read through the persistent store before simulating: a cached
+        // sweep's denominators come from disk, not a serial re-run.
+        if self.store_read && crate::store::cacheable(spec) {
+            if let Some(stats) = self.store.as_ref().and_then(|s| s.load_baseline(spec)) {
+                let arc = Arc::new(stats);
+                return Ok(self.baselines.lock().unwrap().entry(key).or_insert(arc).clone());
+            }
         }
         let rt = self.runtime_for(spec)?;
         let mut w = bots::create(&spec.bench, spec.size, spec.seed)?;
@@ -247,6 +283,11 @@ impl Session {
             None,
         )?;
         stats.bind = Some(BindPolicy::Linear);
+        if crate::store::cacheable(spec) {
+            if let Some(store) = &self.store {
+                store.store_baseline(spec, &stats)?;
+            }
+        }
         let arc = Arc::new(stats);
         Ok(self.baselines.lock().unwrap().entry(key).or_insert(arc).clone())
     }
@@ -256,6 +297,14 @@ impl Session {
     /// baseline.
     pub fn run(&self, spec: &RunSpec) -> Result<RunRecord> {
         self.validate_spec(spec)?;
+        // Read through the result store first — a hit is a finished cell
+        // (label-normalized, speedup recomputed) with zero engine work,
+        // before even the baseline is consulted.
+        if self.store_read && crate::store::cacheable(spec) {
+            if let Some(rec) = self.store.as_ref().and_then(|s| s.load_cell(spec)) {
+                return Ok(rec);
+            }
+        }
         let rt = self.runtime_for(spec)?;
         let baseline = self.baseline(spec)?;
         let mut workload = bots::create(&spec.bench, spec.size, spec.seed)?;
@@ -291,12 +340,18 @@ impl Session {
         // identically; the raw execute_with paths — which have no spec —
         // keep the engine's fully-resolved Scheduler::signature().
         stats.sched = spec.sched.name_sig();
-        Ok(RunRecord {
+        let record = RunRecord {
             spec: spec.clone(),
             serial_makespan: baseline.makespan,
             speedup: baseline.makespan as f64 / stats.makespan as f64,
             stats,
-        })
+        };
+        if crate::store::cacheable(spec) {
+            if let Some(store) = &self.store {
+                store.store_cell(&record)?;
+            }
+        }
+        Ok(record)
     }
 
     /// Run a sweep's cells in parallel across OS threads (deterministic:
@@ -313,7 +368,15 @@ impl Session {
         }
         // Pre-compute the distinct baselines sequentially so parallel
         // workers only read the memo (and no baseline is computed twice).
+        // Cells the store will answer skip this — their records carry the
+        // serial makespan, so a fully cached sweep does zero engine runs.
+        // (If a record then fails validation on load, `run` falls back to
+        // executing and computes the baseline lazily under the memo lock —
+        // deterministic, just not pre-shared.)
         for spec in &cells {
+            if self.store_answers(spec) {
+                continue;
+            }
             self.baseline(spec)?;
         }
         let n = cells.len();

@@ -1,0 +1,79 @@
+//! Self-contained FNV-1a hashing for store keys.
+//!
+//! The vendored dependency set has no hashing crate, and
+//! `std::collections::hash_map::DefaultHasher` is explicitly not stable
+//! across releases — useless for an on-disk cache whose keys must outlive
+//! the binary that wrote them.  FNV-1a is tiny, fully specified, and fast
+//! on the short identity strings we feed it; the 128-bit variant gives a
+//! collision probability that is negligible at any realistic store size
+//! (and records embed their full identity string, so even a collision
+//! degrades to a detected miss, never a wrong result).
+//!
+//! The parameters below are the published FNV-1a constants; the unit tests
+//! pin them against independently computed vectors so a refactor cannot
+//! silently re-key (and thereby invalidate) every existing store.
+
+const FNV64_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV64_PRIME: u64 = 0x100000001b3;
+
+const FNV128_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+/// 2^88 + 2^8 + 0x3b, the specified 128-bit FNV prime.
+const FNV128_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+/// 64-bit FNV-1a.
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = FNV64_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV64_PRIME);
+    }
+    h
+}
+
+/// 128-bit FNV-1a (native `u128` arithmetic).
+pub fn fnv1a_128(bytes: &[u8]) -> u128 {
+    let mut h = FNV128_OFFSET;
+    for &b in bytes {
+        h ^= b as u128;
+        h = h.wrapping_mul(FNV128_PRIME);
+    }
+    h
+}
+
+/// 128-bit FNV-1a as 32 lowercase hex digits — the store's record key.
+pub fn fnv1a_128_hex(bytes: &[u8]) -> String {
+    format!("{:032x}", fnv1a_128(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden vectors (computed independently from the FNV spec).  These
+    /// pin the exact key function: changing any constant or the fold
+    /// order re-keys every store on disk, which must never be silent.
+    #[test]
+    fn fnv1a_64_golden_vectors() {
+        assert_eq!(fnv1a_64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a_64(b"abc"), 0xe71fa2190541574b);
+        assert_eq!(fnv1a_64(b"numanos"), 0x3a2c16e325844b02);
+    }
+
+    #[test]
+    fn fnv1a_128_golden_vectors() {
+        assert_eq!(fnv1a_128_hex(b""), "6c62272e07bb014262b821756295c58d");
+        assert_eq!(fnv1a_128_hex(b"a"), "d228cb696f1a8caf78912b704e4a8964");
+        assert_eq!(fnv1a_128_hex(b"abc"), "a68d622cec8b5822836dbc7977af7f3b");
+        assert_eq!(fnv1a_128_hex(b"numanos"), "f555f8a58f4ff78d8214de860a2f8fb2");
+    }
+
+    #[test]
+    fn hex_is_fixed_width() {
+        // leading zeros are kept: shard dirs always have 2 hex chars
+        assert_eq!(fnv1a_128_hex(b"").len(), 32);
+        for probe in [&b"x"[..], b"yy", b"zzz"] {
+            assert_eq!(fnv1a_128_hex(probe).len(), 32);
+        }
+    }
+}

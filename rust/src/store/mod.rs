@@ -1,0 +1,465 @@
+//! Content-addressed on-disk result store — the persistent cell cache.
+//!
+//! Every simulated cell is a pure function of its [`RunSpec`] identity:
+//! bench, size, seed, topology, page-policy signature, the *resolved*
+//! [`Scheduler::signature`](crate::coordinator::sched::Scheduler::signature)
+//! (two spellings of the same configuration share one cell), thread
+//! count, bind policy, cost-model signature — plus [`STORE_SCHEMA`], so a
+//! format change can never serve stale bytes.  The canonical identity
+//! string is hashed with a self-contained 128-bit FNV-1a ([`hash`]) and
+//! the record lands at `store/ab/cdef….json` (first two hex digits shard
+//! the directory), serialized through [`crate::serde`].
+//!
+//! Layout:
+//!
+//! ```text
+//! <root>/index.json          schema header (hard error on mismatch)
+//! <root>/ab/cdef….json       one record per cell / baseline
+//! <root>/quarantine/         corrupt records, moved aside on read
+//! ```
+//!
+//! Robustness contract: an unreadable, truncated, or mismatched record is
+//! a cache *miss* — the file is moved to `quarantine/`, the
+//! [`StoreCounters::quarantined`] counter ticks, the cell re-executes and
+//! write-through refreshes the record.  Records embed their full identity
+//! string, so even an FNV collision or a stale key degrades to a detected
+//! miss, never a wrong result.  Writers go through a temp-file + rename,
+//! and any two writers of the same key produce identical bytes
+//! (simulations are deterministic), so concurrent sweeps — threads or
+//! whole processes — can share one store without coordination.
+//!
+//! [`Session`](crate::spec::Session) integrates read-through /
+//! write-through via [`Session::set_store`](crate::spec::Session::set_store);
+//! `numanos sweep --store/--resume/--no-cache` and `numanos serve`
+//! ([`serve`]) sit on top.
+
+pub mod hash;
+pub mod serve;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ComputeMode;
+use crate::coordinator::sched;
+use crate::metrics::RunStats;
+use crate::serde::Json;
+use crate::spec::{RunRecord, RunSpec};
+
+/// Store format version.  Embedded in every record identity (and checked
+/// against the index header at open), so a change to the record format or
+/// the identity definition invalidates old stores loudly instead of
+/// matching stale keys.
+pub const STORE_SCHEMA: u64 = 1;
+
+/// Canonical serial-baseline identity — the six components a baseline
+/// actually depends on.  [`Session::baseline`](crate::spec::Session::baseline)
+/// keys its in-memory memo with this exact helper, so the memo and the
+/// store can never drift apart.
+pub fn baseline_identity(spec: &RunSpec) -> String {
+    format!(
+        "{}|{}|{}|{}|{}|{}",
+        spec.bench,
+        spec.size.name(),
+        spec.seed,
+        spec.topo,
+        spec.mem.name_sig(),
+        spec.cost_sig()
+    )
+}
+
+/// Canonical full cell identity.  Uses the *resolved* scheduler signature
+/// (defaults filled in), not the spec spelling: `numa-steal` and
+/// `numa-steal:batch=1,min_kb=16` are the same simulation and share one
+/// record.  Fails only if the scheduler spec doesn't resolve (which
+/// validation would reject anyway).
+pub fn cell_identity(spec: &RunSpec) -> Result<String> {
+    let resolved = sched::build(&spec.sched)?.signature();
+    Ok(format!(
+        "s{STORE_SCHEMA}|cell|{}|{}|{}|{}|{}|{}|{}|{}|{}|rtdata={}",
+        spec.bench,
+        spec.size.name(),
+        spec.seed,
+        spec.topo,
+        spec.mem.name_sig(),
+        resolved,
+        spec.threads,
+        spec.bind.name(),
+        spec.cost_sig(),
+        spec.rtdata_local as u8,
+    ))
+}
+
+fn baseline_record_identity(spec: &RunSpec) -> String {
+    format!("s{STORE_SCHEMA}|baseline|{}", baseline_identity(spec))
+}
+
+/// Whether a spec's result may be cached at all: only deterministic
+/// simulations are; PJRT-backed runs bypass the store entirely.
+pub fn cacheable(spec: &RunSpec) -> bool {
+    matches!(spec.compute, ComputeMode::Sim)
+}
+
+/// Snapshot of a store's cell-level counters.  Baseline records are
+/// read/written uncounted so `hits + misses` always equals the number of
+/// cells consulted (the "second pass is 100% hits" acceptance check).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub writes: u64,
+    /// Corrupt records moved to `quarantine/` (counted for baselines too
+    /// — corruption is corruption).
+    pub quarantined: u64,
+}
+
+/// Handle on one store directory.  Cheap to share behind an `Arc`; all
+/// state beyond the root path is atomic counters.
+pub struct ResultStore {
+    root: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    writes: AtomicU64,
+    quarantined: AtomicU64,
+    tmp_seq: AtomicU64,
+}
+
+impl ResultStore {
+    /// Open (creating if needed) a store directory.  An existing index
+    /// with a different schema is a hard error — the invalidation rule is
+    /// "new schema, new directory" — and a corrupt index is too: unlike a
+    /// single bad record, it means the store as a whole can't be trusted.
+    pub fn open(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(&root)
+            .with_context(|| format!("creating store directory '{}'", root.display()))?;
+        let index = root.join("index.json");
+        match fs::read_to_string(&index) {
+            Ok(text) => {
+                let j = Json::parse(&text).with_context(|| {
+                    format!(
+                        "store index '{}' is corrupt; move the directory aside or start a \
+                         fresh --store",
+                        index.display()
+                    )
+                })?;
+                let schema = j.get("schema").and_then(Json::as_u64);
+                if schema != Some(STORE_SCHEMA) {
+                    bail!(
+                        "store '{}' has schema {}, this build reads/writes schema \
+                         {STORE_SCHEMA}; use a fresh --store directory",
+                        root.display(),
+                        schema.map(|s| s.to_string()).unwrap_or_else(|| "?".into()),
+                    );
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                let doc = Json::obj([
+                    ("schema", Json::from(STORE_SCHEMA)),
+                    ("store", Json::from("numanos-result-store")),
+                    ("hash", Json::from("fnv1a-128")),
+                ]);
+                // temp + rename, like records: two processes opening a
+                // fresh store concurrently race to identical bytes
+                let tmp = root.join(format!(".index.tmp.{}", std::process::id()));
+                fs::write(&tmp, doc.to_pretty())
+                    .with_context(|| format!("writing store index '{}'", index.display()))?;
+                fs::rename(&tmp, &index)
+                    .with_context(|| format!("publishing store index '{}'", index.display()))?;
+            }
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("reading store index '{}'", index.display()));
+            }
+        }
+        Ok(Self {
+            root,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            tmp_seq: AtomicU64::new(0),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn counters(&self) -> StoreCounters {
+        StoreCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fast existence probe (no counters, no validation).  Sweeps use it
+    /// to skip baseline pre-computation for cells the store will answer;
+    /// a record that later fails validation falls back to executing, with
+    /// its baseline computed lazily.
+    pub fn contains_cell(&self, spec: &RunSpec) -> bool {
+        cell_identity(spec).map(|id| self.record_path(&id).exists()).unwrap_or(false)
+    }
+
+    /// Read-through lookup.  `None` is a miss (counted); corrupt records
+    /// are quarantined on the way.  A hit reconstructs the [`RunRecord`]
+    /// against *this* spec — label normalization and speedup arithmetic
+    /// match an uncached run exactly.
+    pub fn load_cell(&self, spec: &RunSpec) -> Option<RunRecord> {
+        let identity = cell_identity(spec).ok()?;
+        let path = self.record_path(&identity);
+        if !path.exists() {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        match Self::read_cell(&path, &identity, spec) {
+            Ok(rec) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(rec)
+            }
+            Err(_) => {
+                self.quarantine(&path);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Write-through: persist an executed cell (atomic temp + rename).
+    pub fn store_cell(&self, record: &RunRecord) -> Result<()> {
+        let identity = cell_identity(&record.spec)?;
+        let doc = Self::record_doc(
+            &identity,
+            "cell",
+            [
+                ("spec".to_string(), record.spec.to_json()),
+                (
+                    "serial_makespan".to_string(),
+                    Json::from_u64_lossless(record.serial_makespan),
+                ),
+                ("stats".to_string(), record.stats.to_json()),
+            ],
+        );
+        self.write_record(&identity, &doc)?;
+        self.writes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Baseline lookup (uncounted — baselines are shared denominators,
+    /// not cells; see [`StoreCounters`]).
+    pub fn load_baseline(&self, spec: &RunSpec) -> Option<RunStats> {
+        let identity = baseline_record_identity(spec);
+        let path = self.record_path(&identity);
+        if !path.exists() {
+            return None;
+        }
+        match Self::read_baseline(&path, &identity) {
+            Ok(stats) => Some(stats),
+            Err(_) => {
+                self.quarantine(&path);
+                None
+            }
+        }
+    }
+
+    /// Persist a serial baseline (uncounted, same record machinery).
+    pub fn store_baseline(&self, spec: &RunSpec, stats: &RunStats) -> Result<()> {
+        let identity = baseline_record_identity(spec);
+        let doc =
+            Self::record_doc(&identity, "baseline", [("stats".to_string(), stats.to_json())]);
+        self.write_record(&identity, &doc)
+    }
+
+    // -----------------------------------------------------------------
+    // internals
+    // -----------------------------------------------------------------
+
+    fn record_path(&self, identity: &str) -> PathBuf {
+        let key = hash::fnv1a_128_hex(identity.as_bytes());
+        self.root.join(&key[..2]).join(format!("{}.json", &key[2..]))
+    }
+
+    /// Common envelope: schema + kind + full identity (the corruption /
+    /// collision / staleness check on read) + the hash key for humans
+    /// grepping the shard dirs.
+    fn record_doc(
+        identity: &str,
+        kind: &str,
+        body: impl IntoIterator<Item = (String, Json)>,
+    ) -> Json {
+        let mut pairs: Vec<(String, Json)> = vec![
+            ("schema".to_string(), Json::from(STORE_SCHEMA)),
+            ("kind".to_string(), Json::from(kind)),
+            ("identity".to_string(), Json::from(identity)),
+            (
+                "key".to_string(),
+                Json::from(hash::fnv1a_128_hex(identity.as_bytes())),
+            ),
+        ];
+        pairs.extend(body);
+        Json::obj(pairs)
+    }
+
+    /// Parse + validate a record envelope.  Every failure mode here is
+    /// "treat as miss, quarantine" at the call sites.
+    fn read_record(path: &Path, identity: &str, kind: &str) -> Result<Json> {
+        let text = fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        if j.get("schema").and_then(Json::as_u64) != Some(STORE_SCHEMA) {
+            bail!("record schema mismatch");
+        }
+        if j.get("kind").and_then(Json::as_str) != Some(kind) {
+            bail!("record kind mismatch");
+        }
+        if j.get("identity").and_then(Json::as_str) != Some(identity) {
+            bail!("record identity mismatch (hash collision or stale key)");
+        }
+        Ok(j)
+    }
+
+    fn read_cell(path: &Path, identity: &str, spec: &RunSpec) -> Result<RunRecord> {
+        let j = Self::read_record(path, identity, "cell")?;
+        let serial_makespan = j
+            .get("serial_makespan")
+            .and_then(Json::as_u64_lossless)
+            .context("record field 'serial_makespan'")?;
+        let mut stats = RunStats::from_json(j.get("stats").context("record field 'stats'")?)?;
+        if stats.makespan == 0 {
+            bail!("record has a zero makespan");
+        }
+        // Re-apply the session's label normalization: a differently
+        // spelled spec can resolve to the same signature (same cell), but
+        // its CSV/JSON must carry *this* spec's name_sig, exactly as an
+        // uncached run would.
+        stats.sched = spec.sched.name_sig();
+        Ok(RunRecord {
+            spec: spec.clone(),
+            serial_makespan,
+            speedup: serial_makespan as f64 / stats.makespan as f64,
+            stats,
+        })
+    }
+
+    fn read_baseline(path: &Path, identity: &str) -> Result<RunStats> {
+        let j = Self::read_record(path, identity, "baseline")?;
+        let stats = RunStats::from_json(j.get("stats").context("record field 'stats'")?)?;
+        if stats.makespan == 0 {
+            bail!("baseline record has a zero makespan");
+        }
+        Ok(stats)
+    }
+
+    fn write_record(&self, identity: &str, doc: &Json) -> Result<()> {
+        let path = self.record_path(identity);
+        let dir = path.parent().expect("record paths are sharded");
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating store shard '{}'", dir.display()))?;
+        let tmp = dir.join(format!(
+            ".tmp.{}.{}",
+            std::process::id(),
+            self.tmp_seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, doc.to_pretty())
+            .with_context(|| format!("writing store record '{}'", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing store record '{}'", path.display()))?;
+        Ok(())
+    }
+
+    /// Move a corrupt record aside (flat `quarantine/` dir — file names
+    /// are unique hash tails, so no collisions).  If the move itself
+    /// fails the record is deleted instead: either way the bad bytes can
+    /// never satisfy a future read, and write-through can refresh the key.
+    fn quarantine(&self, path: &Path) {
+        let qdir = self.root.join("quarantine");
+        let moved = fs::create_dir_all(&qdir).is_ok()
+            && path
+                .file_name()
+                .map(|name| fs::rename(path, qdir.join(name)).is_ok())
+                .unwrap_or(false);
+        if !moved {
+            let _ = fs::remove_file(path);
+        }
+        self.quarantined.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Size;
+    use crate::coordinator::sched::{Policy, SchedSpec};
+
+    fn spec() -> RunSpec {
+        RunSpec::builder()
+            .bench("fib")
+            .size(Size::Small)
+            .policy(Policy::WorkFirst)
+            .numa()
+            .threads(4)
+            .seed(7)
+            .build()
+            .unwrap()
+    }
+
+    /// Golden identity strings: every component of the cell key, pinned.
+    /// A change here re-keys (silently invalidates) every store on disk —
+    /// bump [`STORE_SCHEMA`] instead.
+    #[test]
+    fn identity_strings_are_pinned() {
+        let s = spec();
+        assert_eq!(
+            cell_identity(&s).unwrap(),
+            "s1|cell|fib|small|7|x4600|first-touch|wf|4|numa||rtdata=1"
+        );
+        assert_eq!(baseline_identity(&s), "fib|small|7|x4600|first-touch|");
+        assert_eq!(
+            baseline_record_identity(&s),
+            "s1|baseline|fib|small|7|x4600|first-touch|"
+        );
+    }
+
+    /// Full pipeline golden value: identity → FNV-128 → sharded path.
+    #[test]
+    fn record_keys_and_layout_are_pinned() {
+        let id = cell_identity(&spec()).unwrap();
+        let key = hash::fnv1a_128_hex(id.as_bytes());
+        assert_eq!(key, "93d310237839fe47d8dcace9d20ae742");
+        let store = ResultStore {
+            root: PathBuf::from("/store"),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            tmp_seq: AtomicU64::new(0),
+        };
+        assert_eq!(
+            store.record_path(&id),
+            PathBuf::from("/store/93/d310237839fe47d8dcace9d20ae742.json")
+        );
+    }
+
+    /// Two spellings of one configuration resolve to one cell; any axis
+    /// change resolves to a different one.
+    #[test]
+    fn identity_uses_resolved_scheduler_signatures() {
+        let mut bare = spec();
+        bare.sched = SchedSpec::new("numa-steal");
+        let mut explicit = spec();
+        explicit.sched =
+            SchedSpec::new("numa-steal").with_param("batch", 1.0).with_param("min_kb", 16.0);
+        assert_eq!(cell_identity(&bare).unwrap(), cell_identity(&explicit).unwrap());
+
+        let mut other = spec();
+        other.sched = SchedSpec::new("numa-steal").with_param("batch", 2.0);
+        assert_ne!(cell_identity(&bare).unwrap(), cell_identity(&other).unwrap());
+
+        let mut reseeded = spec();
+        reseeded.seed = 8;
+        assert_ne!(cell_identity(&spec()).unwrap(), cell_identity(&reseeded).unwrap());
+    }
+}

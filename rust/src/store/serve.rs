@@ -1,0 +1,212 @@
+//! `numanos serve` — a filesystem-spool manifest service over the store.
+//!
+//! The long-running loop watches a spool directory for dropped
+//! [`ExperimentManifest`] files (`*.json` / `*.toml`).  Each job executes
+//! through one shared [`Session`] + [`ResultStore`], so overlapping
+//! manifests from many clients cost one execution per distinct cell.  Per
+//! job the service writes, next to where the job was dropped:
+//!
+//! * `<stem>.result.json` — `{title, sweeps: [...]}`, the same document
+//!   `numanos sweep --json` prints (only on success), and
+//! * `<stem>.receipt.json` — the machine-readable receipt: manifest name +
+//!   FNV-128 content hash, wall time, store counter deltas
+//!   (hits/misses/writes/quarantined) overall and per sweep, or the error
+//!   string on failure,
+//!
+//! then moves the manifest itself to `<spool>/done/` or `<spool>/failed/`.
+//! A malformed or failing manifest produces a receipt and keeps the loop
+//! alive — one bad client must not take the service down.  Everything is
+//! plain files, so the whole request/receipt protocol is testable
+//! end-to-end without network dependencies.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::serde::Json;
+use crate::spec::{ExperimentManifest, Session};
+use crate::store::{hash, ResultStore, STORE_SCHEMA};
+
+/// Knobs for [`serve`].
+pub struct ServeOptions {
+    /// Sleep between spool scans, in milliseconds.
+    pub poll_ms: u64,
+    /// Process the jobs present now, then return (for tests and CI).
+    pub once: bool,
+    /// Sweep worker threads per job.
+    pub workers: usize,
+}
+
+/// Run the spool service.  Returns only on `opts.once` (or an error
+/// opening the store / creating the spool — never a per-job failure).
+pub fn serve(store_dir: &Path, spool: &Path, opts: &ServeOptions) -> Result<()> {
+    let store = Arc::new(ResultStore::open(store_dir)?);
+    let mut session = Session::new();
+    session.set_store(store.clone(), true);
+    std::fs::create_dir_all(spool)
+        .with_context(|| format!("creating spool directory '{}'", spool.display()))?;
+    eprintln!(
+        "[serve: store '{}', spool '{}', {} worker(s){}]",
+        store_dir.display(),
+        spool.display(),
+        opts.workers,
+        if opts.once { ", one pass" } else { "" }
+    );
+    loop {
+        for job in scan_jobs(spool)? {
+            process_job(&session, &store, spool, &job, opts.workers);
+        }
+        if opts.once {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(opts.poll_ms.max(1)));
+    }
+}
+
+/// Pending job files, sorted by name for deterministic processing order.
+/// Our own outputs (`*.result.json`, `*.receipt.json`), dotfiles and the
+/// `done/`/`failed/` subdirectories are not jobs.
+fn scan_jobs(spool: &Path) -> Result<Vec<PathBuf>> {
+    let mut jobs = Vec::new();
+    for entry in std::fs::read_dir(spool)
+        .with_context(|| format!("scanning spool '{}'", spool.display()))?
+    {
+        let path = entry?.path();
+        if !path.is_file() {
+            continue;
+        }
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        if name.starts_with('.')
+            || name.ends_with(".result.json")
+            || name.ends_with(".receipt.json")
+        {
+            continue;
+        }
+        if name.ends_with(".json") || name.ends_with(".toml") {
+            jobs.push(path);
+        }
+    }
+    jobs.sort();
+    Ok(jobs)
+}
+
+/// Everything the receipt reports about a successful job.
+struct JobOutcome {
+    title: String,
+    cells: u64,
+    /// `{id, cells, hits, misses, writes}` per sweep.
+    sweeps: Vec<Json>,
+    /// `result.to_json()` per sweep — the result-file payload.
+    results: Vec<Json>,
+}
+
+/// Execute one job and write its receipt (+ result on success); never
+/// propagates the job's own failure.
+fn process_job(session: &Session, store: &ResultStore, spool: &Path, job: &Path, workers: usize) {
+    let name = job.file_name().and_then(|n| n.to_str()).unwrap_or("job").to_string();
+    let stem = name.rsplit_once('.').map(|(s, _)| s).unwrap_or(&name).to_string();
+    let t0 = std::time::Instant::now();
+    let before = store.counters();
+    let outcome = execute_job(session, store, job, workers);
+    let after = store.counters();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut receipt: Vec<(String, Json)> = vec![
+        ("schema".to_string(), Json::from(STORE_SCHEMA)),
+        ("manifest".to_string(), Json::from(name.as_str())),
+        (
+            "manifest_fnv".to_string(),
+            std::fs::read(job)
+                .map(|bytes| Json::from(hash::fnv1a_128_hex(&bytes)))
+                .unwrap_or(Json::Null),
+        ),
+        ("status".to_string(), Json::from(if outcome.is_ok() { "ok" } else { "error" })),
+        ("wall_ms".to_string(), Json::from(wall_ms)),
+        ("cache_hits".to_string(), Json::from(after.hits - before.hits)),
+        ("cache_misses".to_string(), Json::from(after.misses - before.misses)),
+        ("cache_writes".to_string(), Json::from(after.writes - before.writes)),
+        (
+            "cache_quarantined".to_string(),
+            Json::from(after.quarantined - before.quarantined),
+        ),
+    ];
+    match &outcome {
+        Ok(out) => {
+            receipt.push(("title".to_string(), Json::from(out.title.as_str())));
+            receipt.push(("cells".to_string(), Json::from(out.cells)));
+            receipt.push(("sweeps".to_string(), Json::Arr(out.sweeps.clone())));
+            let result_doc = Json::obj([
+                ("title", Json::from(out.title.as_str())),
+                ("sweeps", Json::Arr(out.results.clone())),
+            ]);
+            report(spool, &stem, "result", &result_doc);
+        }
+        Err(e) => {
+            receipt.push(("error".to_string(), Json::from(format!("{e:#}"))));
+        }
+    }
+    report(spool, &stem, "receipt", &Json::obj(receipt));
+    finish(spool, job, &name, outcome.is_ok());
+    match &outcome {
+        Ok(out) => eprintln!(
+            "[serve '{name}': {} cell(s), {} hit / {} miss / {} written, {:.1}s]",
+            out.cells,
+            after.hits - before.hits,
+            after.misses - before.misses,
+            after.writes - before.writes,
+            wall_ms / 1e3
+        ),
+        Err(e) => eprintln!("[serve '{name}': FAILED: {e:#}]"),
+    }
+}
+
+fn execute_job(
+    session: &Session,
+    store: &ResultStore,
+    job: &Path,
+    workers: usize,
+) -> Result<JobOutcome> {
+    let manifest = ExperimentManifest::load(job)?;
+    let mut out = JobOutcome {
+        title: manifest.title.clone(),
+        cells: 0,
+        sweeps: Vec::new(),
+        results: Vec::new(),
+    };
+    for sweep in &manifest.sweeps {
+        let before = store.counters();
+        let result = session.run_sweep_with(sweep, workers)?;
+        let after = store.counters();
+        out.cells += result.records.len() as u64;
+        out.sweeps.push(Json::obj([
+            ("id", Json::from(sweep.id.as_str())),
+            ("cells", Json::from(result.records.len())),
+            ("hits", Json::from(after.hits - before.hits)),
+            ("misses", Json::from(after.misses - before.misses)),
+            ("writes", Json::from(after.writes - before.writes)),
+        ]));
+        out.results.push(result.to_json());
+    }
+    Ok(out)
+}
+
+/// Write `<spool>/<stem>.<kind>.json` (best-effort: a full disk must not
+/// kill the loop, and the job still moves to `done/`/`failed/`).
+fn report(spool: &Path, stem: &str, kind: &str, doc: &Json) {
+    let path = spool.join(format!("{stem}.{kind}.json"));
+    if let Err(e) = std::fs::write(&path, doc.to_pretty()) {
+        eprintln!("[serve: could not write '{}': {e}]", path.display());
+    }
+}
+
+/// Move a finished job out of the scan set.  If the move fails the job
+/// is deleted — leaving it behind would re-execute it every poll.
+fn finish(spool: &Path, job: &Path, name: &str, ok: bool) {
+    let dir = spool.join(if ok { "done" } else { "failed" });
+    let moved =
+        std::fs::create_dir_all(&dir).is_ok() && std::fs::rename(job, dir.join(name)).is_ok();
+    if !moved {
+        let _ = std::fs::remove_file(job);
+    }
+}

@@ -176,7 +176,7 @@ fn errors_are_actionable() {
 fn help_lists_commands() {
     let (ok, text) = numanos(&["help"]);
     assert!(ok);
-    for cmd in ["run", "figure", "gains", "topo", "list", "bench"] {
+    for cmd in ["run", "figure", "gains", "topo", "list", "bench", "serve"] {
         assert!(text.contains(cmd), "missing {cmd}");
     }
 }
@@ -372,6 +372,147 @@ fn sweep_manifest_with_placement_axis() {
     }
     // the table disambiguates the memory axis in row labels
     assert!(text.contains("+interleave"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_store_serves_second_run_from_cache() {
+    let dir = std::env::temp_dir().join(format!("numanos_cli_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = write_manifest(&dir);
+    let store = dir.join("store");
+
+    // reference: no store, sequential
+    let out_ref = dir.join("ref");
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--seq", "--out",
+        out_ref.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(!text.contains("cache:"), "no store, no cache summary: {text}");
+
+    // cold store: every cell misses and is written
+    let out_cold = dir.join("cold");
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--seq", "--store",
+        store.to_str().unwrap(), "--out", out_cold.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("cache: 0 hit / 4 miss / 4 written"), "{text}");
+
+    // warm store: 100% hits, zero engine runs — and byte-identical CSV
+    let out_warm = dir.join("warm");
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--seq", "--store",
+        store.to_str().unwrap(), "--out", out_warm.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("cache: 4 hit / 0 miss / 0 written"), "{text}");
+    let ref_csv = std::fs::read_to_string(out_ref.join("mini.csv")).unwrap();
+    for out in [&out_cold, &out_warm] {
+        assert_eq!(
+            std::fs::read_to_string(out.join("mini.csv")).unwrap(),
+            ref_csv,
+            "store runs must match the uncached sequential bytes"
+        );
+    }
+
+    // --resume against the existing store is the same full-hit pass
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--seq", "--resume", "--store",
+        store.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("cache: 4 hit"), "{text}");
+
+    // --no-cache re-executes everything but refreshes the records
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--seq", "--no-cache", "--store",
+        store.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("cache: 0 hit / 0 miss / 4 written"), "{text}");
+
+    // flag misuse is a clear error
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--resume", "--store",
+        dir.join("nonesuch").to_str().unwrap(),
+    ]);
+    assert!(!ok);
+    assert!(text.contains("nothing to resume"), "{text}");
+    let (ok, text) = numanos(&["sweep", "--manifest", manifest.to_str().unwrap(), "--no-cache"]);
+    assert!(!ok);
+    assert!(text.contains("--store"), "{text}");
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--resume", "--no-cache", "--store",
+        store.to_str().unwrap(),
+    ]);
+    assert!(!ok);
+    assert!(text.contains("pick one"), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_once_processes_spool_and_writes_receipts() {
+    let dir = std::env::temp_dir().join(format!("numanos_cli_serve_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = write_manifest(&dir);
+    let store = dir.join("store");
+    let spool = dir.join("spool");
+    std::fs::create_dir_all(&spool).unwrap();
+
+    // job 1: cold store — all four cells execute
+    std::fs::copy(&manifest, spool.join("job1.toml")).unwrap();
+    let (ok, text) = numanos(&[
+        "serve", "--store", store.to_str().unwrap(), "--spool", spool.to_str().unwrap(),
+        "--once", "--workers", "2",
+    ]);
+    assert!(ok, "{text}");
+    let receipt1 = std::fs::read_to_string(spool.join("job1.receipt.json")).unwrap();
+    assert!(receipt1.contains("\"status\": \"ok\""), "{receipt1}");
+    assert!(receipt1.contains("\"manifest_fnv\""), "{receipt1}");
+    assert!(receipt1.contains("\"cache_hits\": 0"), "{receipt1}");
+    assert!(receipt1.contains("\"cache_misses\": 4"), "{receipt1}");
+    assert!(receipt1.contains("\"cache_writes\": 4"), "{receipt1}");
+    let result1 = std::fs::read_to_string(spool.join("job1.result.json")).unwrap();
+    assert!(result1.contains("\"records\""), "{result1}");
+    assert!(spool.join("done/job1.toml").exists(), "processed job moves to done/");
+
+    // job 2: identical manifest — served entirely from the shared store
+    std::fs::copy(&manifest, spool.join("job2.toml")).unwrap();
+    let (ok, text) = numanos(&[
+        "serve", "--store", store.to_str().unwrap(), "--spool", spool.to_str().unwrap(),
+        "--once",
+    ]);
+    assert!(ok, "{text}");
+    let receipt2 = std::fs::read_to_string(spool.join("job2.receipt.json")).unwrap();
+    assert!(receipt2.contains("\"cache_hits\": 4"), "{receipt2}");
+    assert!(receipt2.contains("\"cache_misses\": 0"), "{receipt2}");
+    let result2 = std::fs::read_to_string(spool.join("job2.result.json")).unwrap();
+    assert_eq!(result1, result2, "cached job reproduces the executed job's bytes");
+
+    // a malformed manifest gets an error receipt, moves to failed/, and
+    // does not kill the service
+    std::fs::write(spool.join("bad.json"), "{not json").unwrap();
+    let (ok, text) = numanos(&[
+        "serve", "--store", store.to_str().unwrap(), "--spool", spool.to_str().unwrap(),
+        "--once",
+    ]);
+    assert!(ok, "one bad job must not fail the pass: {text}");
+    let bad = std::fs::read_to_string(spool.join("bad.receipt.json")).unwrap();
+    assert!(bad.contains("\"status\": \"error\""), "{bad}");
+    assert!(bad.contains("\"error\""), "{bad}");
+    assert!(spool.join("failed/bad.json").exists());
+    assert!(!spool.join("bad.result.json").exists(), "failed jobs emit no result file");
+
+    // serve needs both directories
+    let (ok, text) = numanos(&["serve", "--spool", spool.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(text.contains("--store"), "{text}");
+
     std::fs::remove_dir_all(&dir).ok();
 }
 

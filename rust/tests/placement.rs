@@ -30,46 +30,51 @@ fn spec(bench: &str, sched: SchedSpec, mem: MemSpec, topo: &str, threads: usize)
 /// the new placement-aware path (with steal-half batching, per-node
 /// mailboxes and the dedup/underflow fixes in place) vs. the legacy
 /// `Runtime::run` verbs, and an *explicit* `first-touch` selection is
-/// indistinguishable from the default.
+/// indistinguishable from the default.  Rows cover a data-heavy workload
+/// (`fft`) plus the two newly annotated overhead probes (`fib`, `uts`) —
+/// their tiny spawn hints must stay invisible to stock schedulers.
 #[test]
 fn stock_schedulers_with_default_mem_match_the_legacy_path() {
     let session = Session::new();
     let rt = Runtime::paper_testbed();
-    for policy in [
-        Policy::BreadthFirst,
-        Policy::CilkBased,
-        Policy::WorkFirst,
-        Policy::Dfwspt,
-        Policy::Dfwsrpt,
-    ] {
-        let s = spec("fft", SchedSpec::stock(policy), MemSpec::default(), "x4600", 8);
-        let rec = session.run(&s).unwrap();
+    for bench in ["fft", "fib", "uts"] {
+        for policy in [
+            Policy::BreadthFirst,
+            Policy::CilkBased,
+            Policy::WorkFirst,
+            Policy::Dfwspt,
+            Policy::Dfwsrpt,
+        ] {
+            let s = spec(bench, SchedSpec::stock(policy), MemSpec::default(), "x4600", 8);
+            let rec = session.run(&s).unwrap();
 
-        let mut w = bots::create("fft", Size::Small, 7).unwrap();
-        let legacy = rt.run(w.as_mut(), policy, BindPolicy::NumaAware, 8, 7, None).unwrap();
-        assert_eq!(rec.stats.makespan, legacy.makespan, "{}", policy.name());
-        assert_eq!(rec.stats.steals, legacy.steals, "{}", policy.name());
-        assert_eq!(rec.stats.sim_events, legacy.sim_events, "{}", policy.name());
-        assert_eq!(rec.stats.work_time, legacy.work_time, "{}", policy.name());
-        assert_eq!(rec.stats.overhead_time, legacy.overhead_time, "{}", policy.name());
-        // the locality counters stay zero on non-placing schedulers —
-        // including the appended batch/migration/mailbox columns
-        assert_eq!(rec.stats.pushed_home, 0, "{}", policy.name());
-        assert_eq!(rec.stats.affinity_hits, 0, "{}", policy.name());
-        assert_eq!(rec.stats.mem.migrated_pages, 0, "{}", policy.name());
-        assert_eq!(rec.stats.affine_steals, 0, "{}", policy.name());
-        assert_eq!(rec.stats.homed_resumes, 0, "{}", policy.name());
-        assert_eq!(rec.stats.batch_steals, 0, "{}", policy.name());
-        assert_eq!(rec.stats.tasks_migrated, 0, "{}", policy.name());
-        assert_eq!(rec.stats.mailbox_hits, 0, "{}", policy.name());
-        let row = rec.to_csv_row();
-        assert!(row.ends_with(",0,0,0,0,0"), "stock CSV tail must stay zero: {row}");
+            let mut w = bots::create(bench, Size::Small, 7).unwrap();
+            let legacy = rt.run(w.as_mut(), policy, BindPolicy::NumaAware, 8, 7, None).unwrap();
+            let tag = format!("{bench}/{}", policy.name());
+            assert_eq!(rec.stats.makespan, legacy.makespan, "{tag}");
+            assert_eq!(rec.stats.steals, legacy.steals, "{tag}");
+            assert_eq!(rec.stats.sim_events, legacy.sim_events, "{tag}");
+            assert_eq!(rec.stats.work_time, legacy.work_time, "{tag}");
+            assert_eq!(rec.stats.overhead_time, legacy.overhead_time, "{tag}");
+            // the locality counters stay zero on non-placing schedulers —
+            // including the appended batch/migration/mailbox columns
+            assert_eq!(rec.stats.pushed_home, 0, "{tag}");
+            assert_eq!(rec.stats.affinity_hits, 0, "{tag}");
+            assert_eq!(rec.stats.mem.migrated_pages, 0, "{tag}");
+            assert_eq!(rec.stats.affine_steals, 0, "{tag}");
+            assert_eq!(rec.stats.homed_resumes, 0, "{tag}");
+            assert_eq!(rec.stats.batch_steals, 0, "{tag}");
+            assert_eq!(rec.stats.tasks_migrated, 0, "{tag}");
+            assert_eq!(rec.stats.mailbox_hits, 0, "{tag}");
+            let row = rec.to_csv_row();
+            assert!(row.ends_with(",0,0,0,0,0"), "stock CSV tail must stay zero: {row}");
 
-        // explicit first-touch is the same run, CSV row and all
-        let explicit = spec("fft", SchedSpec::stock(policy), MemSpec::new("first-touch"),
-            "x4600", 8);
-        let rec2 = session.run(&explicit).unwrap();
-        assert_eq!(rec.to_csv_row(), rec2.to_csv_row(), "{}", policy.name());
+            // explicit first-touch is the same run, CSV row and all
+            let explicit =
+                spec(bench, SchedSpec::stock(policy), MemSpec::new("first-touch"), "x4600", 8);
+            let rec2 = session.run(&explicit).unwrap();
+            assert_eq!(rec.to_csv_row(), rec2.to_csv_row(), "{tag}");
+        }
     }
 
     // the serial baseline stays on the legacy bytes too (run_serial
@@ -90,6 +95,40 @@ fn stock_schedulers_with_default_mem_match_the_legacy_path() {
     assert_eq!(rec.stats.makespan, legacy.makespan, "serial");
     assert_eq!(rec.stats.sim_events, legacy.sim_events, "serial");
     assert!(rec.to_csv_row().ends_with(",0,0,0,0,0"), "serial CSV tail must stay zero");
+}
+
+/// The fib/uts annotations are real but deliberately sub-floor: their
+/// 256-byte config-page hints sit below every placement scheduler's
+/// default `min_kb=16` hint floor (so defaults behave exactly as before),
+/// yet lowering the floor to 0 makes the same hints engage the placement
+/// machinery.
+#[test]
+fn fib_and_uts_hints_sit_below_the_default_floor_but_exist() {
+    let session = Session::new();
+    for bench in ["fib", "uts"] {
+        let default_floor =
+            session.run(&spec(bench, SchedSpec::new("numa-home"), MemSpec::default(), "x4600", 16));
+        let rec = default_floor.unwrap();
+        assert_eq!(rec.stats.pushed_home, 0, "{bench}: 256 B sits below min_kb=16");
+        assert_eq!(rec.stats.affinity_hits, 0, "{bench}: 256 B sits below min_kb=16");
+
+        let no_floor = session
+            .run(&spec(
+                bench,
+                SchedSpec::new("numa-home").with_param("min_kb", 0.0),
+                MemSpec::default(),
+                "x4600",
+                16,
+            ))
+            .unwrap();
+        assert!(
+            no_floor.stats.pushed_home + no_floor.stats.affinity_hits > 0,
+            "{bench}: with min_kb=0 the config-page hints must engage placement \
+             (pushed_home={}, affinity_hits={})",
+            no_floor.stats.pushed_home,
+            no_floor.stats.affinity_hits
+        );
+    }
 }
 
 /// Acceptance criterion (gain half): `numa-home` + first-touch achieves a

@@ -1,0 +1,302 @@
+//! The content-addressed result store end-to-end: read-through /
+//! write-through sessions, cached sweeps byte-identical to uncached
+//! sequential runs, corruption quarantine, resume from a partial store,
+//! `--no-cache` refresh semantics, and identity-level dedup of
+//! equivalently spelled scheduler specs.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use numanos::config::Size;
+use numanos::coordinator::binding::BindPolicy;
+use numanos::coordinator::sched::{Policy, SchedSpec};
+use numanos::spec::{RunSpec, Session, Sweep};
+use numanos::store::{cell_identity, hash, ResultStore};
+
+/// Fresh per-test store directory (pre-cleaned so reruns start empty).
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("numanos_store_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn spec(bench: &str, sched: SchedSpec, threads: usize, seed: u64) -> RunSpec {
+    RunSpec::builder()
+        .bench(bench)
+        .size(Size::Small)
+        .sched(sched)
+        .numa()
+        .threads(threads)
+        .seed(seed)
+        .build()
+        .unwrap()
+}
+
+/// The 4-cell sweep the cache tests run: fib × {wf, dfwsrpt} × {2, 4}.
+fn mini_sweep() -> Sweep {
+    Sweep::new("mini", "store cache grid")
+        .with_bench("fib")
+        .with_configs([
+            (SchedSpec::stock(Policy::WorkFirst), BindPolicy::NumaAware),
+            (SchedSpec::stock(Policy::Dfwsrpt), BindPolicy::NumaAware),
+        ])
+        .with_threads(vec![2, 4])
+        .with_seeds(vec![4])
+        .with_size(Size::Small)
+}
+
+/// On-disk path of a spec's cell record inside `dir`.
+fn record_path(dir: &std::path::Path, s: &RunSpec) -> PathBuf {
+    let key = hash::fnv1a_128_hex(cell_identity(s).unwrap().as_bytes());
+    dir.join(&key[..2]).join(format!("{}.json", &key[2..]))
+}
+
+/// Tentpole acceptance (single cell): the second run is answered entirely
+/// from the store — zero engine runs — and reproduces the first run's
+/// CSV/JSON bytes.
+#[test]
+fn second_run_is_served_from_the_store_byte_identically() {
+    let dir = tmpdir("roundtrip");
+    let s = spec("fib", SchedSpec::stock(Policy::WorkFirst), 4, 7);
+
+    let uncached = Session::new().run(&s).unwrap();
+
+    let store = Arc::new(ResultStore::open(&dir).unwrap());
+    let mut first = Session::new();
+    first.set_store(store.clone(), true);
+    let a = first.run(&s).unwrap();
+    let c = store.counters();
+    assert_eq!((c.hits, c.misses, c.writes), (0, 1, 1), "cold store: one miss, one write");
+    assert!(record_path(&dir, &s).exists(), "record file lands in the sharded layout");
+    assert!(dir.join("index.json").exists(), "index header written");
+
+    let store2 = Arc::new(ResultStore::open(&dir).unwrap());
+    let mut second = Session::new();
+    second.set_store(store2.clone(), true);
+    let b = second.run(&s).unwrap();
+    let c2 = store2.counters();
+    assert_eq!((c2.hits, c2.misses, c2.writes), (1, 0, 0), "warm store: pure hit");
+
+    for rec in [&a, &b] {
+        assert_eq!(rec.to_csv_row(), uncached.to_csv_row());
+        assert_eq!(rec.to_json().to_compact(), uncached.to_json().to_compact());
+    }
+}
+
+/// Tentpole acceptance (sweep level): a parallel sweep against a cold
+/// store writes every cell; the same sweep against the warm store is 100%
+/// hits — and both emit CSV/JSON byte-identical to an uncached
+/// sequential run.
+#[test]
+fn cached_sweeps_match_uncached_sequential_bytes() {
+    let dir = tmpdir("sweep");
+    let sweep = mini_sweep();
+    let reference = Session::new().run_sweep_with(&sweep, 1).unwrap();
+    let (ref_csv, ref_json) = (reference.to_csv(), reference.to_json().to_pretty());
+
+    let store = Arc::new(ResultStore::open(&dir).unwrap());
+    let mut cold = Session::new();
+    cold.set_store(store.clone(), true);
+    let first = cold.run_sweep_with(&sweep, 4).unwrap();
+    let c = store.counters();
+    assert_eq!((c.hits, c.misses, c.writes), (0, 4, 4));
+    assert_eq!(first.to_csv(), ref_csv);
+    assert_eq!(first.to_json().to_pretty(), ref_json);
+
+    let store2 = Arc::new(ResultStore::open(&dir).unwrap());
+    let mut warm = Session::new();
+    warm.set_store(store2.clone(), true);
+    let second = warm.run_sweep_with(&sweep, 4).unwrap();
+    let c2 = store2.counters();
+    assert_eq!((c2.hits, c2.misses, c2.writes), (4, 0, 0), "second pass: zero engine runs");
+    assert_eq!(second.to_csv(), ref_csv);
+    assert_eq!(second.to_json().to_pretty(), ref_json);
+}
+
+/// Satellite: concurrent sessions sharing one store handle stay race-free
+/// — both finish, both match the sequential bytes, and the shared
+/// counters account every cell exactly once as hit-or-miss.
+#[test]
+fn concurrent_sessions_share_one_store_race_free() {
+    let dir = tmpdir("race");
+    let sweep = mini_sweep();
+    let ref_csv = Session::new().run_sweep_with(&sweep, 1).unwrap().to_csv();
+
+    let store = Arc::new(ResultStore::open(&dir).unwrap());
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let store = store.clone();
+                let sweep = &sweep;
+                scope.spawn(move || {
+                    let mut session = Session::new();
+                    session.set_store(store, true);
+                    session.run_sweep_with(sweep, 2).unwrap().to_csv()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), ref_csv);
+        }
+    });
+    let c = store.counters();
+    assert_eq!(c.hits + c.misses, 8, "each racer accounts all 4 cells");
+    assert!(c.writes >= 4, "every cell got written at least once");
+    assert_eq!(c.quarantined, 0);
+}
+
+/// Satellite: corrupted and mismatched record files degrade to misses,
+/// get quarantined (counter + `quarantine/` dir), and write-through
+/// repairs the store so the next run hits again.
+#[test]
+fn corrupt_records_degrade_to_misses_and_are_quarantined() {
+    let dir = tmpdir("corrupt");
+    let s = spec("fib", SchedSpec::stock(Policy::WorkFirst), 4, 7);
+    let uncached_row = Session::new().run(&s).unwrap().to_csv_row();
+
+    {
+        let mut session = Session::new();
+        session.set_store(Arc::new(ResultStore::open(&dir).unwrap()), true);
+        session.run(&s).unwrap();
+    }
+    let path = record_path(&dir, &s);
+    let full = std::fs::read(&path).unwrap();
+
+    // round 0: truncated bytes (unparseable); round 1: valid JSON but a
+    // wrong envelope (missing kind/identity)
+    let rounds = [full[..40].to_vec(), b"{\"schema\": 1}\n".to_vec()];
+    for (i, bad) in rounds.iter().enumerate() {
+        std::fs::write(&path, bad).unwrap();
+        let store = Arc::new(ResultStore::open(&dir).unwrap());
+        let mut session = Session::new();
+        session.set_store(store.clone(), true);
+        let rec = session.run(&s).unwrap();
+        let c = store.counters();
+        assert_eq!(
+            (c.hits, c.misses, c.writes, c.quarantined),
+            (0, 1, 1, 1),
+            "round {i}: corrupt record = miss + quarantine + rewrite"
+        );
+        assert_eq!(rec.to_csv_row(), uncached_row, "round {i}");
+        assert!(path.exists(), "round {i}: write-through repaired the record");
+    }
+    let quarantined = std::fs::read_dir(dir.join("quarantine")).unwrap().count();
+    assert_eq!(quarantined, 2, "both bad payloads moved aside");
+
+    // repaired store serves a clean hit
+    let store = Arc::new(ResultStore::open(&dir).unwrap());
+    let mut session = Session::new();
+    session.set_store(store.clone(), true);
+    let rec = session.run(&s).unwrap();
+    assert_eq!(rec.to_csv_row(), uncached_row);
+    let c = store.counters();
+    assert_eq!((c.hits, c.misses, c.quarantined), (1, 0, 0));
+}
+
+/// The invalidation rule: a store written by a different schema version
+/// refuses to open (new schema, new directory) — never silently serves
+/// stale records.
+#[test]
+fn schema_mismatch_is_a_hard_error() {
+    let dir = tmpdir("schema");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("index.json"), "{\"schema\": 99}\n").unwrap();
+    let err = ResultStore::open(&dir).unwrap_err().to_string();
+    assert!(err.contains("schema"), "{err}");
+    assert!(err.contains("fresh --store"), "{err}");
+}
+
+/// Tentpole acceptance: an interrupted sweep (only some cells stored)
+/// resumed against the same store completes the missing cells and emits
+/// identical final output.
+#[test]
+fn resume_completes_a_partial_store_with_identical_output() {
+    let dir = tmpdir("resume");
+    let sweep = mini_sweep();
+    let cells = sweep.cells().unwrap();
+    assert_eq!(cells.len(), 4);
+    let ref_csv = Session::new().run_sweep_with(&sweep, 1).unwrap().to_csv();
+
+    // "interrupted" first pass: only two of the four cells made it
+    {
+        let mut session = Session::new();
+        session.set_store(Arc::new(ResultStore::open(&dir).unwrap()), true);
+        session.run(&cells[0]).unwrap();
+        session.run(&cells[3]).unwrap();
+    }
+
+    let store = Arc::new(ResultStore::open(&dir).unwrap());
+    let mut resumed = Session::new();
+    resumed.set_store(store.clone(), true);
+    let result = resumed.run_sweep_with(&sweep, 1).unwrap();
+    let c = store.counters();
+    assert_eq!(
+        (c.hits, c.misses, c.writes),
+        (2, 2, 2),
+        "resume: stored cells hit, the rest execute once"
+    );
+    assert_eq!(result.to_csv(), ref_csv);
+}
+
+/// `--no-cache` semantics: read-through off means every cell re-executes
+/// (no hits, no misses — the store is never consulted) while
+/// write-through still refreshes the records.
+#[test]
+fn no_cache_mode_reexecutes_but_refreshes_records() {
+    let dir = tmpdir("nocache");
+    let s = spec("fib", SchedSpec::stock(Policy::WorkFirst), 4, 7);
+    {
+        let mut session = Session::new();
+        session.set_store(Arc::new(ResultStore::open(&dir).unwrap()), true);
+        session.run(&s).unwrap();
+    }
+    let store = Arc::new(ResultStore::open(&dir).unwrap());
+    let mut session = Session::new();
+    session.set_store(store.clone(), false);
+    session.run(&s).unwrap();
+    let c = store.counters();
+    assert_eq!(
+        (c.hits, c.misses, c.writes),
+        (0, 0, 1),
+        "no-cache: never reads, still writes"
+    );
+}
+
+/// Content addressing goes through the *resolved* scheduler signature:
+/// `numa-steal` spelled bare and with its defaults written out share one
+/// record, while each spelling's output keeps its own label — exactly as
+/// uncached runs would.
+#[test]
+fn equivalent_sched_spellings_share_a_cell_but_keep_their_labels() {
+    let dir = tmpdir("spellings");
+    let bare = spec("fib", SchedSpec::new("numa-steal"), 4, 7);
+    let explicit = spec(
+        "fib",
+        SchedSpec::new("numa-steal").with_param("batch", 1.0).with_param("min_kb", 16.0),
+        4,
+        7,
+    );
+    assert_eq!(cell_identity(&bare).unwrap(), cell_identity(&explicit).unwrap());
+    let id = cell_identity(&bare).unwrap();
+    assert!(id.contains("batch=1") && id.contains("min_kb=16"), "{id}");
+
+    let uncached_explicit = Session::new().run(&explicit).unwrap();
+    {
+        let mut session = Session::new();
+        session.set_store(Arc::new(ResultStore::open(&dir).unwrap()), true);
+        session.run(&bare).unwrap();
+    }
+    let store = Arc::new(ResultStore::open(&dir).unwrap());
+    let mut session = Session::new();
+    session.set_store(store.clone(), true);
+    let cached_explicit = session.run(&explicit).unwrap();
+    assert_eq!(store.counters().hits, 1, "the bare spelling's record answers");
+    assert_eq!(cached_explicit.to_csv_row(), uncached_explicit.to_csv_row());
+    assert_eq!(
+        cached_explicit.to_json().to_compact(),
+        uncached_explicit.to_json().to_compact()
+    );
+    // the two spellings still label their rows differently
+    let bare_row = Session::new().run(&bare).unwrap().to_csv_row();
+    assert_ne!(bare_row, cached_explicit.to_csv_row());
+}
