@@ -63,6 +63,17 @@ const PERF_CELLS: &[(&str, Policy)] = &[
     ("sparselu_for", Policy::Dfwspt),
     ("nqueens", Policy::BreadthFirst),
 ];
+/// Million-task cells (bench, scheduler): the XL stress tier exercising
+/// the allocation-free hot path at the paper's task-count scale (fft at
+/// the same scale would also need ~10M tasks; these three hit ≥1M with
+/// distinct shapes: binary recursion, hash-random tree, data-bound merge
+/// tree).  Depth-first schedulers only — breadth-first at 1M tasks means
+/// a 1M-entry shared queue, which is a different experiment.
+const PERF_XL_CELLS: &[(&str, Policy)] = &[
+    ("fib", Policy::WorkFirst),
+    ("uts", Policy::Dfwsrpt),
+    ("sort", Policy::Dfwsrpt),
+];
 
 /// One pinned suite member: a group label over a concrete sweep.  The
 /// sweep is ordinary [`Sweep`] data, so a suite cell executes exactly
@@ -128,6 +139,7 @@ pub fn suite() -> Vec<SuiteEntry> {
     }
 
     entries.extend(perf_entries());
+    entries.extend(perf_xl_entries());
     entries
 }
 
@@ -149,6 +161,31 @@ pub fn perf_entries() -> Vec<SuiteEntry> {
                 .with_threads(vec![SUITE_THREADS])
                 .with_seed(SUITE_SEED)
                 .with_size(Size::Medium),
+            }
+        })
+        .collect()
+}
+
+/// The `perf-xl` group alone: ≥1M-task cells.  Deliberately last in the
+/// suite and selectable via `--filter perf-xl` (or excluded by filtering
+/// on any other group) — a full-suite run pays for them, CI's quick
+/// paths don't.
+pub fn perf_xl_entries() -> Vec<SuiteEntry> {
+    PERF_XL_CELLS
+        .iter()
+        .map(|(bench, policy)| {
+            let sig = SchedSpec::stock(*policy).name_sig();
+            SuiteEntry {
+                group: "perf-xl".into(),
+                sweep: Sweep::new(
+                    &format!("perf-xl-{bench}-{sig}"),
+                    &format!("Engine perf (million-task): {bench} under {sig}"),
+                )
+                .with_bench(bench)
+                .with_config(*policy, BindPolicy::NumaAware)
+                .with_threads(vec![SUITE_THREADS])
+                .with_seed(SUITE_SEED)
+                .with_size(Size::XL),
             }
         })
         .collect()
@@ -285,6 +322,17 @@ fn cell_json(c: &CellResult) -> Json {
         ("seed", Json::from_u64_lossless(spec.seed)),
         ("sim", sim_json(&c.record)),
         ("wall_ms", Json::from(c.wall_ms)),
+        // derived engine-throughput signal: simulated events retired per
+        // host second (median wall).  Lives *outside* `sim` — it inherits
+        // wall-time noise, so it must never participate in drift checks.
+        (
+            "events_per_sec",
+            if c.wall_ms > 0.0 {
+                Json::from(c.record.stats.sim_events as f64 / (c.wall_ms / 1e3))
+            } else {
+                Json::Null
+            },
+        ),
     ])
 }
 
@@ -431,6 +479,7 @@ pub fn placeholder_json() -> Result<Json> {
                 ("seed", Json::from_u64_lossless(spec.seed)),
                 ("sim", Json::Null),
                 ("wall_ms", Json::Null),
+                ("events_per_sec", Json::Null),
             ]));
         }
     }
@@ -456,11 +505,12 @@ mod tests {
     #[test]
     fn suite_is_pinned_and_complete() {
         let entries = suite();
-        // smoke + 9 figures + 4 ablation topologies + 6 perf cells
-        assert_eq!(entries.len(), 1 + 9 + 4 + 6);
+        // smoke + 9 figures + 4 ablation topologies + 6 perf + 3 perf-xl
+        assert_eq!(entries.len(), 1 + 9 + 4 + 6 + 3);
         let total: usize = entries.iter().map(|e| e.sweep.cell_count()).sum();
-        // 2 smoke + 6×6 stock-figure + 3×3 numa-figure + 4×4 ablation + 6 perf
-        assert_eq!(total, 2 + 36 + 9 + 16 + 6);
+        // 2 smoke + 6×6 stock-figure + 3×3 numa-figure + 4×4 ablation
+        //   + 6 perf + 3 perf-xl
+        assert_eq!(total, 2 + 36 + 9 + 16 + 6 + 3);
         for e in &entries {
             for cell in e.sweep.cells().unwrap() {
                 cell.validate().unwrap();
@@ -472,6 +522,13 @@ mod tests {
         assert!(groups.contains(&"fig5") && groups.contains(&"fig15"));
         assert_eq!(groups.iter().filter(|g| **g == "ablation").count(), 4);
         assert_eq!(groups.iter().filter(|g| **g == "perf").count(), 6);
+        assert_eq!(groups.iter().filter(|g| **g == "perf-xl").count(), 3);
+        // every perf-xl cell really is the XL size on a depth-first sched
+        for e in entries.iter().filter(|e| e.group == "perf-xl") {
+            for cell in e.sweep.cells().unwrap() {
+                assert_eq!(cell.size, Size::XL, "{}", e.sweep.id);
+            }
+        }
     }
 
     #[test]
@@ -490,14 +547,14 @@ mod tests {
         let j = placeholder_json().unwrap();
         let report = SuiteReport::from_json(&j).unwrap();
         assert_eq!(report.suite, SUITE_NAME);
-        assert_eq!(report.cells.len(), 69);
+        assert_eq!(report.cells.len(), 72);
         assert!(report.cells.iter().all(|c| c.sim.is_none() && c.wall_ms.is_none()));
         assert!(report.total_wall_ms.is_none());
         // ids are unique — a duplicated id would silently merge cells
         let mut ids: Vec<&str> = report.cells.iter().map(|c| c.id.as_str()).collect();
         ids.sort_unstable();
         ids.dedup();
-        assert_eq!(ids.len(), 69);
+        assert_eq!(ids.len(), 72);
     }
 
     #[test]

@@ -26,7 +26,7 @@ impl Alignment {
         let (nseq, len) = match size {
             Size::Small => (20, 256),
             Size::Medium => (64, 512),
-            Size::Large => (96, 640),
+            Size::Large | Size::XL => (96, 640),
         };
         Self::with_params(nseq, len)
     }

@@ -55,7 +55,7 @@ impl Fft {
         let (n, leaf, chunk) = match size {
             Size::Small => (1 << 14, 1 << 9, 1 << 9),
             Size::Medium => (1 << 21, 1 << 9, 1 << 9),
-            Size::Large => (1 << 22, 1 << 10, 1 << 10),
+            Size::Large | Size::XL => (1 << 22, 1 << 10, 1 << 10),
         };
         Self::with_params(n, leaf, chunk)
     }

@@ -29,6 +29,9 @@ impl Fib {
             Size::Small => (22, 12),
             Size::Medium => (28, 14),
             Size::Large => (32, 16),
+            // 1,028,457 tasks (task_count(40, 14)) — the million-task
+            // runtime-overhead probe behind the perf-xl bench cells
+            Size::XL => (40, 14),
         };
         Self { n, cutoff, config: Region::EMPTY }
     }

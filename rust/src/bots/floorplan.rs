@@ -29,7 +29,7 @@ impl Floorplan {
         let (depth, max_branch) = match size {
             Size::Small => (6, 5),
             Size::Medium => (8, 6),
-            Size::Large => (9, 6),
+            Size::Large | Size::XL => (9, 6),
         };
         Self { depth, max_branch, seed, board: Region::EMPTY }
     }

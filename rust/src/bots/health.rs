@@ -31,7 +31,7 @@ impl Health {
         let (branching, depth, steps) = match size {
             Size::Small => (4, 3, 10),
             Size::Medium => (4, 5, 40),
-            Size::Large => (4, 5, 100),
+            Size::Large | Size::XL => (4, 5, 100),
         };
         Self::with_params(branching, depth, steps)
     }

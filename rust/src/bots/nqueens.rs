@@ -28,7 +28,7 @@ impl NQueens {
         let (n, cutoff) = match size {
             Size::Small => (10, 3),
             Size::Medium => (12, 3),
-            Size::Large => (13, 4),
+            Size::Large | Size::XL => (13, 4),
         };
         Self::with_params(n, cutoff)
     }

@@ -43,6 +43,9 @@ impl Sort {
             Size::Small => (1 << 15, 1 << 10, 1 << 10),
             Size::Medium => (1 << 21, 1 << 10, 1 << 10),
             Size::Large => (1 << 23, 1 << 11, 1 << 11),
+            // 1,048,575 tasks (the merge-tree recurrence below) over
+            // 2 x 64 MiB buffers — the million-task memory-bound cell
+            Size::XL => (1 << 24, 1 << 9, 1 << 8),
         };
         Self::with_params(n, leaf, chunk)
     }

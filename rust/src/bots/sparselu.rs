@@ -77,7 +77,7 @@ impl SparseLu {
         let nb = match size {
             Size::Small => 8,
             Size::Medium => 24,
-            Size::Large => 32,
+            Size::Large | Size::XL => 32,
         };
         Self::with_params(nb, variant)
     }

@@ -49,7 +49,7 @@ impl Strassen {
         let (n, leaf) = match size {
             Size::Small => (512, 128),
             Size::Medium => (1024, 128),
-            Size::Large => (1024, 64),
+            Size::Large | Size::XL => (1024, 64),
         };
         Self::with_params(n, leaf)
     }

@@ -39,6 +39,9 @@ impl Uts {
             Size::Small => 64,
             Size::Medium => 500,
             Size::Large => 2000,
+            // E[nodes] = 1 + b0/(1-qm) ≈ 1.13M at qm = 0.992 — the
+            // million-task load-balance tree for the perf-xl cells
+            Size::XL => 9000,
         };
         Self { b0, m: 8, q_pm: 124, seed, config: Region::EMPTY } // qm = 0.992
     }

@@ -13,12 +13,15 @@ use crate::coordinator::sched::{Policy, SchedSpec};
 use crate::simnuma::{CostModel, MemSpec};
 use crate::util::NS;
 
-/// Benchmark input scale (the paper's Medium/Large; Small for tests).
+/// Benchmark input scale (the paper's Medium/Large; Small for tests;
+/// XL for the ≥1M-task perf cells — only fib/uts/sort define genuinely
+/// larger inputs, the rest alias Large).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Size {
     Small,
     Medium,
     Large,
+    XL,
 }
 
 impl Size {
@@ -27,6 +30,7 @@ impl Size {
             Size::Small => "small",
             Size::Medium => "medium",
             Size::Large => "large",
+            Size::XL => "xl",
         }
     }
 
@@ -35,7 +39,8 @@ impl Size {
             "small" | "s" => Size::Small,
             "medium" | "m" => Size::Medium,
             "large" | "l" => Size::Large,
-            other => bail!("unknown size '{other}' (small|medium|large)"),
+            "xl" => Size::XL,
+            other => bail!("unknown size '{other}' (small|medium|large|xl)"),
         })
     }
 }

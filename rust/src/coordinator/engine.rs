@@ -52,9 +52,6 @@
 //! are bounded by task boundaries (spawn/wait/completion), i.e. a few µs —
 //! far below the effects being measured (DESIGN.md §2).
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
-
 use anyhow::Result;
 
 use crate::coordinator::pool::Pool;
@@ -102,6 +99,53 @@ impl EngineCosts {
             steal_base: cm.steal_base,
             steal_per_hop: cm.steal_per_hop,
         }
+    }
+}
+
+/// Pending-event queue specialized to the engine's dispatch invariant:
+/// every worker has at most one scheduled event at any time (each
+/// `schedule` call either re-arms the worker whose quantum just ran or
+/// wakes a sleeping one, and both are slot-free at that point).  That
+/// bounds the queue at `workers` entries, so a flat per-worker slot
+/// array replaces the old `BinaryHeap<Reverse<(Time, u64, usize)>>`:
+/// push is a store, pop is a branch-predictable linear min-scan over a
+/// few cache lines — no sift-up/sift-down per event, no allocation
+/// ever.  Pop order is exactly the heap's: minimal `(time, seq)` wins,
+/// and seqs are unique, so the worker id never tie-breaks.
+struct EventQueue {
+    /// `(time, seq)` per worker; [`EventQueue::EMPTY`] = none pending.
+    slots: Vec<(Time, u64)>,
+    pending: usize,
+}
+
+impl EventQueue {
+    const EMPTY: (Time, u64) = (Time::MAX, u64::MAX);
+
+    fn with_workers(n: usize) -> Self {
+        Self { slots: vec![Self::EMPTY; n], pending: 0 }
+    }
+
+    #[inline]
+    fn push(&mut self, w: usize, t: Time, seq: u64) {
+        debug_assert_eq!(self.slots[w], Self::EMPTY, "worker {w} double-scheduled");
+        self.slots[w] = (t, seq);
+        self.pending += 1;
+    }
+
+    #[inline]
+    fn pop(&mut self) -> Option<(Time, u64, usize)> {
+        if self.pending == 0 {
+            return None;
+        }
+        let mut best = 0;
+        for w in 1..self.slots.len() {
+            if self.slots[w] < self.slots[best] {
+                best = w;
+            }
+        }
+        let (t, seq) = std::mem::replace(&mut self.slots[best], Self::EMPTY);
+        self.pending -= 1;
+        Some((t, seq, best))
     }
 }
 
@@ -168,7 +212,7 @@ pub struct Engine<'a> {
     /// Scheduling charges, copied out of the cost model once (hot path —
     /// see [`EngineCosts`]).
     costs: EngineCosts,
-    events: BinaryHeap<Reverse<(Time, u64, usize)>>,
+    events: EventQueue,
     seq: u64,
     live: u64,
     makespan: Time,
@@ -282,7 +326,7 @@ impl<'a> Engine<'a> {
             node_workers,
             place_cands,
             costs,
-            events: BinaryHeap::new(),
+            events: EventQueue::with_workers(n),
             seq: 0,
             live: 0,
             makespan: 0,
@@ -308,7 +352,7 @@ impl<'a> Engine<'a> {
     #[inline]
     fn schedule(&mut self, w: usize, t: Time) {
         self.seq += 1;
-        self.events.push(Reverse((t, self.seq, w)));
+        self.events.push(w, t, self.seq);
     }
 
     /// Wake up to `budget` sleeping workers (condvar `signal`, not
@@ -388,7 +432,7 @@ impl<'a> Engine<'a> {
             w.sleeping = true;
         }
 
-        while let Some(Reverse((t, _, w))) = self.events.pop() {
+        while let Some((t, _, w)) = self.events.pop() {
             self.sim_events += 1;
             if self.workers[w].clock < t {
                 self.workers[w].clock = t;
@@ -519,7 +563,9 @@ impl<'a> Engine<'a> {
         }
         let mut got = self.steal_sweep(w, &buf, &takes);
         if got.is_none() {
-            self.sched.observe(&SchedEvent::StealMiss { worker: w });
+            if self.desc.observes {
+                self.sched.observe(&SchedEvent::StealMiss { worker: w });
+            }
             // Liveness net for *partial* sweeps (bounded / hierarchical
             // strategies may skip victims): a sleeper is only woken by a
             // future push, so the last awake worker must not park while
@@ -639,12 +685,14 @@ impl<'a> Engine<'a> {
                 if affine {
                     self.affine_steals += 1;
                 }
-                self.sched.observe(&SchedEvent::Steal {
-                    thief: w,
-                    victim: v,
-                    hops: vhops,
-                    affine,
-                });
+                if self.desc.observes {
+                    self.sched.observe(&SchedEvent::Steal {
+                        thief: w,
+                        victim: v,
+                        hops: vhops,
+                        affine,
+                    });
+                }
                 return Some(tid);
             }
         }
@@ -660,11 +708,12 @@ impl<'a> Engine<'a> {
     /// last.  Always empty (and never probed) under stock schedulers.
     fn drain_any_mailbox(&mut self, w: usize) -> Option<TaskId> {
         let my_node = self.topo.node_of(self.workers[w].core);
-        let node = self
-            .topo
-            .nodes_by_distance(my_node)
-            .into_iter()
-            .find(|&n| !self.mailboxes[n].is_empty())?;
+        // nearest non-empty mailbox, ties to the lower node id — the
+        // same pick `nodes_by_distance` (sorted by (hops, id)) made,
+        // without materializing the sorted node list per call
+        let node = (0..self.mailboxes.len())
+            .filter(|&n| !self.mailboxes[n].is_empty())
+            .min_by_key(|&n| (self.topo.node_hops(my_node, n), n))?;
         let cm = self.costs;
         let hops = self.topo.node_hops(my_node, node) as Time;
         let op = cm.queue_op + hops * cm.steal_per_hop + self.workers[w].rt_penalty;
@@ -723,7 +772,9 @@ impl<'a> Engine<'a> {
                 }
                 Some(Action::Spawn { desc, affinity }) => {
                     self.arena.get_mut(tid).cursor += 1;
-                    self.sched.observe(&SchedEvent::Spawn { worker: w });
+                    if self.desc.observes {
+                        self.sched.observe(&SchedEvent::Spawn { worker: w });
+                    }
                     let spawn_cost = if free { 0 } else { self.costs.spawn_cost };
                     self.workers[w].clock += spawn_cost;
                     self.workers[w].overhead_time += spawn_cost;
@@ -1142,6 +1193,57 @@ impl<'a> Engine<'a> {
             kernel_calls: self.kernel_calls,
             sim_events: self.sim_events,
             wall_ms: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    /// The slot queue must pop in exactly the order the old
+    /// `BinaryHeap<Reverse<(Time, u64, usize)>>` did: ascending
+    /// `(time, seq)`, worker id never consulted (seqs are unique).
+    #[test]
+    fn event_queue_matches_heap_order() {
+        let mut rng = SplitMix64::new(7);
+        let workers = 9;
+        let mut q = EventQueue::with_workers(workers);
+        let mut heap: BinaryHeap<Reverse<(Time, u64, usize)>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut pending: Vec<bool> = vec![false; workers];
+        for _ in 0..5000 {
+            // random interleave of pushes and pops, respecting the
+            // engine's one-pending-event-per-worker invariant
+            if rng.next_u64() % 3 != 0 {
+                let w = (rng.next_u64() % workers as u64) as usize;
+                if !pending[w] {
+                    // duplicate times force (t, seq) tie-breaks
+                    let t = (rng.next_u64() % 50) as Time;
+                    seq += 1;
+                    q.push(w, t, seq);
+                    heap.push(Reverse((t, seq, w)));
+                    pending[w] = true;
+                }
+            } else {
+                let got = q.pop();
+                let want = heap.pop().map(|Reverse((t, s, w))| (t, s, w));
+                assert_eq!(got, want);
+                if let Some((_, _, w)) = got {
+                    pending[w] = false;
+                }
+            }
+        }
+        // drain both to empty
+        loop {
+            let got = q.pop();
+            let want = heap.pop().map(|Reverse((t, s, w))| (t, s, w));
+            assert_eq!(got, want);
+            if got.is_none() {
+                break;
+            }
         }
     }
 }

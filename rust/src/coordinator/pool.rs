@@ -74,6 +74,17 @@ impl Pool {
             self.epoch = epoch;
             self.used = 0;
         }
+        // Zero-contention fast path: with no demand in the window,
+        // rho == 0.0 exactly, so contenders == 0.0, eff == duration and
+        // wait == 0 — provably the slow path's result (pinned below by
+        // `zero_contention_fast_path_is_exact`), minus the f64 M/M/1
+        // arithmetic.  First op of every epoch takes this branch, which
+        // on lightly-contended pools is nearly every op.
+        if self.used == 0 {
+            self.used = duration;
+            self.ops += 1;
+            return duration;
+        }
         let rho = (self.used as f64 / EPOCH as f64).min(MAX_RHO);
         // expected queue length ahead of us (M/M/1), also the convoy size
         let contenders = (rho / (1.0 - rho)).min(MAX_CONTENDERS);
@@ -306,6 +317,41 @@ mod tests {
         let mut p = Pool::new();
         assert_eq!(p.lock(0, 0), 0);
         assert_eq!(p.lock_wait, 0);
+    }
+
+    /// The `used == 0` short-circuit must be indistinguishable from the
+    /// M/M/1 slow path: rho is exactly 0.0, so contenders is exactly
+    /// 0.0, eff == duration and wait == 0 in exact f64 arithmetic.
+    /// Pin every observable (cost, used-demand carried into the next
+    /// op, lock_wait, ops) against the formula evaluated by hand.
+    #[test]
+    fn zero_contention_fast_path_is_exact() {
+        let ns = crate::util::NS;
+        for d in [1, 100 * ns, 4000 * ns, EPOCH] {
+            let mut p = Pool::new();
+            // first op of the epoch: the fast path
+            let cost = p.lock(3 * EPOCH, d);
+            // slow-path formula at used == 0
+            let rho = (0f64 / EPOCH as f64).min(MAX_RHO);
+            let contenders = (rho / (1.0 - rho)).min(MAX_CONTENDERS);
+            let eff = d + (d as f64 * CONVOY_FACTOR * contenders) as Time;
+            let wait = (eff as f64 * contenders) as Time;
+            assert_eq!(cost, wait + eff);
+            assert_eq!(cost, d, "zero contention charges the bare duration");
+            assert_eq!(p.lock_wait, 0);
+            assert_eq!(p.ops, 1);
+            // the fast path must seed the window's demand exactly like
+            // the slow path (used += eff), so the *next* op prices
+            // identically to a pool that never took the shortcut
+            let second = p.lock(3 * EPOCH + 1, d);
+            let rho2 = (eff as f64 / EPOCH as f64).min(MAX_RHO);
+            let contenders2 = (rho2 / (1.0 - rho2)).min(MAX_CONTENDERS);
+            let eff2 = d + (d as f64 * CONVOY_FACTOR * contenders2) as Time;
+            let wait2 = (eff2 as f64 * contenders2) as Time;
+            assert_eq!(second, wait2 + eff2, "d={d}");
+            assert_eq!(p.lock_wait, wait2);
+            assert_eq!(p.ops, 2);
+        }
     }
 
     /// Regression: an op arriving from an *older* epoch (worker clocks

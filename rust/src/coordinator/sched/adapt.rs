@@ -126,6 +126,8 @@ impl Scheduler for NumaAdapt {
             // the engine must wake tied-continuation owners directly and
             // keep its liveness net armed
             full_sweep: false,
+            // steal-affinity feedback drives the loose/tight switch
+            observes: true,
             ..SchedDescriptor::WORK_STEALING
         }
     }

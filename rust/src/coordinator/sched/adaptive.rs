@@ -62,7 +62,11 @@ impl Scheduler for Adaptive {
     }
 
     fn descriptor(&self) -> SchedDescriptor {
-        SchedDescriptor::WORK_STEALING
+        SchedDescriptor {
+            // the steal-hops feedback below drives the mode switch
+            observes: true,
+            ..SchedDescriptor::WORK_STEALING
+        }
     }
 
     fn victim_order(&self, vl: &VictimList, rng: &mut SplitMix64, out: &mut Vec<usize>) {

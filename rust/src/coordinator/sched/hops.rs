@@ -57,6 +57,8 @@ impl Scheduler for HopsThreshold {
             // worker may never probe a tied continuation owner's pool:
             // tell the engine to wake the owner directly instead
             full_sweep: false,
+            // steal/miss feedback feeds the starvation spill counter
+            observes: true,
             ..SchedDescriptor::WORK_STEALING
         }
     }

@@ -192,6 +192,12 @@ pub struct SchedDescriptor {
     /// [`StealCand::take`] batching).  1 (the default) flushes every
     /// spawn immediately, which is byte-identical to the unbatched path.
     pub spawn_batch: u32,
+    /// Does this strategy consume [`Scheduler::observe`] feedback?  When
+    /// false (the stock default) the engine never calls `observe` — no
+    /// virtual dispatch per spawn/steal/miss on the hot path.  Observe is
+    /// advisory telemetry by contract, so skipping it for strategies
+    /// that ignore it cannot change scheduling decisions.
+    pub observes: bool,
 }
 
 impl SchedDescriptor {
@@ -206,6 +212,7 @@ impl SchedDescriptor {
         full_sweep: true,
         min_hint_bytes: 0,
         spawn_batch: 1,
+        observes: false,
     };
 
     pub fn shared_queue(&self) -> bool {

@@ -631,6 +631,13 @@ fn cmd_bench_compare(flags: &HashMap<String, String>, positionals: &[String]) ->
     };
     let old = bench::SuiteReport::load(Path::new(old_path))?;
     let new = bench::SuiteReport::load(Path::new(new_path))?;
+    if !old.cells.is_empty() && old.cells.iter().all(|c| c.sim.is_none()) {
+        eprintln!(
+            "[bench compare: baseline {old_path} is all-placeholder (every cell has sim: null) \
+             — every delta below is Unmeasured; run `numanos bench` on the baseline commit and \
+             commit the emitted report to start the perf trajectory]"
+        );
+    }
     let defaults = bench::compare::CompareOptions::default();
     let opts = bench::compare::CompareOptions {
         max_regress_pct: flags

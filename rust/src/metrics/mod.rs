@@ -152,7 +152,21 @@ impl RunStats {
             ("kernel_calls", Json::from_u64_lossless(self.kernel_calls)),
             ("sim_events", Json::from_u64_lossless(self.sim_events)),
             ("wall_ms", Json::from(self.wall_ms)),
+            // derived (never parsed back): engine throughput this run.
+            // Regenerated from the two fields above, so round-tripping
+            // through from_json → to_json stays byte-identical.
+            ("events_per_sec", Json::from(self.events_per_sec())),
         ])
+    }
+
+    /// Simulated events retired per host second — the engine-throughput
+    /// headline (0.0 before any wall time is recorded).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_ms > 0.0 {
+            self.sim_events as f64 / (self.wall_ms / 1e3)
+        } else {
+            0.0
+        }
     }
 
     /// Inverse of [`RunStats::to_json`]; strict — any missing or

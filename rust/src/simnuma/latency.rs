@@ -99,7 +99,7 @@ mod tests {
     #[test]
     fn numa_factors_increase() {
         let m = CostModel::default();
-        let f: Vec<f64> = (0..4).map(|h| m.numa_factor(h)).collect();
+        let f: [f64; 4] = std::array::from_fn(|h| m.numa_factor(h as u8));
         assert_eq!(f[0], 1.0);
         for w in f.windows(2) {
             assert!(w[1] > w[0]);

@@ -174,6 +174,31 @@ impl NodeLoad {
     }
 }
 
+/// Per-core last-touch memo (one entry per core, no eviction): which
+/// page the core touched last, the owner recorded then, and the global
+/// invalidation epoch at that point.  While the epoch is unchanged, no
+/// write (`bump_version`) and no `next-touch` migration has happened
+/// anywhere in the system, so a repeated *read* of the same page by the
+/// same core is provably an L1 hit at an unchanged owner: the core's
+/// previous access filled its L1 with the current version (every
+/// [`CacheHit`] outcome fills L1), nothing evicted it (per-core caches
+/// mutate only on that core's accesses, and this was the core's last
+/// page), and a pure L1 hit mutates no simulator state — so
+/// [`MemSim::access`] can skip the page-table resolve and the cache
+/// probe entirely, byte-identically.
+#[derive(Clone, Copy)]
+struct TouchMemo {
+    page: u64,
+    node: u8,
+    epoch: u64,
+}
+
+impl TouchMemo {
+    /// No page touched yet (`u64::MAX` is unreachable for a real page:
+    /// page ids come from the bump allocator).
+    const NONE: TouchMemo = TouchMemo { page: u64::MAX, node: 0, epoch: 0 };
+}
+
 /// The simulated memory system: page table + caches + node controllers.
 pub struct MemSim {
     topo: Topology,
@@ -184,6 +209,13 @@ pub struct MemSim {
     node_load: Vec<NodeLoad>,
     stats: MemStats,
     brk: u64,
+    /// Last-`(page, owner, epoch)` per core — the repeated-touch fast
+    /// path (see [`TouchMemo`]).
+    touch_memo: Vec<TouchMemo>,
+    /// Bumped on every write and every `next-touch` migration; a memo
+    /// from an older epoch proves nothing and falls back to the full
+    /// resolve + cache probe.
+    inval_epoch: u64,
 }
 
 impl MemSim {
@@ -205,6 +237,8 @@ impl MemSim {
             node_load: vec![NodeLoad::default(); nodes],
             stats: MemStats::default(),
             brk: PAGE_BYTES, // keep address 0 unused
+            touch_memo: vec![TouchMemo::NONE; cores],
+            inval_epoch: 0,
             topo,
             cost,
         }
@@ -225,6 +259,9 @@ impl MemSim {
             return 0;
         }
         let local_node = self.topo.node_of(core);
+        // Under next-touch a *read* of a remote page still migrates it
+        // (with charges), so only locally-owned pages may fast-path.
+        let next_touch = matches!(self.pages.policy(), PagePolicy::NextTouch { .. });
         let mut cost: Time = 0;
         self.stats.bytes_touched += region.bytes;
         // Manual page walk to avoid borrowing `self` inside the iterator.
@@ -236,6 +273,21 @@ impl MemSim {
             let take = page_end.min(end) - addr;
             addr += take;
             let lines = take.div_ceil(self.cost.line_bytes);
+
+            // Repeated-touch fast path (see [`TouchMemo`]): a re-read of
+            // the core's last page with no intervening write/migration
+            // anywhere is a guaranteed L1 hit — charge it and move on
+            // without the page-table resolve or the cache probe.
+            let memo = self.touch_memo[core];
+            if !write
+                && memo.page == page
+                && memo.epoch == self.inval_epoch
+                && (!next_touch || memo.node as usize == local_node)
+            {
+                cost += lines * self.cost.l1_hit;
+                self.stats.l1_hit_lines += lines;
+                continue;
+            }
 
             let (mut info, outcome) = self.pages.resolve(page, local_node, &self.topo);
             if outcome.fresh {
@@ -253,6 +305,8 @@ impl MemSim {
                 self.stats.migration_stall += copy;
                 // mirror the page table's count (single source of truth)
                 self.stats.migrated_pages = self.pages.migrated_pages();
+                // the page changed owner: every core's memo is stale
+                self.inval_epoch += 1;
             }
             let hit = self.caches[core].access(page, info.version);
             match hit {
@@ -281,7 +335,13 @@ impl MemSim {
             if write {
                 info.version = self.pages.bump_version(page);
                 self.caches[core].note_write(page, info.version);
+                // remote copies are stale: every other core's memo dies;
+                // ours is re-armed below at the *new* epoch (note_write
+                // just filled our L1 with the new version)
+                self.inval_epoch += 1;
             }
+            self.touch_memo[core] =
+                TouchMemo { page, node: info.node as u8, epoch: self.inval_epoch };
         }
         cost
     }
@@ -337,7 +397,17 @@ impl MemSim {
         let last = (region.addr + region.bytes - 1) / PAGE_BYTES;
         let pages = last - first + 1;
         let stride = pages.div_ceil(Self::HOME_SAMPLE_PAGES).max(1);
-        let mut counts = vec![0u32; self.topo.num_nodes()];
+        // per-spawn hot path: tally on the stack (every preset topology
+        // has ≤ 16 nodes; the heap fallback keeps odd topologies correct)
+        let nodes = self.topo.num_nodes();
+        let mut small = [0u32; 32];
+        let mut big = Vec::new();
+        let counts: &mut [u32] = if nodes <= small.len() {
+            &mut small[..nodes]
+        } else {
+            big.resize(nodes, 0u32);
+            &mut big
+        };
         let mut any = false;
         let mut page = first;
         while page <= last {
@@ -549,6 +619,73 @@ mod tests {
         m.first_touch(6, r, 0); // core 6 = node 3 (with capacity spill)
         // sampling must still find the majority without walking every page
         assert_eq!(m.home_node(r), Some(3));
+    }
+
+    /// The repeated-touch memo must charge exactly what the slow path
+    /// charges for a guaranteed L1 hit: `lines * l1_hit`, stats moving
+    /// only `l1_hit_lines` — pinned against the cost model by hand.
+    #[test]
+    fn repeated_read_charges_exactly_the_l1_path() {
+        let mut m = sim();
+        let bytes = 1536u64; // sub-page, non-line-aligned
+        let r = m.alloc(bytes);
+        m.first_touch(0, r, 0);
+        let lines = bytes.div_ceil(m.cost_model().line_bytes);
+        let l1 = m.cost_model().l1_hit;
+        let before = m.stats().clone();
+        let second = m.access(0, r, false, 0);
+        let third = m.access(0, r, false, 0);
+        assert_eq!(second, lines * l1, "memoized re-read is an L1 charge");
+        assert_eq!(third, second, "stable under repetition");
+        let after = m.stats();
+        assert_eq!(after.l1_hit_lines, before.l1_hit_lines + 2 * lines);
+        assert_eq!(after.l2_hit_lines, before.l2_hit_lines);
+        assert_eq!(after.miss_lines(), before.miss_lines());
+        assert_eq!(after.first_touch_pages, before.first_touch_pages);
+        assert_eq!(after.contention_stall, before.contention_stall);
+    }
+
+    /// A write by *any* core invalidates every memo: the next read by a
+    /// core holding a stale copy must pay the full re-fetch, and its own
+    /// re-read afterwards memoizes again.
+    #[test]
+    fn memo_dies_on_any_write() {
+        let mut m = sim();
+        let r = m.alloc(512);
+        m.first_touch(0, r, 0);
+        m.access(1, r, false, 0); // core 1 fills its caches
+        let warm = m.access(1, r, false, 0); // memoized L1 charge
+        m.access(0, r, true, 0); // core 0 writes: all memos stale
+        let refetch = m.access(1, r, false, 0);
+        assert!(refetch > warm, "stale memo must not mask the version bump");
+        let rewarm = m.access(1, r, false, 0);
+        assert_eq!(rewarm, warm, "memo re-arms after the re-fetch");
+    }
+
+    /// Under next-touch, a repeated *remote* read migrates on every
+    /// touch while the budget lasts — the memo must never swallow those
+    /// migrations (only locally-owned pages fast-path).
+    #[test]
+    fn memo_never_masks_next_touch_migration() {
+        let mut m = MemSim::with_policy(
+            Topology::x4600(),
+            CostModel::default(),
+            PagePolicy::NextTouch { max_moves: 2 },
+        );
+        let r = m.alloc(PAGE_BYTES);
+        m.first_touch(0, r, 0); // node 0
+        m.access(15, r, false, 0); // migrates to node 7
+        assert_eq!(m.node_of_addr(r.addr), Some(7));
+        assert_eq!(m.stats().migrated_pages, 1);
+        // core 0 re-touches: second migration, even though core 0's
+        // memo for this page predates it
+        m.access(0, r, false, 0);
+        assert_eq!(m.node_of_addr(r.addr), Some(0), "second move spent the budget");
+        assert_eq!(m.stats().migrated_pages, 2);
+        // budget gone: core 15's touch stays remote, slow-path-resolved
+        m.access(15, r, false, 0);
+        assert_eq!(m.node_of_addr(r.addr), Some(0));
+        assert_eq!(m.stats().migrated_pages, 2);
     }
 
     #[test]

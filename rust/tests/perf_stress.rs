@@ -1,0 +1,61 @@
+//! Million-task stress: the hot-loop overhaul's end-to-end guarantee.
+//!
+//! A ≥1M-task graph (fib at the perf-xl scale) must complete through the
+//! ordinary engine with (a) **exact task-count conservation** — every
+//! spawn retired, pinned against the closed-form tree size — and (b)
+//! **bounded arena growth**: the free-list recycles task slots, so the
+//! arena's high-water mark stays orders of magnitude below the total
+//! task count instead of scaling with it.
+//!
+//! Debug builds scale the input down (the graph shape and both
+//! assertions are identical); `--release` runs the true perf-xl input,
+//! 1,028,457 tasks.
+
+use numanos::bots::fib::{self, Fib};
+use numanos::config::Size;
+use numanos::coordinator::binding::BindPolicy;
+use numanos::coordinator::runtime::Runtime;
+use numanos::coordinator::sched::Policy;
+
+#[test]
+fn million_task_graph_completes_with_bounded_arena() {
+    // release: the perf-xl fib cell (n=40, cutoff=14); debug: same shape
+    // four halvings down, so `cargo test` stays fast
+    let (n, cutoff) = if cfg!(debug_assertions) { (32, 14) } else { (40, 14) };
+    let expected = fib::task_count(n, cutoff);
+    if !cfg!(debug_assertions) {
+        assert!(expected > 1_000_000, "perf-xl fib must be a >1M-task graph");
+    }
+
+    let rt = Runtime::paper_testbed();
+    let mut w = Fib::with_params(n, cutoff);
+    let stats = rt.run(&mut w, Policy::WorkFirst, BindPolicy::NumaAware, 16, 42, None).unwrap();
+
+    // exact conservation: every spawned task was created exactly once
+    // and retired — a leak, double-retire, or lost continuation moves it
+    assert_eq!(stats.tasks, expected, "task count must match the closed-form tree size");
+
+    // bounded growth: live tasks are the suspended spawn chains plus
+    // queued children — O(depth × workers), not O(total tasks).  The ×8
+    // bound is loose (measured peaks are far lower) but scales with the
+    // input, so the debug-sized run pins the same property.
+    assert!(
+        (stats.peak_live as u64) * 8 < stats.tasks,
+        "arena high-water mark {} is not far below {} tasks — free-list recycling broken?",
+        stats.peak_live,
+        stats.tasks
+    );
+
+    // the engine retires at least one event per task (spawn→run→retire
+    // all ride the event loop); a million-task run that under-counts
+    // events means the queue dropped work
+    assert!(stats.sim_events >= stats.tasks, "events {} < tasks {}", stats.sim_events, stats.tasks);
+}
+
+#[test]
+fn xl_size_maps_to_the_million_task_input() {
+    // the Size::XL arm and the closed-form count stay in lock-step with
+    // the perf-xl bench cells (which run fib at Size::XL)
+    let _ = Fib::new(Size::XL); // constructible
+    assert_eq!(fib::task_count(40, 14), 1_028_457);
+}
