@@ -1,0 +1,87 @@
+//! Checked engine mode: a sanitizer-style invariant layer.
+//!
+//! The engine and pool carry `debug_assert`s on load-bearing invariants
+//! (event-queue occupancy, task conservation, `homed` summary counts).
+//! Those vanish in `--release`, which is exactly where long sweeps run.
+//! Checked mode promotes them into an always-on verification pass the
+//! engine runs while it executes: read-only, so a checked run produces
+//! **byte-identical** results to an unchecked one (proven in CI by
+//! `bench --compare --fail-on-drift`), and any violation aborts with a
+//! structured report instead of silently corrupting results.
+//!
+//! Enablement, in order of precedence:
+//! * the `checked` cargo feature (compile-time; CI's tier-1 `analysis`
+//!   job builds tests with `--features checked`),
+//! * `cfg!(test)` — lib unit tests always run checked,
+//! * the process-global runtime flag set by `--checked` on
+//!   `run` / `sweep` / `bench`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static RUNTIME_FLAG: AtomicBool = AtomicBool::new(false);
+
+/// Is checked mode on for engines constructed from now on?
+/// (Each engine samples this once, at construction.)
+pub fn enabled() -> bool {
+    cfg!(any(test, feature = "checked")) || RUNTIME_FLAG.load(Ordering::Relaxed)
+}
+
+/// Flip the runtime flag (the CLI's `--checked`).
+pub fn set_enabled(on: bool) {
+    RUNTIME_FLAG.store(on, Ordering::Relaxed);
+}
+
+/// One violated engine invariant, `CHK001`-style coded.  Codes are
+/// stable and documented in the README diagnostic table.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub code: &'static str,
+    /// The invariant, stated as what should have held.
+    pub invariant: &'static str,
+    /// What was actually observed.
+    pub detail: String,
+}
+
+impl Violation {
+    pub fn new(code: &'static str, invariant: &'static str, detail: String) -> Self {
+        Self { code, invariant, detail }
+    }
+}
+
+/// Render violations as the multi-line abort report the engine bails
+/// with: one header line (grep-able), then one line per violation.
+pub fn render_report(context: &str, violations: &[Violation]) -> String {
+    let mut out = format!(
+        "checked engine: {} invariant violation(s) at {context}",
+        violations.len()
+    );
+    for v in violations {
+        out.push_str(&format!("\n  [{}] {} — {}", v.code, v.invariant, v.detail));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tests_run_checked() {
+        // cfg!(test) holds for lib unit tests, so the whole in-crate
+        // engine test surface exercises the invariant layer.
+        assert!(enabled());
+    }
+
+    #[test]
+    fn report_renders_all_violations() {
+        let vs = vec![
+            Violation::new("CHK003", "spawned == completed + live", "5 != 3 + 1".into()),
+            Violation::new("CHK009", "no pool tag desyncs", "2 desyncs".into()),
+        ];
+        let r = render_report("event 17 (worker 3, t=42)", &vs);
+        assert!(r.contains("2 invariant violation(s)"));
+        assert!(r.contains("[CHK003]"));
+        assert!(r.contains("[CHK009]"));
+        assert!(r.contains("event 17"));
+    }
+}

@@ -1,0 +1,417 @@
+//! `numanos lint` — static validation of experiment inputs.
+//!
+//! Lints manifests, `key = value` run configs, and result-store indexes
+//! **without executing anything**: every check below is resolvable from
+//! the file plus the in-process registries (schedulers, page policies,
+//! topology presets, benchmarks).  Codes:
+//!
+//! | code    | severity | rule                                                    |
+//! |---------|----------|---------------------------------------------------------|
+//! | LINT001 | error    | manifest unloadable / unknown key / invalid cell axis   |
+//! | LINT002 | error    | scheduler unknown or parameter out of declared bounds   |
+//! | LINT003 | error    | page policy unknown or invalid for the cell's topology  |
+//! | LINT004 | error    | topology/thread/bind mismatch (incl. serial threads>1)  |
+//! | LINT005 | error    | duplicate sweep cells (a dead axis re-runs work)        |
+//! | LINT006 | error    | placement hint floor above total machine memory         |
+//! | LINT007 | error    | result-store schema differs from [`STORE_SCHEMA`]       |
+//! | LINT008 | error    | run-config file invalid                                 |
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::Diagnostic;
+use crate::bots;
+use crate::config::RunConfig;
+use crate::coordinator::sched::{resolve_name, scheduler_infos, SchedSpec};
+use crate::serde::Json;
+use crate::simnuma::{CostModel, PAGE_BYTES};
+use crate::spec::{BindSpec, ExperimentManifest, RunSpec};
+use crate::store::STORE_SCHEMA;
+use crate::topology::Topology;
+
+/// Lint one experiment manifest (JSON or TOML).
+pub fn lint_manifest(path: &Path) -> Vec<Diagnostic> {
+    let subject = path.display().to_string();
+    let mut diags = Vec::new();
+    let manifest = match ExperimentManifest::load(path) {
+        Ok(m) => m,
+        Err(e) => {
+            diags.push(Diagnostic::error("LINT001", &subject, "-", format!("{e:#}")));
+            return diags;
+        }
+    };
+    let mut seen: HashMap<String, String> = HashMap::new();
+    for sweep in &manifest.sweeps {
+        let cells = match sweep.cells() {
+            Ok(c) => c,
+            Err(e) => {
+                diags.push(Diagnostic::error(
+                    "LINT001",
+                    &subject,
+                    &format!("sweep '{}'", sweep.id),
+                    format!("{e:#}"),
+                ));
+                continue;
+            }
+        };
+        for cell in &cells {
+            let ctx = format!("sweep '{}' cell {}", sweep.id, cell_key(cell));
+            lint_cell(&mut diags, &subject, &ctx, cell);
+            match seen.entry(cell_key(cell)) {
+                std::collections::hash_map::Entry::Occupied(prev) => {
+                    diags.push(Diagnostic::error(
+                        "LINT005",
+                        &subject,
+                        &ctx,
+                        format!(
+                            "duplicate cell: already produced by sweep '{}' — a dead \
+                             axis re-runs identical work",
+                            prev.get()
+                        ),
+                    ));
+                }
+                std::collections::hash_map::Entry::Vacant(slot) => {
+                    slot.insert(sweep.id.clone());
+                }
+            }
+        }
+    }
+    diags
+}
+
+/// One cell's full identity — every axis that changes simulated output.
+fn cell_key(spec: &RunSpec) -> String {
+    let cost: Vec<String> =
+        spec.cost.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    format!(
+        "{}|{}|{}|{}|{}|{}|{}|{}|{}",
+        spec.bench,
+        spec.size.name(),
+        spec.sched.name_sig(),
+        spec.mem.name_sig(),
+        spec.bind.name(),
+        spec.threads,
+        spec.topo,
+        spec.seed,
+        cost.join(",")
+    )
+}
+
+/// Validate one cell, classifying each failure axis to its code.
+/// Mirrors [`RunSpec::validate_against`] piecewise so one lint run
+/// reports *every* broken axis instead of stopping at the first.
+fn lint_cell(diags: &mut Vec<Diagnostic>, subject: &str, ctx: &str, spec: &RunSpec) {
+    if !bots::NAMES.contains(&spec.bench.as_str()) {
+        diags.push(Diagnostic::error(
+            "LINT001",
+            subject,
+            ctx,
+            format!("unknown benchmark '{}'", spec.bench),
+        ));
+    }
+    if let Err(e) = spec.sched.check() {
+        diags.push(Diagnostic::error("LINT002", subject, ctx, format!("{e:#}")));
+    }
+    if let Err(e) = spec.cost_model(&CostModel::default()) {
+        diags.push(Diagnostic::error("LINT001", subject, ctx, format!("{e:#}")));
+    }
+    let topo = match Topology::by_name(&spec.topo) {
+        Ok(t) => t,
+        Err(e) => {
+            diags.push(Diagnostic::error("LINT004", subject, ctx, format!("{e:#}")));
+            return;
+        }
+    };
+    if let Err(e) = spec.mem.build(topo.num_nodes()) {
+        diags.push(Diagnostic::error("LINT003", subject, ctx, format!("{e:#}")));
+    }
+    if spec.threads < 1 || spec.threads > topo.num_cores() {
+        diags.push(Diagnostic::error(
+            "LINT004",
+            subject,
+            ctx,
+            format!(
+                "threads={} out of range 1..={} for topology '{}'",
+                spec.threads,
+                topo.num_cores(),
+                spec.topo
+            ),
+        ));
+    }
+    if spec.sched.is_serial() && spec.threads != 1 {
+        diags.push(Diagnostic::error(
+            "LINT004",
+            subject,
+            ctx,
+            format!("the serial scheduler is the 1-thread baseline; got threads={}", spec.threads),
+        ));
+    }
+    if let BindSpec::Cores(cores) = &spec.bind {
+        if cores.len() != spec.threads || cores.iter().any(|&c| c >= topo.num_cores()) {
+            diags.push(Diagnostic::error(
+                "LINT004",
+                subject,
+                ctx,
+                format!("explicit core list {cores:?} does not fit threads={} on '{}'",
+                    spec.threads, spec.topo),
+            ));
+        }
+    }
+    if let Some(floor) = hint_floor_bytes(&spec.sched) {
+        let total = topo.node_capacity_pages() * PAGE_BYTES * topo.num_nodes() as u64;
+        if floor > total {
+            diags.push(Diagnostic::error(
+                "LINT006",
+                subject,
+                ctx,
+                format!(
+                    "min_kb floor ({floor} bytes) exceeds total machine memory \
+                     ({total} bytes on '{}') — the placement hook can never engage",
+                    spec.topo
+                ),
+            ));
+        }
+    }
+}
+
+/// The effective `min_kb` hint floor (bytes) of a scheduler spec, if it
+/// declares one: the override when given, the declared default otherwise.
+fn hint_floor_bytes(sched: &SchedSpec) -> Option<u64> {
+    let canonical = resolve_name(&sched.name).ok()?;
+    let info = scheduler_infos().into_iter().find(|i| i.name == canonical)?;
+    let declared = info.params.iter().find(|p| p.name == "min_kb")?;
+    let v = sched
+        .params
+        .iter()
+        .find(|(k, _)| k == "min_kb")
+        .map(|(_, v)| *v)
+        .unwrap_or(declared.default);
+    if v.is_finite() && v >= 0.0 {
+        Some((v * 1024.0) as u64)
+    } else {
+        None
+    }
+}
+
+/// Lint one `key = value` run-config file.
+pub fn lint_config(path: &Path) -> Vec<Diagnostic> {
+    let subject = path.display().to_string();
+    let cfg = match RunConfig::from_file(path) {
+        Ok(c) => c,
+        Err(e) => {
+            return vec![Diagnostic::error("LINT008", &subject, "-", format!("{e:#}"))];
+        }
+    };
+    match cfg.to_spec() {
+        Ok(spec) => {
+            let mut diags = Vec::new();
+            lint_cell(&mut diags, &subject, &cfg.describe(), &spec);
+            diags
+        }
+        // to_spec validates; surface its error when the piecewise pass
+        // cannot even build a spec (builder-level failures).
+        Err(e) => vec![Diagnostic::error("LINT008", &subject, "-", format!("{e:#}"))],
+    }
+}
+
+/// Lint one result-store `index.json` for schema drift.
+pub fn lint_store_index(path: &Path) -> Vec<Diagnostic> {
+    let subject = path.display().to_string();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => return vec![Diagnostic::error("LINT007", &subject, "-", format!("{e}"))],
+    };
+    let json = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            return vec![Diagnostic::error(
+                "LINT007",
+                &subject,
+                "-",
+                format!("unparseable store index: {e:#}"),
+            )]
+        }
+    };
+    match json.get("schema").and_then(Json::as_u64) {
+        Some(s) if s == STORE_SCHEMA => Vec::new(),
+        Some(s) => vec![Diagnostic::error(
+            "LINT007",
+            &subject,
+            "-",
+            format!("store schema {s} != supported {STORE_SCHEMA}"),
+        )],
+        None => vec![Diagnostic::error(
+            "LINT007",
+            &subject,
+            "-",
+            "store index carries no schema field".to_string(),
+        )],
+    }
+}
+
+/// Lint everything recognizable under a directory (recursive):
+/// `*.json`/`*.toml` manifests (identified by a top-level `sweeps`
+/// key — other JSON files are skipped), `*.conf` run configs, and
+/// `index.json` store indexes.
+pub fn lint_dir(dir: &Path) -> Result<Vec<Diagnostic>> {
+    let mut diags = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    let mut scanned = 0usize;
+    while let Some(d) = stack.pop() {
+        let entries = std::fs::read_dir(&d)
+            .map_err(|e| anyhow::anyhow!("reading directory {}: {e}", d.display()))?;
+        let mut paths: Vec<_> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+        paths.sort();
+        for path in paths {
+            if path.is_dir() {
+                stack.push(path);
+                continue;
+            }
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("");
+            if name == "index.json" {
+                diags.extend(lint_store_index(&path));
+                scanned += 1;
+            } else if ext == "conf" {
+                diags.extend(lint_config(&path));
+                scanned += 1;
+            } else if (ext == "json" || ext == "toml") && looks_like_manifest(&path) {
+                diags.extend(lint_manifest(&path));
+                scanned += 1;
+            }
+        }
+    }
+    if scanned == 0 {
+        anyhow::bail!("no manifests, configs, or store indexes under {}", dir.display());
+    }
+    Ok(diags)
+}
+
+/// A file is treated as a manifest when it parses to an object with a
+/// top-level `sweeps` key — arbitrary JSON (bench reports, figures)
+/// under the same tree is skipped rather than false-positived.
+fn looks_like_manifest(path: &Path) -> bool {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return false;
+    };
+    let parsed = if path.extension().and_then(|e| e.to_str()) == Some("toml") {
+        crate::serde::toml::parse(&text)
+    } else {
+        Json::parse(&text)
+    };
+    match parsed {
+        Ok(j) => j.get("sweeps").is_some(),
+        // unparseable but named like a manifest: let lint_manifest report
+        Err(_) => text.contains("\"sweeps\"") || text.contains("[[sweeps]]"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::error_count;
+
+    fn tmp(name: &str, text: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("numanos_lint_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    #[test]
+    fn clean_manifest_passes() {
+        let p = tmp(
+            "clean.json",
+            r#"{"title": "t", "sweeps": [
+                {"id": "a", "title": "a", "bench": ["fib"],
+                 "sched": ["wf"], "bind": ["numa"], "threads": [4], "seeds": [1]}
+            ]}"#,
+        );
+        assert!(lint_manifest(&p).is_empty());
+    }
+
+    #[test]
+    fn duplicate_cells_flagged() {
+        let p = tmp(
+            "dup.json",
+            r#"{"title": "t", "sweeps": [
+                {"id": "a", "title": "a", "bench": ["fib"],
+                 "sched": ["wf"], "bind": ["numa"], "threads": [4], "seeds": [1, 1]}
+            ]}"#,
+        );
+        let diags = lint_manifest(&p);
+        assert!(diags.iter().any(|d| d.code == "LINT005"), "{diags:?}");
+    }
+
+    #[test]
+    fn thread_overflow_flagged() {
+        let p = tmp(
+            "threads.json",
+            r#"{"title": "t", "sweeps": [
+                {"id": "a", "title": "a", "bench": ["fib"], "topo": "quad",
+                 "sched": ["wf"], "bind": ["numa"], "threads": [64], "seeds": [1]}
+            ]}"#,
+        );
+        let diags = lint_manifest(&p);
+        assert!(diags.iter().any(|d| d.code == "LINT004"), "{diags:?}");
+    }
+
+    #[test]
+    fn bad_sched_param_flagged() {
+        let p = tmp(
+            "sched.json",
+            r#"{"title": "t", "sweeps": [
+                {"id": "a", "title": "a", "bench": ["fib"],
+                 "sched": [{"name": "hops-threshold", "max_hops": 999}],
+                 "bind": ["numa"], "threads": [4], "seeds": [1]}
+            ]}"#,
+        );
+        let diags = lint_manifest(&p);
+        assert!(diags.iter().any(|d| d.code == "LINT002"), "{diags:?}");
+    }
+
+    #[test]
+    fn unreachable_hint_floor_flagged() {
+        let p = tmp(
+            "floor.json",
+            r#"{"title": "t", "sweeps": [
+                {"id": "a", "title": "a", "bench": ["fib"],
+                 "sched": [{"name": "numa-home", "min_kb": 8000000000}],
+                 "bind": ["numa"], "threads": [4], "seeds": [1]}
+            ]}"#,
+        );
+        let diags = lint_manifest(&p);
+        assert!(diags.iter().any(|d| d.code == "LINT006"), "{diags:?}");
+    }
+
+    #[test]
+    fn store_schema_drift_flagged() {
+        let good = tmp("index.json", r#"{"schema": 1, "runs": []}"#);
+        assert!(lint_store_index(&good).is_empty());
+        let bad = tmp("index_bad.json", r#"{"schema": 99, "runs": []}"#);
+        let diags = lint_store_index(&bad);
+        assert_eq!(error_count(&diags), 1);
+        assert_eq!(diags[0].code, "LINT007");
+    }
+
+    #[test]
+    fn conf_file_lints() {
+        let good = tmp("run.conf", "bench = fib\nsched = wf\nthreads = 4\n");
+        assert!(lint_config(&good).is_empty());
+        let bad = tmp("bad.conf", "bench = fib\nbogus_key = 1\n");
+        let diags = lint_config(&bad);
+        assert!(diags.iter().any(|d| d.code == "LINT008"), "{diags:?}");
+    }
+
+    #[test]
+    fn repo_example_manifest_is_clean() {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/experiment_manifest.json");
+        if p.exists() {
+            let diags = lint_manifest(&p);
+            assert!(diags.is_empty(), "{diags:?}");
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Static analysis & vetting: the correctness tooling layer.
+//!
+//! Three pillars, all surfaced through the CLI (`numanos vet`,
+//! `numanos lint`, `--checked`) and CI:
+//!
+//! * [`vet`] — a **scheduler contract checker**.  Drives every
+//!   registered scheduler through synthetic probe contexts (victim
+//!   lists across several topologies, spawn/resume fixtures, steal
+//!   candidate sets, replayed event streams) and verifies the
+//!   [`Scheduler`](crate::coordinator::sched::Scheduler) /
+//!   [`SchedDescriptor`](crate::coordinator::sched::SchedDescriptor)
+//!   contract *before* a sweep burns hours on a misbehaving strategy.
+//! * [`lint`] — a **static linter** for experiment manifests,
+//!   `key = value` run configs, and result-store indexes: catches
+//!   invalid cells, dead sweep axes, unreachable hint floors, and
+//!   schema drift without executing anything.
+//! * [`checked`] — the **checked engine mode**: promotes the
+//!   load-bearing `debug_assert`s in `engine.rs` / `pool.rs` into an
+//!   always-on invariant layer (enabled by `--checked` or the
+//!   `checked` cargo feature).  Violations abort with a structured
+//!   report instead of silently corrupting results.
+//!
+//! Every finding is a [`Diagnostic`]: a stable machine-readable code
+//! (`VET001`, `LINT004`, …), a severity, the subject (scheduler name or
+//! file), the probe context that triggered it, and a human message.
+//! The README's "Static analysis & vetting" section carries the full
+//! code table.
+
+use crate::serde::Json;
+
+pub mod checked;
+pub mod lint;
+pub mod vet;
+
+/// How bad a finding is.  `Error` findings fail `vet`/`lint` (non-zero
+/// exit); `Warning`s are advisory (suspicious but contract-legal).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One machine-readable finding from `vet` or `lint`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Stable code (`VET001`-style); the README documents the table.
+    pub code: &'static str,
+    pub severity: Severity,
+    /// What is being diagnosed: a scheduler name or a file path.
+    pub subject: String,
+    /// The probe context that triggered the finding
+    /// (`"x4600 threads=8 worker=3 seed=1"`), or `-` for static checks.
+    pub context: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, subject: &str, context: &str, message: String) -> Self {
+        Self {
+            code,
+            severity: Severity::Error,
+            subject: subject.to_string(),
+            context: context.to_string(),
+            message,
+        }
+    }
+
+    pub fn warning(code: &'static str, subject: &str, context: &str, message: String) -> Self {
+        Self {
+            code,
+            severity: Severity::Warning,
+            subject: subject.to_string(),
+            context: context.to_string(),
+            message,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("code", Json::from(self.code)),
+            ("severity", Json::from(self.severity.name())),
+            ("subject", Json::from(self.subject.as_str())),
+            ("context", Json::from(self.context.as_str())),
+            ("message", Json::from(self.message.as_str())),
+        ])
+    }
+}
+
+/// Render a diagnostic list as a JSON array (the `--json` output).
+pub fn diagnostics_to_json(diags: &[Diagnostic]) -> Json {
+    Json::Arr(diags.iter().map(Diagnostic::to_json).collect())
+}
+
+/// Render a diagnostic list as an aligned text table.
+pub fn render_table(diags: &[Diagnostic]) -> String {
+    let header = ["CODE", "SEVERITY", "SUBJECT", "CONTEXT", "MESSAGE"];
+    let mut rows: Vec<[String; 5]> = Vec::with_capacity(diags.len());
+    for d in diags {
+        rows.push([
+            d.code.to_string(),
+            d.severity.name().to_string(),
+            d.subject.clone(),
+            d.context.clone(),
+            d.message.clone(),
+        ]);
+    }
+    let mut width = [0usize; 4];
+    for (i, w) in width.iter_mut().enumerate() {
+        *w = header[i].len();
+        for r in &rows {
+            *w = (*w).max(r[i].len());
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<w0$}  {:<w1$}  {:<w2$}  {:<w3$}  {}\n",
+        header[0],
+        header[1],
+        header[2],
+        header[3],
+        header[4],
+        w0 = width[0],
+        w1 = width[1],
+        w2 = width[2],
+        w3 = width[3],
+    ));
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<w0$}  {:<w1$}  {:<w2$}  {:<w3$}  {}\n",
+            r[0],
+            r[1],
+            r[2],
+            r[3],
+            r[4],
+            w0 = width[0],
+            w1 = width[1],
+            w2 = width[2],
+            w3 = width[3],
+        ));
+    }
+    out
+}
+
+/// Count of `Error`-severity findings (the exit-status driver).
+pub fn error_count(diags: &[Diagnostic]) -> usize {
+    diags.iter().filter(|d| d.severity == Severity::Error).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_and_json_render() {
+        let diags = vec![
+            Diagnostic::error("VET001", "bad-sched", "x4600 w=0", "duplicate victim 3".into()),
+            Diagnostic::warning("VET012", "odd-sched", "-", "inert min_hint_bytes".into()),
+        ];
+        let table = render_table(&diags);
+        assert!(table.contains("VET001"));
+        assert!(table.contains("duplicate victim 3"));
+        assert!(table.lines().count() == 3);
+        let json = diagnostics_to_json(&diags).to_compact();
+        assert!(json.contains("\"code\":\"VET012\""));
+        assert!(json.contains("\"severity\":\"warning\""));
+        assert_eq!(error_count(&diags), 1);
+    }
+}

@@ -1,3 +1,4 @@
+#![deny(clippy::unwrap_used)]
 //! Discrete-event execution engine.
 //!
 //! Simulates a team of worker threads (one per bound core) executing an
@@ -247,6 +248,12 @@ pub struct Engine<'a> {
     /// `pending_home` is empty).
     pending_target: usize,
     wake_rr: usize,
+    /// Checked mode ([`crate::analysis::checked`]) sampled once at
+    /// construction: run the invariant layer after every event.
+    checked: bool,
+    /// Last popped event time (checked mode's monotonicity watermark;
+    /// side state only — never feeds a scheduling decision).
+    chk_last_event: Time,
 }
 
 impl<'a> Engine<'a> {
@@ -346,6 +353,8 @@ impl<'a> Engine<'a> {
             pending_home: Vec::new(),
             pending_target: 0,
             wake_rr: 0,
+            checked: crate::analysis::checked::enabled(),
+            chk_last_event: 0,
         }
     }
 
@@ -441,6 +450,9 @@ impl<'a> Engine<'a> {
                 self.run_quantum(w)?;
             } else {
                 self.acquire(w);
+            }
+            if self.checked {
+                self.verify_invariants(t, w)?;
             }
             if self.live == 0 {
                 break;
@@ -1153,6 +1165,154 @@ impl<'a> Engine<'a> {
                 _ => return,
             }
         }
+    }
+
+    /// Checked-mode invariant layer (`CHK001`–`CHK010`): the release
+    /// promotion of the engine's load-bearing `debug_assert`s, run after
+    /// every processed event.  Strictly read-only over simulation state —
+    /// no cost charges, no RNG consumption, no queue mutation — so a
+    /// checked run is byte-identical to an unchecked one (CI pins this
+    /// with `bench --compare --fail-on-drift`).  The per-item pool
+    /// recount (`CHK005`) amortizes on a 1024-event cadence; everything
+    /// else is O(workers) per event.
+    fn verify_invariants(&mut self, now: Time, w: usize) -> Result<()> {
+        use crate::analysis::checked::{render_report, Violation};
+        let mut vs: Vec<Violation> = Vec::new();
+
+        // CHK001: the queue's pending count matches its occupied slots
+        // (≤ 1 pending event per worker is structural in the slot array;
+        // the count is what pop trusts).
+        let occupied =
+            self.events.slots.iter().filter(|&&s| s != EventQueue::EMPTY).count();
+        if occupied != self.events.pending {
+            vs.push(Violation::new(
+                "CHK001",
+                "event-queue pending count == occupied slots",
+                format!("pending={} occupied={occupied}", self.events.pending),
+            ));
+        }
+        // CHK010: a sleeping worker holds no scheduled event (waking
+        // always clears `sleeping` before re-arming the slot).
+        for (i, wk) in self.workers.iter().enumerate() {
+            if wk.sleeping && self.events.slots[i] != EventQueue::EMPTY {
+                vs.push(Violation::new(
+                    "CHK010",
+                    "sleeping workers have no pending event",
+                    format!("worker {i} sleeps with slot {:?}", self.events.slots[i]),
+                ));
+                break;
+            }
+        }
+        // CHK002: events pop in non-decreasing virtual time.
+        if now < self.chk_last_event {
+            vs.push(Violation::new(
+                "CHK002",
+                "event times are monotone",
+                format!("popped t={now} after t={}", self.chk_last_event),
+            ));
+        }
+        self.chk_last_event = self.chk_last_event.max(now);
+        // CHK003: task conservation — every created task is either
+        // completed (counted into exactly one worker's tasks_run) or live.
+        let run: u64 = self.workers.iter().map(|wk| wk.tasks_run).sum();
+        if self.arena.total_created() != run + self.live {
+            vs.push(Violation::new(
+                "CHK003",
+                "spawned == completed + live",
+                format!(
+                    "created={} completed={run} live={}",
+                    self.arena.total_created(),
+                    self.live
+                ),
+            ));
+        }
+        // CHK004: the engine's live counter agrees with the arena's.
+        if self.arena.live() as u64 != self.live {
+            vs.push(Violation::new(
+                "CHK004",
+                "engine live count == arena live count",
+                format!("engine={} arena={}", self.live, self.arena.live()),
+            ));
+        }
+        // CHK008: spawn-batch buffers never leak across events.
+        if !self.pending_home.is_empty() {
+            vs.push(Violation::new(
+                "CHK008",
+                "home-push batch is flushed between events",
+                format!("{} buffered pushes leaked", self.pending_home.len()),
+            ));
+        }
+        // CHK006: non-placing schedulers never touch mailboxes.
+        if !self.desc.places
+            && (self.mailbox_hits != 0 || self.mailboxes.iter().any(|m| !m.is_empty()))
+        {
+            vs.push(Violation::new(
+                "CHK006",
+                "mailboxes stay empty without a place hook",
+                format!("mailbox_hits={}", self.mailbox_hits),
+            ));
+        }
+        // CHK007: only shared-FIFO schedulers use the shared pool.
+        if !self.desc.shared_queue() && !self.shared.is_empty() {
+            vs.push(Violation::new(
+                "CHK007",
+                "shared FIFO stays empty under per-worker queues",
+                format!("{} tasks in the shared pool", self.shared.len()),
+            ));
+        }
+        // CHK009: no pool observed a home-tag desync (pool.rs note_pop).
+        let desyncs: u64 = self.pools.iter().map(|p| p.tag_desyncs).sum::<u64>()
+            + self.shared.tag_desyncs
+            + self.mailboxes.iter().map(|m| m.tag_desyncs).sum::<u64>();
+        if desyncs != 0 {
+            vs.push(Violation::new(
+                "CHK009",
+                "no pool home-tag desyncs",
+                format!("{desyncs} desynced pops (see Pool::tag_desyncs)"),
+            ));
+        }
+        // CHK005: deep recount of every pool's per-node homed summary
+        // against its actual entries — O(total queued), so amortized.
+        if self.sim_events % 1024 == 0 || self.live == 0 {
+            let bad = self
+                .pools
+                .iter()
+                .enumerate()
+                .find(|(_, p)| !p.home_summary_consistent())
+                .map(|(i, _)| format!("pool {i}"))
+                .or_else(|| {
+                    (!self.shared.home_summary_consistent()).then(|| "shared pool".into())
+                })
+                .or_else(|| {
+                    self.mailboxes
+                        .iter()
+                        .enumerate()
+                        .find(|(_, m)| !m.home_summary_consistent())
+                        .map(|(i, _)| format!("mailbox {i}"))
+                });
+            if let Some(which) = bad {
+                vs.push(Violation::new(
+                    "CHK005",
+                    "pool homed summaries == recounted entry tags",
+                    which,
+                ));
+            }
+        }
+
+        if vs.is_empty() {
+            return Ok(());
+        }
+        anyhow::bail!(
+            "{}",
+            render_report(
+                &format!(
+                    "event {} (worker {w}, t={now}, scheduler {})",
+                    self.sim_events,
+                    self.sched.name()
+                ),
+                &vs
+            )
+        )
     }
 
     fn into_stats(self) -> RunStats {

@@ -1,3 +1,4 @@
+#![deny(clippy::unwrap_used)]
 //! Task pools: per-worker deques and the breadth-first shared queue.
 //!
 //! Pools carry a simulated-time *contention model*.  The engine executes
@@ -48,6 +49,13 @@ pub struct Pool {
     /// Total simulated queueing delay charged on this pool's lock.
     pub lock_wait: Time,
     pub ops: u64,
+    /// Home-summary desyncs observed by [`Pool::note_pop`]: pops whose
+    /// tag was never pushed (or whose node count had already drained).
+    /// Always 0 on a healthy engine; checked mode
+    /// ([`crate::analysis::checked`]) verifies that every event and
+    /// aborts with a `CHK009` report otherwise, where a `debug_assert`
+    /// would have vanished in `--release`.
+    pub tag_desyncs: u64,
 }
 
 impl Pool {
@@ -118,13 +126,17 @@ impl Pool {
             // every later `homed_count` bias decision.  Callers now retag
             // on push (the engine re-reads the arena's current home at
             // every push site); this guard keeps the summary sane even if
-            // a future caller slips a stale tag through.
+            // a future caller slips a stale tag through — and counts the
+            // desync into `tag_desyncs` so checked mode can surface it
+            // in release builds too.
             match self.homed.get_mut(home as usize) {
                 Some(count) => {
-                    debug_assert!(*count > 0, "home summary underflow for node {home}");
+                    if *count == 0 {
+                        self.tag_desyncs += 1;
+                    }
                     *count = count.saturating_sub(1);
                 }
-                None => debug_assert!(false, "home tag {home} was never pushed"),
+                None => self.tag_desyncs += 1,
             }
         }
     }
@@ -174,6 +186,23 @@ impl Pool {
     #[inline]
     pub fn homed_count(&self, node: usize) -> u32 {
         self.homed.get(node).copied().unwrap_or(0)
+    }
+
+    /// Does the per-node `homed` summary equal an actual recount of the
+    /// resident entries' tags?  O(len) — checked mode's periodic pool
+    /// verification (`CHK005`); never called on the hot path.
+    pub fn home_summary_consistent(&self) -> bool {
+        let mut counts = vec![0u32; self.homed.len()];
+        for &(_, home) in &self.items {
+            if home != NO_HOME {
+                let node = home as usize;
+                if node >= counts.len() {
+                    return false; // tagged entry the summary never saw
+                }
+                counts[node] += 1;
+            }
+        }
+        counts == self.homed
     }
 
     #[inline]
@@ -374,5 +403,43 @@ mod tests {
         // a genuinely newer epoch still starts fresh
         let fresh = p.lock(9 * EPOCH, d);
         assert_eq!(fresh, c1, "newer epochs reset the window");
+    }
+
+    /// A pop whose home tag was never pushed no longer vanishes in
+    /// release builds: it counts into `tag_desyncs` (checked mode's
+    /// CHK009 feed) and the summary stays saturated, never underflowed.
+    #[test]
+    fn stale_tag_pops_count_desyncs() {
+        let mut p = Pool::new();
+        assert_eq!(p.tag_desyncs, 0);
+        // tag 3 was never pushed: the homed vec has no slot for it
+        p.items.push_back((1, 3));
+        assert_eq!(p.pop_back(), Some(1));
+        assert_eq!(p.tag_desyncs, 1, "unknown tag counts a desync");
+        // node 0's count drains to zero, then a second stale pop of the
+        // same tag underflows — counted, not asserted away
+        p.push_back(2, 0);
+        assert_eq!(p.pop_back(), Some(2));
+        p.items.push_back((3, 0));
+        assert_eq!(p.pop_back(), Some(3));
+        assert_eq!(p.tag_desyncs, 2, "drained-count pop counts a desync");
+        assert_eq!(p.homed_count(0), 0, "summary saturates instead of underflowing");
+    }
+
+    /// The checked-mode recount agrees with the incremental summary
+    /// through a push/pop mix, and detects a hand-broken summary.
+    #[test]
+    fn home_summary_consistency_probe() {
+        let mut p = Pool::new();
+        assert!(p.home_summary_consistent(), "empty pool is consistent");
+        p.push_back(1, 0);
+        p.push_front(2, 2);
+        p.push_back(3, NO_HOME);
+        assert!(p.home_summary_consistent());
+        p.pop_front();
+        assert!(p.home_summary_consistent());
+        // resident tagged entry the summary never counted
+        p.items.push_back((4, 1));
+        assert!(!p.home_summary_consistent(), "recount must catch the desync");
     }
 }

@@ -105,6 +105,16 @@
 //! the CLI) carries the overrides and [`build`] validates them against the
 //! declaration.
 //!
+//! **Vet your scheduler**: `numanos vet <name>` (see
+//! [`crate::analysis::vet`]) drives every hook above through synthetic
+//! probe contexts and checks the contract each doc comment states —
+//! permutation-subset victim orders, full-sweep coverage, reorder-only
+//! `steal_bias`, in-range placement nodes, observe-gating, and
+//! same-seed determinism — as stable `VET0xx` diagnostics.  The README's
+//! "Static analysis & vetting" section carries the full code table and a
+//! scheduler-author checklist; CI runs `numanos vet --all` on every
+//! change.
+//!
 //! The legacy closed [`Policy`] enum survives as a deprecated-in-spirit
 //! shim for the six stock strategies: existing `Runtime::run(policy, …)`
 //! call sites, figure specs, and CSV columns are untouched, and
@@ -746,12 +756,39 @@ fn builtin_entries() -> Vec<Arc<Entry>> {
 /// depth; keeps the u32 cast trivially safe).
 const MAX_BATCH: f64 = 65536.0;
 
-/// Register a scheduler.  Fails on a name/alias collision.  The factory
-/// must not call back into the registry.
+/// Hard validation of a registration's declared parameters — enforced
+/// in release builds too (the `ParamInfo::bounded` `debug_assert`
+/// vanishes under `--release`, and a user scheduler whose default sits
+/// outside its own declared range would then register fine and fail
+/// only when [`build`] range-checks the untouched default).  `vet`
+/// reports the same rule as `VET010`.
+fn validate_info(info: &SchedulerInfo) -> Result<()> {
+    for (i, p) in info.params.iter().enumerate() {
+        if !p.default.is_finite() || !(p.min <= p.default && p.default <= p.max) {
+            bail!(
+                "scheduler '{}' parameter '{}': default {} outside declared range {}..={}",
+                info.name,
+                p.name,
+                p.default,
+                p.min,
+                p.max
+            );
+        }
+        if info.params[..i].iter().any(|q| q.name == p.name) {
+            bail!("scheduler '{}' declares parameter '{}' twice", info.name, p.name);
+        }
+    }
+    Ok(())
+}
+
+/// Register a scheduler.  Fails on a name/alias collision or an invalid
+/// parameter declaration.  The factory must not call back into the
+/// registry.
 pub fn register(
     info: SchedulerInfo,
     factory: impl Fn(&SchedParams) -> Result<Box<dyn Scheduler>> + Send + Sync + 'static,
 ) -> Result<()> {
+    validate_info(&info)?;
     let mut reg = registry().lock().unwrap();
     let mut new_names: Vec<&str> = vec![info.name.as_str()];
     new_names.extend(info.aliases.iter().map(String::as_str));

@@ -1,3 +1,4 @@
+#![deny(clippy::unwrap_used)]
 //! Task representation: descriptors, bodies, the workload trait and the
 //! task-instance arena.
 //!

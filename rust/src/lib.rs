@@ -25,6 +25,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`topology`] | NUMA fabric models (X4600 twisted ladder & friends) |
+//! | [`analysis`] | static analysis: scheduler contract vetting (`numanos vet`), manifest linting (`numanos lint`), checked engine mode (`--checked`) |
 //! | [`simnuma`]  | memory-system simulator: pluggable page placement (first-touch / interleave / bind / next-touch), caches, NUMA latencies, contention |
 //! | [`coordinator`] | the runtime: tasks, pools, binding, priorities, the pluggable scheduler registry, event engine |
 //! | [`bots`]     | the 11 BOTS benchmark task-graph generators |
@@ -57,6 +58,7 @@
 //! assert!(record.speedup > 0.0 && record.stats.makespan > 0);
 //! ```
 
+pub mod analysis;
 pub mod bench;
 pub mod bots;
 pub mod config;

@@ -13,6 +13,8 @@
 //! numanos serve  --store store/ --spool spool/ --once # manifest spool service
 //! numanos bench  --out BENCH_7.json    # run the pinned perf-trajectory suite
 //! numanos bench  --compare BENCH_6.json BENCH_7.json   # delta report
+//! numanos vet    --all                 # scheduler contract checker (VET0xx diagnostics)
+//! numanos lint   --dir examples/       # static manifest / config / store linter
 //! ```
 //!
 //! Everything execution-shaped goes through the [`spec`](numanos::spec)
@@ -25,6 +27,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use numanos::analysis;
 use numanos::bench;
 use numanos::bots;
 use numanos::config::Size;
@@ -47,9 +50,9 @@ fn main() {
 }
 
 /// Per-command flag inventory: (command, flags taking a value, boolean
-/// flags, positional arguments accepted).  Only `bench --compare` takes
-/// positionals (the two report files); everywhere else a bare token
-/// stays a clear error.
+/// flags, positional arguments accepted).  Only `bench --compare` (the
+/// two report files) and `vet` (a scheduler name) take positionals;
+/// everywhere else a bare token stays a clear error.
 const COMMANDS: &[(&str, &[&str], &[&str], usize)] = &[
     ("list", &[], &[], 0),
     ("topo", &["name"], &[], 0),
@@ -59,7 +62,7 @@ const COMMANDS: &[(&str, &[&str], &[&str], usize)] = &[
             "bench", "size", "sched", "policy", "mem", "bind", "cores", "threads", "topo",
             "seed", "compute", "artifacts", "cost", "rtdata",
         ],
-        &["json"],
+        &["json", "checked"],
         0,
     ),
     ("figure", &["id", "out", "size", "seed", "topo", "cost"], &["all", "json"], 0),
@@ -67,16 +70,18 @@ const COMMANDS: &[(&str, &[&str], &[&str], usize)] = &[
     (
         "sweep",
         &["manifest", "out", "workers", "seed", "store"],
-        &["json", "seq", "resume", "no-cache"],
+        &["json", "seq", "resume", "no-cache", "checked"],
         0,
     ),
     ("serve", &["store", "spool", "poll-ms", "workers"], &["once"], 0),
     (
         "bench",
         &["out", "reps", "filter", "max-regress-pct", "wall-warn-pct"],
-        &["compare", "json", "warn-only", "fail-on-drift"],
+        &["compare", "json", "warn-only", "fail-on-drift", "checked"],
         2,
     ),
+    ("vet", &[], &["all", "json"], 1),
+    ("lint", &["manifest", "dir"], &["json"], 0),
     ("help", &[], &[], 0),
 ];
 
@@ -178,6 +183,8 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(&flags),
         "serve" => cmd_serve(&flags),
         "bench" => cmd_bench(&flags, &positionals),
+        "vet" => cmd_vet(&flags, &positionals),
+        "lint" => cmd_lint(&flags),
         "help" => {
             print!("{}", HELP);
             Ok(())
@@ -238,6 +245,20 @@ commands:
                             per-benchmark delta table; exits non-zero
                             when simulated makespan regresses past the
                             threshold (wall-time drift only warns)
+  vet    [scheduler] | --all [--json]
+                            scheduler contract checker: drives hooks
+                            through synthetic probe contexts and reports
+                            VET0xx diagnostics (see README \"Static
+                            analysis & vetting\"); exits non-zero on any
+                            error-severity finding
+  lint   --manifest <file> | --dir <dir> [--json]
+                            static linter for experiment manifests,
+                            key=value run configs, and store indexes:
+                            LINT0xx diagnostics without executing a cell
+
+run/sweep/bench also accept --checked: the engine verifies its internal
+invariants (CHK0xx) after every event and aborts with a structured
+report on violation; results are byte-identical to unchecked runs.
 
 flags accept both `--key value` and `--key=value`.
 ";
@@ -325,6 +346,9 @@ fn cmd_topo(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    if bool_flag(flags, "checked") {
+        analysis::checked::set_enabled(true);
+    }
     let mut builder = RunSpec::builder();
     for key in [
         "bench", "size", "sched", "policy", "mem", "bind", "cores", "threads", "topo", "seed",
@@ -447,6 +471,9 @@ fn cmd_gains(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
+    if bool_flag(flags, "checked") {
+        analysis::checked::set_enabled(true);
+    }
     let path = flags.get("manifest").context("sweep: need --manifest <file>")?;
     let mut manifest = ExperimentManifest::load(Path::new(path))?;
     if let Some(seed) = flags.get("seed") {
@@ -572,6 +599,9 @@ fn cmd_bench(flags: &HashMap<String, String>, positionals: &[String]) -> Result<
     if bool_flag(flags, "compare") {
         return cmd_bench_compare(flags, positionals);
     }
+    if bool_flag(flags, "checked") {
+        analysis::checked::set_enabled(true);
+    }
     if !positionals.is_empty() {
         bail!(
             "bench: positional arguments are only used with --compare <old.json> <new.json> \
@@ -669,6 +699,60 @@ fn cmd_bench_compare(flags: &HashMap<String, String>, positionals: &[String]) ->
             cmp.drifted,
             if opts.fail_on_drift { " (--fail-on-drift)" } else { "" }
         );
+    }
+    Ok(())
+}
+
+/// `numanos vet [scheduler] | --all`: the scheduler contract checker
+/// ([`analysis::vet`]).  Exits non-zero on any error-severity finding.
+fn cmd_vet(flags: &HashMap<String, String>, positionals: &[String]) -> Result<()> {
+    let all = bool_flag(flags, "all");
+    let (diags, vetted) = match (all, positionals.first()) {
+        (true, Some(_)) => bail!("vet: give a scheduler name or --all, not both"),
+        (true, None) => (analysis::vet::vet_all()?, sched::scheduler_names().len()),
+        (false, Some(name)) => (analysis::vet::vet_scheduler(name)?, 1),
+        (false, None) => bail!("vet: need a scheduler name or --all (try `numanos list`)"),
+    };
+    if bool_flag(flags, "json") {
+        print!("{}", analysis::diagnostics_to_json(&diags).to_pretty());
+    } else if diags.is_empty() {
+        println!("vet: {vetted} scheduler(s) clean");
+    } else {
+        print!("{}", analysis::render_table(&diags));
+    }
+    let errors = analysis::error_count(&diags);
+    if errors > 0 {
+        bail!("vet: {errors} contract violation(s) ({} finding(s) total)", diags.len());
+    }
+    Ok(())
+}
+
+/// `numanos lint --manifest <file> | --dir <dir>`: the static input
+/// linter ([`analysis::lint`]).  Exits non-zero on any error finding.
+fn cmd_lint(flags: &HashMap<String, String>) -> Result<()> {
+    let diags = match (flags.get("manifest"), flags.get("dir")) {
+        (Some(_), Some(_)) => bail!("lint: give --manifest or --dir, not both"),
+        (Some(file), None) => {
+            let path = Path::new(file);
+            if path.extension().and_then(|e| e.to_str()) == Some("conf") {
+                analysis::lint::lint_config(path)
+            } else {
+                analysis::lint::lint_manifest(path)
+            }
+        }
+        (None, Some(dir)) => analysis::lint::lint_dir(Path::new(dir))?,
+        (None, None) => bail!("lint: need --manifest <file> or --dir <dir>"),
+    };
+    if bool_flag(flags, "json") {
+        print!("{}", analysis::diagnostics_to_json(&diags).to_pretty());
+    } else if diags.is_empty() {
+        println!("lint: clean");
+    } else {
+        print!("{}", analysis::render_table(&diags));
+    }
+    let errors = analysis::error_count(&diags);
+    if errors > 0 {
+        bail!("lint: {errors} error(s) ({} finding(s) total)", diags.len());
     }
     Ok(())
 }

@@ -1,0 +1,298 @@
+//! Integration tests for the static-analysis subsystem: vet diagnostics
+//! against intentionally-broken schedulers, registration hardening, and
+//! checked-mode byte-parity.
+//!
+//! The broken schedulers register once per test binary under `vetbad-*`
+//! names; `numanos::analysis::vet::vet_scheduler` is called per name so
+//! the builtin clean-pass assertions stay independent of them.
+
+use std::cell::Cell;
+use std::sync::Once;
+
+use numanos::analysis::{checked, vet};
+use numanos::coordinator::sched::{
+    register, ParamInfo, SchedDescriptor, Scheduler, SchedulerInfo, StealCand, VictimList,
+};
+use numanos::spec::{RunSpec, Session};
+use numanos::util::SplitMix64;
+
+/// All twelve builtins, as pinned by the registry tests.
+const BUILTINS: &[&str] = &[
+    "serial",
+    "bf",
+    "cilk",
+    "wf",
+    "dfwspt",
+    "dfwsrpt",
+    "hops-threshold",
+    "hier",
+    "numa-home",
+    "numa-steal",
+    "numa-adapt",
+    "adaptive",
+];
+
+fn emit_all(vl: &VictimList, out: &mut Vec<usize>) {
+    for (_, g) in &vl.groups {
+        out.extend(g.iter().copied());
+    }
+}
+
+/// Duplicates the first steal candidate — `steal_bias` may only reorder
+/// or filter (VET005).
+struct DupVictimBias;
+
+impl Scheduler for DupVictimBias {
+    fn name(&self) -> &str {
+        "vetbad-dup-bias"
+    }
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor { places: true, ..SchedDescriptor::WORK_STEALING }
+    }
+    fn victim_order(&self, vl: &VictimList, _rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        emit_all(vl, out);
+    }
+    fn steal_bias(&self, _thief_node: usize, cands: &mut Vec<StealCand>) {
+        if let Some(&c0) = cands.first() {
+            cands.push(c0);
+        }
+    }
+}
+
+/// Emits the first victim twice plus an id that is in nobody's victim
+/// list (VET001 + VET002).
+struct NonPermOrder;
+
+impl Scheduler for NonPermOrder {
+    fn name(&self) -> &str {
+        "vetbad-nonperm"
+    }
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor { full_sweep: false, ..SchedDescriptor::WORK_STEALING }
+    }
+    fn victim_order(&self, vl: &VictimList, _rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        if let Some((_, g)) = vl.groups.first() {
+            out.push(g[0]);
+            out.push(g[0]); // duplicate
+        }
+        out.push(usize::MAX); // never a victim
+    }
+}
+
+/// Declares `observes=false` but changes its victim order once an event
+/// is delivered (VET008).
+struct FalseObserves {
+    poked: Cell<bool>,
+}
+
+impl Scheduler for FalseObserves {
+    fn name(&self) -> &str {
+        "vetbad-false-observes"
+    }
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor { observes: false, ..SchedDescriptor::WORK_STEALING }
+    }
+    fn victim_order(&self, vl: &VictimList, _rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        emit_all(vl, out);
+        if self.poked.get() {
+            out.reverse();
+        }
+    }
+    fn observe(&self, _event: &numanos::coordinator::sched::SchedEvent) {
+        self.poked.set(true);
+    }
+}
+
+/// A well-behaved no-op scheduler whose factory asks for a parameter it
+/// never declared (VET009).
+struct Undeclared;
+
+impl Scheduler for Undeclared {
+    fn name(&self) -> &str {
+        "vetbad-undeclared"
+    }
+    fn descriptor(&self) -> SchedDescriptor {
+        SchedDescriptor::WORK_STEALING
+    }
+    fn victim_order(&self, vl: &VictimList, _rng: &mut SplitMix64, out: &mut Vec<usize>) {
+        emit_all(vl, out);
+    }
+}
+
+/// The runtime checked flag is process-global and libtest runs tests on
+/// parallel threads — every test that flips it holds this lock so the
+/// parity comparison never races another test's `set_enabled`.
+static CHECKED_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn ensure_broken_registered() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        register(
+            SchedulerInfo::new("vetbad-dup-bias", "test: steal_bias duplicates a victim"),
+            |_| Ok(Box::new(DupVictimBias)),
+        )
+        .unwrap();
+        register(
+            SchedulerInfo::new("vetbad-nonperm", "test: non-permutation victim order"),
+            |_| Ok(Box::new(NonPermOrder)),
+        )
+        .unwrap();
+        register(
+            SchedulerInfo::new("vetbad-false-observes", "test: observes=false but reacts"),
+            |_| Ok(Box::new(FalseObserves { poked: Cell::new(false) })),
+        )
+        .unwrap();
+        register(
+            SchedulerInfo::new("vetbad-undeclared", "test: factory wants an undeclared param"),
+            |p| {
+                p.req("ghost")?; // never declared -> build() must fail
+                Ok(Box::new(Undeclared))
+            },
+        )
+        .unwrap();
+    });
+}
+
+fn codes(name: &str) -> Vec<&'static str> {
+    let mut codes: Vec<&'static str> =
+        vet::vet_scheduler(name).unwrap().iter().map(|d| d.code).collect();
+    codes.sort_unstable();
+    codes.dedup();
+    codes
+}
+
+#[test]
+fn all_builtins_vet_clean() {
+    for name in BUILTINS {
+        let diags = vet::vet_scheduler(name).unwrap();
+        assert!(diags.is_empty(), "builtin '{name}' must vet clean, got {diags:?}");
+    }
+}
+
+#[test]
+fn duplicate_bias_victim_fires_vet005() {
+    ensure_broken_registered();
+    let c = codes("vetbad-dup-bias");
+    assert!(c.contains(&"VET005"), "{c:?}");
+    assert!(!c.contains(&"VET004"), "duplicating an offered victim is not injection: {c:?}");
+    assert!(!c.contains(&"VET001"), "the victim order itself is clean: {c:?}");
+}
+
+#[test]
+fn non_permutation_order_fires_vet001_and_vet002() {
+    ensure_broken_registered();
+    let c = codes("vetbad-nonperm");
+    assert!(c.contains(&"VET001"), "{c:?}");
+    assert!(c.contains(&"VET002"), "{c:?}");
+}
+
+#[test]
+fn false_observes_declaration_fires_vet008() {
+    ensure_broken_registered();
+    let c = codes("vetbad-false-observes");
+    assert!(c.contains(&"VET008"), "{c:?}");
+    assert!(
+        !c.contains(&"VET011"),
+        "with observe delivered to both replicas the scheduler is deterministic: {c:?}"
+    );
+}
+
+#[test]
+fn undeclared_factory_param_fires_vet009() {
+    ensure_broken_registered();
+    let c = codes("vetbad-undeclared");
+    assert_eq!(c, vec!["VET009"], "build-with-defaults failure is the only finding");
+}
+
+#[test]
+fn vet_rejects_unknown_names() {
+    assert!(vet::vet_scheduler("vetbad-no-such").is_err());
+}
+
+/// Satellite: `register()` now hard-rejects invalid parameter
+/// declarations in release builds too (previously only a `debug_assert`
+/// inside `ParamInfo::bounded`).  The bad declaration is built via the
+/// struct literal so the test exercises the registry's own check.
+#[test]
+fn register_rejects_default_outside_declared_range() {
+    let mut info = SchedulerInfo::new("vetbad-bad-default", "test: default out of range");
+    info.params.push(ParamInfo {
+        name: "k".into(),
+        default: 5.0,
+        min: 0.0,
+        max: 1.0,
+        doc: "broken on purpose".into(),
+    });
+    let err = register(info, |_| Ok(Box::new(Undeclared))).unwrap_err();
+    assert!(err.to_string().contains("outside declared range"), "{err}");
+
+    let mut info = SchedulerInfo::new("vetbad-nan-default", "test: NaN default");
+    info.params.push(ParamInfo {
+        name: "k".into(),
+        default: f64::NAN,
+        min: 0.0,
+        max: 1.0,
+        doc: "broken on purpose".into(),
+    });
+    assert!(register(info, |_| Ok(Box::new(Undeclared))).is_err());
+
+    let mut info = SchedulerInfo::new("vetbad-dup-param", "test: duplicate param names");
+    info.params.push(ParamInfo::new("k", 0.5, "first"));
+    info.params.push(ParamInfo::new("k", 0.7, "second"));
+    let err = register(info, |_| Ok(Box::new(Undeclared))).unwrap_err();
+    assert!(err.to_string().contains("twice"), "{err}");
+}
+
+/// The checked engine observes without perturbing: the same spec run
+/// with the invariant layer on and off produces byte-identical records
+/// (the in-process version of CI's `bench --compare --fail-on-drift`).
+#[test]
+fn checked_mode_is_byte_identical() {
+    let _guard = CHECKED_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let spec = |sched: &str| -> RunSpec {
+        RunSpec::builder()
+            .bench("fib")
+            .size(numanos::config::Size::Small)
+            .sched(numanos::coordinator::sched::SchedSpec::new(sched))
+            .numa()
+            .threads(8)
+            .seed(3)
+            .build()
+            .unwrap()
+    };
+    // numa-adapt exercises placement, mailboxes, steal bias and observe;
+    // dfwsrpt is the stock work-stealing path.
+    for sched in ["dfwsrpt", "numa-adapt"] {
+        let s = spec(sched);
+        checked::set_enabled(false);
+        let plain = Session::new().run(&s).unwrap().to_csv_row();
+        checked::set_enabled(true);
+        let checked_row = Session::new().run(&s).unwrap().to_csv_row();
+        checked::set_enabled(false);
+        assert_eq!(plain, checked_row, "checked mode must not perturb '{sched}'");
+    }
+}
+
+/// A full checked run over every builtin (small spec): no false-positive
+/// invariant reports.
+#[test]
+fn checked_mode_passes_all_builtins() {
+    let _guard = CHECKED_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    checked::set_enabled(true);
+    let session = Session::new();
+    for sched in BUILTINS {
+        let threads = if *sched == "serial" { 1 } else { 4 };
+        let s = RunSpec::builder()
+            .bench("sort")
+            .size(numanos::config::Size::Small)
+            .sched(numanos::coordinator::sched::SchedSpec::new(sched))
+            .numa()
+            .threads(threads)
+            .seed(7)
+            .build()
+            .unwrap();
+        let rec = session.run(&s).unwrap();
+        assert!(rec.stats.makespan > 0, "{sched}");
+    }
+    checked::set_enabled(false);
+}

@@ -176,9 +176,53 @@ fn errors_are_actionable() {
 fn help_lists_commands() {
     let (ok, text) = numanos(&["help"]);
     assert!(ok);
-    for cmd in ["run", "figure", "gains", "topo", "list", "bench", "serve"] {
+    for cmd in ["run", "figure", "gains", "topo", "list", "bench", "serve", "vet", "lint"] {
         assert!(text.contains(cmd), "missing {cmd}");
     }
+}
+
+#[test]
+fn vet_all_builtins_clean() {
+    let (ok, text) = numanos(&["vet", "--all"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("clean"), "{text}");
+    // machine-readable form: an empty JSON array
+    let (ok, text) = numanos(&["vet", "--all", "--json"]);
+    assert!(ok, "{text}");
+    assert_eq!(text.trim(), "[]", "{text}");
+}
+
+#[test]
+fn vet_single_scheduler_and_unknown_name() {
+    let (ok, text) = numanos(&["vet", "numa-adapt"]);
+    assert!(ok, "{text}");
+    let (ok, text) = numanos(&["vet", "bogus-strategy"]);
+    assert!(!ok);
+    assert!(text.contains("unknown scheduler"), "{text}");
+}
+
+#[test]
+fn lint_example_manifest_clean_and_broken_manifest_coded() {
+    let manifest =
+        concat!(env!("CARGO_MANIFEST_DIR"), "/examples/experiment_manifest.json");
+    let (ok, text) = numanos(&["lint", "--manifest", manifest]);
+    assert!(ok, "{text}");
+    assert!(text.contains("clean"), "{text}");
+    // an invalid cell comes back as a stable LINT code, non-zero exit
+    let dir = std::env::temp_dir().join(format!("numanos_cli_lint_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.json");
+    std::fs::write(
+        &bad,
+        r#"{"title": "t", "sweeps": [
+            {"id": "a", "bench": ["fib"], "sched": ["serial"],
+             "bind": ["numa"], "threads": [4], "seeds": [1]}
+        ]}"#,
+    )
+    .unwrap();
+    let (ok, text) = numanos(&["lint", "--manifest", bad.to_str().unwrap()]);
+    assert!(!ok, "{text}");
+    assert!(text.contains("LINT004"), "serial at threads=4 must flag LINT004: {text}");
 }
 
 #[test]
