@@ -15,8 +15,20 @@
 //! | LINT006 | error    | placement hint floor above total machine memory         |
 //! | LINT007 | error    | result-store schema differs from [`STORE_SCHEMA`]       |
 //! | LINT008 | error    | run-config file invalid                                 |
+//! | LINT009 | error    | shard directive malformed, or a hand-written shard-job  |
+//! |         |          | set overlaps / gaps / mixes counts over one manifest    |
+//! | LINT010 | warning  | shard count exceeds the manifest's cell count           |
+//!
+//! Spool job files (manifests carrying a `shards`/`shard`/`merge_of`
+//! directive, see [`crate::store::shard`]) lint like plain manifests:
+//! the directive is stripped before manifest validation, then checked
+//! on its own.  [`lint_dir`] additionally cross-checks every
+//! `"shard": "I/N"` job under the tree as a set, grouped by the
+//! fingerprint of the stripped manifest's cell sequence, so an
+//! overlapping or gapped hand-written partition is caught before any
+//! process runs.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::path::Path;
 
 use anyhow::Result;
@@ -27,19 +39,61 @@ use crate::config::RunConfig;
 use crate::coordinator::sched::{resolve_name, scheduler_infos, SchedSpec};
 use crate::serde::Json;
 use crate::simnuma::{CostModel, PAGE_BYTES};
-use crate::spec::{BindSpec, ExperimentManifest, RunSpec};
-use crate::store::STORE_SCHEMA;
+use crate::spec::{BindSpec, ExperimentManifest, RunSpec, ShardPlan};
+use crate::store::shard::{classify_job, JobKind};
+use crate::store::{cells_fingerprint, STORE_SCHEMA};
 use crate::topology::Topology;
 
-/// Lint one experiment manifest (JSON or TOML).
+/// Lint one experiment manifest (JSON or TOML) — or a spool job file
+/// carrying a shard directive on top of one.
 pub fn lint_manifest(path: &Path) -> Vec<Diagnostic> {
+    lint_manifest_inner(path).0
+}
+
+/// What a `"shard": "I/N"` job file declares — collected by
+/// [`lint_dir`] so hand-written shard sets are cross-checked as a
+/// group.
+struct ShardJobInfo {
+    path: String,
+    /// Fingerprint of the stripped manifest's flattened cell sequence
+    /// ([`cells_fingerprint`]) — shard files of one logical manifest
+    /// group by this, whatever their spelling.
+    fnv: String,
+    plan: ShardPlan,
+}
+
+fn lint_manifest_inner(path: &Path) -> (Vec<Diagnostic>, Option<ShardJobInfo>) {
     let subject = path.display().to_string();
     let mut diags = Vec::new();
-    let manifest = match ExperimentManifest::load(path) {
-        Ok(m) => m,
+    let doc = match load_doc(path) {
+        Ok(d) => d,
         Err(e) => {
             diags.push(Diagnostic::error("LINT001", &subject, "-", format!("{e:#}")));
-            return diags;
+            return (diags, None);
+        }
+    };
+    let (kind, stripped) = match classify_job(&doc) {
+        Ok(split) => split,
+        Err(e) => {
+            diags.push(Diagnostic::error(
+                "LINT009",
+                &subject,
+                "-",
+                format!("shard directive: {e:#}"),
+            ));
+            return (diags, None);
+        }
+    };
+    let manifest = match ExperimentManifest::from_json(&stripped) {
+        Ok(m) => m,
+        Err(e) => {
+            diags.push(Diagnostic::error(
+                "LINT001",
+                &subject,
+                "-",
+                format!("manifest {}: {e:#}", path.display()),
+            ));
+            return (diags, None);
         }
     };
     let mut seen: HashMap<String, String> = HashMap::new();
@@ -78,7 +132,49 @@ pub fn lint_manifest(path: &Path) -> Vec<Diagnostic> {
             }
         }
     }
-    diags
+    // shard-plan checks against the flattened cell count; only possible
+    // when every sweep expanded (axis errors above already reported)
+    let mut info = None;
+    if let Ok(cells) = manifest.all_cells() {
+        let declared = match kind {
+            JobKind::Fanout(n) => Some(n),
+            JobKind::Shard(plan) => Some(plan.count),
+            JobKind::Plain | JobKind::Merge(_) => None,
+        };
+        if let Some(n) = declared {
+            if n > cells.len() {
+                diags.push(Diagnostic::warning(
+                    "LINT010",
+                    &subject,
+                    "-",
+                    format!(
+                        "shard count {n} exceeds the manifest's {} cell(s) — {} shard(s) \
+                         will own nothing",
+                        cells.len(),
+                        n - cells.len()
+                    ),
+                ));
+            }
+        }
+        if let JobKind::Shard(plan) = kind {
+            if let Ok(fnv) = cells_fingerprint(&cells) {
+                info = Some(ShardJobInfo { path: subject, fnv, plan });
+            }
+        }
+    }
+    (diags, info)
+}
+
+/// Read and parse a manifest / job document — TOML by extension, JSON
+/// otherwise — without interpreting its keys.
+fn load_doc(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    if path.extension().and_then(|e| e.to_str()) == Some("toml") {
+        crate::serde::toml::parse(&text)
+    } else {
+        Json::parse(&text)
+    }
 }
 
 /// One cell's full identity — every axis that changes simulated output.
@@ -254,9 +350,13 @@ pub fn lint_store_index(path: &Path) -> Vec<Diagnostic> {
 /// Lint everything recognizable under a directory (recursive):
 /// `*.json`/`*.toml` manifests (identified by a top-level `sweeps`
 /// key — other JSON files are skipped), `*.conf` run configs, and
-/// `index.json` store indexes.
+/// `index.json` store indexes.  `"shard": "I/N"` job files are
+/// additionally cross-checked as a set per manifest fingerprint —
+/// mixed counts, overlapping indices, and gapped partitions are
+/// LINT009 errors.
 pub fn lint_dir(dir: &Path) -> Result<Vec<Diagnostic>> {
     let mut diags = Vec::new();
+    let mut shard_jobs: Vec<ShardJobInfo> = Vec::new();
     let mut stack = vec![dir.to_path_buf()];
     let mut scanned = 0usize;
     while let Some(d) = stack.pop() {
@@ -278,7 +378,9 @@ pub fn lint_dir(dir: &Path) -> Result<Vec<Diagnostic>> {
                 diags.extend(lint_config(&path));
                 scanned += 1;
             } else if (ext == "json" || ext == "toml") && looks_like_manifest(&path) {
-                diags.extend(lint_manifest(&path));
+                let (d, info) = lint_manifest_inner(&path);
+                diags.extend(d);
+                shard_jobs.extend(info);
                 scanned += 1;
             }
         }
@@ -286,7 +388,73 @@ pub fn lint_dir(dir: &Path) -> Result<Vec<Diagnostic>> {
     if scanned == 0 {
         anyhow::bail!("no manifests, configs, or store indexes under {}", dir.display());
     }
+    lint_shard_sets(&mut diags, dir, shard_jobs);
     Ok(diags)
+}
+
+/// Cross-check hand-written shard-job sets: every `"shard": "I/N"` file
+/// of one manifest (same cell-sequence fingerprint) must use one count
+/// and claim each index exactly once — otherwise a multi-process run
+/// silently double-executes or drops cells and the merge can't see it.
+fn lint_shard_sets(diags: &mut Vec<Diagnostic>, dir: &Path, jobs: Vec<ShardJobInfo>) {
+    let subject = dir.display().to_string();
+    let mut groups: BTreeMap<String, Vec<ShardJobInfo>> = BTreeMap::new();
+    for job in jobs {
+        groups.entry(job.fnv.clone()).or_default().push(job);
+    }
+    for (fnv, mut jobs) in groups {
+        jobs.sort_by(|a, b| a.path.cmp(&b.path));
+        let ctx = format!("shard set (cells fnv {fnv})");
+        let counts: BTreeSet<usize> = jobs.iter().map(|j| j.plan.count).collect();
+        if counts.len() > 1 {
+            let specs: Vec<String> =
+                jobs.iter().map(|j| format!("{} ({})", j.path, j.plan.spec())).collect();
+            diags.push(Diagnostic::error(
+                "LINT009",
+                &subject,
+                &ctx,
+                format!(
+                    "mixed shard counts over one manifest — the partitions disagree: {}",
+                    specs.join(", ")
+                ),
+            ));
+            continue;
+        }
+        let count = *counts.iter().next().expect("non-empty group");
+        let mut by_index: BTreeMap<usize, Vec<&str>> = BTreeMap::new();
+        for job in &jobs {
+            by_index.entry(job.plan.index).or_default().push(&job.path);
+        }
+        for (index, files) in &by_index {
+            if files.len() > 1 {
+                diags.push(Diagnostic::error(
+                    "LINT009",
+                    &subject,
+                    &ctx,
+                    format!(
+                        "overlapping partition: shard {index}/{count} is claimed by {} \
+                         files ({}) — its cells would execute twice",
+                        files.len(),
+                        files.join(", ")
+                    ),
+                ));
+            }
+        }
+        let missing: Vec<String> =
+            (0..count).filter(|i| !by_index.contains_key(i)).map(|i| i.to_string()).collect();
+        if !missing.is_empty() {
+            diags.push(Diagnostic::error(
+                "LINT009",
+                &subject,
+                &ctx,
+                format!(
+                    "gapped partition: no job file claims shard(s) {} of {count} — a \
+                     merge over this set would re-execute their cells",
+                    missing.join(", ")
+                ),
+            ));
+        }
+    }
 }
 
 /// A file is treated as a manifest when it parses to an object with a
@@ -413,5 +581,133 @@ mod tests {
             let diags = lint_manifest(&p);
             assert!(diags.is_empty(), "{diags:?}");
         }
+    }
+
+    #[test]
+    fn malformed_shard_directive_flagged() {
+        for (name, text) in [
+            ("bad_spec.json", r#"{"title": "t", "sweeps": [], "shard": "5/3"}"#),
+            ("bad_count.json", r#"{"title": "t", "sweeps": [], "shards": 0}"#),
+            ("both.json", r#"{"title": "t", "sweeps": [], "shards": 3, "shard": "0/3"}"#),
+        ] {
+            let p = tmp(name, text);
+            let diags = lint_manifest(&p);
+            assert!(diags.iter().any(|d| d.code == "LINT009"), "{name}: {diags:?}");
+        }
+    }
+
+    #[test]
+    fn shard_job_lints_like_the_plain_manifest() {
+        // the directive key must not trip LINT001's unknown-key check,
+        // and cell-level checks still run on the stripped manifest
+        let p = tmp(
+            "sharded_ok.json",
+            r#"{"title": "t", "sweeps": [
+                {"id": "a", "title": "a", "bench": ["fib"],
+                 "sched": ["wf"], "bind": ["numa"], "threads": [4], "seeds": [1]}
+            ], "shard": "0/1"}"#,
+        );
+        assert!(lint_manifest(&p).is_empty());
+        let p = tmp(
+            "sharded_bad_cell.json",
+            r#"{"title": "t", "sweeps": [
+                {"id": "a", "title": "a", "bench": ["fib"], "topo": "quad",
+                 "sched": ["wf"], "bind": ["numa"], "threads": [64], "seeds": [1]}
+            ], "shards": 2}"#,
+        );
+        let diags = lint_manifest(&p);
+        assert!(diags.iter().any(|d| d.code == "LINT004"), "{diags:?}");
+    }
+
+    #[test]
+    fn oversized_shard_count_warns() {
+        let p = tmp(
+            "toomany.json",
+            r#"{"title": "t", "sweeps": [
+                {"id": "a", "title": "a", "bench": ["fib"],
+                 "sched": ["wf"], "bind": ["numa"], "threads": [2, 4], "seeds": [1]}
+            ], "shards": 7}"#,
+        );
+        let diags = lint_manifest(&p);
+        assert!(diags.iter().any(|d| d.code == "LINT010"), "{diags:?}");
+        assert_eq!(error_count(&diags), 0, "LINT010 is a warning: {diags:?}");
+    }
+
+    /// A fresh directory per test — the shared `tmp()` dir accumulates
+    /// other tests' deliberately-broken files, which `lint_dir` would
+    /// also pick up.
+    fn shard_set_dir(name: &str, files: &[(&str, &str)]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("numanos_lint_shardset_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for (file, text) in files {
+            std::fs::write(dir.join(file), text).unwrap();
+        }
+        dir
+    }
+
+    fn shard_job(spec: &str) -> String {
+        format!(
+            r#"{{"title": "t", "sweeps": [
+                {{"id": "a", "title": "a", "bench": ["fib"],
+                 "sched": ["wf"], "bind": ["numa"], "threads": [2, 4, 8], "seeds": [1]}}
+            ], "shard": "{spec}"}}"#
+        )
+    }
+
+    #[test]
+    fn clean_shard_set_passes_dir_lint() {
+        let dir = shard_set_dir(
+            "clean",
+            &[
+                ("s0.json", &shard_job("0/3")),
+                ("s1.json", &shard_job("1/3")),
+                ("s2.json", &shard_job("2/3")),
+            ],
+        );
+        let diags = lint_dir(&dir).unwrap();
+        assert!(diags.is_empty(), "{diags:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gapped_and_overlapping_shard_sets_flagged() {
+        let dir = shard_set_dir(
+            "gap",
+            &[("s0.json", &shard_job("0/3")), ("s2.json", &shard_job("2/3"))],
+        );
+        let diags = lint_dir(&dir).unwrap();
+        assert!(
+            diags.iter().any(|d| d.code == "LINT009" && d.message.contains("gapped")),
+            "{diags:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let dir = shard_set_dir(
+            "overlap",
+            &[
+                ("s0.json", &shard_job("0/2")),
+                ("s0b.json", &shard_job("0/2")),
+                ("s1.json", &shard_job("1/2")),
+            ],
+        );
+        let diags = lint_dir(&dir).unwrap();
+        assert!(
+            diags.iter().any(|d| d.code == "LINT009" && d.message.contains("overlapping")),
+            "{diags:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let dir = shard_set_dir(
+            "mixed",
+            &[("s0.json", &shard_job("0/2")), ("s1.json", &shard_job("1/3"))],
+        );
+        let diags = lint_dir(&dir).unwrap();
+        assert!(
+            diags.iter().any(|d| d.code == "LINT009" && d.message.contains("mixed")),
+            "{diags:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -76,13 +76,27 @@ impl Workload for Alignment {
                 let lo = desc.args[0] as u64;
                 let hi = desc.args[1] as u64;
                 ctx.compute(40);
+                // every spawn is hinted with the first sequence its
+                // sub-range reads — the OpenMP `affinity(seqs[i])`
+                // annotation.  Purely advisory: each sequence is far
+                // below the placement schedulers' default min-hint
+                // floor, so stock policies behave exactly as before.
                 if hi - lo > 4 {
                     let mid = (lo + hi) / 2;
-                    ctx.spawn(TaskDesc::new(K_SPLIT, [lo as i64, mid as i64, 0, 0]));
-                    ctx.spawn(TaskDesc::new(K_SPLIT, [mid as i64, hi as i64, 0, 0]));
+                    ctx.spawn_on(
+                        TaskDesc::new(K_SPLIT, [lo as i64, mid as i64, 0, 0]),
+                        self.seqs[self.unpack(lo).0],
+                    );
+                    ctx.spawn_on(
+                        TaskDesc::new(K_SPLIT, [mid as i64, hi as i64, 0, 0]),
+                        self.seqs[self.unpack(mid).0],
+                    );
                 } else {
                     for p in lo..hi {
-                        ctx.spawn(TaskDesc::new(K_PAIR, [p as i64, 0, 0, 0]));
+                        ctx.spawn_on(
+                            TaskDesc::new(K_PAIR, [p as i64, 0, 0, 0]),
+                            self.seqs[self.unpack(p).0],
+                        );
                     }
                 }
             }

@@ -77,11 +77,18 @@ impl Workload for Floorplan {
         if b == 0 {
             return; // pruned / leaf
         }
+        // children are hinted with the shared catalogue they all read —
+        // the OpenMP `affinity(board)` annotation.  Purely advisory: the
+        // 8 KB board sits below the placement schedulers' default
+        // min-hint floor, so stock policies behave exactly as before.
         for c in 0..b {
-            ctx.spawn(TaskDesc::new(
-                0,
-                [(node * self.max_branch as u64 + c as u64 + 1) as i64, depth as i64 + 1, 0, 0],
-            ));
+            ctx.spawn_on(
+                TaskDesc::new(
+                    0,
+                    [(node * self.max_branch as u64 + c as u64 + 1) as i64, depth as i64 + 1, 0, 0],
+                ),
+                self.board,
+            );
         }
         ctx.taskwait();
         ctx.compute(300); // fold children's best bound

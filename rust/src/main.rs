@@ -37,8 +37,8 @@ use numanos::harness;
 use numanos::serde::Json;
 use numanos::simnuma::CostModel;
 use numanos::spec::session::default_workers;
-use numanos::spec::{parse_cost_pairs, ExperimentManifest, RunSpec, Session};
-use numanos::store::{serve, ResultStore};
+use numanos::spec::{parse_cost_pairs, ExperimentManifest, RunSpec, Session, ShardPlan};
+use numanos::store::{serve, shard, ResultStore};
 use numanos::topology::Topology;
 use numanos::util::fmt_time;
 
@@ -69,8 +69,14 @@ const COMMANDS: &[(&str, &[&str], &[&str], usize)] = &[
     ("gains", &["size", "seed", "cost"], &["json"], 0),
     (
         "sweep",
-        &["manifest", "out", "workers", "seed", "store"],
+        &["manifest", "out", "workers", "seed", "store", "shard"],
         &["json", "seq", "resume", "no-cache", "checked"],
+        0,
+    ),
+    (
+        "merge",
+        &["manifest", "store", "out", "workers", "seed"],
+        &["json", "seq", "merge-strict", "checked"],
         0,
     ),
     ("serve", &["store", "spool", "poll-ms", "workers"], &["once"], 0),
@@ -181,6 +187,7 @@ fn run() -> Result<()> {
         "figure" => cmd_figure(&flags),
         "gains" => cmd_gains(&flags),
         "sweep" => cmd_sweep(&flags),
+        "merge" => cmd_merge(&flags),
         "serve" => cmd_serve(&flags),
         "bench" => cmd_bench(&flags, &positionals),
         "vet" => cmd_vet(&flags, &positionals),
@@ -227,14 +234,35 @@ commands:
                              interrupted sweep from its records)
          [--no-cache]        with --store: re-execute every cell but
                              refresh the store's records
+         [--shard I/N]       execute only the cells whose global index
+                             ≡ I (mod N) — deterministic partition of
+                             the flattened cell sequence, stable across
+                             processes; needs --store (that's where the
+                             records land) and publishes a completion
+                             marker under <store>/shards/; assemble the
+                             full output with `numanos merge`
+  merge  --manifest <file> --store <dir>
+         [--out dir] [--json] [--seq] [--workers N] [--seed S]
+                            assemble sharded sweeps: re-run the full
+                            manifest against the shards' shared store
+                            (100% cache hits when every shard finished)
+                            and emit CSV/JSON byte-identical to a
+                            sequential single-process sweep; reports
+                            the shard-marker census first
+         [--merge-strict]    fail on missing/stale shard markers or any
+                             cache miss instead of re-executing cells
   serve  --store <dir> --spool <dir> [--poll-ms N] [--workers N] [--once]
                             watch the spool for dropped manifest files,
                             execute each through the shared store, write
                             <job>.result.json + <job>.receipt.json
                             (manifest FNV hash, per-sweep hit/miss
                             counts, wall time), then move the job to
-                            done/ or failed/; --once processes the
-                            current backlog and exits
+                            done/ or failed/; --once drains the backlog
+                            (to a fixpoint, so fanned-out work finishes
+                            too) and exits; a job carrying \"shards\": N
+                            fans out into N shard items plus a merge
+                            item gated on their receipts — a
+                            hostfile-free multi-process driver
   bench  [--filter G] [--reps N] [--out file.json] [--json]
                             run the pinned perf-trajectory suite (paper
                             figures + strategy ablation + hot-loop
@@ -256,7 +284,7 @@ commands:
                             key=value run configs, and store indexes:
                             LINT0xx diagnostics without executing a cell
 
-run/sweep/bench also accept --checked: the engine verifies its internal
+run/sweep/merge/bench also accept --checked: the engine verifies its internal
 invariants (CHK0xx) after every event and aborts with a structured
 report on violation; results are byte-identical to unchecked runs.
 
@@ -489,7 +517,19 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
     } else {
         default_workers()
     };
+    let shard_plan = flags
+        .get("shard")
+        .map(|s| ShardPlan::parse(s))
+        .transpose()
+        .context("sweep: --shard")?;
     let out_dir = flags.get("out").cloned();
+    if shard_plan.is_some() && (out_dir.is_some() || bool_flag(flags, "json")) {
+        bail!(
+            "sweep: --shard runs a partial slice, so per-sweep CSV/JSON would be partial \
+             too; run `numanos merge --manifest <file> --store <dir>` after the shards \
+             finish to get the full output"
+        );
+    }
     if let Some(d) = &out_dir {
         std::fs::create_dir_all(d)?;
     }
@@ -502,6 +542,14 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
                 bail!("sweep: --resume re-uses cached cells, --no-cache forbids that; pick one");
             }
             if resume && !Path::new(dir).join("index.json").exists() {
+                if let Some(spec) = flags.get("shard") {
+                    bail!(
+                        "sweep: --resume with --shard {spec} expects the shards' shared \
+                         store at '{dir}' to exist already (no index.json found); start \
+                         the first shard pass without --resume — any shard may create \
+                         the store"
+                    );
+                }
                 bail!(
                     "sweep: --resume expects an existing store at '{dir}' (no index.json \
                      found — nothing to resume)"
@@ -512,6 +560,13 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             Some(store)
         }
         None => {
+            if let Some(plan) = shard_plan {
+                bail!(
+                    "sweep: --shard {} needs --store <dir> — the shared store is where \
+                     this shard's cells land for `numanos merge` to assemble",
+                    plan.spec()
+                );
+            }
             if resume {
                 bail!("sweep: --resume needs --store <dir> (the store to resume from)");
             }
@@ -521,11 +576,63 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             None
         }
     };
-    let json = bool_flag(flags, "json");
+    if let Some(plan) = shard_plan {
+        let store = store.as_ref().expect("checked above");
+        let t0 = std::time::Instant::now();
+        let before = store.counters();
+        let summary = shard::run_manifest_shard(&session, store, &manifest, plan, workers)?;
+        for s in &summary.sweeps {
+            eprintln!(
+                "[sweep '{}' shard {}: {} of {} cell(s) owned]",
+                s.id,
+                plan.spec(),
+                s.owned,
+                s.owned + s.skipped
+            );
+        }
+        let a = store.counters();
+        eprintln!(
+            "[shard {}: {} of {} cell(s) in {:.1}s on {workers} worker(s), cache: {} hit / \
+             {} miss / {} written; marker shards/{}.json, cells fnv {}]",
+            plan.spec(),
+            summary.owned_cells,
+            summary.total_cells,
+            t0.elapsed().as_secs_f64(),
+            a.hits - before.hits,
+            a.misses - before.misses,
+            a.writes - before.writes,
+            plan.name(),
+            summary.manifest_fnv
+        );
+        return Ok(());
+    }
+    run_manifest_sweeps(
+        &session,
+        &manifest,
+        workers,
+        out_dir.as_deref(),
+        bool_flag(flags, "json"),
+        store.as_ref(),
+        "sweep",
+    )
+}
+
+/// The shared per-sweep execution + output loop behind `numanos sweep`
+/// and `numanos merge`: tables (or collected JSON) to stdout, per-sweep
+/// CSV/MD files under `out_dir`, cache-counter summaries to stderr.
+fn run_manifest_sweeps(
+    session: &Session,
+    manifest: &ExperimentManifest,
+    workers: usize,
+    out_dir: Option<&str>,
+    json: bool,
+    store: Option<&std::sync::Arc<ResultStore>>,
+    verb: &str,
+) -> Result<()> {
     let mut json_sweeps = Vec::new();
     for sweep in &manifest.sweeps {
         let t0 = std::time::Instant::now();
-        let before = store.as_ref().map(|s| s.counters());
+        let before = store.map(|s| s.counters());
         let result = session.run_sweep_with(sweep, workers)?;
         let cache_note = match (&store, before) {
             (Some(s), Some(b)) => {
@@ -540,7 +647,7 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             _ => String::new(),
         };
         eprintln!(
-            "[sweep '{}': {} cells in {:.1}s on {workers} worker(s){cache_note}]",
+            "[{verb} '{}': {} cells in {:.1}s on {workers} worker(s){cache_note}]",
             sweep.id,
             result.records.len(),
             t0.elapsed().as_secs_f64()
@@ -550,16 +657,16 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
         } else {
             println!("{}", result.table().to_markdown());
         }
-        if let Some(d) = &out_dir {
+        if let Some(d) = out_dir {
             std::fs::write(format!("{d}/{}.csv", sweep.id), result.to_csv())?;
             std::fs::write(format!("{d}/{}.md", sweep.id), result.table().to_markdown())?;
         }
     }
-    if let Some(s) = &store {
+    if let Some(s) = store {
         let c = s.counters();
         if c.quarantined > 0 {
             eprintln!(
-                "[sweep: {} corrupt store record(s) quarantined under '{}/quarantine' and \
+                "[{verb}: {} corrupt store record(s) quarantined under '{}/quarantine' and \
                  re-executed]",
                 c.quarantined,
                 s.root().display()
@@ -572,6 +679,115 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             ("sweeps", Json::Arr(json_sweeps)),
         ]);
         print!("{}", doc.to_pretty());
+    }
+    Ok(())
+}
+
+/// `numanos merge`: re-run a full manifest against the shards' shared
+/// store — 100% cache hits when every shard finished — and emit the
+/// CSV/JSON a sequential single-process sweep would have produced, byte
+/// for byte.  Reports the shard-marker census first; `--merge-strict`
+/// turns missing/stale markers or any cache miss into a hard failure.
+fn cmd_merge(flags: &HashMap<String, String>) -> Result<()> {
+    if bool_flag(flags, "checked") {
+        analysis::checked::set_enabled(true);
+    }
+    let path = flags.get("manifest").context("merge: need --manifest <file>")?;
+    let mut manifest = ExperimentManifest::load(Path::new(path))?;
+    if let Some(seed) = flags.get("seed") {
+        let seed: u64 = seed.parse().context("seed")?;
+        for s in &mut manifest.sweeps {
+            s.seeds = vec![seed];
+        }
+    }
+    let workers = if bool_flag(flags, "seq") {
+        1
+    } else if let Some(w) = flags.get("workers") {
+        w.parse::<usize>().context("workers")?.max(1)
+    } else {
+        default_workers()
+    };
+    let dir = flags
+        .get("store")
+        .context("merge: need --store <dir> (the shards' shared store)")?;
+    if !Path::new(dir).join("index.json").exists() {
+        bail!(
+            "merge: no store at '{dir}' (no index.json found); run the shards first \
+             (`numanos sweep --manifest {path} --shard I/N --store {dir}`)"
+        );
+    }
+    let store = std::sync::Arc::new(ResultStore::open(Path::new(dir))?);
+    let strict = bool_flag(flags, "merge-strict");
+    let fnv = shard::manifest_fingerprint(&manifest)?;
+    let status = shard::shard_status(&store, &fnv);
+    let stale_note = if status.stale.is_empty() {
+        String::new()
+    } else {
+        format!(", stale marker(s): {}", status.stale.join(", "))
+    };
+    match status.count {
+        Some(n) => {
+            let missing_note = if status.missing.is_empty() {
+                String::new()
+            } else {
+                let list: Vec<String> =
+                    status.missing.iter().map(|i| i.to_string()).collect();
+                format!(", missing shard(s): {}", list.join(", "))
+            };
+            eprintln!(
+                "[merge: {} of {n} shard marker(s) present for cells fnv \
+                 {fnv}{missing_note}{stale_note}]",
+                status.present.len()
+            );
+        }
+        None => eprintln!("[merge: no shard markers match cells fnv {fnv}{stale_note}]"),
+    }
+    if strict {
+        if status.count.is_none() {
+            bail!(
+                "merge --merge-strict: no shard markers for this manifest under \
+                 '{dir}/shards'{stale_note}"
+            );
+        }
+        if !status.missing.is_empty() {
+            let list: Vec<String> = status.missing.iter().map(|i| i.to_string()).collect();
+            bail!(
+                "merge --merge-strict: shard(s) {} of {} have not completed",
+                list.join(", "),
+                status.count.unwrap_or(0)
+            );
+        }
+        if !status.stale.is_empty() {
+            bail!(
+                "merge --merge-strict: stale shard marker(s) {} — the store was sharded \
+                 for a different manifest",
+                status.stale.join(", ")
+            );
+        }
+    }
+    let mut session = Session::new();
+    session.set_store(store.clone(), true);
+    let out_dir = flags.get("out").cloned();
+    if let Some(d) = &out_dir {
+        std::fs::create_dir_all(d)?;
+    }
+    let before = store.counters();
+    run_manifest_sweeps(
+        &session,
+        &manifest,
+        workers,
+        out_dir.as_deref(),
+        bool_flag(flags, "json"),
+        Some(&store),
+        "merge",
+    )?;
+    let after = store.counters();
+    if strict && after.misses > before.misses {
+        bail!(
+            "merge --merge-strict: {} cell(s) missed the store and re-executed (shards \
+             incomplete, stale, or quarantined records)",
+            after.misses - before.misses
+        );
     }
     Ok(())
 }

@@ -20,8 +20,8 @@ pub mod session;
 pub mod sweep;
 
 pub use manifest::ExperimentManifest;
-pub use session::{RunRecord, Session};
-pub use sweep::{Sweep, SweepResult};
+pub use session::{RunRecord, Session, ShardOutcome};
+pub use sweep::{ShardPlan, Sweep, SweepResult};
 
 use anyhow::{bail, Context, Result};
 

@@ -17,7 +17,10 @@
 //! every cell is an independent, deterministic simulation whose seed comes
 //! from its [`RunSpec`], so a parallel sweep produces byte-identical
 //! CSV/tables to a sequential one ([`Session::run_sweep_with`] with
-//! `workers = 1`).
+//! `workers = 1`).  [`Session::run_sweep_sharded`] extends the same
+//! contract across *processes*: a [`ShardPlan`] partitions the flattened
+//! cell sequence, and the shared result store is the merge substrate
+//! (`crate::store::shard`).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -36,7 +39,7 @@ use crate::metrics::RunStats;
 use crate::runtime::ExecEngine;
 use crate::serde::Json;
 use crate::simnuma::{CostModel, MemSim, MemSpec, PAGE_BYTES};
-use crate::spec::sweep::{Sweep, SweepResult};
+use crate::spec::sweep::{ShardPlan, Sweep, SweepResult};
 use crate::spec::{BindSpec, RunSpec};
 use crate::store::ResultStore;
 use crate::topology::Topology;
@@ -143,6 +146,17 @@ impl RunRecord {
 /// Worker count for parallel sweep execution.
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One shard's slice of an executed sweep (see [`ShardPlan`]): the owned
+/// records in cell order, the canonical store identities of the owned
+/// cells (the shard completion marker's payload), and how many cells were
+/// skipped as other shards' property.
+pub struct ShardOutcome {
+    pub result: SweepResult,
+    /// `crate::store::cell_identity` of every owned cell, in cell order.
+    pub owned_ids: Vec<String>,
+    pub skipped: usize,
 }
 
 /// Stateful executor: runtime cache + serial-baseline memo + optional
@@ -362,10 +376,36 @@ impl Session {
 
     /// Run a sweep with an explicit worker count (1 = sequential).
     pub fn run_sweep_with(&self, sweep: &Sweep, workers: usize) -> Result<SweepResult> {
-        let cells = sweep.cells()?;
-        for spec in &cells {
+        Ok(self.run_sweep_sharded(sweep, workers, ShardPlan::full(), 0)?.result)
+    }
+
+    /// Run only the cells of `sweep` that `plan` owns.  `base` is the
+    /// global index of this sweep's first cell within the manifest's
+    /// flattened cell sequence (0 for a standalone sweep); ownership is
+    /// decided on global indices, so a manifest's shards agree on the
+    /// partition regardless of where sweep boundaries fall.  Every cell —
+    /// owned or skipped — is still validated: a shard must not succeed on
+    /// a manifest another shard will reject.
+    pub fn run_sweep_sharded(
+        &self,
+        sweep: &Sweep,
+        workers: usize,
+        plan: ShardPlan,
+        base: usize,
+    ) -> Result<ShardOutcome> {
+        let all = sweep.cells()?;
+        for spec in &all {
             self.validate_spec(spec)?;
         }
+        let mut cells = Vec::with_capacity(plan.owned_of(base + all.len()));
+        let mut owned_ids = Vec::with_capacity(cells.capacity());
+        for (i, spec) in all.iter().enumerate() {
+            if plan.owns(base + i) {
+                owned_ids.push(crate::store::cell_identity(spec)?);
+                cells.push(spec.clone());
+            }
+        }
+        let skipped = all.len() - cells.len();
         // Pre-compute the distinct baselines sequentially so parallel
         // workers only read the memo (and no baseline is computed twice).
         // Cells the store will answer skip this — their records carry the
@@ -401,7 +441,11 @@ impl Session {
             slots.sort_by_key(|(i, _)| *i);
             slots.into_iter().map(|(_, r)| r).collect::<Result<_>>()?
         };
-        Ok(SweepResult { sweep: sweep.clone(), records })
+        Ok(ShardOutcome {
+            result: SweepResult { sweep: sweep.clone(), records },
+            owned_ids,
+            skipped,
+        })
     }
 
     // -----------------------------------------------------------------
@@ -646,6 +690,44 @@ mod tests {
         assert_eq!(a.stats.makespan, b.stats.makespan);
         assert_eq!(a.to_csv_row(), b.to_csv_row());
         assert_eq!(a.to_json().to_compact(), b.to_json().to_compact());
+    }
+
+    #[test]
+    fn sharded_sweep_slices_union_to_the_full_sweep() {
+        let session = Session::new();
+        let sweep = Sweep::new("slice", "slice")
+            .with_bench("fib")
+            .with_config(Policy::WorkFirst, BindPolicy::NumaAware)
+            .with_config(Policy::Dfwsrpt, BindPolicy::NumaAware)
+            .with_threads(vec![2, 4])
+            .with_seed(5)
+            .with_size(crate::config::Size::Small);
+        let full = session.run_sweep_with(&sweep, 2).unwrap();
+        assert_eq!(full.records.len(), 4);
+        // shard at K=3 with a non-zero base offset, reassemble by global
+        // index, and compare row-for-row against the full run
+        let mut rows: Vec<Option<String>> = vec![None; full.records.len()];
+        for i in 0..3 {
+            let plan = ShardPlan::new(i, 3).unwrap();
+            let out = session.run_sweep_sharded(&sweep, 1, plan, 10).unwrap();
+            assert_eq!(out.result.records.len() + out.skipped, 4);
+            assert_eq!(out.owned_ids.len(), out.result.records.len());
+            let mut it = out.result.records.iter();
+            for (g, slot) in rows.iter_mut().enumerate() {
+                if plan.owns(10 + g) {
+                    assert!(slot.is_none(), "cell {g} owned twice");
+                    *slot = Some(it.next().unwrap().to_csv_row());
+                }
+            }
+            assert!(it.next().is_none(), "shard {i} ran cells it does not own");
+        }
+        for (g, row) in rows.iter().enumerate() {
+            assert_eq!(
+                row.as_deref(),
+                Some(full.records[g].to_csv_row().as_str()),
+                "cell {g}"
+            );
+        }
     }
 
     #[test]

@@ -10,6 +10,10 @@
 //! A [`SweepResult`] keeps records in cell order, so its CSV/JSON/table
 //! renderings are deterministic and independent of how many OS threads
 //! executed the cells.
+//!
+//! A [`ShardPlan`] partitions the flattened cell sequence across N
+//! cooperating *processes* (`numanos sweep --shard I/N`); the store is
+//! the merge substrate (`numanos merge`, see `crate::store::shard`).
 
 use anyhow::{bail, Context, Result};
 
@@ -310,6 +314,86 @@ impl Sweep {
         // surface axis errors at load time, not run time
         sweep.cells()?;
         Ok(sweep)
+    }
+}
+
+/// Deterministic partition of a flattened cell sequence across `count`
+/// cooperating processes: shard `index` owns every cell whose *global*
+/// index (its position in the manifest's sweep-by-sweep cell expansion)
+/// is congruent to `index` modulo `count`.
+///
+/// Pure arithmetic over the fixed expansion order, so any two processes
+/// that load identical manifests — in any spelling (JSON vs TOML,
+/// defaulted vs explicit axes) — compute identical plans; the store's
+/// canonical cell identities (`crate::store::cells_fingerprint`) pin
+/// that agreement on disk via the per-shard completion markers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// This process's shard, in `0..count`.
+    pub index: usize,
+    /// Total number of cooperating shards.
+    pub count: usize,
+}
+
+impl ShardPlan {
+    pub fn new(index: usize, count: usize) -> Result<Self> {
+        if count == 0 {
+            bail!("shard count must be at least 1");
+        }
+        if index >= count {
+            bail!("shard index {index} out of range 0..{count}");
+        }
+        Ok(Self { index, count })
+    }
+
+    /// The trivial single-shard plan: owns every cell.
+    pub fn full() -> Self {
+        Self { index: 0, count: 1 }
+    }
+
+    /// Parse the CLI spelling `I/N` (e.g. `--shard 0/3`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let (i, n) = s
+            .split_once('/')
+            .with_context(|| format!("shard spec '{s}' must be I/N (e.g. 0/3)"))?;
+        let index: usize = i
+            .trim()
+            .parse()
+            .with_context(|| format!("shard index in '{s}' must be a non-negative integer"))?;
+        let count: usize = n
+            .trim()
+            .parse()
+            .with_context(|| format!("shard count in '{s}' must be a positive integer"))?;
+        Self::new(index, count).with_context(|| format!("shard spec '{s}'"))
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.count == 1
+    }
+
+    /// Whether this shard owns the cell at `global_index`.
+    pub fn owns(&self, global_index: usize) -> bool {
+        global_index % self.count == self.index
+    }
+
+    /// How many of `total` consecutive cells (from global index 0) this
+    /// shard owns.
+    pub fn owned_of(&self, total: usize) -> usize {
+        if total <= self.index {
+            0
+        } else {
+            (total - self.index - 1) / self.count + 1
+        }
+    }
+
+    /// Marker-file spelling: `I-of-N` (see `<store>/shards/I-of-N.json`).
+    pub fn name(&self) -> String {
+        format!("{}-of-{}", self.index, self.count)
+    }
+
+    /// CLI spelling: `I/N`.
+    pub fn spec(&self) -> String {
+        format!("{}/{}", self.index, self.count)
     }
 }
 
@@ -693,5 +777,46 @@ mod tests {
         // cells() validates lazily at run; from_json eagerly expands once
         let s = Sweep::from_json(&j, &SweepDefaults::default()).unwrap();
         assert!(s.cells().unwrap()[0].validate().is_err());
+    }
+
+    #[test]
+    fn shard_plan_parses_the_cli_spelling() {
+        let p = ShardPlan::parse("1/3").unwrap();
+        assert_eq!(p, ShardPlan { index: 1, count: 3 });
+        assert_eq!(p.name(), "1-of-3");
+        assert_eq!(p.spec(), "1/3");
+        assert!(!p.is_full());
+        assert!(ShardPlan::parse("0/1").unwrap().is_full());
+        for bad in ["", "3", "3/", "/3", "a/3", "1/b", "3/3", "4/3", "0/0", "1/-2"] {
+            assert!(ShardPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+        assert_eq!(ShardPlan::full(), ShardPlan { index: 0, count: 1 });
+    }
+
+    #[test]
+    fn shard_plans_partition_the_global_index_space() {
+        // every global index is owned by exactly one shard, and the
+        // per-shard totals match owned_of — including counts that do
+        // not divide the cell total and counts exceeding it
+        for count in [1usize, 2, 3, 7, 100] {
+            let plans: Vec<ShardPlan> =
+                (0..count).map(|i| ShardPlan::new(i, count).unwrap()).collect();
+            let total = 52;
+            let mut owned = vec![0usize; count];
+            for g in 0..total {
+                let owners: Vec<usize> =
+                    (0..count).filter(|&i| plans[i].owns(g)).collect();
+                assert_eq!(owners.len(), 1, "cell {g} at count {count}");
+                owned[owners[0]] += 1;
+            }
+            for (i, plan) in plans.iter().enumerate() {
+                assert_eq!(plan.owned_of(total), owned[i], "shard {i}/{count}");
+            }
+            assert_eq!(owned.iter().sum::<usize>(), total);
+        }
+        // the 52-cell examples manifest splits 18/17/17 at N=3
+        assert_eq!(ShardPlan::new(0, 3).unwrap().owned_of(52), 18);
+        assert_eq!(ShardPlan::new(1, 3).unwrap().owned_of(52), 17);
+        assert_eq!(ShardPlan::new(2, 3).unwrap().owned_of(52), 17);
     }
 }

@@ -15,6 +15,7 @@
 //! ```text
 //! <root>/index.json          schema header (hard error on mismatch)
 //! <root>/ab/cdef….json       one record per cell / baseline
+//! <root>/shards/I-of-N.json  per-shard completion markers ([`ShardMarker`])
 //! <root>/quarantine/         corrupt records, moved aside on read
 //! ```
 //!
@@ -31,10 +32,14 @@
 //! [`Session`](crate::spec::Session) integrates read-through /
 //! write-through via [`Session::set_store`](crate::spec::Session::set_store);
 //! `numanos sweep --store/--resume/--no-cache` and `numanos serve`
-//! ([`serve`]) sit on top.
+//! ([`serve`]) sit on top.  The store is also the merge substrate for
+//! sharded multi-process sweeps ([`shard`], `numanos sweep --shard I/N` +
+//! `numanos merge`): shards write cells through, publish [`ShardMarker`]s,
+//! and the merge pass re-reads everything as cache hits.
 
 pub mod hash;
 pub mod serve;
+pub mod shard;
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -94,6 +99,85 @@ pub fn cell_identity(spec: &RunSpec) -> Result<String> {
 
 fn baseline_record_identity(spec: &RunSpec) -> String {
     format!("s{STORE_SCHEMA}|baseline|{}", baseline_identity(spec))
+}
+
+/// Canonical fingerprint of a flattened cell sequence: FNV-128 over the
+/// newline-joined [`cell_identity`] strings in manifest order.  Two
+/// spellings of one manifest (JSON vs TOML, defaulted vs explicit
+/// scheduler parameters) produce one fingerprint; any change to an axis,
+/// the cell order, or [`STORE_SCHEMA`] produces another.  Shard markers
+/// embed it so `numanos merge` can tell a stale shard from a fresh one.
+pub fn cells_fingerprint(cells: &[RunSpec]) -> Result<String> {
+    let mut buf = String::new();
+    for spec in cells {
+        buf.push_str(&cell_identity(spec)?);
+        buf.push('\n');
+    }
+    Ok(hash::fnv1a_128_hex(buf.as_bytes()))
+}
+
+/// Per-shard completion marker: which cells shard `index` of `count`
+/// finished for the manifest fingerprinted by `manifest_fnv`.  Lives at
+/// `<root>/shards/I-of-N.json`; `numanos merge` reads the set of markers
+/// to report missing or stale shards instead of silently re-executing
+/// their cells.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMarker {
+    pub index: usize,
+    pub count: usize,
+    /// [`cells_fingerprint`] of the *full* manifest the shard ran.
+    pub manifest_fnv: String,
+    /// Cell count of the full manifest (all shards together).
+    pub total_cells: u64,
+    /// Canonical [`cell_identity`] of every cell this shard completed,
+    /// in global cell order.
+    pub cell_ids: Vec<String>,
+}
+
+impl ShardMarker {
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("schema", Json::from(STORE_SCHEMA)),
+            ("kind", Json::from("shard")),
+            ("index", Json::from(self.index)),
+            ("count", Json::from(self.count)),
+            ("manifest_fnv", Json::from(self.manifest_fnv.as_str())),
+            ("total_cells", Json::from_u64_lossless(self.total_cells)),
+            (
+                "cells",
+                Json::Arr(self.cell_ids.iter().map(|id| Json::from(id.as_str())).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        if j.get("schema").and_then(Json::as_u64) != Some(STORE_SCHEMA) {
+            bail!("shard marker schema mismatch");
+        }
+        if j.get("kind").and_then(Json::as_str) != Some("shard") {
+            bail!("shard marker kind mismatch");
+        }
+        let index = j.get("index").and_then(Json::as_usize).context("marker field 'index'")?;
+        let count = j.get("count").and_then(Json::as_usize).context("marker field 'count'")?;
+        if count == 0 || index >= count {
+            bail!("shard marker {index}/{count} out of range");
+        }
+        let manifest_fnv = j
+            .get("manifest_fnv")
+            .and_then(Json::as_str)
+            .context("marker field 'manifest_fnv'")?
+            .to_string();
+        let total_cells = j
+            .get("total_cells")
+            .and_then(Json::as_u64_lossless)
+            .context("marker field 'total_cells'")?;
+        let cells = j.get("cells").and_then(Json::as_arr).context("marker field 'cells'")?;
+        let cell_ids = cells
+            .iter()
+            .map(|c| c.as_str().map(str::to_string).context("marker cell ids must be strings"))
+            .collect::<Result<_>>()?;
+        Ok(Self { index, count, manifest_fnv, total_cells, cell_ids })
+    }
 }
 
 /// Whether a spec's result may be cached at all: only deterministic
@@ -274,6 +358,73 @@ impl ResultStore {
         self.write_record(&identity, &doc)
     }
 
+    /// Publish a shard completion marker (atomic temp + rename; shard
+    /// `I` is the only writer of `shards/I-of-N.json`, and re-runs of an
+    /// identical shard produce identical bytes).
+    pub fn write_shard_marker(&self, marker: &ShardMarker) -> Result<()> {
+        let dir = self.root.join("shards");
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating shard-marker directory '{}'", dir.display()))?;
+        let path = dir.join(format!("{}-of-{}.json", marker.index, marker.count));
+        let tmp = dir.join(format!(
+            ".tmp.{}.{}",
+            std::process::id(),
+            self.tmp_seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, marker.to_json().to_pretty())
+            .with_context(|| format!("writing shard marker '{}'", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing shard marker '{}'", path.display()))?;
+        Ok(())
+    }
+
+    /// Load one shard marker.  `None` if absent; a corrupt or mismatched
+    /// marker is quarantined (a merge then reports that shard missing).
+    pub fn load_shard_marker(&self, index: usize, count: usize) -> Option<ShardMarker> {
+        let path = self.root.join("shards").join(format!("{index}-of-{count}.json"));
+        if !path.exists() {
+            return None;
+        }
+        let parsed = fs::read_to_string(&path)
+            .map_err(anyhow::Error::from)
+            .and_then(|text| Json::parse(&text))
+            .and_then(|j| ShardMarker::from_json(&j));
+        match parsed {
+            Ok(m) if m.index == index && m.count == count => Some(m),
+            _ => {
+                self.quarantine(&path);
+                None
+            }
+        }
+    }
+
+    /// Every parseable marker under `shards/`, sorted by (count, index).
+    /// Corrupt files are quarantined on the way, like records.
+    pub fn shard_markers(&self) -> Vec<ShardMarker> {
+        let dir = self.root.join("shards");
+        let Ok(entries) = fs::read_dir(&dir) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(stem) = name.strip_suffix(".json") else { continue };
+            if name.starts_with('.') {
+                continue;
+            }
+            let Some((i, n)) = stem.split_once("-of-") else { continue };
+            let (Ok(index), Ok(count)) = (i.parse::<usize>(), n.parse::<usize>()) else {
+                continue;
+            };
+            if let Some(m) = self.load_shard_marker(index, count) {
+                out.push(m);
+            }
+        }
+        out.sort_by_key(|m| (m.count, m.index));
+        out
+    }
+
     // -----------------------------------------------------------------
     // internals
     // -----------------------------------------------------------------
@@ -441,6 +592,52 @@ mod tests {
             store.record_path(&id),
             PathBuf::from("/store/93/d310237839fe47d8dcace9d20ae742.json")
         );
+    }
+
+    #[test]
+    fn cells_fingerprint_is_spelling_invariant_and_order_sensitive() {
+        let a = spec();
+        let mut b = spec();
+        b.seed = 8;
+        let fwd = cells_fingerprint(&[a.clone(), b.clone()]).unwrap();
+        let rev = cells_fingerprint(&[b, a]).unwrap();
+        assert_ne!(fwd, rev, "cell order is part of the fingerprint");
+        // resolved scheduler signatures: two spellings, one fingerprint
+        let mut bare = spec();
+        bare.sched = SchedSpec::new("numa-steal");
+        let mut explicit = spec();
+        explicit.sched =
+            SchedSpec::new("numa-steal").with_param("batch", 1.0).with_param("min_kb", 16.0);
+        assert_eq!(
+            cells_fingerprint(std::slice::from_ref(&bare)).unwrap(),
+            cells_fingerprint(std::slice::from_ref(&explicit)).unwrap()
+        );
+    }
+
+    #[test]
+    fn shard_markers_roundtrip_and_survive_corruption() {
+        let dir =
+            std::env::temp_dir().join(format!("numanos_store_marker_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let store = ResultStore::open(&dir).unwrap();
+        let marker = ShardMarker {
+            index: 1,
+            count: 3,
+            manifest_fnv: "abc123".into(),
+            total_cells: 7,
+            cell_ids: vec!["id-a".into(), "id-b".into()],
+        };
+        store.write_shard_marker(&marker).unwrap();
+        assert_eq!(store.load_shard_marker(1, 3), Some(marker.clone()));
+        assert_eq!(store.load_shard_marker(0, 3), None, "absent marker");
+        assert_eq!(store.shard_markers(), vec![marker]);
+        // a corrupt marker is quarantined and reported absent
+        fs::write(dir.join("shards/0-of-3.json"), "{nope").unwrap();
+        assert_eq!(store.load_shard_marker(0, 3), None);
+        assert_eq!(store.shard_markers().len(), 1);
+        assert!(dir.join("quarantine/0-of-3.json").exists());
+        assert_eq!(store.counters().quarantined, 1);
+        let _ = fs::remove_dir_all(&dir);
     }
 
     /// Two spellings of one configuration resolve to one cell; any axis

@@ -7,17 +7,39 @@
 //! job the service writes, next to where the job was dropped:
 //!
 //! * `<stem>.result.json` — `{title, sweeps: [...]}`, the same document
-//!   `numanos sweep --json` prints (only on success), and
+//!   `numanos sweep --json` prints (only on success, and only for jobs
+//!   that produce full results — shard items don't), and
 //! * `<stem>.receipt.json` — the machine-readable receipt: manifest name +
 //!   FNV-128 content hash, wall time, store counter deltas
 //!   (hits/misses/writes/quarantined) overall and per sweep, or the error
 //!   string on failure,
 //!
 //! then moves the manifest itself to `<spool>/done/` or `<spool>/failed/`.
-//! A malformed or failing manifest produces a receipt and keeps the loop
-//! alive — one bad client must not take the service down.  Everything is
-//! plain files, so the whole request/receipt protocol is testable
-//! end-to-end without network dependencies.
+//! A re-submitted job whose name already finished gets a unique numeric
+//! suffix (`job1` → `job1.2`), so earlier result/receipt pairs are never
+//! overwritten.  A malformed or failing manifest produces a receipt and
+//! keeps the loop alive — one bad client must not take the service down.
+//!
+//! ## Shard fanout
+//!
+//! Jobs may carry a shard directive (see [`shard::classify_job`]):
+//!
+//! * `"shards": N` — the job *expands*: the service writes N shard work
+//!   items (`<stem>.shard-I-of-N.json`, the same manifest plus
+//!   `"shard": "I/N"`) and one merge item (`<stem>.merge.json`, plus
+//!   `"merge_of": N`) back into the spool, then retires the original with
+//!   an expansion receipt.
+//! * `"shard": "I/N"` — runs that shard's cells into the store and
+//!   publishes its completion marker; receipt only, no result file.
+//! * `"merge_of": N` — stays pending until all N sibling receipts
+//!   (`<base>.shard-I-of-N.receipt.json`) exist; fails if any sibling
+//!   failed; otherwise re-runs the full manifest (100% cache hits when
+//!   the shards covered everything) and writes the merged result.
+//!
+//! Under `--once` the scan repeats until a pass makes no progress, so a
+//! single invocation drives expand → shards → merge to completion — a
+//! hostfile-free multi-process driver, testable end-to-end with plain
+//! files.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -25,14 +47,16 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::serde::Json;
-use crate::spec::{ExperimentManifest, Session};
+use crate::spec::{ExperimentManifest, Session, ShardPlan};
+use crate::store::shard::{self, JobKind};
 use crate::store::{hash, ResultStore, STORE_SCHEMA};
 
 /// Knobs for [`serve`].
 pub struct ServeOptions {
     /// Sleep between spool scans, in milliseconds.
     pub poll_ms: u64,
-    /// Process the jobs present now, then return (for tests and CI).
+    /// Process until the spool reaches a fixpoint, then return (for
+    /// tests and CI) — fanout jobs still drive their shards and merge.
     pub once: bool,
     /// Sweep worker threads per job.
     pub workers: usize,
@@ -54,11 +78,24 @@ pub fn serve(store_dir: &Path, spool: &Path, opts: &ServeOptions) -> Result<()> 
         if opts.once { ", one pass" } else { "" }
     );
     loop {
+        let mut progressed = false;
         for job in scan_jobs(spool)? {
-            process_job(&session, &store, spool, &job, opts.workers);
+            if matches!(
+                process_job(&session, &store, spool, &job, opts.workers),
+                Processed::Finished
+            ) {
+                progressed = true;
+            }
         }
         if opts.once {
-            return Ok(());
+            // fixpoint: a fanout pass drops shard items and a gated
+            // merge item back into the spool — keep scanning while
+            // passes finish jobs.  A merge whose siblings never arrive
+            // stays pending rather than spinning.
+            if !progressed {
+                return Ok(());
+            }
+            continue;
         }
         std::thread::sleep(std::time::Duration::from_millis(opts.poll_ms.max(1)));
     }
@@ -91,24 +128,79 @@ fn scan_jobs(spool: &Path) -> Result<Vec<PathBuf>> {
     Ok(jobs)
 }
 
-/// Everything the receipt reports about a successful job.
-struct JobOutcome {
-    title: String,
-    cells: u64,
-    /// `{id, cells, hits, misses, writes}` per sweep.
-    sweeps: Vec<Json>,
-    /// `result.to_json()` per sweep — the result-file payload.
-    results: Vec<Json>,
+/// What one scan pass did with a job.
+enum Processed {
+    /// Executed (ok or failed): receipt written, job left the scan set.
+    Finished,
+    /// A merge item whose sibling shard receipts are not all present
+    /// yet — left in place for a later pass.
+    Deferred,
 }
 
-/// Execute one job and write its receipt (+ result on success); never
-/// propagates the job's own failure.
-fn process_job(session: &Session, store: &ResultStore, spool: &Path, job: &Path, workers: usize) {
+/// Everything the receipt reports about a successful job.
+struct JobOutcome {
+    /// `manifest` | `expand` | `shard` | `merge` — what the job was.
+    kind: &'static str,
+    title: String,
+    cells: u64,
+    /// `{id, cells, hits, misses, writes}` per sweep (shard items report
+    /// `{id, owned, skipped}` instead).
+    sweeps: Vec<Json>,
+    /// `result.to_json()` per sweep — the result-file payload.  Empty for
+    /// jobs with no full results (expansions, shard items): no file.
+    results: Vec<Json>,
+    /// Kind-specific receipt fields.
+    extra: Vec<(String, Json)>,
+}
+
+/// How a merge item's gate on its sibling shard receipts resolved.
+enum MergeGate {
+    /// Some sibling receipt is absent — the shard is queued or running.
+    Waiting,
+    /// All siblings reported ok.
+    Ready,
+    /// At least one sibling failed (named) — the merge must fail too.
+    SiblingFailed(Vec<String>),
+}
+
+/// Execute one job and write its receipt (+ result when the job produces
+/// one); never propagates the job's own failure.
+fn process_job(
+    session: &Session,
+    store: &ResultStore,
+    spool: &Path,
+    job: &Path,
+    workers: usize,
+) -> Processed {
     let name = job.file_name().and_then(|n| n.to_str()).unwrap_or("job").to_string();
-    let stem = name.rsplit_once('.').map(|(s, _)| s).unwrap_or(&name).to_string();
     let t0 = std::time::Instant::now();
     let before = store.counters();
-    let outcome = execute_job(session, store, job, workers);
+    let parsed = parse_job(job);
+
+    // merge items gate on their sibling shard receipts (derived from the
+    // *original* job name, so a suffixed re-submission still finds them)
+    let mut gate_failure = None;
+    if let Ok((JobKind::Merge(count), _)) = &parsed {
+        match merge_gate(spool, &name, *count) {
+            MergeGate::Waiting => return Processed::Deferred,
+            MergeGate::Ready => {}
+            MergeGate::SiblingFailed(failed) => {
+                gate_failure = Some(anyhow::anyhow!(
+                    "sibling shard receipt(s) report errors: {}",
+                    failed.join(", ")
+                ));
+            }
+        }
+    }
+
+    let (stem, final_name) = unique_stem(spool, &name);
+    let outcome: Result<JobOutcome> = match (gate_failure, parsed) {
+        (Some(e), _) => Err(e),
+        (None, Err(e)) => Err(e),
+        (None, Ok((kind, doc))) => {
+            execute_job(session, store, spool, &stem, &kind, &doc, workers)
+        }
+    };
     let after = store.counters();
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
 
@@ -133,24 +225,29 @@ fn process_job(session: &Session, store: &ResultStore, spool: &Path, job: &Path,
     ];
     match &outcome {
         Ok(out) => {
+            receipt.push(("kind".to_string(), Json::from(out.kind)));
             receipt.push(("title".to_string(), Json::from(out.title.as_str())));
             receipt.push(("cells".to_string(), Json::from(out.cells)));
             receipt.push(("sweeps".to_string(), Json::Arr(out.sweeps.clone())));
-            let result_doc = Json::obj([
-                ("title", Json::from(out.title.as_str())),
-                ("sweeps", Json::Arr(out.results.clone())),
-            ]);
-            report(spool, &stem, "result", &result_doc);
+            receipt.extend(out.extra.iter().cloned());
+            if !out.results.is_empty() {
+                let result_doc = Json::obj([
+                    ("title", Json::from(out.title.as_str())),
+                    ("sweeps", Json::Arr(out.results.clone())),
+                ]);
+                report(spool, &stem, "result", &result_doc);
+            }
         }
         Err(e) => {
             receipt.push(("error".to_string(), Json::from(format!("{e:#}"))));
         }
     }
     report(spool, &stem, "receipt", &Json::obj(receipt));
-    finish(spool, job, &name, outcome.is_ok());
+    finish(spool, job, &final_name, outcome.is_ok());
     match &outcome {
         Ok(out) => eprintln!(
-            "[serve '{name}': {} cell(s), {} hit / {} miss / {} written, {:.1}s]",
+            "[serve '{name}' ({}): {} cell(s), {} hit / {} miss / {} written, {:.1}s]",
+            out.kind,
             out.cells,
             after.hits - before.hits,
             after.misses - before.misses,
@@ -159,20 +256,135 @@ fn process_job(session: &Session, store: &ResultStore, spool: &Path, job: &Path,
         ),
         Err(e) => eprintln!("[serve '{name}': FAILED: {e:#}]"),
     }
+    Processed::Finished
 }
 
+/// Read + parse a job file (TOML by extension, else JSON) and split off
+/// its shard directive.
+fn parse_job(job: &Path) -> Result<(JobKind, Json)> {
+    let text = std::fs::read_to_string(job)
+        .with_context(|| format!("reading job '{}'", job.display()))?;
+    let doc = if job.extension().and_then(|e| e.to_str()) == Some("toml") {
+        crate::serde::toml::parse(&text)
+            .with_context(|| format!("parsing TOML {}", job.display()))?
+    } else {
+        Json::parse(&text).with_context(|| format!("parsing JSON {}", job.display()))?
+    };
+    shard::classify_job(&doc)
+}
+
+/// A merge item `<base>.merge.json` waits for its sibling shard receipts
+/// `<base>.shard-I-of-N.receipt.json`, `I` in `0..N` (the names the
+/// expansion that wrote the merge item also wrote).  All present and ok →
+/// ready; any reporting an error → the merge fails, naming them; any
+/// absent → keep waiting.
+fn merge_gate(spool: &Path, name: &str, count: usize) -> MergeGate {
+    let stem = name.rsplit_once('.').map(|(s, _)| s).unwrap_or(name);
+    let base = stem.strip_suffix(".merge").unwrap_or(stem);
+    let mut failed = Vec::new();
+    for i in 0..count {
+        let receipt = spool.join(format!("{base}.shard-{i}-of-{count}.receipt.json"));
+        let Ok(text) = std::fs::read_to_string(&receipt) else {
+            return MergeGate::Waiting;
+        };
+        let ok = Json::parse(&text)
+            .ok()
+            .and_then(|j| j.get("status").and_then(Json::as_str).map(|s| s == "ok"))
+            .unwrap_or(false);
+        if !ok {
+            failed.push(format!("{base}.shard-{i}-of-{count}"));
+        }
+    }
+    if failed.is_empty() {
+        MergeGate::Ready
+    } else {
+        MergeGate::SiblingFailed(failed)
+    }
+}
+
+/// A (stem, file name) pair that will not clobber a finished job: if the
+/// name already sits in `done/`/`failed/` or left a receipt, suffix the
+/// stem with the first free `.<k>` (k ≥ 2) — `job1.toml` → `job1.2.toml`.
+fn unique_stem(spool: &Path, name: &str) -> (String, String) {
+    let (stem, ext) = name.rsplit_once('.').unwrap_or((name, "json"));
+    let taken = |stem: &str, name: &str| {
+        spool.join("done").join(name).exists()
+            || spool.join("failed").join(name).exists()
+            || spool.join(format!("{stem}.receipt.json")).exists()
+    };
+    if !taken(stem, name) {
+        return (stem.to_string(), name.to_string());
+    }
+    let mut k = 2u64;
+    loop {
+        let stem_k = format!("{stem}.{k}");
+        let name_k = format!("{stem_k}.{ext}");
+        if !taken(&stem_k, &name_k) {
+            return (stem_k, name_k);
+        }
+        k += 1;
+    }
+}
+
+/// Run a job's manifest work according to its [`JobKind`].
 fn execute_job(
     session: &Session,
     store: &ResultStore,
-    job: &Path,
+    spool: &Path,
+    stem: &str,
+    kind: &JobKind,
+    doc: &Json,
     workers: usize,
 ) -> Result<JobOutcome> {
-    let manifest = ExperimentManifest::load(job)?;
+    let manifest = ExperimentManifest::from_json(doc)?;
+    match kind {
+        JobKind::Plain => run_full(session, store, &manifest, workers, "manifest", Vec::new()),
+        JobKind::Fanout(n) => expand_fanout(spool, stem, &manifest, doc, *n),
+        JobKind::Shard(plan) => run_shard(session, store, &manifest, *plan, workers),
+        JobKind::Merge(n) => {
+            let fnv = shard::manifest_fingerprint(&manifest)?;
+            let status = shard::shard_status(store, &fnv);
+            let extra = vec![
+                ("merge_of".to_string(), Json::from(*n)),
+                ("cells_fnv".to_string(), Json::from(fnv.as_str())),
+                (
+                    "shards_present".to_string(),
+                    Json::from(status.present.len()),
+                ),
+                (
+                    "shards_missing".to_string(),
+                    Json::Arr(status.missing.iter().map(|&i| Json::from(i)).collect()),
+                ),
+                (
+                    "shards_stale".to_string(),
+                    Json::Arr(
+                        status.stale.iter().map(|s| Json::from(s.as_str())).collect(),
+                    ),
+                ),
+            ];
+            run_full(session, store, &manifest, workers, "merge", extra)
+        }
+    }
+}
+
+/// Execute every sweep of `manifest` and collect full results (the plain
+/// job path, and the merge path — a merge is just a full run that the
+/// shards' write-through turned into cache hits).
+fn run_full(
+    session: &Session,
+    store: &ResultStore,
+    manifest: &ExperimentManifest,
+    workers: usize,
+    kind: &'static str,
+    extra: Vec<(String, Json)>,
+) -> Result<JobOutcome> {
     let mut out = JobOutcome {
+        kind,
         title: manifest.title.clone(),
         cells: 0,
         sweeps: Vec::new(),
         results: Vec::new(),
+        extra,
     };
     for sweep in &manifest.sweeps {
         let before = store.counters();
@@ -191,6 +403,96 @@ fn execute_job(
     Ok(out)
 }
 
+/// Expand a `"shards": N` job into N shard items plus a gated merge item
+/// (written with temp + rename so a concurrent scan never reads a torn
+/// job), all derived from this job's unique stem.
+fn expand_fanout(
+    spool: &Path,
+    stem: &str,
+    manifest: &ExperimentManifest,
+    doc: &Json,
+    n: usize,
+) -> Result<JobOutcome> {
+    let total = manifest.all_cells()?.len();
+    let mut items = Vec::with_capacity(n + 1);
+    for i in 0..n {
+        let plan = ShardPlan::new(i, n)?;
+        items.push(write_item(spool, &format!("{stem}.shard-{}.json", plan.name()), doc, |o| {
+            o.insert("shard".to_string(), Json::from(plan.spec()));
+        })?);
+    }
+    items.push(write_item(spool, &format!("{stem}.merge.json"), doc, |o| {
+        o.insert("merge_of".to_string(), Json::from(n));
+    })?);
+    Ok(JobOutcome {
+        kind: "expand",
+        title: manifest.title.clone(),
+        cells: total as u64,
+        sweeps: Vec::new(),
+        results: Vec::new(),
+        extra: vec![
+            ("shards".to_string(), Json::from(n)),
+            (
+                "items".to_string(),
+                Json::Arr(items.iter().map(|i| Json::from(i.as_str())).collect()),
+            ),
+        ],
+    })
+}
+
+/// Write one derived spool item: the stripped manifest document plus one
+/// directive key.  Returns the item's file name.
+fn write_item(
+    spool: &Path,
+    name: &str,
+    doc: &Json,
+    directive: impl FnOnce(&mut std::collections::BTreeMap<String, Json>),
+) -> Result<String> {
+    let mut obj = doc.as_obj().context("job must be an object")?.clone();
+    directive(&mut obj);
+    let tmp = spool.join(format!(".{name}.tmp.{}", std::process::id()));
+    let path = spool.join(name);
+    std::fs::write(&tmp, Json::Obj(obj).to_pretty())
+        .with_context(|| format!("writing spool item '{}'", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publishing spool item '{}'", path.display()))?;
+    Ok(name.to_string())
+}
+
+/// Run one shard of the manifest into the store (receipt only — partial
+/// results never masquerade as a full result file).
+fn run_shard(
+    session: &Session,
+    store: &ResultStore,
+    manifest: &ExperimentManifest,
+    plan: ShardPlan,
+    workers: usize,
+) -> Result<JobOutcome> {
+    let summary = shard::run_manifest_shard(session, store, manifest, plan, workers)?;
+    Ok(JobOutcome {
+        kind: "shard",
+        title: manifest.title.clone(),
+        cells: summary.owned_cells as u64,
+        sweeps: summary
+            .sweeps
+            .iter()
+            .map(|s| {
+                Json::obj([
+                    ("id", Json::from(s.id.as_str())),
+                    ("owned", Json::from(s.owned)),
+                    ("skipped", Json::from(s.skipped)),
+                ])
+            })
+            .collect(),
+        results: Vec::new(),
+        extra: vec![
+            ("shard".to_string(), Json::from(summary.plan.spec())),
+            ("cells_total".to_string(), Json::from(summary.total_cells)),
+            ("cells_fnv".to_string(), Json::from(summary.manifest_fnv.as_str())),
+        ],
+    })
+}
+
 /// Write `<spool>/<stem>.<kind>.json` (best-effort: a full disk must not
 /// kill the loop, and the job still moves to `done/`/`failed/`).
 fn report(spool: &Path, stem: &str, kind: &str, doc: &Json) {
@@ -200,8 +502,9 @@ fn report(spool: &Path, stem: &str, kind: &str, doc: &Json) {
     }
 }
 
-/// Move a finished job out of the scan set.  If the move fails the job
-/// is deleted — leaving it behind would re-execute it every poll.
+/// Move a finished job out of the scan set (under its unique name — see
+/// [`unique_stem`]).  If the move fails the job is deleted — leaving it
+/// behind would re-execute it every poll.
 fn finish(spool: &Path, job: &Path, name: &str, ok: bool) {
     let dir = spool.join(if ok { "done" } else { "failed" });
     let moved =

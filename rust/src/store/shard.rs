@@ -1,0 +1,274 @@
+//! Sharded sweep execution and store-backed merge — the multi-process
+//! layer over the content-addressed store.
+//!
+//! A [`ShardPlan`] deterministically partitions a manifest's flattened
+//! cell sequence (global cell index mod shard count, across sweep
+//! boundaries).  N processes each run
+//! `numanos sweep --shard I/N --store DIR` against one shared store; a
+//! final `numanos merge --manifest F --store DIR` re-runs the full
+//! manifest as 100% cache hits and emits CSV/JSON byte-identical to a
+//! sequential single-process sweep.  Each finished shard publishes a
+//! completion marker (`<store>/shards/I-of-N.json`, see
+//! [`crate::store::ShardMarker`]) embedding the manifest fingerprint
+//! ([`cells_fingerprint`]), so the merge reports missing or stale shards
+//! instead of silently re-executing their cells (`--merge-strict` turns
+//! any such gap — or any cache miss — into a hard failure).
+//!
+//! `numanos serve` drives the same pipeline hostfile-free: a spool job
+//! carrying `"shards": N` fans out into N shard work items plus a merge
+//! item gated on their receipts (see [`classify_job`] and
+//! [`super::serve`]).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::serde::Json;
+use crate::spec::{ExperimentManifest, Session, ShardPlan};
+use crate::store::{cells_fingerprint, ResultStore, ShardMarker};
+
+/// Fingerprint of a manifest's flattened cell sequence (see
+/// [`cells_fingerprint`] — resolved identities, so every spelling of one
+/// manifest agrees).
+pub fn manifest_fingerprint(manifest: &ExperimentManifest) -> Result<String> {
+    cells_fingerprint(&manifest.all_cells()?)
+}
+
+/// Per-sweep slice of one shard pass, for progress reporting.
+pub struct ShardSweepSummary {
+    pub id: String,
+    /// Cells this shard owned and ran (or served from the store).
+    pub owned: usize,
+    /// Cells skipped as other shards' property.
+    pub skipped: usize,
+}
+
+/// What one [`run_manifest_shard`] pass did.
+pub struct ShardRunSummary {
+    pub plan: ShardPlan,
+    pub manifest_fnv: String,
+    pub total_cells: usize,
+    pub owned_cells: usize,
+    pub sweeps: Vec<ShardSweepSummary>,
+}
+
+/// Execute the cells of `manifest` that `plan` owns — walking the sweeps
+/// in order with a running global-index base, so every shard of a
+/// manifest agrees on the partition — then publish this shard's
+/// completion marker in `store`.  The records themselves land in the
+/// store via the session's write-through; a later `numanos merge` (or
+/// any full sweep over the same store) assembles them.
+pub fn run_manifest_shard(
+    session: &Session,
+    store: &ResultStore,
+    manifest: &ExperimentManifest,
+    plan: ShardPlan,
+    workers: usize,
+) -> Result<ShardRunSummary> {
+    let manifest_fnv = manifest_fingerprint(manifest)?;
+    let mut sweeps = Vec::with_capacity(manifest.sweeps.len());
+    let mut cell_ids = Vec::new();
+    let mut base = 0usize;
+    for sweep in &manifest.sweeps {
+        let out = session.run_sweep_sharded(sweep, workers, plan, base)?;
+        base += out.result.records.len() + out.skipped;
+        sweeps.push(ShardSweepSummary {
+            id: sweep.id.clone(),
+            owned: out.result.records.len(),
+            skipped: out.skipped,
+        });
+        cell_ids.extend(out.owned_ids);
+    }
+    let summary = ShardRunSummary {
+        plan,
+        manifest_fnv: manifest_fnv.clone(),
+        total_cells: base,
+        owned_cells: cell_ids.len(),
+        sweeps,
+    };
+    store.write_shard_marker(&ShardMarker {
+        index: plan.index,
+        count: plan.count,
+        manifest_fnv,
+        total_cells: base as u64,
+        cell_ids,
+    })?;
+    Ok(summary)
+}
+
+/// Marker census for one manifest fingerprint — what `numanos merge`
+/// reports before assembling.
+pub struct ShardStatus {
+    /// Shard count the census is judged against: among marker groups
+    /// matching the manifest, a complete group wins, else the largest
+    /// count seen.  `None` when no marker matches.
+    pub count: Option<usize>,
+    /// Fresh markers of that count: `(index, cells completed)`.
+    pub present: Vec<(usize, u64)>,
+    /// Indices in `0..count` with no fresh marker.
+    pub missing: Vec<usize>,
+    /// Marker names (any count) whose fingerprint does not match this
+    /// manifest — leftovers from an edited manifest or another run.
+    pub stale: Vec<String>,
+}
+
+/// Scan `store`'s shard markers against a manifest fingerprint.
+pub fn shard_status(store: &ResultStore, manifest_fnv: &str) -> ShardStatus {
+    let mut fresh: BTreeMap<usize, Vec<(usize, u64)>> = BTreeMap::new();
+    let mut stale = Vec::new();
+    for m in store.shard_markers() {
+        if m.manifest_fnv == manifest_fnv {
+            fresh.entry(m.count).or_default().push((m.index, m.cell_ids.len() as u64));
+        } else {
+            stale.push(format!("{}-of-{}", m.index, m.count));
+        }
+    }
+    let count = fresh
+        .iter()
+        .rev()
+        .find(|(count, marks)| marks.len() == **count)
+        .map(|(c, _)| *c)
+        .or_else(|| fresh.keys().next_back().copied());
+    let (present, missing) = match count {
+        Some(c) => {
+            let marks = fresh.remove(&c).unwrap_or_default();
+            let missing =
+                (0..c).filter(|i| !marks.iter().any(|(idx, _)| idx == i)).collect();
+            (marks, missing)
+        }
+        None => (Vec::new(), Vec::new()),
+    };
+    ShardStatus { count, present, missing, stale }
+}
+
+/// What a spool job file asks for, beyond the manifest it carries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// A plain manifest: execute everything.
+    Plain,
+    /// `"shards": N` — fan out into N shard items plus a merge item.
+    Fanout(usize),
+    /// `"shard": "I/N"` — execute one shard and publish its marker.
+    Shard(ShardPlan),
+    /// `"merge_of": N` — merge item, gated on N sibling shard receipts.
+    Merge(usize),
+}
+
+/// Split a spool job document into its shard directive and the plain
+/// manifest document (directive keys stripped — [`ExperimentManifest`]
+/// rejects unknown keys, deliberately, so shard job files must pass
+/// through here before manifest parsing; `numanos lint` does the same).
+pub fn classify_job(doc: &Json) -> Result<(JobKind, Json)> {
+    let mut obj = doc.as_obj().context("job must be a JSON/TOML object")?.clone();
+    let shards = obj.remove("shards");
+    let shard = obj.remove("shard");
+    let merge_of = obj.remove("merge_of");
+    if [shards.is_some(), shard.is_some(), merge_of.is_some()]
+        .iter()
+        .filter(|given| **given)
+        .count()
+        > 1
+    {
+        bail!("job carries more than one of 'shards', 'shard', 'merge_of'");
+    }
+    let kind = if let Some(v) = shards {
+        let n = v.as_usize().context("'shards' must be a positive integer")?;
+        if n == 0 {
+            bail!("'shards' must be at least 1");
+        }
+        JobKind::Fanout(n)
+    } else if let Some(v) = shard {
+        let spec = v.as_str().context("'shard' must be a string like \"0/3\"")?;
+        JobKind::Shard(ShardPlan::parse(spec)?)
+    } else if let Some(v) = merge_of {
+        let n = v.as_usize().context("'merge_of' must be a positive integer")?;
+        if n == 0 {
+            bail!("'merge_of' must be at least 1");
+        }
+        JobKind::Merge(n)
+    } else {
+        JobKind::Plain
+    };
+    Ok((kind, Json::Obj(obj)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_job_strips_shard_directives() {
+        let doc = Json::parse(
+            r#"{"title": "t", "sweeps": [{"id": "a", "bench": "fib"}], "shards": 3}"#,
+        )
+        .unwrap();
+        let (kind, stripped) = classify_job(&doc).unwrap();
+        assert_eq!(kind, JobKind::Fanout(3));
+        assert!(stripped.get("shards").is_none());
+        assert!(stripped.get("sweeps").is_some());
+
+        let doc = Json::parse(r#"{"sweeps": [], "shard": "1/3"}"#).unwrap();
+        let (kind, _) = classify_job(&doc).unwrap();
+        assert_eq!(kind, JobKind::Shard(ShardPlan { index: 1, count: 3 }));
+
+        let doc = Json::parse(r#"{"sweeps": [], "merge_of": 3}"#).unwrap();
+        assert_eq!(classify_job(&doc).unwrap().0, JobKind::Merge(3));
+
+        let doc = Json::parse(r#"{"sweeps": []}"#).unwrap();
+        assert_eq!(classify_job(&doc).unwrap().0, JobKind::Plain);
+    }
+
+    #[test]
+    fn classify_job_rejects_malformed_directives() {
+        for bad in [
+            r#"{"sweeps": [], "shards": 0}"#,
+            r#"{"sweeps": [], "shards": "three"}"#,
+            r#"{"sweeps": [], "shard": "5/3"}"#,
+            r#"{"sweeps": [], "shard": 2}"#,
+            r#"{"sweeps": [], "merge_of": 0}"#,
+            r#"{"sweeps": [], "shards": 3, "shard": "0/3"}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(classify_job(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn shard_status_classifies_markers() {
+        let dir =
+            std::env::temp_dir().join(format!("numanos_shard_status_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = ResultStore::open(&dir).unwrap();
+        let marker = |index, count, fnv: &str| ShardMarker {
+            index,
+            count,
+            manifest_fnv: fnv.into(),
+            total_cells: 6,
+            cell_ids: vec!["x".into(), "y".into()],
+        };
+        // empty store: no census at all
+        let s = shard_status(&store, "fresh");
+        assert_eq!(s.count, None);
+        assert!(s.present.is_empty() && s.missing.is_empty() && s.stale.is_empty());
+        // incomplete group + a stale marker from another manifest
+        store.write_shard_marker(&marker(0, 3, "fresh")).unwrap();
+        store.write_shard_marker(&marker(2, 3, "fresh")).unwrap();
+        store.write_shard_marker(&marker(0, 2, "old")).unwrap();
+        let s = shard_status(&store, "fresh");
+        assert_eq!(s.count, Some(3));
+        assert_eq!(s.present, vec![(0, 2), (2, 2)]);
+        assert_eq!(s.missing, vec![1]);
+        assert_eq!(s.stale, vec!["0-of-2".to_string()]);
+        // completing the group clears the misses
+        store.write_shard_marker(&marker(1, 3, "fresh")).unwrap();
+        let s = shard_status(&store, "fresh");
+        assert_eq!(s.count, Some(3));
+        assert_eq!(s.present.len(), 3);
+        assert!(s.missing.is_empty());
+        // a complete smaller group wins over an incomplete larger one
+        store.write_shard_marker(&marker(0, 5, "fresh")).unwrap();
+        let s = shard_status(&store, "fresh");
+        assert_eq!(s.count, Some(3), "complete 3-group beats incomplete 5-group");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -561,6 +561,237 @@ fn serve_once_processes_spool_and_writes_receipts() {
 }
 
 #[test]
+fn shard_sweeps_merge_to_the_sequential_bytes() {
+    let dir = std::env::temp_dir().join(format!("numanos_cli_shard_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = write_manifest(&dir);
+    let store = dir.join("store");
+
+    // reference: store-free sequential run
+    let out_ref = dir.join("ref");
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--seq", "--out",
+        out_ref.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+
+    // three shard passes over one shared store — separate processes
+    for i in 0..3 {
+        let spec = format!("{i}/3");
+        let (ok, text) = numanos(&[
+            "sweep", "--manifest", manifest.to_str().unwrap(), "--shard", &spec, "--store",
+            store.to_str().unwrap(),
+        ]);
+        assert!(ok, "shard {spec}: {text}");
+        assert!(text.contains("cell(s) owned"), "{text}");
+        assert!(
+            store.join(format!("shards/{i}-of-3.json")).exists(),
+            "shard {spec} must publish its marker"
+        );
+    }
+
+    // merge: 100% hits, byte-identical files, strict census passes
+    let out_merged = dir.join("merged");
+    let (ok, text) = numanos(&[
+        "merge", "--manifest", manifest.to_str().unwrap(), "--store", store.to_str().unwrap(),
+        "--seq", "--merge-strict", "--out", out_merged.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("3 of 3 shard marker(s) present"), "{text}");
+    assert!(text.contains("cache: 4 hit / 0 miss"), "{text}");
+    for file in ["mini.csv", "mini.md"] {
+        assert_eq!(
+            std::fs::read(out_merged.join(file)).unwrap(),
+            std::fs::read(out_ref.join(file)).unwrap(),
+            "merged {file} must match the sequential reference byte for byte"
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shard_flag_misuse_is_a_clear_error() {
+    let dir = std::env::temp_dir().join(format!("numanos_cli_shard_err_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = write_manifest(&dir);
+
+    // --shard without --store
+    let (ok, text) =
+        numanos(&["sweep", "--manifest", manifest.to_str().unwrap(), "--shard", "0/3"]);
+    assert!(!ok);
+    assert!(text.contains("--store"), "{text}");
+
+    // --shard with --out: partial output refused, points at merge
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--shard", "0/3", "--store",
+        dir.join("s").to_str().unwrap(), "--out", dir.join("o").to_str().unwrap(),
+    ]);
+    assert!(!ok);
+    assert!(text.contains("numanos merge"), "{text}");
+
+    // malformed spec: index out of range
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--shard", "3/3", "--store",
+        dir.join("s").to_str().unwrap(),
+    ]);
+    assert!(!ok);
+    assert!(text.contains("3/3") || text.contains("index"), "{text}");
+
+    // satellite: --resume --shard against a missing store names the
+    // shard flag instead of the generic "nothing to resume"
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--resume", "--shard", "0/3",
+        "--store", dir.join("fresh").to_str().unwrap(),
+    ]);
+    assert!(!ok);
+    assert!(text.contains("--shard 0/3"), "{text}");
+    assert!(!text.contains("nothing to resume"), "{text}");
+
+    // merge without a store to merge from
+    let (ok, text) = numanos(&[
+        "merge", "--manifest", manifest.to_str().unwrap(), "--store",
+        dir.join("nonesuch").to_str().unwrap(),
+    ]);
+    assert!(!ok);
+    assert!(text.contains("run the shards first"), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn merge_strict_reports_missing_shards() {
+    let dir = std::env::temp_dir().join(format!("numanos_cli_strict_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = write_manifest(&dir);
+    let store = dir.join("store");
+
+    // only shard 0 of 3 ran
+    let (ok, text) = numanos(&[
+        "sweep", "--manifest", manifest.to_str().unwrap(), "--shard", "0/3", "--store",
+        store.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+
+    let (ok, text) = numanos(&[
+        "merge", "--manifest", manifest.to_str().unwrap(), "--store", store.to_str().unwrap(),
+        "--merge-strict",
+    ]);
+    assert!(!ok, "strict merge over an incomplete shard set must fail: {text}");
+    assert!(text.contains("1, 2"), "the missing shards are named: {text}");
+
+    // non-strict merge degrades gracefully: re-executes the gap
+    let (ok, text) = numanos(&[
+        "merge", "--manifest", manifest.to_str().unwrap(), "--store", store.to_str().unwrap(),
+        "--seq",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("missing shard(s): 1, 2"), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_fanout_job_drives_shards_and_merge_in_one_pass() {
+    let dir = std::env::temp_dir().join(format!("numanos_cli_fanout_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let store = dir.join("store");
+    let spool = dir.join("spool");
+    std::fs::create_dir_all(&spool).unwrap();
+
+    let body = r#"{
+      "title": "fanout",
+      "defaults": {"size": "small", "seeds": [4]},
+      "sweeps": [
+        {"id": "mini", "bench": "fib", "sched": ["wf", "dfwsrpt"],
+         "bind": ["numa"], "threads": [2, 4]}
+      ]
+    }"#;
+    // the same manifest twice: once plain, once fanned out into 3 shards
+    std::fs::write(spool.join("plain.json"), body).unwrap();
+    let mut fan: Vec<String> = body.lines().map(String::from).collect();
+    let last = fan.len() - 2; // line before the closing brace
+    fan[last] = format!("{},\n      \"shards\": 3", fan[last].trim_end());
+    std::fs::write(spool.join("fan.json"), fan.join("\n")).unwrap();
+
+    let (ok, text) = numanos(&[
+        "serve", "--store", store.to_str().unwrap(), "--spool", spool.to_str().unwrap(),
+        "--once",
+    ]);
+    assert!(ok, "{text}");
+
+    // the fanout job expanded…
+    let expand = std::fs::read_to_string(spool.join("fan.receipt.json")).unwrap();
+    assert!(expand.contains("\"kind\": \"expand\""), "{expand}");
+    assert!(expand.contains("\"shards\": 3"), "{expand}");
+    // …its three shard items ran and published markers…
+    for i in 0..3 {
+        let receipt = spool.join(format!("fan.shard-{i}-of-3.receipt.json"));
+        let text = std::fs::read_to_string(&receipt)
+            .unwrap_or_else(|e| panic!("{}: {e}", receipt.display()));
+        assert!(text.contains("\"status\": \"ok\""), "{text}");
+        assert!(text.contains("\"kind\": \"shard\""), "{text}");
+        assert!(store.join(format!("shards/{i}-of-3.json")).exists());
+    }
+    // …and the gated merge assembled the full result from pure hits
+    let merge = std::fs::read_to_string(spool.join("fan.merge.receipt.json")).unwrap();
+    assert!(merge.contains("\"kind\": \"merge\""), "{merge}");
+    assert!(merge.contains("\"cache_hits\": 4"), "{merge}");
+    assert!(merge.contains("\"cache_misses\": 0"), "{merge}");
+    assert!(merge.contains("\"shards_present\": 3"), "{merge}");
+    let merged = std::fs::read_to_string(spool.join("fan.merge.result.json")).unwrap();
+    let plain = std::fs::read_to_string(spool.join("plain.result.json")).unwrap();
+    assert_eq!(merged, plain, "fanned-out merge must reproduce the plain job's bytes");
+    // shard items produce no result files — partial data never
+    // masquerades as a full result
+    assert!(!spool.join("fan.shard-0-of-3.result.json").exists());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn serve_resubmitted_job_gets_a_fresh_suffix() {
+    let dir = std::env::temp_dir().join(format!("numanos_cli_resub_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = write_manifest(&dir);
+    let store = dir.join("store");
+    let spool = dir.join("spool");
+    std::fs::create_dir_all(&spool).unwrap();
+
+    std::fs::copy(&manifest, spool.join("job1.toml")).unwrap();
+    let (ok, text) = numanos(&[
+        "serve", "--store", store.to_str().unwrap(), "--spool", spool.to_str().unwrap(),
+        "--once",
+    ]);
+    assert!(ok, "{text}");
+    let first = std::fs::read_to_string(spool.join("job1.receipt.json")).unwrap();
+
+    // drop the same name again: outputs get a suffix, nothing is clobbered
+    std::fs::copy(&manifest, spool.join("job1.toml")).unwrap();
+    let (ok, text) = numanos(&[
+        "serve", "--store", store.to_str().unwrap(), "--spool", spool.to_str().unwrap(),
+        "--once",
+    ]);
+    assert!(ok, "{text}");
+    let second = std::fs::read_to_string(spool.join("job1.2.receipt.json")).unwrap();
+    assert!(second.contains("\"cache_hits\": 4"), "resubmission is all hits: {second}");
+    assert_eq!(
+        std::fs::read_to_string(spool.join("job1.receipt.json")).unwrap(),
+        first,
+        "the original receipt must survive the resubmission untouched"
+    );
+    assert!(spool.join("done/job1.toml").exists());
+    assert!(spool.join("done/job1.2.toml").exists(), "the job retires under its unique name");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn sweep_requires_manifest() {
     let (ok, text) = numanos(&["sweep"]);
     assert!(!ok);

@@ -31,13 +31,14 @@ fn spec(bench: &str, sched: SchedSpec, mem: MemSpec, topo: &str, threads: usize)
 /// mailboxes and the dedup/underflow fixes in place) vs. the legacy
 /// `Runtime::run` verbs, and an *explicit* `first-touch` selection is
 /// indistinguishable from the default.  Rows cover a data-heavy workload
-/// (`fft`) plus the two newly annotated overhead probes (`fib`, `uts`) —
-/// their tiny spawn hints must stay invisible to stock schedulers.
+/// (`fft`) plus every annotated workload (`fib`, `uts`, `alignment`,
+/// `floorplan`) — their sub-floor spawn hints must stay invisible to
+/// stock schedulers.
 #[test]
 fn stock_schedulers_with_default_mem_match_the_legacy_path() {
     let session = Session::new();
     let rt = Runtime::paper_testbed();
-    for bench in ["fft", "fib", "uts"] {
+    for bench in ["fft", "fib", "uts", "alignment", "floorplan"] {
         for policy in [
             Policy::BreadthFirst,
             Policy::CilkBased,
@@ -97,20 +98,21 @@ fn stock_schedulers_with_default_mem_match_the_legacy_path() {
     assert!(rec.to_csv_row().ends_with(",0,0,0,0,0"), "serial CSV tail must stay zero");
 }
 
-/// The fib/uts annotations are real but deliberately sub-floor: their
-/// 256-byte config-page hints sit below every placement scheduler's
+/// The fib/uts/alignment/floorplan annotations are real but deliberately
+/// sub-floor: their hint regions (256-byte config pages, sub-KB
+/// sequences, the 8 KB board) sit below every placement scheduler's
 /// default `min_kb=16` hint floor (so defaults behave exactly as before),
 /// yet lowering the floor to 0 makes the same hints engage the placement
 /// machinery.
 #[test]
-fn fib_and_uts_hints_sit_below_the_default_floor_but_exist() {
+fn annotated_hints_sit_below_the_default_floor_but_exist() {
     let session = Session::new();
-    for bench in ["fib", "uts"] {
+    for bench in ["fib", "uts", "alignment", "floorplan"] {
         let default_floor =
             session.run(&spec(bench, SchedSpec::new("numa-home"), MemSpec::default(), "x4600", 16));
         let rec = default_floor.unwrap();
-        assert_eq!(rec.stats.pushed_home, 0, "{bench}: 256 B sits below min_kb=16");
-        assert_eq!(rec.stats.affinity_hits, 0, "{bench}: 256 B sits below min_kb=16");
+        assert_eq!(rec.stats.pushed_home, 0, "{bench}: hints sit below min_kb=16");
+        assert_eq!(rec.stats.affinity_hits, 0, "{bench}: hints sit below min_kb=16");
 
         let no_floor = session
             .run(&spec(
@@ -123,7 +125,7 @@ fn fib_and_uts_hints_sit_below_the_default_floor_but_exist() {
             .unwrap();
         assert!(
             no_floor.stats.pushed_home + no_floor.stats.affinity_hits > 0,
-            "{bench}: with min_kb=0 the config-page hints must engage placement \
+            "{bench}: with min_kb=0 the spawn hints must engage placement \
              (pushed_home={}, affinity_hits={})",
             no_floor.stats.pushed_home,
             no_floor.stats.affinity_hits

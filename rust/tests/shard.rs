@@ -1,0 +1,246 @@
+//! Sharded sweep execution end-to-end: the tentpole contract is that a
+//! K-shard execute + store-backed merge reproduces the sequential
+//! single-process run byte for byte — for K ∈ {2, 3, 7}, including K
+//! that does not divide the cell count — with the merge running as 100%
+//! cache hits.  Plus: spelling-invariant shard assignment (JSON vs
+//! TOML), empty shards, marker census, and the golden partition pin of
+//! the repo's examples manifest at N=3.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use numanos::spec::{ExperimentManifest, Session, ShardPlan};
+use numanos::store::shard::{run_manifest_shard, shard_status};
+use numanos::store::{cell_identity, ResultStore};
+
+/// A 7-cell, 2-sweep manifest: 7 is prime, so every K in {2, 3, 7}
+/// exercises the K-does-not-divide case (and K=7 the one-cell-per-shard
+/// edge).
+const MANIFEST_JSON: &str = r#"{
+  "title": "shard mini",
+  "defaults": {"size": "small", "seeds": [4]},
+  "sweeps": [
+    {"id": "mini", "bench": "fib", "sched": ["wf", "dfwsrpt"],
+     "bind": ["numa"], "threads": [2, 4]},
+    {"id": "tail", "bench": "fft", "sched": ["wf"],
+     "bind": ["numa"], "threads": [2, 4, 8]}
+  ]
+}"#;
+
+/// The same manifest spelled as TOML (arrays-of-tables, explicit
+/// defaults) — assignments must not notice.
+const MANIFEST_TOML: &str = r#"
+title = "shard mini"
+
+[defaults]
+size = "small"
+seeds = [4]
+
+[[sweeps]]
+id = "mini"
+bench = "fib"
+sched = ["wf", "dfwsrpt"]
+bind = ["numa"]
+threads = [2, 4]
+
+[[sweeps]]
+id = "tail"
+bench = "fft"
+sched = ["wf"]
+bind = ["numa"]
+threads = [2, 4, 8]
+"#;
+
+fn tmp_store(name: &str) -> (std::path::PathBuf, Arc<ResultStore>) {
+    let dir = std::env::temp_dir().join(format!("numanos_shard_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Arc::new(ResultStore::open(&dir).unwrap());
+    (dir, store)
+}
+
+fn all_identities(manifest: &ExperimentManifest) -> Vec<String> {
+    manifest
+        .all_cells()
+        .unwrap()
+        .iter()
+        .map(|c| cell_identity(c).unwrap())
+        .collect()
+}
+
+/// The tentpole acceptance test: for K ∈ {2, 3, 7}, K independent
+/// shard passes (fresh session each, like separate processes) over one
+/// shared store, then a store-backed merge, reproduce the sequential
+/// reference byte for byte with zero merge misses.
+#[test]
+fn k_shard_execute_and_merge_matches_sequential_bytes() {
+    let manifest = ExperimentManifest::from_json_str(MANIFEST_JSON).unwrap();
+    let identities = all_identities(&manifest);
+    assert_eq!(identities.len(), 7, "the mini manifest is the 7-cell prime case");
+
+    // store-free sequential reference
+    let reference = Session::new();
+    let ref_outputs: Vec<(String, String)> = manifest
+        .sweeps
+        .iter()
+        .map(|sweep| {
+            let r = reference.run_sweep_with(sweep, 1).unwrap();
+            (r.to_csv(), r.to_json().to_pretty())
+        })
+        .collect();
+
+    for k in [2usize, 3, 7] {
+        let (dir, store) = tmp_store(&format!("k{k}"));
+        let mut owned_total = 0usize;
+        let mut seen_ids: Vec<String> = Vec::new();
+        for i in 0..k {
+            // a fresh session per shard — no shared memo, like a
+            // separate OS process sharing only the store directory
+            let mut session = Session::new();
+            session.set_store(store.clone(), true);
+            let plan = ShardPlan::new(i, k).unwrap();
+            let summary = run_manifest_shard(&session, &store, &manifest, plan, 2).unwrap();
+            assert_eq!(summary.total_cells, 7, "k={k} shard {i}");
+            assert_eq!(summary.owned_cells, plan.owned_of(7), "k={k} shard {i}");
+            owned_total += summary.owned_cells;
+            // the marker this shard just published is loadable and owns
+            // exactly its cells
+            let marker = store.load_shard_marker(i, k).unwrap();
+            assert_eq!(marker.cell_ids.len(), summary.owned_cells);
+            for id in &marker.cell_ids {
+                assert!(identities.contains(id), "k={k} shard {i}: foreign id {id}");
+                assert!(!seen_ids.contains(id), "k={k} shard {i}: id {id} owned twice");
+            }
+            seen_ids.extend(marker.cell_ids.iter().cloned());
+        }
+        assert_eq!(owned_total, 7, "k={k}: shards must partition the manifest");
+        seen_ids.sort();
+        let mut want = identities.clone();
+        want.sort();
+        assert_eq!(seen_ids, want, "k={k}: union of shard ids is the manifest");
+
+        // census: complete, fresh, nothing stale
+        let fnv = numanos::store::shard::manifest_fingerprint(&manifest).unwrap();
+        let status = shard_status(&store, &fnv);
+        assert_eq!(status.count, Some(k));
+        assert_eq!(status.present.len(), k);
+        assert!(status.missing.is_empty(), "k={k}: {:?}", status.missing);
+        assert!(status.stale.is_empty(), "k={k}: {:?}", status.stale);
+
+        // merge: a fresh session re-runs the full manifest through the
+        // store — 100% hits, bytes identical to the reference
+        let mut merger = Session::new();
+        merger.set_store(store.clone(), true);
+        let before = store.counters();
+        for (sweep, (ref_csv, ref_json)) in manifest.sweeps.iter().zip(&ref_outputs) {
+            let r = merger.run_sweep_with(sweep, 1).unwrap();
+            assert_eq!(&r.to_csv(), ref_csv, "k={k} sweep '{}'", sweep.id);
+            assert_eq!(&r.to_json().to_pretty(), ref_json, "k={k} sweep '{}'", sweep.id);
+        }
+        let after = store.counters();
+        assert_eq!(after.hits - before.hits, 7, "k={k}: merge must be 100% cache hits");
+        assert_eq!(after.misses, before.misses, "k={k}: merge must not re-execute");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Satellite: JSON and TOML spellings of one manifest produce identical
+/// shard assignments — the partition keys on resolved cell identity,
+/// not on the input text.
+#[test]
+fn json_and_toml_spellings_shard_identically() {
+    let mj = ExperimentManifest::from_json_str(MANIFEST_JSON).unwrap();
+    let mt = ExperimentManifest::from_toml_str(MANIFEST_TOML).unwrap();
+    let ids_j = all_identities(&mj);
+    let ids_t = all_identities(&mt);
+    assert_eq!(ids_j, ids_t, "both spellings flatten to the same cell sequence");
+    assert_eq!(
+        numanos::store::shard::manifest_fingerprint(&mj).unwrap(),
+        numanos::store::shard::manifest_fingerprint(&mt).unwrap(),
+        "and therefore to the same fingerprint"
+    );
+    // per-shard ownership agrees cell by cell
+    for k in [2usize, 3] {
+        for i in 0..k {
+            let plan = ShardPlan::new(i, k).unwrap();
+            let own = |ids: &[String]| -> Vec<String> {
+                ids.iter()
+                    .enumerate()
+                    .filter(|(g, _)| plan.owns(*g))
+                    .map(|(_, id)| id.clone())
+                    .collect()
+            };
+            assert_eq!(own(&ids_j), own(&ids_t), "shard {i}/{k}");
+        }
+    }
+}
+
+/// A shard that owns nothing (count > remaining cells for its index)
+/// still completes and publishes its (empty) marker — merge must not
+/// wait forever on it.
+#[test]
+fn empty_shards_still_publish_markers() {
+    let manifest = ExperimentManifest::from_json_str(
+        r#"{
+          "title": "tiny",
+          "defaults": {"size": "small", "seeds": [4]},
+          "sweeps": [
+            {"id": "t", "bench": "fib", "sched": ["wf"], "bind": ["numa"],
+             "threads": [2, 4, 8, 16]}
+          ]
+        }"#,
+    )
+    .unwrap();
+    let (dir, store) = tmp_store("empty");
+    let mut session = Session::new();
+    session.set_store(store.clone(), true);
+    let plan = ShardPlan::new(5, 7).unwrap();
+    let summary = run_manifest_shard(&session, &store, &manifest, plan, 1).unwrap();
+    assert_eq!(summary.total_cells, 4);
+    assert_eq!(summary.owned_cells, 0, "shard 5/7 of 4 cells owns nothing");
+    let marker = store.load_shard_marker(5, 7).unwrap();
+    assert!(marker.cell_ids.is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Golden pin: the repo's examples manifest partitions deterministically
+/// at N=3 — 52 cells split 18/17/17, with a stable per-sweep ownership
+/// matrix and a stable first identity.  This is the cross-machine,
+/// cross-process contract: any two builds anywhere agree on who runs
+/// what.  (Assignment only — no cell is executed.)
+#[test]
+fn examples_manifest_golden_partition_at_three_shards() {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/experiment_manifest.json");
+    let manifest = ExperimentManifest::load(&path).unwrap();
+    let identities = all_identities(&manifest);
+    assert_eq!(identities.len(), 52, "the examples manifest is the 52-cell reference");
+    assert_eq!(
+        identities[0], "s1|cell|fft|small|7|x4600|first-touch|wf|2|numa||rtdata=1",
+        "cell 0's canonical identity is pinned"
+    );
+
+    let totals: Vec<usize> =
+        (0..3).map(|i| ShardPlan::new(i, 3).unwrap().owned_of(52)).collect();
+    assert_eq!(totals, vec![18, 17, 17]);
+
+    // per-sweep ownership matrix: [shard0, shard1, shard2] per sweep id
+    let want: &[(&str, [usize; 3])] = &[
+        ("numa-scaling", [8, 8, 8]),
+        ("slow-dram", [1, 1, 1]),
+        ("new-strategies", [2, 2, 2]),
+        ("placement", [3, 3, 3]),
+        ("hops-grid", [2, 1, 1]),
+        ("steal-side", [2, 2, 2]),
+    ];
+    let mut base = 0usize;
+    for (sweep, (id, owned)) in manifest.sweeps.iter().zip(want) {
+        let cells = sweep.cells().unwrap().len();
+        assert_eq!(&sweep.id, id, "sweep order is part of the contract");
+        for i in 0..3 {
+            let plan = ShardPlan::new(i, 3).unwrap();
+            let got = (0..cells).filter(|c| plan.owns(base + c)).count();
+            assert_eq!(got, owned[i], "sweep '{id}' shard {i}/3");
+        }
+        base += cells;
+    }
+    assert_eq!(base, 52);
+}
